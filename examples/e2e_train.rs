@@ -1,0 +1,45 @@
+//! End-to-end driver (DESIGN.md E2): train a real model for a few hundred
+//! steps on synthetic CIFAR-10 through the full three-layer stack —
+//! rust coordinator → PJRT → AOT HLO (jax model + Pallas decode kernel) —
+//! and log the loss curve. The run recorded in EXPERIMENTS.md §E2 came
+//! from this binary.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train -- [model] [pipeline] [epochs]
+//! ```
+
+use optorch::coordinator::report;
+use optorch::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet_mini18");
+    let pipeline = Pipeline::parse(args.get(1).map(String::as_str).unwrap_or("ed+sc"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let epochs: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+    let mut cfg = TrainConfig::default_for(model, pipeline);
+    cfg.epochs = epochs;
+    cfg.train_size = 2_000; // 125 steps/epoch at batch 16
+    cfg.test_size = 512;
+    cfg.augment = "hflip,crop4".into();
+
+    println!(
+        "e2e: {model} [{}] — {} epochs × {} steps, batch {}",
+        pipeline.label(),
+        cfg.epochs,
+        cfg.train_size / cfg.batch_size,
+        cfg.batch_size
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let rep = trainer.run()?;
+    println!("{}", report::markdown_summary(&rep));
+
+    let csv = std::path::PathBuf::from(format!(
+        "reports/e2e_{model}_{}.csv",
+        rep.pipeline
+    ));
+    report::write_history_csv(&csv, &rep)?;
+    println!("history → {}", csv.display());
+    Ok(())
+}

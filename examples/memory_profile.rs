@@ -1,0 +1,64 @@
+//! Figure-8-style memory profile: simulate one training iteration of
+//! ResNet-18 (batch 16 @ 512×512×3, the paper's workload) under each
+//! pipeline and print the live-byte timeline + peaks.
+//!
+//! ```bash
+//! cargo run --release --example memory_profile [-- model [height]]
+//! ```
+
+use optorch::config::Pipeline;
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::memory::simulator::simulate;
+use optorch::models::arch_by_name;
+use optorch::util::bench::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet18");
+    let h: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let batch = 16;
+    let arch = arch_by_name(model, (h, h, 3), 1000)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+
+    let mut table = Table::new(&["pipeline", "peak", "state", "input", "activations"]);
+    for pipe in Pipeline::fig10_set() {
+        let ckpts = if pipe.sc {
+            plan_checkpoints(&arch, PlannerKind::Optimal, pipe, batch).checkpoints
+        } else {
+            vec![]
+        };
+        let rep = simulate(&arch, pipe, batch, &ckpts);
+        table.row(&[
+            pipe.label(),
+            fmt_bytes(rep.peak_bytes),
+            fmt_bytes(rep.state_bytes),
+            fmt_bytes(rep.input_bytes),
+            fmt_bytes(rep.peak_activation_bytes),
+        ]);
+    }
+    println!("{model} @ {h}x{h}, batch {batch} — one training iteration\n");
+    table.print();
+
+    // Fig 8 proper: the live-byte timeline for baseline vs S-C.
+    println!("\ntimeline (live MiB at each event), baseline vs S-C:");
+    let base = simulate(&arch, Pipeline::BASELINE, batch, &[]);
+    let sc_pipe = Pipeline::parse("sc").unwrap();
+    let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+    let sc = simulate(&arch, sc_pipe, batch, &plan.checkpoints);
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    println!("  baseline: {} events, peak {:.0} MiB", base.timeline.len(), mib(base.peak_bytes));
+    for e in base.timeline.iter().step_by(base.timeline.len() / 12 + 1) {
+        println!("    {:<24} {:>8.0} MiB", e.label, mib(e.live_bytes));
+    }
+    println!("  S-C ({:?}): {} events, peak {:.0} MiB", plan.checkpoints, sc.timeline.len(), mib(sc.peak_bytes));
+    for e in sc.timeline.iter().step_by(sc.timeline.len() / 12 + 1) {
+        println!("    {:<24} {:>8.0} MiB", e.label, mib(e.live_bytes));
+    }
+    println!(
+        "\npaper Fig 8 shape: baseline ≈ 7000 MB → S-C ≈ 2000 MB; here {:.0} → {:.0} MiB ({:.2}x)",
+        mib(base.peak_bytes),
+        mib(sc.peak_bytes),
+        base.peak_bytes as f64 / sc.peak_bytes as f64
+    );
+    Ok(())
+}

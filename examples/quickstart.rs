@@ -1,0 +1,38 @@
+//! Quickstart: train a small CNN with the paper's most-optimized pipeline
+//! (E-D + S-C) on synthetic CIFAR-10 and print the loss curve.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use optorch::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // One line selects the optimization pipeline — the crate-level analogue
+    // of the paper's `scmodel = sc(model)`.
+    let mut cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("ed+sc").unwrap());
+    cfg.epochs = 3;
+    cfg.train_size = 1_000;
+    cfg.test_size = 256;
+
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+
+    println!("epoch  train_loss  train_acc  eval_acc");
+    for e in &report.history.epochs {
+        println!(
+            "{:>5}  {:>10.4}  {:>9.3}  {:>8}",
+            e.epoch,
+            e.train_loss,
+            e.train_accuracy,
+            e.eval_accuracy
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    println!(
+        "\nfinal eval accuracy {:.3} in {:.1}s (E-D producer ran {:.1}s in parallel)",
+        report.final_eval_accuracy, report.total_wall_secs, report.loader_produce_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Perf probe: steady-state train-step latency per pipeline (used by the
+//! §Perf pass in EXPERIMENTS.md). Usage: `steptime [model]`.
+use optorch::data::loader::BatchPayload;
+use optorch::runtime::Runtime;
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let mut rng = optorch::util::rng::Rng::new(1);
+    let data: Vec<f32> = (0..16*32*32*3).map(|_| rng.f32()).collect();
+    let mut labels = vec![0.0f32; 160];
+    for i in 0..16 { labels[i*10 + rng.gen_range(10)] = 1.0; }
+    let payload = BatchPayload::Raw { data, labels, n: 16 };
+    let model_name = std::env::args().nth(1).unwrap_or("tiny_cnn".into());
+    for pipe in ["baseline", "sc", "mp"] {
+        let model = rt.load(&model_name, pipe)?;
+        let mut state = model.init_state(1)?;
+        for _ in 0..5 { model.train_step(&mut state, &payload)?; }
+        let t0 = Instant::now();
+        let n = 30;
+        for _ in 0..n { model.train_step(&mut state, &payload)?; }
+        println!("{model_name} {pipe}: {:.2} ms/step", t0.elapsed().as_secs_f64()*1000.0/n as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,171 @@
+"""AOT emitter: lower every (model × pipeline) train/eval/init step to HLO
+TEXT and write ``artifacts/manifest.json`` for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 packed words cross the boundary
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model as M  # noqa: E402
+
+LR = 0.05
+MOMENTUM = 0.9
+LOSS_SCALE = 1024.0
+
+# Pipelines per model: the quick models get the full 8-combination grid;
+# the deeper minis get the paper's headline subset to bound AOT time.
+FULL_GRID = ["baseline", "ed", "mp", "sc", "ed_mp", "ed_sc", "mp_sc", "ed_mp_sc"]
+HEADLINE = ["baseline", "mp", "sc", "ed_sc", "ed_mp_sc"]
+EMIT = {
+    "tiny_cnn": FULL_GRID,
+    "resnet_mini18": FULL_GRID,
+    "effnet_lite": FULL_GRID,
+    "inception_lite": FULL_GRID,
+    "resnet_mini34": HEADLINE,
+    "resnet_mini50": HEADLINE,
+}
+
+
+def pipeline_flags(name):
+    parts = [] if name == "baseline" else name.split("_")
+    return {"ed": "ed" in parts, "mp": "mp" in parts, "sc": "sc" in parts}
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def state_specs(stages, mp):
+    """Manifest tensor specs, in flatten_state order, with path names."""
+    params = M.init_params(stages, jax.random.PRNGKey(0))
+    names, shapes = [], []
+    for (stage_name, _, _), p in zip(stages, params):
+        leaves = jax.tree_util.tree_flatten_with_path(p)[0]
+        for path, leaf in leaves:
+            key = "/".join(str(getattr(k, "key", k)) for k in path)
+            names.append(f"{stage_name}/{key}")
+            shapes.append(tuple(leaf.shape))
+    dtype = "f16" if mp else "f32"
+    specs = [
+        {"name": n, "shape": list(s), "dtype": dtype} for n, s in zip(names, shapes)
+    ]
+    # momentum mirrors the parameter list
+    specs += [
+        {"name": f"mom:{n}", "shape": list(s), "dtype": dtype}
+        for n, s in zip(names, shapes)
+    ]
+    return specs
+
+
+def batch_spec(flags, hw=(32, 32, 3), batch=M.BATCH):
+    h, w, c = hw
+    if flags["ed"]:
+        groups = -(-batch // M.CAP)
+        return (
+            {"name": "batch", "shape": [groups, h, w, c], "dtype": "f64"},
+            "encoded",
+            groups,
+        )
+    return ({"name": "batch", "shape": [batch, h, w, c], "dtype": "f32"}, "raw", 0)
+
+
+def emit_entry(out_dir, model_name, pipe_name, classes=M.NUM_CLASSES):
+    stages = M.MODELS[model_name]()
+    flags = pipeline_flags(pipe_name)
+    stem = f"{model_name}_{pipe_name}"
+    bspec, bkind, groups = batch_spec(flags)
+    specs = state_specs(stages, flags["mp"])
+
+    state_dt = jnp.float16 if flags["mp"] else jnp.float32
+    state_args = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), state_dt) for s in specs
+    ]
+    batch_dt = jnp.float64 if flags["ed"] else jnp.float32
+    batch_arg = jax.ShapeDtypeStruct(tuple(bspec["shape"]), batch_dt)
+    labels_arg = jax.ShapeDtypeStruct((M.BATCH, classes), jnp.float32)
+
+    t0 = time.time()
+    train = M.make_train_step(stages, mom=MOMENTUM, loss_scale=LOSS_SCALE, **flags)
+    lr_arg = jax.ShapeDtypeStruct((), jnp.float32)  # runtime LR input
+    lowered = jax.jit(train).lower(*state_args, batch_arg, labels_arg, lr_arg)
+    with open(os.path.join(out_dir, f"{stem}.train.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    ev = M.make_eval_step(stages, **flags)
+    # eval takes the parameter half only (momentum would be dead inputs)
+    lowered = jax.jit(ev).lower(*state_args[: len(specs) // 2], batch_arg, labels_arg)
+    with open(os.path.join(out_dir, f"{stem}.eval.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    init = M.make_init(stages, mp=flags["mp"])
+    lowered = jax.jit(init).lower(jax.ShapeDtypeStruct((2,), jnp.uint32))
+    with open(os.path.join(out_dir, f"{stem}.init.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    print(f"  {stem}: {len(specs)} state tensors [{time.time() - t0:.1f}s]", flush=True)
+    return {
+        "model": model_name,
+        "pipeline": pipe_name,
+        "input": [32, 32, 3],
+        "num_classes": classes,
+        "batch_size": M.BATCH,
+        "groups": groups,
+        "group_capacity": M.CAP if flags["ed"] else 0,
+        "batch_kind": bkind,
+        "batch": bspec,
+        "labels": {"name": "labels", "shape": [M.BATCH, classes], "dtype": "f32"},
+        "state": specs,
+        "train_hlo": f"{stem}.train.hlo.txt",
+        "eval_hlo": f"{stem}.eval.hlo.txt",
+        "init_hlo": f"{stem}.init.hlo.txt",
+        "lr": LR,
+        "momentum": MOMENTUM,
+        "loss_scale": LOSS_SCALE,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models", default=None, help="comma-separated subset (default: all)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.models.split(",")) if args.models else None
+    entries = []
+    t0 = time.time()
+    for model_name, pipes in EMIT.items():
+        if only and model_name not in only:
+            continue
+        print(f"{model_name}:", flush=True)
+        for pipe in pipes:
+            entries.append(emit_entry(args.out, model_name, pipe))
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} entries in {time.time() - t0:.0f}s → {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: the paper's in-graph *decode layer* (Algorithm 3).
+
+Unpacks base-256 f64 word tensors ``[G, H, W, C]`` into normalized f32
+images ``[G*CAP, H, W, C]``. This is the first layer of every E-D model, so
+it lowers into the same HLO module as the network (``interpret=True`` —
+the CPU PJRT plugin cannot run Mosaic custom-calls).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (group,
+row-stripe); each program holds one ``[1, TILE_H, W, C]`` stripe of packed
+words in VMEM and emits the ``[1, CAP, TILE_H, W, C]`` decoded stripe. For
+CIFAR shapes a stripe is W·C·TILE_H·8 B ≈ 6 KiB of VMEM in and 5×~3 KiB
+out — far under the ~16 MiB VMEM budget, so stripes can be widened
+(TILE_H up) until the HBM↔VMEM pipeline saturates; the digit loop is pure
+VPU element-wise work with no MXU involvement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Exact f64 capacity for base-256 digits (53-bit mantissa).
+CAP = 6
+
+
+def _decode_kernel(words_ref, out_ref, *, cap):
+    """One (group, stripe): peel `cap` base-256 digits from the f64 words."""
+    x = words_ref[...].astype(jnp.float64)  # [1, th, w, c]
+    for i in range(cap):
+        digit = jnp.mod(x, 256.0)
+        out_ref[0, i, :, :, :] = (digit[0] / 255.0).astype(jnp.float32)
+        x = jnp.floor(x / 256.0)
+
+
+def _pick_tile_h(h):
+    """Largest power-of-two divisor of h, capped at 32 rows per stripe."""
+    t = 1
+    while t < 32 and h % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def decode_base256_groups(words, cap=CAP):
+    """[G,H,W,C] f64 → [G*cap,H,W,C] f32 in [0,1]; see ref.decode_base256_groups."""
+    g, h, w, c = words.shape
+    tile_h = _pick_tile_h(h)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, cap=cap),
+        grid=(g, h // tile_h),
+        in_specs=[
+            pl.BlockSpec((1, tile_h, w, c), lambda gi, ti: (gi, ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, cap, tile_h, w, c), lambda gi, ti: (gi, 0, ti, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((g, cap, h, w, c), jnp.float32),
+        interpret=True,
+    )(words)
+    return out.reshape(g * cap, h, w, c)
+
+
+def vmem_bytes_per_program(h, w, c, cap=CAP):
+    """Static VMEM footprint estimate for one grid program (perf notes)."""
+    tile_h = _pick_tile_h(h)
+    words = tile_h * w * c * 8
+    out = cap * tile_h * w * c * 4
+    scratch = tile_h * w * c * 8  # the running f64 quotient
+    return words + out + scratch

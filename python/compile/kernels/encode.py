@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: on-device batch *encode* (Algorithm 1).
+
+Packs uint8 images (shipped as f32 counts 0..255) ``[N, H, W, C]`` into one
+f64 word tensor ``[H, W, C]``. The production data path encodes on the host
+(rust ``data::encode``); this kernel exists for the paper's "encode inside
+the accelerator" variant and is validated against the same oracle.
+
+Grid walks row-stripes; each program reads the ``[N, TILE_H, W, C]`` slab
+and reduces over N with exact powers of 256 — element-wise VPU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CAP = 6
+
+
+def _encode_kernel(imgs_ref, out_ref, *, n):
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float64)
+    for i in range(n):
+        weight = jnp.float64(256.0) ** i
+        acc = acc + imgs_ref[i, :, :, :].astype(jnp.float64) * weight
+    out_ref[...] = acc
+
+
+def _pick_tile_h(h):
+    t = 1
+    while t < 32 and h % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=())
+def encode_base256(imgs):
+    """[N,H,W,C] (values 0..255) → packed f64 [H,W,C]; N ≤ 6."""
+    n, h, w, c = imgs.shape
+    if n > CAP:
+        raise ValueError(f"base-256 f64 packing holds ≤{CAP} images, got {n}")
+    tile_h = _pick_tile_h(h)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, n=n),
+        grid=(h // tile_h,),
+        in_specs=[pl.BlockSpec((n, tile_h, w, c), lambda ti: (0, ti, 0, 0))],
+        out_specs=pl.BlockSpec((tile_h, w, c), lambda ti: (ti, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, c), jnp.float64),
+        interpret=True,
+    )(imgs)

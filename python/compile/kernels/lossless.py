@@ -1,0 +1,80 @@
+"""L1 Pallas kernels: loss-less forced encoding (Algorithm 4).
+
+Base-128 digit packing plus the parity bitplane that makes it exact:
+``pixel = 2 · digit + offset``. A f64 word holds 7 digits (53-bit
+mantissa), not the paper's claimed 32 — see DESIGN.md §Corrections.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CAP = 7
+
+
+def _pick_tile_h(h):
+    t = 1
+    while t < 32 and h % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def _encode_kernel(imgs_ref, words_ref, offs_ref, *, n):
+    acc = jnp.zeros(words_ref.shape, dtype=jnp.float64)
+    for i in range(n):
+        px = imgs_ref[i, :, :, :].astype(jnp.float64)
+        digit = jnp.floor(px / 2.0)
+        offs_ref[i, :, :, :] = (px - digit * 2.0).astype(jnp.uint8)
+        acc = acc + digit * (jnp.float64(128.0) ** i)
+    words_ref[...] = acc
+
+
+def encode_lossless128(imgs):
+    """[N,H,W,C] (0..255) → (words f64 [H,W,C], offsets u8 [N,H,W,C])."""
+    n, h, w, c = imgs.shape
+    if n > CAP:
+        raise ValueError(f"base-128 f64 packing holds ≤{CAP} images, got {n}")
+    tile_h = _pick_tile_h(h)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, n=n),
+        grid=(h // tile_h,),
+        in_specs=[pl.BlockSpec((n, tile_h, w, c), lambda ti: (0, ti, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((tile_h, w, c), lambda ti: (ti, 0, 0)),
+            pl.BlockSpec((n, tile_h, w, c), lambda ti: (0, ti, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w, c), jnp.float64),
+            jax.ShapeDtypeStruct((n, h, w, c), jnp.uint8),
+        ],
+        interpret=True,
+    )(imgs)
+
+
+def _decode_kernel(words_ref, offs_ref, out_ref, *, n):
+    x = words_ref[...].astype(jnp.float64)
+    for i in range(n):
+        digit = jnp.mod(x, 128.0)
+        out_ref[i, :, :, :] = (
+            digit * 2.0 + offs_ref[i, :, :, :].astype(jnp.float64)
+        ).astype(jnp.uint8)
+        x = jnp.floor(x / 128.0)
+
+
+def decode_lossless128(words, offsets):
+    """Exact inverse: (words, offsets) → uint8 [N,H,W,C]."""
+    n, h, w, c = offsets.shape
+    tile_h = _pick_tile_h(h)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, n=n),
+        grid=(h // tile_h,),
+        in_specs=[
+            pl.BlockSpec((tile_h, w, c), lambda ti: (ti, 0, 0)),
+            pl.BlockSpec((n, tile_h, w, c), lambda ti: (0, ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, tile_h, w, c), lambda ti: (0, ti, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), jnp.uint8),
+        interpret=True,
+    )(words, offsets)

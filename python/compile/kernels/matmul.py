@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: MXU-tiled matmul for the classifier head.
+
+The M-P story on TPU is low-precision operands into the 128×128 MXU
+systolic array with f32 accumulation; this kernel expresses exactly that:
+inputs may be f32/bf16/f16, tiles are (≤128)×(≤128), and the K reduction
+accumulates in f32 VMEM scratch across grid steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _tile(dim, target):
+    """Largest divisor of dim that is ≤ target (MXU-friendly when possible)."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_raw(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    tm, tk, tn = _tile(m, 128), _tile(k, 128), _tile(n, 128)
+    k_steps = k // tk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(m // tm, n // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tk, tn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """[M,K] @ [K,N] → f32 [M,N], tiled for the MXU, f32 accumulate.
+
+    Differentiable: the backward pass reuses the same kernel for
+    ``dA = dO·Bᵀ`` and ``dB = Aᵀ·dO`` (three MXU launches total).
+    """
+    return _matmul_raw(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = _matmul_raw(g, b.T.astype(g.dtype)).astype(a.dtype)
+    db = _matmul_raw(a.T.astype(g.dtype), g).astype(b.dtype)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def mxu_utilization_estimate(m, k, n):
+    """Fraction of MXU lanes a (m,k,n) problem fills with these tiles.
+
+    The 128×128 systolic array is fully fed when tm=tk=tn=128; smaller
+    tiles idle lanes proportionally. Static estimate for DESIGN.md §Perf.
+    """
+    tm, tk, tn = _tile(m, 128), _tile(k, 128), _tile(n, 128)
+    return (tm / 128.0) * (tk / 128.0) * (tn / 128.0)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematically-obvious implementation the Pallas
+kernels are checked against in ``python/tests/``. Nothing in this module is
+performance-relevant; clarity wins.
+"""
+
+import jax.numpy as jnp
+
+# Exact packing capacities (DESIGN.md §Corrections): a float64 mantissa has
+# 53 bits, so base-256 packs ⌊53/8⌋ = 6 images and base-128 packs 7.
+CAP_BASE256_F64 = 6
+CAP_BASE128_F64 = 7
+
+
+def encode_base256(batch):
+    """Algorithm 1: pack uint8 images [N,H,W,C] into one f64 word tensor.
+
+    word(p) = Σ_i batch[i, p] · 256^i, exact for N ≤ 6.
+    """
+    n = batch.shape[0]
+    if n > CAP_BASE256_F64:
+        raise ValueError(f"base-256 f64 packing holds ≤{CAP_BASE256_F64} images, got {n}")
+    weights = (256.0 ** jnp.arange(n, dtype=jnp.float64)).reshape(n, 1, 1, 1)
+    return jnp.sum(batch.astype(jnp.float64) * weights, axis=0)
+
+
+def decode_base256(words, n):
+    """Algorithm 3: unpack the first `n` images, normalized to [0,1] f32.
+
+    Returns [n, H, W, C] float32 = digit / 255.
+    """
+    if n > CAP_BASE256_F64:
+        raise ValueError(f"base-256 f64 packing holds ≤{CAP_BASE256_F64} images, got {n}")
+    x = words.astype(jnp.float64)
+    imgs = []
+    for _ in range(n):
+        digit = jnp.mod(x, 256.0)
+        imgs.append(digit)
+        x = jnp.floor(x / 256.0)
+    return (jnp.stack(imgs, axis=0) / 255.0).astype(jnp.float32)
+
+
+def decode_base256_groups(words, cap):
+    """Grouped decode: [G,H,W,C] f64 → [G*cap,H,W,C] f32 in [0,1].
+
+    This is the shape the training artifacts consume (the loader packs a
+    batch of B images into G = ceil(B / cap) groups; junk tail slots decode
+    to zeros and are sliced off by the model).
+    """
+    x = words.astype(jnp.float64)
+    imgs = []
+    for _ in range(cap):
+        digit = jnp.mod(x, 256.0)
+        imgs.append(digit)
+        x = jnp.floor(x / 256.0)
+    # [G, cap, H, W, C] -> [G*cap, ...]
+    stacked = jnp.stack(imgs, axis=1)
+    g, h, w, c = words.shape
+    return (stacked.reshape(g * cap, h, w, c) / 255.0).astype(jnp.float32)
+
+
+def encode_lossless128(batch):
+    """Algorithm 4: base-128 digits + parity bitplane.
+
+    Returns (words f64 [H,W,C], offsets uint8 [N,H,W,C] of 0/1).
+    """
+    n = batch.shape[0]
+    if n > CAP_BASE128_F64:
+        raise ValueError(f"base-128 f64 packing holds ≤{CAP_BASE128_F64} images, got {n}")
+    b = batch.astype(jnp.int64)
+    digits = b // 2
+    offsets = (b % 2).astype(jnp.uint8)
+    weights = (128.0 ** jnp.arange(n, dtype=jnp.float64)).reshape(n, 1, 1, 1)
+    words = jnp.sum(digits.astype(jnp.float64) * weights, axis=0)
+    return words, offsets
+
+
+def decode_lossless128(words, offsets):
+    """Inverse of Algorithm 4: exact uint8 reconstruction."""
+    n = offsets.shape[0]
+    x = words.astype(jnp.float64)
+    out = []
+    for i in range(n):
+        digit = jnp.mod(x, 128.0)
+        out.append((digit * 2 + offsets[i].astype(jnp.float64)).astype(jnp.uint8))
+        x = jnp.floor(x / 128.0)
+    return jnp.stack(out, axis=0)
+
+
+def matmul(a, b):
+    """Reference for the tiled-matmul kernel: plain f32 matmul."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))

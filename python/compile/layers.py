@@ -1,0 +1,91 @@
+"""Functional NN layers for the L2 models (pure jax, no flax).
+
+Every layer is an ``(init, apply)`` pair over explicit parameter dicts, so
+the AOT manifest can name and order every tensor deterministically.
+
+BatchNorm note (DESIGN.md §5): we use *batch statistics* in both train and
+eval (no running averages), which keeps state = parameters ⊎ momentum and
+the artifacts purely functional. At CIFAR scale this costs <1% accuracy and
+is a documented deviation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_init(key, k, in_c, out_c, bias=False):
+    """He-normal conv kernel [k,k,in_c,out_c] (+ optional bias)."""
+    fan_in = k * k * in_c
+    w = jax.random.normal(key, (k, k, in_c, out_c), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_c,), jnp.float32)
+    return p
+
+
+def conv_apply(p, x, stride=1):
+    """NHWC conv, SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "shift": jnp.zeros((c,), jnp.float32)}
+
+
+def bn_apply(p, x, eps=1e-5):
+    """Batch-statistics normalization over (N,H,W)."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["shift"]
+
+
+def dense_init(key, in_d, out_d):
+    w = jax.random.normal(key, (in_d, out_d), jnp.float32) * jnp.sqrt(1.0 / in_d)
+    return {"w": w, "b": jnp.zeros((out_d,), jnp.float32)}
+
+
+def dense_apply(p, x, use_kernel=False):
+    """Dense layer; `use_kernel=True` routes through the Pallas MXU matmul."""
+    if use_kernel:
+        from compile.kernels import matmul as mm
+
+        return mm.matmul(x, p["w"]) + p["b"]
+    return jnp.matmul(x, p["w"]) + p["b"]
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "SAME",
+    )
+
+
+def softmax_cross_entropy(logits, soft_labels):
+    """Mean CE against soft labels (MixUp/CutMix flow through here)."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(soft_labels * logp, axis=-1))
+
+
+def correct_count(logits, soft_labels):
+    """#(argmax(logits) == argmax(labels)), as f32 for uniform outputs."""
+    pred = jnp.argmax(logits, axis=-1)
+    truth = jnp.argmax(soft_labels, axis=-1)
+    return jnp.sum((pred == truth).astype(jnp.float32))

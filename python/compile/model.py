@@ -1,0 +1,402 @@
+"""L2: the trainable model zoo + pipeline-composable train/eval/init steps.
+
+Models mirror the rust analytic profiles (``rust/src/models/``): tiny_cnn,
+resnet_mini18/34/50, effnet_lite, inception_lite — all at CIFAR scale so
+they train end-to-end on CPU.
+
+A model is a list of *stages*; sequential checkpointing (S-C) is
+``jax.checkpoint`` around each stage, exactly the paper's "segments".
+Pipelines compose:
+
+* **E-D**  — the batch arrives as packed f64 words [G,H,W,C]; stage 0 is
+  the L1 Pallas decode kernel; junk tail slots are sliced off.
+* **M-P**  — state stored f16; upcast to f32 at step entry, grads scaled
+  by a static loss scale, update in f32, store back f16 (paper Fig. 3).
+* **S-C**  — every stage rematerialized in the backward pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers as L
+
+BATCH = 16
+CAP = 6  # base-256 f64 packing capacity
+NUM_CLASSES = 10
+
+# --------------------------------------------------------------------------
+# model zoo: each builder returns a list of stages; a stage is
+# (name, init(key)->params, apply(params, x)->x)
+# --------------------------------------------------------------------------
+
+
+def _conv_bn_stage(name, k, in_c, out_c, stride):
+    def init(key):
+        return {"conv": L.conv_init(key, k, in_c, out_c), "bn": L.bn_init(out_c)}
+
+    def apply(p, x):
+        return jax.nn.relu(L.bn_apply(p["bn"], L.conv_apply(p["conv"], x, stride)))
+
+    return (name, init, apply)
+
+
+def _basic_block(prefix, in_c, out_c, stride):
+    """ResNet basic block as one stage."""
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "conv1": L.conv_init(k1, 3, in_c, out_c),
+            "bn1": L.bn_init(out_c),
+            "conv2": L.conv_init(k2, 3, out_c, out_c),
+            "bn2": L.bn_init(out_c),
+        }
+        if stride != 1 or in_c != out_c:
+            p["proj"] = L.conv_init(k3, 1, in_c, out_c)
+            p["bnp"] = L.bn_init(out_c)
+        return p
+
+    def apply(p, x):
+        y = jax.nn.relu(L.bn_apply(p["bn1"], L.conv_apply(p["conv1"], x, stride)))
+        y = L.bn_apply(p["bn2"], L.conv_apply(p["conv2"], y, 1))
+        sc = x
+        if "proj" in p:
+            sc = L.bn_apply(p["bnp"], L.conv_apply(p["proj"], x, stride))
+        return jax.nn.relu(y + sc)
+
+    return (prefix, init, apply)
+
+
+def _bottleneck_block(prefix, in_c, mid_c, stride):
+    out_c = mid_c * 4
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "conv1": L.conv_init(k1, 1, in_c, mid_c),
+            "bn1": L.bn_init(mid_c),
+            "conv2": L.conv_init(k2, 3, mid_c, mid_c),
+            "bn2": L.bn_init(mid_c),
+            "conv3": L.conv_init(k3, 1, mid_c, out_c),
+            "bn3": L.bn_init(out_c),
+        }
+        if stride != 1 or in_c != out_c:
+            p["proj"] = L.conv_init(k4, 1, in_c, out_c)
+            p["bnp"] = L.bn_init(out_c)
+        return p
+
+    def apply(p, x):
+        y = jax.nn.relu(L.bn_apply(p["bn1"], L.conv_apply(p["conv1"], x, 1)))
+        y = jax.nn.relu(L.bn_apply(p["bn2"], L.conv_apply(p["conv2"], y, stride)))
+        y = L.bn_apply(p["bn3"], L.conv_apply(p["conv3"], y, 1))
+        sc = x
+        if "proj" in p:
+            sc = L.bn_apply(p["bnp"], L.conv_apply(p["proj"], x, stride))
+        return jax.nn.relu(y + sc)
+
+    return (prefix, init, apply)
+
+
+def _head_stage(in_c, classes):
+    def init(key):
+        return {"fc": L.dense_init(key, in_c, classes)}
+
+    def apply(p, x):
+        # Pallas MXU matmul kernel on the classifier head
+        return L.dense_apply(p["fc"], L.global_avg_pool(x), use_kernel=True)
+
+    return ("head", init, apply)
+
+
+def _mbconv_block(prefix, in_c, out_c, stride, expand=6):
+    exp_c = in_c * expand
+
+    def init(key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        se_c = max(1, in_c // 4)
+        return {
+            "expand": L.conv_init(k1, 1, in_c, exp_c),
+            "bn1": L.bn_init(exp_c),
+            "dw": jax.random.normal(k2, (3, 3, 1, exp_c), jnp.float32) * 0.1,
+            "bn2": L.bn_init(exp_c),
+            "se_r": L.dense_init(k3, exp_c, se_c),
+            "se_e": L.dense_init(k4, se_c, exp_c),
+            "project": L.conv_init(k5, 1, exp_c, out_c),
+            "bn3": L.bn_init(out_c),
+        }
+
+    def apply(p, x):
+        y = jax.nn.relu(L.bn_apply(p["bn1"], L.conv_apply(p["expand"], x, 1)))
+        # depthwise conv
+        y = jax.lax.conv_general_dilated(
+            y,
+            p["dw"],
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=exp_c,
+        )
+        y = jax.nn.relu(L.bn_apply(p["bn2"], y))
+        # squeeze-excite
+        s = L.global_avg_pool(y)
+        s = jax.nn.relu(L.dense_apply(p["se_r"], s))
+        s = jax.nn.sigmoid(L.dense_apply(p["se_e"], s))
+        y = y * s[:, None, None, :]
+        y = L.bn_apply(p["bn3"], L.conv_apply(p["project"], y, 1))
+        if stride == 1 and in_c == out_c:
+            y = y + x
+        return y
+
+    return (prefix, init, apply)
+
+
+def _inception_mini_block(prefix, in_c):
+    """Small inception-A-style block: 1×1 / 1×1→3×3 / 1×1→5×5 concat → 96ch."""
+
+    def init(key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "b1": L.conv_init(k1, 1, in_c, 32),
+            "bn1": L.bn_init(32),
+            "b3r": L.conv_init(k2, 1, in_c, 24),
+            "bn3r": L.bn_init(24),
+            "b3": L.conv_init(k3, 3, 24, 32),
+            "bn3": L.bn_init(32),
+            "b5r": L.conv_init(k4, 1, in_c, 16),
+            "bn5r": L.bn_init(16),
+            "b5": L.conv_init(k5, 5, 16, 32),
+            "bn5": L.bn_init(32),
+        }
+
+    def apply(p, x):
+        a = jax.nn.relu(L.bn_apply(p["bn1"], L.conv_apply(p["b1"], x, 1)))
+        b = jax.nn.relu(L.bn_apply(p["bn3r"], L.conv_apply(p["b3r"], x, 1)))
+        b = jax.nn.relu(L.bn_apply(p["bn3"], L.conv_apply(p["b3"], b, 1)))
+        c = jax.nn.relu(L.bn_apply(p["bn5r"], L.conv_apply(p["b5r"], x, 1)))
+        c = jax.nn.relu(L.bn_apply(p["bn5"], L.conv_apply(p["b5"], c, 1)))
+        return jnp.concatenate([a, b, c], axis=-1)
+
+    return (prefix, init, apply)
+
+
+def _pool_stage(name):
+    return (name, lambda key: {}, lambda p, x: L.max_pool(x))
+
+
+def tiny_cnn(classes=NUM_CLASSES):
+    return [
+        _conv_bn_stage("conv1", 3, 3, 16, 1),
+        _conv_bn_stage("conv2", 3, 16, 32, 2),
+        _conv_bn_stage("conv3", 3, 32, 64, 2),
+        _head_stage(64, classes),
+    ]
+
+
+def _resnet_mini(blocks, bottleneck, classes, width=16):
+    stages = [_conv_bn_stage("conv1", 3, 3, width, 1)]
+    widths = [width, width * 2, width * 4, width * 8]
+    in_c = width
+    for si, (n, w) in enumerate(zip(blocks, widths)):
+        for b in range(n):
+            stride = 2 if (si > 0 and b == 0) else 1
+            if bottleneck:
+                stages.append(_bottleneck_block(f"layer{si+1}.{b}", in_c, w, stride))
+                in_c = w * 4
+            else:
+                stages.append(_basic_block(f"layer{si+1}.{b}", in_c, w, stride))
+                in_c = w
+    stages.append(_head_stage(in_c, classes))
+    return stages
+
+
+def resnet_mini18(classes=NUM_CLASSES):
+    return _resnet_mini([2, 2, 2, 2], False, classes)
+
+
+def resnet_mini34(classes=NUM_CLASSES):
+    return _resnet_mini([3, 4, 6, 3], False, classes)
+
+
+def resnet_mini50(classes=NUM_CLASSES):
+    return _resnet_mini([3, 4, 6, 3], True, classes)
+
+
+def effnet_lite(classes=NUM_CLASSES):
+    stages = [_conv_bn_stage("stem", 3, 3, 16, 1)]
+    in_c = 16
+    for i, (out_c, stride, reps) in enumerate([(24, 2, 2), (40, 2, 2), (80, 2, 1)]):
+        for r in range(reps):
+            s = stride if r == 0 else 1
+            stages.append(_mbconv_block(f"mb{i+1}.{r}", in_c, out_c, s))
+            in_c = out_c
+    stages.append(_conv_bn_stage("head_conv", 1, in_c, 160, 1))
+    stages.append(_head_stage(160, classes))
+    return stages
+
+
+def inception_lite(classes=NUM_CLASSES):
+    return [
+        _conv_bn_stage("stem", 3, 3, 32, 1),
+        _pool_stage("pool1"),
+        _inception_mini_block("mini_a1", 32),
+        _pool_stage("pool2"),
+        _inception_mini_block("mini_a2", 96),
+        _head_stage(96, classes),
+    ]
+
+
+MODELS = {
+    "tiny_cnn": tiny_cnn,
+    "resnet_mini18": resnet_mini18,
+    "resnet_mini34": resnet_mini34,
+    "resnet_mini50": resnet_mini50,
+    "effnet_lite": effnet_lite,
+    "inception_lite": inception_lite,
+}
+
+# --------------------------------------------------------------------------
+# pipeline-composable init / apply / steps
+# --------------------------------------------------------------------------
+
+
+def init_params(stages, key):
+    """Per-stage parameter list (ordering = manifest ordering)."""
+    keys = jax.random.split(key, len(stages))
+    return [init(k) for (_, init, _), k in zip(stages, keys)]
+
+
+def apply_model(stages, params, x, sc=False):
+    """Forward pass; S-C wraps each stage in jax.checkpoint (remat)."""
+    for (name, _, apply), p in zip(stages, params):
+        f = (lambda pp, xx, _a=apply: _a(pp, xx))
+        if sc:
+            f = jax.checkpoint(f)
+        x = f(p, x)
+    return x
+
+
+def decode_input(batch_words, batch_size):
+    """E-D stage 0: Pallas decode + junk-slice; f64 [G,H,W,C] → f32 [B,...]."""
+    from compile.kernels import decode as dk
+
+    imgs = dk.decode_base256_groups(batch_words, CAP)
+    return imgs[:batch_size]
+
+
+def _loss_fn(stages, params, x, labels, sc):
+    logits = apply_model(stages, params, x, sc=sc)
+    loss = L.softmax_cross_entropy(logits, labels)
+    return loss, logits
+
+
+def flatten_state(params, momentum):
+    """Deterministic flat list: params leaves then momentum leaves."""
+    p_leaves = jax.tree_util.tree_leaves(params)
+    m_leaves = jax.tree_util.tree_leaves(momentum)
+    return tuple(p_leaves) + tuple(m_leaves)
+
+
+def state_treedef(stages):
+    """Tree structure of the parameter list (computed once, outside jit)."""
+    template = init_params(stages, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_structure(template)
+
+
+def unflatten_state(treedef, flat):
+    """Inverse of flatten_state given the stage treedef."""
+    n = treedef.num_leaves
+    params = jax.tree_util.tree_unflatten(treedef, list(flat[:n]))
+    momentum = jax.tree_util.tree_unflatten(treedef, list(flat[n : 2 * n]))
+    return params, momentum
+
+
+def make_init(stages, mp=False):
+    """(seed u32[2]) → flat state (params ⊎ zero momentum)."""
+
+    def init(seed):
+        key = jax.random.wrap_key_data(seed.astype(jnp.uint32), impl="threefry2x32")
+        params = init_params(stages, key)
+        if mp:
+            params = jax.tree_util.tree_map(lambda a: a.astype(jnp.float16), params)
+        momentum = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return flatten_state(params, momentum)
+
+    return init
+
+
+def make_train_step(stages, *, ed=False, mp=False, sc=False, mom=0.9,
+                    loss_scale=1024.0, batch_size=BATCH):
+    """(state…, batch, labels, lr) → (state'…, loss, correct).
+
+    The learning rate is a *runtime input* (scalar f32), so the rust
+    coordinator can drive LR schedules without recompiling artifacts.
+    M-P follows the paper's Figure 3: f16 storage, f32 compute, static loss
+    scaling; the momentum update runs in f32 and is stored back as f16.
+    """
+
+    treedef = state_treedef(stages)
+
+    def step(*args):
+        flat = args[:-3]
+        batch, labels, lr = args[-3], args[-2], args[-1]
+        params, momentum = unflatten_state(treedef, flat)
+        if mp:
+            params32 = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), params)
+        else:
+            params32 = params
+        x = decode_input(batch, batch_size) if ed else batch
+
+        def scaled_loss(p):
+            loss, logits = _loss_fn(stages, p, x, labels, sc)
+            scale = loss_scale if mp else 1.0
+            return loss * scale, (loss, logits)
+
+        grads, (loss, logits) = jax.grad(scaled_loss, has_aux=True)(params32)
+        if mp:
+            grads = jax.tree_util.tree_map(lambda g: g / loss_scale, grads)
+        mom32 = jax.tree_util.tree_map(
+            lambda a: a.astype(jnp.float32) if mp else a, momentum
+        )
+        new_mom32 = jax.tree_util.tree_map(lambda m, g: mom * m + g, mom32, grads)
+        new_params32 = jax.tree_util.tree_map(
+            lambda p, m: p - lr * m, params32, new_mom32
+        )
+        if mp:
+            new_params = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.float16), new_params32
+            )
+            new_mom = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.float16), new_mom32
+            )
+        else:
+            new_params, new_mom = new_params32, new_mom32
+        correct = L.correct_count(logits, labels)
+        return flatten_state(new_params, new_mom) + (loss, correct)
+
+    return step
+
+
+def make_eval_step(stages, *, ed=False, mp=False, sc=False, batch_size=BATCH):
+    """(params…, batch, labels) → (loss, correct).
+
+    Takes only the parameter half of the state: XLA dead-parameter
+    elimination would strip unused momentum inputs from the compiled
+    executable anyway, so the artifact signature excludes them.
+    """
+
+    treedef = state_treedef(stages)
+
+    def step(*args):
+        flat = args[:-2]
+        batch, labels = args[-2], args[-1]
+        params = jax.tree_util.tree_unflatten(treedef, list(flat))
+        if mp:
+            params = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), params)
+        x = decode_input(batch, batch_size) if ed else batch
+        # eval never needs remat — sc affects memory, not numerics
+        loss, logits = _loss_fn(stages, params, x, labels, sc=False)
+        return loss, L.correct_count(logits, labels)
+
+    return step

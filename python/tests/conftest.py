@@ -1,0 +1,5 @@
+"""Shared test config: x64 must be on before jax initializes."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,87 @@
+"""L1 correctness: Pallas encode/decode vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; every case must be bit-exact (the
+packing is integer arithmetic in f64, exact below 2^53 by construction).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode as dk
+from compile.kernels import encode as ek
+from compile.kernels import ref
+
+DIMS = st.sampled_from([(4, 4, 1), (8, 8, 3), (16, 8, 3), (32, 32, 3), (6, 10, 2)])
+
+
+def random_batch(rng, n, hwc):
+    h, w, c = hwc
+    return rng.integers(0, 256, (n, h, w, c)).astype(np.float64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), hwc=DIMS, seed=st.integers(0, 2**32 - 1))
+def test_encode_kernel_matches_ref(n, hwc, seed):
+    batch = random_batch(np.random.default_rng(seed), n, hwc)
+    got = ek.encode_base256(jnp.asarray(batch))
+    want = ref.encode_base256(jnp.asarray(batch))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=st.integers(1, 4), hwc=DIMS, seed=st.integers(0, 2**32 - 1))
+def test_decode_kernel_matches_ref(g, hwc, seed):
+    rng = np.random.default_rng(seed)
+    h, w, c = hwc
+    words = rng.integers(0, 2**48, (g, h, w, c)).astype(np.float64)
+    got = dk.decode_base256_groups(jnp.asarray(words), 6)
+    want = ref.decode_base256_groups(jnp.asarray(words), 6)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 6), hwc=DIMS, seed=st.integers(0, 2**32 - 1))
+def test_roundtrip_exact(n, hwc, seed):
+    """decode(encode(x)) == x / 255 for every image, bit-exact digits."""
+    batch = random_batch(np.random.default_rng(seed), n, hwc)
+    words = ek.encode_base256(jnp.asarray(batch))
+    imgs = dk.decode_base256_groups(words[None, ...], 6)[:n]
+    np.testing.assert_allclose(
+        np.asarray(imgs), batch.astype(np.float32) / 255.0, rtol=0, atol=0
+    )
+
+
+def test_roundtrip_saturated_pixels():
+    """All-255 images maximize the packed value; still exact at capacity."""
+    batch = np.full((6, 8, 8, 3), 255.0)
+    words = ek.encode_base256(jnp.asarray(batch))
+    assert float(jnp.max(words)) < 2.0**53, "packed value must stay exact"
+    imgs = dk.decode_base256_groups(words[None, ...], 6)
+    np.testing.assert_array_equal(np.asarray(imgs), np.ones_like(imgs))
+
+
+def test_junk_tail_slots_decode_to_zero():
+    """Partial group: un-encoded digit positions decode to black images."""
+    batch = np.full((2, 4, 4, 3), 200.0)
+    words = ref.encode_base256(jnp.asarray(batch))
+    imgs = dk.decode_base256_groups(words[None, ...], 6)
+    assert np.all(np.asarray(imgs[2:]) == 0)
+
+
+def test_encode_rejects_over_capacity():
+    batch = np.zeros((7, 4, 4, 3))
+    with pytest.raises(ValueError, match="≤6"):
+        ek.encode_base256(jnp.asarray(batch))
+    with pytest.raises(ValueError, match="≤6"):
+        ref.encode_base256(jnp.asarray(batch))
+
+
+def test_paper_capacity_claim_is_impossible():
+    """The paper's '16 images in one float64' cannot be exact: 16 base-256
+    digits need 128 bits, f64 has 53. Verify the 7th image already breaks
+    exactness if capacity were ignored."""
+    # 256^6 > 2^48: the 7th digit would need bits ≥ 2^48·255 ≳ 2^53
+    assert 256.0**7 > 2.0**53
+    assert 256.0**6 < 2.0**53

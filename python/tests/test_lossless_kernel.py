@@ -1,0 +1,59 @@
+"""L1 correctness: loss-less forced encoding (Algorithm 4) vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lossless as lk
+from compile.kernels import ref
+
+DIMS = st.sampled_from([(4, 4, 1), (8, 8, 3), (16, 8, 2), (32, 32, 3)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 7), hwc=DIMS, seed=st.integers(0, 2**32 - 1))
+def test_encode_matches_ref(n, hwc, seed):
+    rng = np.random.default_rng(seed)
+    h, w, c = hwc
+    batch = rng.integers(0, 256, (n, h, w, c)).astype(np.float64)
+    words, offs = lk.encode_lossless128(jnp.asarray(batch))
+    rwords, roffs = ref.encode_lossless128(jnp.asarray(batch))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(rwords))
+    np.testing.assert_array_equal(np.asarray(offs), np.asarray(roffs))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 7), hwc=DIMS, seed=st.integers(0, 2**32 - 1))
+def test_roundtrip_bit_exact(n, hwc, seed):
+    """The whole point of Algorithm 4: exact uint8 reconstruction."""
+    rng = np.random.default_rng(seed)
+    h, w, c = hwc
+    batch = rng.integers(0, 256, (n, h, w, c)).astype(np.float64)
+    words, offs = lk.encode_lossless128(jnp.asarray(batch))
+    back = lk.decode_lossless128(words, offs)
+    np.testing.assert_array_equal(np.asarray(back), batch.astype(np.uint8))
+
+
+def test_parity_plane_is_the_lsb():
+    batch = np.array([[[[255.0]]], [[[254.0]]]])  # odd, even
+    _, offs = lk.encode_lossless128(jnp.asarray(batch))
+    assert int(offs[0, 0, 0, 0]) == 1
+    assert int(offs[1, 0, 0, 0]) == 0
+
+
+def test_capacity_is_seven_not_thirty_two():
+    """Paper claims 32 images; 32·7 = 224 bits ≫ 53. Exact max is 7."""
+    assert 128.0**7 < 2.0**53 < 128.0**8
+    batch = np.zeros((8, 4, 4, 1))
+    with pytest.raises(ValueError, match="≤7"):
+        lk.encode_lossless128(jnp.asarray(batch))
+
+
+def test_decode_matches_ref_decoder():
+    rng = np.random.default_rng(7)
+    batch = rng.integers(0, 256, (7, 8, 8, 3)).astype(np.float64)
+    words, offs = ref.encode_lossless128(jnp.asarray(batch))
+    a = lk.decode_lossless128(jnp.asarray(words), jnp.asarray(offs))
+    b = ref.decode_lossless128(jnp.asarray(words), jnp.asarray(offs))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

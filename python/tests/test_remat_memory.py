@@ -1,0 +1,90 @@
+"""E9: XLA-measured validation of the remat (S-C) and M-P mechanisms.
+
+Findings (recorded in EXPERIMENTS.md §E9): on the XLA **CPU** backend,
+`jax.checkpoint` verifiably inserts the recompute (the optimized HLO has
+more convolutions in the backward pass), but CPU buffer assignment already
+reuses buffers so aggressively that the *temp allocation* does not shrink —
+remat's memory win materializes on accelerator backends, which is where the
+paper measured it. These tests therefore check:
+
+* the recompute is structurally present (S-C ≠ no-op),
+* temp memory does not *regress* badly under S-C,
+* M-P halves the state bytes on the wire,
+* E-D shrinks the batch argument by the exact packed amount.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def compiled(name, flags, batch=M.BATCH):
+    stages = M.MODELS[name]()
+    specs = M.init_params(stages, jax.random.PRNGKey(0))
+    dt = jnp.float16 if flags.get("mp") else jnp.float32
+    state_args = [
+        jax.ShapeDtypeStruct(l.shape, dt) for l in jax.tree_util.tree_leaves(specs)
+    ] * 2
+    if flags.get("ed"):
+        groups = -(-batch // M.CAP)
+        batch_arg = jax.ShapeDtypeStruct((groups, 32, 32, 3), jnp.float64)
+    else:
+        batch_arg = jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32)
+    labels_arg = jax.ShapeDtypeStruct((batch, 10), jnp.float32)
+    lr_arg = jax.ShapeDtypeStruct((), jnp.float32)
+    step = M.make_train_step(stages, **flags)
+    return jax.jit(step).lower(*state_args, batch_arg, labels_arg, lr_arg).compile()
+
+
+def conv_count(c):
+    txt = c.as_text()
+    return txt.count(" convolution(") + txt.count(" convolution.")
+
+
+@pytest.mark.slow
+def test_remat_recompute_is_structurally_present():
+    """S-C must add recompute ops to the backward pass — jax.checkpoint
+    survives the AOT path (it is not silently dropped)."""
+    base = compiled("resnet_mini18", {})
+    sc = compiled("resnet_mini18", {"sc": True})
+    nb, ns = conv_count(base), conv_count(sc)
+    assert ns > nb, f"sc convs {ns} !> base convs {nb}"
+
+
+@pytest.mark.slow
+def test_remat_temp_overhead_bounded_on_cpu():
+    """XLA CPU does not realize remat's temp savings (its buffer assignment
+    already reuses aggressively); assert the barrier overhead stays small
+    so a regression would be caught. The *accelerator* story is what the
+    rust analytic simulator models (DESIGN.md §5)."""
+    base = compiled("resnet_mini18", {})
+    sc = compiled("resnet_mini18", {"sc": True})
+    ratio = sc.memory_analysis().temp_size_in_bytes / base.memory_analysis().temp_size_in_bytes
+    assert ratio < 1.25, f"temp ratio {ratio:.2f}"
+
+
+def test_mp_halves_state_argument_bytes():
+    base = compiled("tiny_cnn", {})
+    mp = compiled("tiny_cnn", {"mp": True})
+    # argument bytes = state + batch + labels (+ lr); isolate the state by
+    # subtracting the fixed batch/labels/lr payload
+    fixed = 16 * 32 * 32 * 3 * 4 + 16 * 10 * 4 + 4
+    sb = base.memory_analysis().argument_size_in_bytes - fixed
+    sm = mp.memory_analysis().argument_size_in_bytes - fixed
+    ratio = sm / sb
+    assert abs(ratio - 0.5) < 0.02, f"state ratio {ratio:.3f}"
+
+
+def test_ed_shrinks_batch_argument():
+    base = compiled("tiny_cnn", {})
+    ed = compiled("tiny_cnn", {"ed": True})
+    delta = (
+        base.memory_analysis().argument_size_in_bytes
+        - ed.memory_analysis().argument_size_in_bytes
+    )
+    raw_batch = 16 * 32 * 32 * 3 * 4
+    enc_batch = 3 * 32 * 32 * 3 * 8
+    assert delta == raw_batch - enc_batch, delta

@@ -1,0 +1,86 @@
+//! E5 / Figure 1 + "≥20% training time" claim: the parallel encode–decode
+//! loader overlaps augmentation+encoding with training.
+//!
+//! Measures epoch wall time with the producer inline (synchronous) vs on
+//! the background thread (parallel), on a real training loop, and reports
+//! the saving. To make the loader cost visible at CIFAR scale we also run
+//! a data-heavy configuration (512² images into a simulated step).
+
+use optorch::config::{Pipeline, TrainConfig};
+use optorch::coordinator::Trainer;
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{EncodeSpec, Encoding, WordType};
+use optorch::data::loader::{EdLoader, LoaderMode};
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::util::bench::Table;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Loader-only comparison with a simulated train step of `step_ms`.
+fn loader_epoch(mode: LoaderMode, batches: usize, step_ms: u64, heavy: bool) -> f64 {
+    let (len, hw) = if heavy { (batches * 16, 160) } else { (batches * 16, 32) };
+    let d: Arc<dyn Dataset> =
+        Arc::new(SynthCifar::cifar10(Split::Train, len, 7).with_shape(hw, hw));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4,augmix2").unwrap(),
+        1,
+    )
+    .unwrap();
+    let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::F64));
+    let mut loader = EdLoader::new(d, sampler, spec, batches, mode);
+    let t0 = Instant::now();
+    while let Some(payload) = loader.next() {
+        assert!(!payload.is_empty());
+        std::thread::sleep(Duration::from_millis(step_ms)); // the "train step"
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E5 / Fig 1: parallel E-D overlap ===\n");
+
+    println!("-- loader-only (simulated {}ms step, augmix-heavy producer) --", 30);
+    let mut t = Table::new(&["workload", "sync (s)", "parallel (s)", "saving"]);
+    for (name, heavy, batches, step_ms) in
+        [("CIFAR 32²", false, 40, 30u64), ("512² imagery", true, 12, 120u64)]
+    {
+        let sync = loader_epoch(LoaderMode::Synchronous, batches, step_ms, heavy);
+        let par = loader_epoch(LoaderMode::Parallel { prefetch_depth: 4 }, batches, step_ms, heavy);
+        t.row(&[
+            name.to_string(),
+            format!("{sync:.2}"),
+            format!("{par:.2}"),
+            format!("{:.0}%", 100.0 * (1.0 - par / sync)),
+        ]);
+    }
+    t.print();
+
+    println!("\n-- full training (tiny_cnn, 2 epochs x 50 steps, real PJRT steps) --");
+    let mut t = Table::new(&["loader", "wall (s)", "producer (s)", "blocked (s)"]);
+    for (name, pipe) in [("synchronous (sc)", "sc"), ("parallel E-D (ed+sc)", "ed+sc")] {
+        let mut cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse(pipe).unwrap());
+        cfg.epochs = 2;
+        cfg.train_size = 800;
+        cfg.test_size = 160;
+        cfg.augment = "hflip,crop4,augmix2".into();
+        cfg.eval_every = 0;
+        let rep = Trainer::from_config(&cfg)?.run()?;
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", rep.total_wall_secs),
+            format!("{:.2}", rep.loader_produce_secs),
+            format!("{:.2}", rep.loader_blocked_secs),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper claim: parallel E-D cuts ≥20% of training time when the producer\n\
+         (augment+encode) is a significant fraction of the step; the loader-only\n\
+         rows show the overlap bound, the training rows show the realized saving."
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! E3 / paper Figure 10: memory consumption of all 12 paper models ×
+//! 6 pipelines for one batch iteration (16 images @ 512×512×3), from the
+//! analytic simulator. The paper's shape: M-P ≈ ½ B; S-C < ½ B on deep
+//! nets; S-C+M-P ≈ ¼ B; E-D trims the input term.
+
+use optorch::config::Pipeline;
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::memory::simulator::simulate;
+use optorch::models::{arch_by_name, paper_fig10_models};
+use optorch::util::bench::Table;
+
+fn main() {
+    let batch = 16;
+    println!("=== Fig 10: memory (GiB) per model x pipeline, batch 16 @ 512² ===\n");
+    let pipes = Pipeline::fig10_set();
+    let mut headers: Vec<String> = vec!["model".into()];
+    headers.extend(pipes.iter().map(|p| p.label()));
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&hdr_refs);
+    let gib = |b: u64| format!("{:.2}", b as f64 / (1024.0 * 1024.0 * 1024.0));
+
+    for model in paper_fig10_models() {
+        // EfficientNets at their native resolutions would OOM a P100 at 512²
+        // too; the paper plots them all at the same workload, so we do.
+        let arch = arch_by_name(&model, (512, 512, 3), 1000).unwrap();
+        let mut row = vec![model.clone()];
+        for &pipe in &pipes {
+            let ckpts = if pipe.sc {
+                plan_checkpoints(&arch, PlannerKind::Optimal, pipe, batch).checkpoints
+            } else {
+                vec![]
+            };
+            row.push(gib(simulate(&arch, pipe, batch, &ckpts).peak_bytes));
+        }
+        table.row(&row);
+    }
+    table.print();
+
+    // The paper's quoted ResNet-50 row: B 2 GB, M-P 1 GB, S-C 0.8, S-C+M-P 0.4.
+    let arch = arch_by_name("resnet50", (512, 512, 3), 1000).unwrap();
+    let b = simulate(&arch, Pipeline::BASELINE, batch, &[]).peak_bytes as f64;
+    let scplan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+    let mp = simulate(&arch, Pipeline::parse("mp").unwrap(), batch, &[]).peak_bytes as f64;
+    let sc = simulate(&arch, Pipeline::parse("sc").unwrap(), batch, &scplan.checkpoints).peak_bytes as f64;
+    let scmp = simulate(&arch, Pipeline::parse("mp+sc").unwrap(), batch, &scplan.checkpoints).peak_bytes as f64;
+    println!("\nresnet50 ratios vs baseline — paper: M-P 0.50, S-C 0.40, S-C+M-P 0.20");
+    println!(
+        "                          simulated: M-P {:.2}, S-C {:.2}, S-C+M-P {:.2}",
+        mp / b,
+        sc / b,
+        scmp / b
+    );
+}

@@ -1,0 +1,54 @@
+//! E1 / paper Figure 8: GPU-memory usage across one training iteration of
+//! ResNet-18 (batch 16 @ 512×512×3) for the optimization pipelines.
+//!
+//! Regenerates the figure's series from the analytic memory simulator
+//! (DESIGN.md §5): prints peak per pipeline plus the live-byte timeline
+//! CSV for baseline vs S-C. The paper's shape to reproduce: baseline
+//! ≈ 7000 MB vs sequential-checkpoints ≈ 2000 MB (a ≥2× gap; we report
+//! the exact simulated ratio).
+
+use optorch::config::Pipeline;
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::memory::simulator::simulate;
+use optorch::models::arch_by_name;
+use optorch::util::bench::{fmt_bytes, Table};
+
+fn main() {
+    let batch = 16;
+    let arch = arch_by_name("resnet18", (512, 512, 3), 1000).unwrap();
+    println!("=== Fig 8: ResNet-18, 1 iteration, batch 16 @ 512x512x3 ===\n");
+
+    let mut table = Table::new(&["pipeline", "peak", "vs baseline"]);
+    let base_peak = simulate(&arch, Pipeline::BASELINE, batch, &[]).peak_bytes;
+    for pipe in Pipeline::fig10_set() {
+        let ckpts = if pipe.sc {
+            plan_checkpoints(&arch, PlannerKind::Optimal, pipe, batch).checkpoints
+        } else {
+            vec![]
+        };
+        let rep = simulate(&arch, pipe, batch, &ckpts);
+        table.row(&[
+            pipe.label(),
+            fmt_bytes(rep.peak_bytes),
+            format!("{:.2}x", base_peak as f64 / rep.peak_bytes as f64),
+        ]);
+    }
+    table.print();
+
+    // The timeline series itself (what the paper plots on the x-axis).
+    println!("\n--- timeline CSV (baseline) ---");
+    let rep = simulate(&arch, Pipeline::BASELINE, batch, &[]);
+    print!("{}", optorch::coordinator::report::timeline_csv(&rep));
+    println!("--- timeline CSV (S-C, optimal plan) ---");
+    let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+    let rep = simulate(&arch, Pipeline::parse("sc").unwrap(), batch, &plan.checkpoints);
+    print!("{}", optorch::coordinator::report::timeline_csv(&rep));
+
+    let sc_peak = rep.peak_bytes;
+    println!(
+        "\npaper: 7000 MB -> 2000 MB (3.5x); simulated: {} -> {} ({:.2}x)",
+        fmt_bytes(base_peak),
+        fmt_bytes(sc_peak),
+        base_peak as f64 / sc_peak as f64
+    );
+}

@@ -1,0 +1,54 @@
+//! L3 hot-path microbenchmarks: per-step latency decomposition —
+//! sampler+augment, encode, literal marshaling, PJRT execute — the
+//! numbers the §Perf pass optimizes against.
+
+use optorch::config::{Pipeline, TrainConfig};
+use optorch::coordinator::Trainer;
+use optorch::data::augment::AugPolicy;
+use optorch::data::encode::{encode_batch_grouped, EncodeSpec, Encoding, WordType};
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::util::bench::{bench, fmt_ns, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== step-latency decomposition (batch 16 @ 32x32x3) ===\n");
+    let d = SynthCifar::cifar10(Split::Train, 2_000, 7);
+    let mut sampler =
+        SbsSampler::uniform(&d, 16, AugPolicy::parse("hflip,crop4").unwrap(), 1).unwrap();
+    let mut t = Table::new(&["stage", "median", "mean"]);
+
+    let s = bench(3, 50, || {
+        let _ = sampler.next_batch(&d);
+    });
+    t.row(&["sample+augment".into(), fmt_ns(s.median_ns), fmt_ns(s.mean_ns)]);
+
+    let batch = sampler.next_batch(&d);
+    let spec = EncodeSpec::new(Encoding::Base256, WordType::F64);
+    let s = bench(3, 100, || {
+        let _ = encode_batch_grouped(&batch, spec).unwrap();
+    });
+    t.row(&["encode (3 groups)".into(), fmt_ns(s.median_ns), fmt_ns(s.mean_ns)]);
+
+    let s = bench(3, 100, || {
+        let _ = batch.to_f32();
+    });
+    t.row(&["widen to f32 (baseline)".into(), fmt_ns(s.median_ns), fmt_ns(s.mean_ns)]);
+
+    // full PJRT train step via the trainer (includes literal marshaling)
+    for pipe in ["b", "ed", "mp", "sc", "ed+mp+sc"] {
+        let mut cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse(pipe).unwrap());
+        cfg.train_size = 320;
+        cfg.eval_every = 0;
+        cfg.epochs = 1;
+        let mut trainer = Trainer::from_config(&cfg)?;
+        let rec = trainer.run_epoch(0)?;
+        let per_step = rec.wall_secs / (rec.images as f64 / 16.0);
+        t.row(&[
+            format!("train step [{}]", pipe),
+            fmt_ns(per_step * 1e9),
+            format!("{:.0} img/s", rec.images_per_sec()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

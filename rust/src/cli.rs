@@ -1,0 +1,138 @@
+//! CLI argument parsing (clap substitute — DESIGN.md §5).
+//!
+//! Grammar: `optorch <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are collected as config overrides, so every `TrainConfig`
+//! field is settable from the command line without bespoke plumbing.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub subcommand: String,
+    /// `--key value` pairs.
+    pub opts: BTreeMap<String, String>,
+    /// bare `--flag`s.
+    pub flags: Vec<String>,
+    /// positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        let mut cli = Cli { subcommand, ..Default::default() };
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.opts.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // --key value form, unless next token is another option
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        cli.opts.insert(key.to_string(), v);
+                    }
+                    _ => cli.flags.push(key.to_string()),
+                }
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn from_env() -> Result<Cli, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+optorch — OpTorch reproduction (rust coordinator)
+
+USAGE:
+  optorch <command> [--key value]...
+
+COMMANDS:
+  train     Train a model.            --model NAME --pipeline b|ed|mp|sc|ed+sc|...
+            [--epochs N] [--batch_size N] [--dataset synth10|synth100|cifar10]
+            [--config FILE] [--train_size N] [--seed N] ...
+  memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
+            [--height N] [--width N] [--timeline]
+  plan      Plan checkpoint placement. --model NAME [--budget BYTES] [--kind dp|sqrt|uniform]
+  models    List architecture profiles and parameter counts.
+  figures   Regenerate all paper figures (shortcut for the benches).
+  help      Show this message.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let c = parse("train extra --model tiny_cnn --epochs 3 --timeline");
+        assert_eq!(c.subcommand, "train");
+        assert_eq!(c.get("model"), Some("tiny_cnn"));
+        assert_eq!(c.get_usize("epochs").unwrap(), Some(3));
+        assert!(c.has_flag("timeline"));
+        assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_key_equals_value() {
+        let c = parse("train --model=resnet_mini18 --lr=0.1");
+        assert_eq!(c.get("model"), Some("resnet_mini18"));
+        assert_eq!(c.get("lr"), Some("0.1"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let c = parse("memsim --timeline --model tiny_cnn");
+        assert!(c.has_flag("timeline"));
+        assert_eq!(c.get("model"), Some("tiny_cnn"));
+    }
+
+    #[test]
+    fn empty_args_yield_help() {
+        let c = Cli::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(c.subcommand, "help");
+    }
+
+    #[test]
+    fn bad_int_reports_key() {
+        let c = parse("train --epochs three");
+        let err = c.get_usize("epochs").unwrap_err();
+        assert!(err.contains("epochs"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Key–value config-file parser (TOML-subset: `key = value` lines,
+//! `#` comments, optional `[section]` headers that prefix keys with
+//! `section.`). The vendor set has no `toml`/`serde`, so configs use this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, PartialEq)]
+pub struct KvError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Parse config text into a flat `section.key → value` map.
+/// Values keep everything after the first `=` (trimmed, quotes stripped).
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, KvError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| KvError { line: i + 1, msg: "unterminated section".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(KvError { line: i + 1, msg: "empty section name".into() });
+            }
+            section = format!("{name}.");
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| KvError {
+            line: i + 1,
+            msg: format!("expected 'key = value', got: {line}"),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(KvError { line: i + 1, msg: "empty key".into() });
+        }
+        let mut val = line[eq + 1..].trim();
+        // strip matching quotes
+        if val.len() >= 2
+            && ((val.starts_with('"') && val.ends_with('"'))
+                || (val.starts_with('\'') && val.ends_with('\'')))
+        {
+            val = &val[1..val.len() - 1];
+        }
+        out.insert(format!("{section}{key}"), val.to_string());
+    }
+    Ok(out)
+}
+
+/// Typed getters over the parsed map.
+pub trait KvGet {
+    fn get_str(&self, key: &str) -> Option<&str>;
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get_str(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get_str(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{key}: expected number, got '{v}'")),
+        }
+    }
+
+    fn get_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        match self.get_str(key) {
+            None => Ok(None),
+            Some("true") | Some("1") | Some("yes") => Ok(Some(true)),
+            Some("false") | Some("0") | Some("no") => Ok(Some(false)),
+            Some(v) => Err(format!("{key}: expected bool, got '{v}'")),
+        }
+    }
+}
+
+impl KvGet for BTreeMap<String, String> {
+    fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let m = parse_kv(
+            "# comment\nmodel = resnet_mini18\n\n[train]\nepochs = 10\nlr = 0.05\n[data]\nname = \"synth10\"\n",
+        )
+        .unwrap();
+        assert_eq!(m.get_str("model"), Some("resnet_mini18"));
+        assert_eq!(m.get_str("train.epochs"), Some("10"));
+        assert_eq!(m.get_str("data.name"), Some("synth10"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let m = parse_kv("a = 5\nb = 2.5\nc = true\nd = nope\n").unwrap();
+        assert_eq!(m.get_usize("a").unwrap(), Some(5));
+        assert_eq!(m.get_f64("b").unwrap(), Some(2.5));
+        assert_eq!(m.get_bool("c").unwrap(), Some(true));
+        assert!(m.get_bool("d").is_err());
+        assert!(m.get_usize("b").is_err());
+        assert_eq!(m.get_usize("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn value_may_contain_equals() {
+        let m = parse_kv("aug = hflip,crop4\nexpr = a=b\n").unwrap();
+        assert_eq!(m.get_str("expr"), Some("a=b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_kv("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_kv("[open\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse_kv("= v\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn quotes_stripped() {
+        let m = parse_kv("a = \"x y\"\nb = 'z'\n").unwrap();
+        assert_eq!(m.get_str("a"), Some("x y"));
+        assert_eq!(m.get_str("b"), Some("z"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Config system: pipeline flags, training configuration, and a small
+//! key–value config-file format with CLI overrides.
+
+mod kv;
+mod pipeline;
+mod train;
+
+pub use kv::{parse_kv, KvError, KvGet};
+pub use pipeline::Pipeline;
+pub use train::{DatasetChoice, TrainConfig};

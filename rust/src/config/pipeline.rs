@@ -1,0 +1,173 @@
+//! Optimization-pipeline selection — the paper's B / E-D / M-P / S-C grid.
+
+/// Which OpTorch optimizations are active. The paper's pipelines are
+/// combinations of three independent switches over the baseline:
+/// encode–decode data flow, mixed precision, sequential checkpoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct Pipeline {
+    /// E-D: packed input batches + in-graph decode layer + parallel loader.
+    pub ed: bool,
+    /// M-P: f16 state, f32 compute (Figure 3).
+    pub mp: bool,
+    /// S-C: sequential checkpoints / rematerialization.
+    pub sc: bool,
+}
+
+impl Pipeline {
+    pub const BASELINE: Pipeline = Pipeline { ed: false, mp: false, sc: false };
+
+    /// Parse `"b"`, `"ed"`, `"mp"`, `"sc"`, `"ed+sc"`, `"ed+mp+sc"` … in any
+    /// order. `"b"`/`"baseline"` must appear alone.
+    pub fn parse(s: &str) -> Result<Pipeline, String> {
+        let toks: Vec<&str> = s
+            .split(['+', ','])
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .collect();
+        if toks.is_empty() {
+            return Err("empty pipeline spec".into());
+        }
+        let mut p = Pipeline::default();
+        for t in &toks {
+            match t.to_ascii_lowercase().as_str() {
+                "b" | "baseline" => {
+                    if toks.len() > 1 {
+                        return Err(format!("'{t}' cannot be combined: {s}"));
+                    }
+                }
+                "ed" | "e-d" => p.ed = true,
+                "mp" | "m-p" => p.mp = true,
+                "sc" | "s-c" => p.sc = true,
+                other => return Err(format!("unknown pipeline component '{other}'")),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Canonical name used in artifact files and reports
+    /// (`baseline`, `ed`, `mp`, `sc`, `ed_sc`, `ed_mp_sc`, …).
+    pub fn name(&self) -> String {
+        let mut parts = Vec::new();
+        if self.ed {
+            parts.push("ed");
+        }
+        if self.mp {
+            parts.push("mp");
+        }
+        if self.sc {
+            parts.push("sc");
+        }
+        if parts.is_empty() {
+            "baseline".to_string()
+        } else {
+            parts.join("_")
+        }
+    }
+
+    /// Paper-style display label (`B`, `E-D + S-C`, …).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.ed {
+            parts.push("E-D");
+        }
+        if self.mp {
+            parts.push("M-P");
+        }
+        if self.sc {
+            parts.push("S-C");
+        }
+        if parts.is_empty() {
+            "B".to_string()
+        } else {
+            parts.join(" + ")
+        }
+    }
+
+    /// The 8 combinations, baseline first (Fig 9/10 grids).
+    pub fn all() -> Vec<Pipeline> {
+        let mut v = Vec::new();
+        for ed in [false, true] {
+            for mp in [false, true] {
+                for sc in [false, true] {
+                    v.push(Pipeline { ed, mp, sc });
+                }
+            }
+        }
+        v.sort_by_key(|p| (p.ed as u8) + (p.mp as u8) + (p.sc as u8));
+        v
+    }
+
+    /// The 6 pipelines Figure 10 plots.
+    pub fn fig10_set() -> Vec<Pipeline> {
+        vec![
+            Pipeline::BASELINE,
+            Pipeline { ed: true, ..Default::default() },
+            Pipeline { mp: true, ..Default::default() },
+            Pipeline { sc: true, ..Default::default() },
+            Pipeline { sc: true, mp: true, ..Default::default() },
+            Pipeline { ed: true, sc: true, ..Default::default() },
+        ]
+    }
+}
+
+impl std::fmt::Display for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_singletons() {
+        assert_eq!(Pipeline::parse("b").unwrap(), Pipeline::BASELINE);
+        assert_eq!(Pipeline::parse("baseline").unwrap(), Pipeline::BASELINE);
+        assert_eq!(Pipeline::parse("ed").unwrap().name(), "ed");
+        assert_eq!(Pipeline::parse("MP").unwrap().name(), "mp");
+        assert_eq!(Pipeline::parse("S-C").unwrap().name(), "sc");
+    }
+
+    #[test]
+    fn parse_combos_any_order() {
+        let a = Pipeline::parse("ed+mp+sc").unwrap();
+        let b = Pipeline::parse("sc,mp,ed").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.name(), "ed_mp_sc");
+        assert_eq!(a.label(), "E-D + M-P + S-C");
+    }
+
+    #[test]
+    fn parse_rejects_bad() {
+        assert!(Pipeline::parse("").is_err());
+        assert!(Pipeline::parse("warp").is_err());
+        assert!(Pipeline::parse("b+sc").is_err());
+    }
+
+    #[test]
+    fn all_has_8_unique() {
+        let all = Pipeline::all();
+        assert_eq!(all.len(), 8);
+        let names: std::collections::HashSet<_> = all.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), 8);
+        assert_eq!(all[0], Pipeline::BASELINE);
+    }
+
+    #[test]
+    fn fig10_set_matches_paper() {
+        let labels: Vec<String> = Pipeline::fig10_set().iter().map(|p| p.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["B", "E-D", "M-P", "S-C", "M-P + S-C", "E-D + S-C"]
+        );
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for p in Pipeline::all() {
+            let spec = if p == Pipeline::BASELINE { "b".to_string() } else { p.name().replace('_', "+") };
+            assert_eq!(Pipeline::parse(&spec).unwrap(), p);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Training configuration: the launcher's single source of truth.
+
+use crate::config::kv::KvGet;
+use crate::config::{parse_kv, Pipeline};
+use crate::data::encode::{EncodeSpec, Encoding, WordType};
+use crate::data::loader::LoaderMode;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Which dataset the run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetChoice {
+    /// Synthetic CIFAR-10-shaped data (default; always available).
+    Synth10,
+    /// Synthetic CIFAR-100-shaped data.
+    Synth100,
+    /// Real CIFAR-10 binaries if discoverable, else an error.
+    Cifar10,
+}
+
+impl DatasetChoice {
+    pub fn parse(s: &str) -> Result<DatasetChoice, String> {
+        match s {
+            "synth10" | "synth" => Ok(DatasetChoice::Synth10),
+            "synth100" => Ok(DatasetChoice::Synth100),
+            "cifar10" => Ok(DatasetChoice::Cifar10),
+            other => Err(format!("unknown dataset '{other}'")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetChoice::Synth10 => "synth10",
+            DatasetChoice::Synth100 => "synth100",
+            DatasetChoice::Cifar10 => "cifar10",
+        }
+    }
+}
+
+/// Full configuration for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// L2 model name — must exist in the artifact manifest.
+    pub model: String,
+    pub pipeline: Pipeline,
+    pub dataset: DatasetChoice,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Prefetch queue depth for the parallel E-D loader.
+    pub prefetch_depth: usize,
+    /// Augmentation policy applied to every class (SBS per-class policies
+    /// are configured programmatically via [`crate::data::sampler`]).
+    pub augment: String,
+    pub artifacts_dir: PathBuf,
+    /// Evaluate every N epochs (0 = only at the end).
+    pub eval_every: usize,
+    /// Cap on train batches per epoch (0 = full epoch) — used by examples
+    /// and benches to bound wall-time.
+    pub max_batches_per_epoch: usize,
+    /// Learning-rate schedule (`const:LR`, `step:LR:N:F`, `cosine:LR:T`).
+    pub lr_schedule: crate::coordinator::LrSchedule,
+}
+
+impl TrainConfig {
+    /// Sensible defaults for a given model + pipeline (used by examples).
+    pub fn default_for(model: &str, pipeline: Pipeline) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            pipeline,
+            dataset: DatasetChoice::Synth10,
+            train_size: 2_000,
+            test_size: 512,
+            batch_size: 16,
+            epochs: 3,
+            seed: 42,
+            prefetch_depth: 4,
+            augment: "hflip,crop4".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            eval_every: 1,
+            max_batches_per_epoch: 0,
+            lr_schedule: crate::coordinator::LrSchedule::default(),
+        }
+    }
+
+    /// Parse a config file + `--key value` CLI overrides.
+    pub fn from_sources(
+        file_text: Option<&str>,
+        overrides: &BTreeMap<String, String>,
+    ) -> Result<TrainConfig, String> {
+        let mut kv = match file_text {
+            Some(t) => parse_kv(t).map_err(|e| e.to_string())?,
+            None => BTreeMap::new(),
+        };
+        for (k, v) in overrides {
+            kv.insert(k.clone(), v.clone());
+        }
+        let mut cfg = TrainConfig::default_for("tiny_cnn", Pipeline::BASELINE);
+        if let Some(m) = kv.get_str("model") {
+            cfg.model = m.to_string();
+        }
+        if let Some(p) = kv.get_str("pipeline") {
+            cfg.pipeline = Pipeline::parse(p)?;
+        }
+        if let Some(d) = kv.get_str("dataset") {
+            cfg.dataset = DatasetChoice::parse(d)?;
+        }
+        if let Some(v) = kv.get_usize("train_size")? {
+            cfg.train_size = v;
+        }
+        if let Some(v) = kv.get_usize("test_size")? {
+            cfg.test_size = v;
+        }
+        if let Some(v) = kv.get_usize("batch_size")? {
+            cfg.batch_size = v;
+        }
+        if let Some(v) = kv.get_usize("epochs")? {
+            cfg.epochs = v;
+        }
+        if let Some(v) = kv.get_usize("seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = kv.get_usize("prefetch_depth")? {
+            cfg.prefetch_depth = v;
+        }
+        if let Some(a) = kv.get_str("augment") {
+            cfg.augment = a.to_string();
+        }
+        if let Some(d) = kv.get_str("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(v) = kv.get_usize("eval_every")? {
+            cfg.eval_every = v;
+        }
+        if let Some(v) = kv.get_usize("max_batches_per_epoch")? {
+            cfg.max_batches_per_epoch = v;
+        }
+        if let Some(v) = kv.get_str("lr_schedule") {
+            cfg.lr_schedule = crate::coordinator::LrSchedule::parse(v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.batch_size == 0 {
+            return Err("batch_size must be ≥ 1".into());
+        }
+        if self.train_size == 0 {
+            return Err("train_size must be ≥ 1".into());
+        }
+        if self.model.is_empty() {
+            return Err("model must be set".into());
+        }
+        crate::data::augment::AugPolicy::parse(&self.augment)?;
+        Ok(())
+    }
+
+    /// Loader mode implied by the pipeline: E-D runs the parallel producer.
+    pub fn loader_mode(&self) -> LoaderMode {
+        if self.pipeline.ed {
+            LoaderMode::Parallel { prefetch_depth: self.prefetch_depth }
+        } else {
+            LoaderMode::Synchronous
+        }
+    }
+
+    /// Encode spec implied by the pipeline: E-D ships f64 base-256 words
+    /// (what the L1 decode kernel consumes); other pipelines ship raw f32.
+    pub fn encode_spec(&self) -> Option<EncodeSpec> {
+        if self.pipeline.ed {
+            Some(EncodeSpec::new(Encoding::Base256, WordType::F64))
+        } else {
+            None
+        }
+    }
+
+    /// Artifact basename for this (model, pipeline).
+    pub fn artifact_stem(&self) -> String {
+        format!("{}_{}", self.model, self.pipeline.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default_for("tiny_cnn", Pipeline::BASELINE)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn file_plus_overrides() {
+        let file = "model = resnet_mini18\npipeline = ed+sc\nepochs = 7\n";
+        let mut ov = BTreeMap::new();
+        ov.insert("epochs".to_string(), "2".to_string());
+        ov.insert("batch_size".to_string(), "8".to_string());
+        let cfg = TrainConfig::from_sources(Some(file), &ov).unwrap();
+        assert_eq!(cfg.model, "resnet_mini18");
+        assert_eq!(cfg.pipeline.name(), "ed_sc");
+        assert_eq!(cfg.epochs, 2); // override wins
+        assert_eq!(cfg.batch_size, 8);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut ov = BTreeMap::new();
+        ov.insert("batch_size".to_string(), "0".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).is_err());
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "warp9".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).is_err());
+        let mut ov = BTreeMap::new();
+        ov.insert("augment".to_string(), "teleport".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).is_err());
+        let mut ov = BTreeMap::new();
+        ov.insert("dataset".to_string(), "imagenet".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).is_err());
+    }
+
+    #[test]
+    fn pipeline_implies_loader_and_encoding() {
+        let b = TrainConfig::default_for("m", Pipeline::BASELINE);
+        assert_eq!(b.loader_mode(), LoaderMode::Synchronous);
+        assert!(b.encode_spec().is_none());
+        let ed = TrainConfig::default_for("m", Pipeline::parse("ed").unwrap());
+        assert!(matches!(ed.loader_mode(), LoaderMode::Parallel { .. }));
+        let spec = ed.encode_spec().unwrap();
+        assert_eq!(spec.capacity(), 6); // f64 base-256
+    }
+
+    #[test]
+    fn artifact_stem_format() {
+        let cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("ed+mp").unwrap());
+        assert_eq!(cfg.artifact_stem(), "tiny_cnn_ed_mp");
+    }
+}

@@ -1,0 +1,9 @@
+//! The training coordinator: composes dataset, SBS sampler, (parallel)
+//! loader, PJRT runtime and metrics into the paper's training pipelines.
+
+pub mod report;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::LrSchedule;
+pub use trainer::{Trainer, TrainReport};

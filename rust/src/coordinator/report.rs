@@ -1,0 +1,129 @@
+//! Report writers: CSV + figure-series emission shared by examples and
+//! benches (`reports/` directory by default).
+
+use crate::coordinator::TrainReport;
+use crate::memory::simulator::MemoryReport;
+use std::io::Write;
+use std::path::Path;
+
+/// Write the per-epoch history CSV.
+pub fn write_history_csv(path: &Path, report: &TrainReport) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::File::create(path)?.write_all(report.history.to_csv().as_bytes())
+}
+
+/// Figure-8-style timeline CSV: `event_index,label,live_mb`.
+pub fn timeline_csv(report: &MemoryReport) -> String {
+    let mut s = String::from("event,label,live_mb\n");
+    for (i, e) in report.timeline.iter().enumerate() {
+        s.push_str(&format!(
+            "{i},{},{:.1}\n",
+            e.label.replace(',', ";"),
+            e.live_bytes as f64 / (1024.0 * 1024.0)
+        ));
+    }
+    s
+}
+
+/// Figure-9-style row: model, pipeline, wall seconds, accuracy.
+pub fn fig9_row(report: &TrainReport) -> String {
+    format!(
+        "{},{},{:.1},{:.4}\n",
+        report.model, report.pipeline, report.total_wall_secs, report.final_eval_accuracy
+    )
+}
+
+/// Markdown summary of one run (EXPERIMENTS.md fragments).
+pub fn markdown_summary(report: &TrainReport) -> String {
+    let mut s = format!(
+        "### {} / {}\n\n| epoch | train loss | train acc | eval acc | wall s |\n|---|---|---|---|---|\n",
+        report.model, report.pipeline
+    );
+    for e in &report.history.epochs {
+        s.push_str(&format!(
+            "| {} | {:.4} | {:.3} | {} | {:.1} |\n",
+            e.epoch,
+            e.train_loss,
+            e.train_accuracy,
+            e.eval_accuracy
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "—".into()),
+            e.wall_secs
+        ));
+    }
+    s.push_str(&format!(
+        "\nfinal eval accuracy **{:.3}**, total {:.1}s (producer {:.1}s, blocked {:.1}s)\n",
+        report.final_eval_accuracy,
+        report.total_wall_secs,
+        report.loader_produce_secs,
+        report.loader_blocked_secs
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pipeline;
+    use crate::memory::simulator::simulate;
+    use crate::metrics::{EpochRecord, History};
+    use crate::models::arch_by_name;
+
+    fn fake_report() -> TrainReport {
+        let mut history = History::default();
+        history.push(EpochRecord {
+            epoch: 0,
+            train_loss: 1.9,
+            train_accuracy: 0.3,
+            eval_loss: Some(1.8),
+            eval_accuracy: Some(0.35),
+            wall_secs: 2.0,
+            images: 320,
+        });
+        TrainReport {
+            model: "tiny_cnn".into(),
+            pipeline: "ed_sc".into(),
+            history,
+            final_eval_accuracy: 0.35,
+            final_eval_loss: 1.8,
+            total_wall_secs: 2.0,
+            loader_produce_secs: 0.4,
+            loader_blocked_secs: 0.1,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_to_disk() {
+        let dir = std::env::temp_dir().join(format!("optorch_report_{}", std::process::id()));
+        let path = dir.join("history.csv");
+        write_history_csv(&path, &fake_report()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("epoch,"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn timeline_csv_has_all_events() {
+        let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let r = simulate(&arch, Pipeline::BASELINE, 4, &[]);
+        let csv = timeline_csv(&r);
+        assert_eq!(csv.lines().count(), r.timeline.len() + 1);
+    }
+
+    #[test]
+    fn fig9_row_format() {
+        let row = fig9_row(&fake_report());
+        assert_eq!(row.trim().split(',').count(), 4);
+        assert!(row.starts_with("tiny_cnn,ed_sc,"));
+    }
+
+    #[test]
+    fn markdown_mentions_final_accuracy() {
+        let md = markdown_summary(&fake_report());
+        assert!(md.contains("**0.350**"));
+        assert!(md.contains("| 0 |"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Learning-rate schedules — driven from the coordinator per epoch.
+//!
+//! The train-step artifacts take the LR as a runtime scalar input, so
+//! schedules need no recompilation. Parse from config strings:
+//! `const:0.05`, `step:0.05:2:0.5` (halve every 2 epochs),
+//! `cosine:0.05:10` (cosine decay to 0 over 10 epochs).
+
+/// A learning-rate schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const(f64),
+    /// base, every-N-epochs, multiplicative factor.
+    Step { base: f64, every: usize, factor: f64 },
+    /// base, total epochs (cosine from base to ~0).
+    Cosine { base: f64, total: usize },
+}
+
+impl LrSchedule {
+    pub fn parse(s: &str) -> Result<LrSchedule, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let f = |i: usize| -> Result<f64, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("schedule '{s}': missing field {i}"))?
+                .parse()
+                .map_err(|_| format!("schedule '{s}': bad number at field {i}"))
+        };
+        let u = |i: usize| -> Result<usize, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("schedule '{s}': missing field {i}"))?
+                .parse()
+                .map_err(|_| format!("schedule '{s}': bad integer at field {i}"))
+        };
+        match parts[0] {
+            "const" => Ok(LrSchedule::Const(f(1)?)),
+            "step" => {
+                let every = u(2)?;
+                if every == 0 {
+                    return Err(format!("schedule '{s}': every must be ≥ 1"));
+                }
+                Ok(LrSchedule::Step { base: f(1)?, every, factor: f(3)? })
+            }
+            "cosine" => {
+                let total = u(2)?;
+                if total == 0 {
+                    return Err(format!("schedule '{s}': total must be ≥ 1"));
+                }
+                Ok(LrSchedule::Cosine { base: f(1)?, total })
+            }
+            other => Err(format!("unknown schedule kind '{other}' (const|step|cosine)")),
+        }
+    }
+
+    /// LR for the given epoch (0-based).
+    pub fn at(&self, epoch: usize) -> f64 {
+        match self {
+            LrSchedule::Const(lr) => *lr,
+            LrSchedule::Step { base, every, factor } => {
+                base * factor.powi((epoch / every) as i32)
+            }
+            LrSchedule::Cosine { base, total } => {
+                let t = (epoch.min(*total) as f64) / (*total as f64);
+                base * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule::Const(0.05)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds() {
+        assert_eq!(LrSchedule::parse("const:0.1").unwrap(), LrSchedule::Const(0.1));
+        assert_eq!(
+            LrSchedule::parse("step:0.1:2:0.5").unwrap(),
+            LrSchedule::Step { base: 0.1, every: 2, factor: 0.5 }
+        );
+        assert_eq!(
+            LrSchedule::parse("cosine:0.1:10").unwrap(),
+            LrSchedule::Cosine { base: 0.1, total: 10 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(LrSchedule::parse("linear:0.1").is_err());
+        assert!(LrSchedule::parse("const").is_err());
+        assert!(LrSchedule::parse("step:0.1:0:0.5").is_err());
+        assert!(LrSchedule::parse("cosine:0.1:x").is_err());
+    }
+
+    #[test]
+    fn const_is_flat() {
+        let s = LrSchedule::Const(0.05);
+        assert_eq!(s.at(0), 0.05);
+        assert_eq!(s.at(100), 0.05);
+    }
+
+    #[test]
+    fn step_decays_every_n() {
+        let s = LrSchedule::Step { base: 0.1, every: 2, factor: 0.5 };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.at(1) - 0.1).abs() < 1e-12);
+        assert!((s.at(2) - 0.05).abs() < 1e-12);
+        assert!((s.at(5) - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = LrSchedule::Cosine { base: 0.1, total: 10 };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!(s.at(5) < 0.06);
+        assert!(s.at(10) < 1e-12);
+        // clamped past the horizon
+        assert!(s.at(20) < 1e-12);
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        for s in [
+            LrSchedule::Step { base: 0.1, every: 3, factor: 0.3 },
+            LrSchedule::Cosine { base: 0.1, total: 8 },
+        ] {
+            let mut prev = f64::INFINITY;
+            for e in 0..12 {
+                let v = s.at(e);
+                assert!(v <= prev + 1e-12, "{s:?} rose at epoch {e}");
+                prev = v;
+            }
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Epoch/step training loop over the AOT artifacts.
+
+use crate::config::{DatasetChoice, TrainConfig};
+use crate::data::augment::AugPolicy;
+use crate::data::dataset::Dataset;
+use crate::data::encode::encode_batch_grouped;
+use crate::data::image::ImageBatch;
+use crate::data::loader::{BatchPayload, EdLoader, LoaderStats};
+use crate::data::sampler::SbsSampler;
+use crate::data::synth::{Split, SynthCifar};
+use crate::metrics::{EpochRecord, History, Mean, Timer};
+use crate::runtime::{LoadedModel, Runtime, TrainState};
+use crate::{debug, info};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Result of a full training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub model: String,
+    pub pipeline: String,
+    pub history: History,
+    pub final_eval_accuracy: f64,
+    pub final_eval_loss: f64,
+    pub total_wall_secs: f64,
+    /// Producer-side seconds (encode+augment) — Fig 1 overlap accounting.
+    pub loader_produce_secs: f64,
+    pub loader_blocked_secs: f64,
+}
+
+/// Orchestrates one training run.
+pub struct Trainer {
+    cfg: TrainConfig,
+    model: LoadedModel,
+    state: TrainState,
+    train_data: Arc<dyn Dataset>,
+    test_data: Arc<dyn Dataset>,
+    history: History,
+    produce_secs: f64,
+    blocked_secs: f64,
+    /// Eval batches are deterministic — built once, reused every epoch
+    /// (§Perf iteration 2).
+    eval_cache: Option<Vec<BatchPayload>>,
+}
+
+fn make_dataset(choice: DatasetChoice, split: Split, len: usize, seed: u64) -> Result<Arc<dyn Dataset>> {
+    Ok(match choice {
+        DatasetChoice::Synth10 => Arc::new(SynthCifar::cifar10(split, len, seed)),
+        DatasetChoice::Synth100 => Arc::new(SynthCifar::cifar100(split, len, seed)),
+        DatasetChoice::Cifar10 => {
+            let d = crate::data::cifar::Cifar10::discover(split == Split::Train)
+                .ok_or_else(|| anyhow!("real CIFAR-10 not found (set OPTORCH_CIFAR_DIR)"))?;
+            Arc::new(d)
+        }
+    })
+}
+
+impl Trainer {
+    /// Build a trainer: datasets + runtime + compiled artifacts + init state.
+    pub fn from_config(cfg: &TrainConfig) -> Result<Trainer> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let mut runtime = Runtime::new(&cfg.artifacts_dir)?;
+        let model = runtime.load(&cfg.model, &cfg.pipeline.name())?;
+        if model.entry.batch_size != cfg.batch_size {
+            bail!(
+                "artifact for {}/{} was compiled for batch_size={}, config asks {} \
+                 (re-run aot.py to add more batch sizes)",
+                cfg.model,
+                cfg.pipeline.name(),
+                model.entry.batch_size,
+                cfg.batch_size
+            );
+        }
+        let num_classes = model.entry.num_classes;
+        let train_data = make_dataset(cfg.dataset, Split::Train, cfg.train_size, cfg.seed)?;
+        let test_data = make_dataset(cfg.dataset, Split::Test, cfg.test_size, cfg.seed)?;
+        if train_data.num_classes() != num_classes {
+            bail!(
+                "dataset has {} classes, artifact expects {num_classes}",
+                train_data.num_classes()
+            );
+        }
+        let state = model.init_state(cfg.seed)?;
+        info!(
+            "initialized {}/{}: {} state tensors, {} KiB",
+            cfg.model,
+            cfg.pipeline.name(),
+            state.len(),
+            state.bytes() / 1024
+        );
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            model,
+            state,
+            train_data,
+            test_data,
+            history: History::default(),
+            produce_secs: 0.0,
+            blocked_secs: 0.0,
+            eval_cache: None,
+        })
+    }
+
+    fn train_loader(&self, epoch: usize) -> Result<EdLoader> {
+        let policy = AugPolicy::parse(&self.cfg.augment).map_err(|e| anyhow!(e))?;
+        let sampler = SbsSampler::uniform(
+            self.train_data.as_ref(),
+            self.cfg.batch_size,
+            policy,
+            self.cfg.seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9),
+        )
+        .map_err(|e| anyhow!(e.to_string()))?;
+        let mut batches = sampler.batches_per_epoch(self.train_data.as_ref());
+        if self.cfg.max_batches_per_epoch > 0 {
+            batches = batches.min(self.cfg.max_batches_per_epoch);
+        }
+        Ok(EdLoader::new(
+            self.train_data.clone(),
+            sampler,
+            self.cfg.encode_spec(),
+            batches,
+            self.cfg.loader_mode(),
+        ))
+    }
+
+    /// Sequential, augmentation-free eval batches matching the artifact's
+    /// batch kind. Remainder images are dropped (fixed-shape artifacts).
+    fn eval_payloads(&self) -> Vec<BatchPayload> {
+        let b = self.cfg.batch_size;
+        let n = (self.test_data.len() / b) * b;
+        let (h, w, c) = self.test_data.shape();
+        let k = self.test_data.num_classes();
+        let mut out = Vec::new();
+        for start in (0..n).step_by(b) {
+            let mut batch = ImageBatch::zeros(b, h, w, c, k);
+            for i in 0..b {
+                let (img, label) = self.test_data.get(start + i);
+                batch.put(i, &img, label);
+            }
+            let payload = match self.cfg.encode_spec() {
+                None => BatchPayload::Raw {
+                    data: batch.to_f32(),
+                    labels: batch.labels.clone(),
+                    n: b,
+                },
+                Some(spec) => {
+                    BatchPayload::Encoded(encode_batch_grouped(&batch, spec).expect("encode"))
+                }
+            };
+            out.push(payload);
+        }
+        out
+    }
+
+    /// Evaluate current state on the held-out split.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        if self.eval_cache.is_none() {
+            self.eval_cache = Some(self.eval_payloads());
+        }
+        let mut loss = Mean::default();
+        let mut acc = Mean::default();
+        for payload in self.eval_cache.as_ref().unwrap() {
+            let out = self.model.eval_step(&self.state, payload)?;
+            loss.add_weighted(out.loss as f64, out.batch_size as u64);
+            acc.add_weighted(out.accuracy(), out.batch_size as u64);
+        }
+        Ok((loss.mean(), acc.mean()))
+    }
+
+    /// Run one epoch; returns its record.
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochRecord> {
+        let timer = Timer::start();
+        let mut loader = self.train_loader(epoch)?;
+        let lr = self.cfg.lr_schedule.at(epoch) as f32;
+        let mut loss = Mean::default();
+        let mut acc = Mean::default();
+        let mut images: u64 = 0;
+        let mut step = 0usize;
+        while let Some(payload) = loader.next() {
+            let out = self.model.train_step_lr(&mut self.state, &payload, lr)?;
+            loss.add_weighted(out.loss as f64, out.batch_size as u64);
+            acc.add_weighted(out.accuracy(), out.batch_size as u64);
+            images += out.batch_size as u64;
+            step += 1;
+            if step % 50 == 0 {
+                debug!(
+                    "epoch {epoch} step {step}: loss {:.4} acc {:.3}",
+                    loss.mean(),
+                    acc.mean()
+                );
+            }
+        }
+        let stats: Arc<LoaderStats> = loader.stats();
+        self.produce_secs += stats.produce_secs();
+        self.blocked_secs += stats.blocked_secs();
+        let wall = timer.secs();
+        let (eval_loss, eval_acc) = if self.cfg.eval_every > 0
+            && (epoch + 1) % self.cfg.eval_every == 0
+        {
+            let (l, a) = self.evaluate()?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+        let rec = EpochRecord {
+            epoch,
+            train_loss: loss.mean(),
+            train_accuracy: acc.mean(),
+            eval_loss,
+            eval_accuracy: eval_acc,
+            wall_secs: wall,
+            images,
+        };
+        info!(
+            "epoch {epoch}: loss {:.4} acc {:.3} eval_acc {} [{:.1}s, {:.0} img/s]",
+            rec.train_loss,
+            rec.train_accuracy,
+            rec.eval_accuracy
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "-".into()),
+            rec.wall_secs,
+            rec.images_per_sec()
+        );
+        Ok(rec)
+    }
+
+    /// Train for the configured number of epochs.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        for epoch in 0..self.cfg.epochs {
+            let rec = self.run_epoch(epoch)?;
+            self.history.push(rec);
+        }
+        // ensure a final eval exists
+        let (final_loss, final_acc) = match (
+            self.history.epochs.last().and_then(|e| e.eval_loss),
+            self.history.final_eval_accuracy(),
+        ) {
+            (Some(l), Some(a)) => (l, a),
+            _ => self.evaluate()?,
+        };
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            pipeline: self.cfg.pipeline.name(),
+            final_eval_accuracy: final_acc,
+            final_eval_loss: final_loss,
+            total_wall_secs: self.history.total_wall_secs(),
+            loader_produce_secs: self.produce_secs,
+            loader_blocked_secs: self.blocked_secs,
+            history: std::mem::take(&mut self.history),
+        })
+    }
+
+    pub fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    /// Persist the current training state (params ⊎ momentum) to disk.
+    pub fn save_state(&self, path: &std::path::Path) -> Result<()> {
+        crate::runtime::state_io::save(path, &self.model.entry, &self.state)
+    }
+
+    /// Replace the training state from a checkpoint written by
+    /// [`Trainer::save_state`] for the same (model, pipeline).
+    pub fn load_state(&mut self, path: &std::path::Path) -> Result<()> {
+        self.state = crate::runtime::state_io::load(path, &self.model.entry)?;
+        Ok(())
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+}

@@ -1,0 +1,13 @@
+//! Augmentations — the per-class policies SBS applies (paper §II-A.1).
+//!
+//! Single-image ops (flip / pad-crop / cutout / jitter / AugMix-lite) plus
+//! the pair mixers MixUp and CutMix. Pair mixers produce soft labels, which
+//! flow through the whole stack (`ImageBatch.labels` is `n × num_classes`).
+
+pub mod ops;
+pub mod pair;
+pub mod policy;
+
+pub use ops::{augmix_lite, brightness_jitter, cutout, hflip, pad_crop};
+pub use pair::{cutmix, mixup};
+pub use policy::{AugOp, AugPolicy};

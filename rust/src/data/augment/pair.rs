@@ -1,0 +1,166 @@
+//! Pair mixers: MixUp (Zhang et al.) and CutMix (Yun et al.).
+//!
+//! Both return the mix coefficient λ actually applied so the caller can
+//! blend the soft labels: `label = λ·label_a + (1-λ)·label_b`.
+
+use crate::data::image::Image;
+use crate::util::rng::Rng;
+
+/// Sample λ from a symmetric Beta(α, α) via two Gamma draws
+/// (Marsaglia–Tsang needs α ≥ 1; for α < 1 use the boost trick).
+pub fn sample_beta(alpha: f64, rng: &mut Rng) -> f64 {
+    let x = sample_gamma(alpha, rng);
+    let y = sample_gamma(alpha, rng);
+    if x + y == 0.0 {
+        0.5
+    } else {
+        x / (x + y)
+    }
+}
+
+fn sample_gamma(alpha: f64, rng: &mut Rng) -> f64 {
+    if alpha < 1.0 {
+        // boost: Gamma(α) = Gamma(α+1) · U^(1/α)
+        let u: f64 = rng.f64().max(1e-12);
+        return sample_gamma(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u: f64 = rng.f64().max(1e-12);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// MixUp: pixel-wise convex combination, `out = λ·a + (1-λ)·b`.
+/// Returns λ. `a` is modified in place.
+pub fn mixup(a: &mut Image, b: &Image, alpha: f64, rng: &mut Rng) -> f64 {
+    assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c), "mixup shape mismatch");
+    let lam = sample_beta(alpha, rng);
+    for (va, &vb) in a.data.iter_mut().zip(&b.data) {
+        *va = (lam * *va as f64 + (1.0 - lam) * vb as f64).round().clamp(0.0, 255.0) as u8;
+    }
+    lam
+}
+
+/// CutMix: paste a random rectangle of `b` into `a`; λ is the fraction of
+/// `a` that survives (area-exact, as in the paper). Returns λ.
+pub fn cutmix(a: &mut Image, b: &Image, alpha: f64, rng: &mut Rng) -> f64 {
+    assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c), "cutmix shape mismatch");
+    let lam = sample_beta(alpha, rng);
+    // Box with area (1-λ)·H·W centred at a random point, clipped to bounds.
+    let cut_ratio = (1.0 - lam).sqrt();
+    let cut_h = ((a.h as f64) * cut_ratio) as usize;
+    let cut_w = ((a.w as f64) * cut_ratio) as usize;
+    if cut_h == 0 || cut_w == 0 {
+        return 1.0;
+    }
+    let cy = rng.gen_range(a.h);
+    let cx = rng.gen_range(a.w);
+    let y0 = cy.saturating_sub(cut_h / 2);
+    let y1 = (cy + (cut_h + 1) / 2).min(a.h);
+    let x0 = cx.saturating_sub(cut_w / 2);
+    let x1 = (cx + (cut_w + 1) / 2).min(a.w);
+    for y in y0..y1 {
+        for x in x0..x1 {
+            for c in 0..a.c {
+                let v = b.get(y, x, c);
+                a.set(y, x, c, v);
+            }
+        }
+    }
+    // Exact λ from the clipped box area.
+    1.0 - ((y1 - y0) * (x1 - x0)) as f64 / (a.h * a.w) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn constant(h: usize, w: usize, v: u8) -> Image {
+        let mut img = Image::zeros(h, w, 3);
+        img.data.fill(v);
+        img
+    }
+
+    #[test]
+    fn beta_in_unit_interval() {
+        let mut rng = Rng::new(1);
+        for &alpha in &[0.2, 1.0, 5.0] {
+            for _ in 0..1000 {
+                let l = sample_beta(alpha, &mut rng);
+                assert!((0.0..=1.0).contains(&l), "alpha {alpha} lam {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn beta_symmetric_mean_half() {
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| sample_beta(0.4, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn mixup_blends_toward_lambda() {
+        let mut rng = Rng::new(3);
+        let mut a = constant(8, 8, 200);
+        let b = constant(8, 8, 0);
+        let lam = mixup(&mut a, &b, 1.0, &mut rng);
+        let expect = (lam * 200.0).round() as i32;
+        for &v in &a.data {
+            assert!((v as i32 - expect).abs() <= 1, "v {v} expect {expect}");
+        }
+    }
+
+    #[test]
+    fn mixup_extremes_preserve_inputs() {
+        // With alpha tiny, λ concentrates at 0 or 1 — output is one input.
+        let mut rng = Rng::new(4);
+        let mut a = constant(4, 4, 100);
+        let b = constant(4, 4, 50);
+        let lam = mixup(&mut a, &b, 0.05, &mut rng);
+        assert!(lam <= 1.0 && lam >= 0.0);
+    }
+
+    #[test]
+    fn cutmix_lambda_matches_surviving_area() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let mut a = constant(16, 16, 255);
+            let b = constant(16, 16, 0);
+            let lam = cutmix(&mut a, &b, 1.0, &mut rng);
+            let surviving =
+                a.data.iter().filter(|&&v| v == 255).count() as f64 / a.data.len() as f64;
+            assert!((surviving - lam).abs() < 1e-9, "lam {lam} surviving {surviving}");
+        }
+    }
+
+    #[test]
+    fn cutmix_pastes_b_content() {
+        let mut rng = Rng::new(6);
+        let mut a = constant(16, 16, 255);
+        let b = constant(16, 16, 7);
+        let lam = cutmix(&mut a, &b, 1.0, &mut rng);
+        if lam < 1.0 {
+            assert!(a.data.iter().any(|&v| v == 7));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mixup_rejects_shape_mismatch() {
+        let mut rng = Rng::new(7);
+        let mut a = constant(4, 4, 1);
+        let b = constant(5, 5, 1);
+        mixup(&mut a, &b, 1.0, &mut rng);
+    }
+}

@@ -1,0 +1,236 @@
+//! Augmentation policies — the per-class pipelines SBS schedules.
+//!
+//! A policy is an ordered list of ops applied to each selected image; pair
+//! ops (MixUp/CutMix) additionally draw a partner image from the same batch
+//! slot stream and blend labels. Policies parse from compact config strings
+//! such as `"hflip,crop4,cutout8"` or `"hflip,mixup0.2"`.
+
+use crate::data::augment::{ops, pair};
+use crate::data::image::Image;
+use crate::util::rng::Rng;
+
+/// One augmentation step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AugOp {
+    HFlip,
+    /// `crop<P>`: pad by P then random-crop back.
+    PadCrop(usize),
+    /// `cutout<S>`: zero a random S×S square.
+    Cutout(usize),
+    /// `bright<A>`: brightness jitter ±A.
+    Brightness(f64),
+    /// `augmix<W>`: AugMix-lite with W chains.
+    AugMix(usize),
+    /// `rot90`: random multiple of 90°.
+    Rot90,
+    /// `desat<A>`: desaturate toward luma by up to A.
+    Desaturate(f64),
+    /// `noise<A>`: uniform pixel noise ±A.
+    Noise(f64),
+    /// `mixup<α>`: MixUp with Beta(α, α).
+    MixUp(f64),
+    /// `cutmix<α>`: CutMix with Beta(α, α).
+    CutMix(f64),
+}
+
+/// An ordered augmentation pipeline.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AugPolicy {
+    pub ops: Vec<AugOp>,
+}
+
+impl AugPolicy {
+    pub fn none() -> AugPolicy {
+        AugPolicy { ops: vec![] }
+    }
+
+    /// The standard CIFAR recipe.
+    pub fn standard() -> AugPolicy {
+        AugPolicy { ops: vec![AugOp::HFlip, AugOp::PadCrop(4)] }
+    }
+
+    /// Parse `"hflip,crop4,cutout8,mixup0.2"`. Unknown ops are errors.
+    pub fn parse(s: &str) -> Result<AugPolicy, String> {
+        let mut ops = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let op = if tok == "hflip" {
+                AugOp::HFlip
+            } else if tok == "none" {
+                continue;
+            } else if let Some(rest) = tok.strip_prefix("crop") {
+                AugOp::PadCrop(rest.parse().map_err(|_| format!("bad crop arg: {tok}"))?)
+            } else if let Some(rest) = tok.strip_prefix("cutout") {
+                AugOp::Cutout(rest.parse().map_err(|_| format!("bad cutout arg: {tok}"))?)
+            } else if let Some(rest) = tok.strip_prefix("bright") {
+                AugOp::Brightness(rest.parse().map_err(|_| format!("bad bright arg: {tok}"))?)
+            } else if tok == "rot90" {
+                AugOp::Rot90
+            } else if let Some(rest) = tok.strip_prefix("augmix") {
+                AugOp::AugMix(rest.parse().map_err(|_| format!("bad augmix arg: {tok}"))?)
+            } else if let Some(rest) = tok.strip_prefix("desat") {
+                AugOp::Desaturate(rest.parse().map_err(|_| format!("bad desat arg: {tok}"))?)
+            } else if let Some(rest) = tok.strip_prefix("noise") {
+                AugOp::Noise(rest.parse().map_err(|_| format!("bad noise arg: {tok}"))?)
+            } else if let Some(rest) = tok.strip_prefix("mixup") {
+                AugOp::MixUp(rest.parse().map_err(|_| format!("bad mixup arg: {tok}"))?)
+            } else if let Some(rest) = tok.strip_prefix("cutmix") {
+                AugOp::CutMix(rest.parse().map_err(|_| format!("bad cutmix arg: {tok}"))?)
+            } else {
+                return Err(format!("unknown augmentation op: {tok}"));
+            };
+            ops.push(op);
+        }
+        Ok(AugPolicy { ops })
+    }
+
+    /// True if any op needs a partner image.
+    pub fn needs_partner(&self) -> bool {
+        self.ops
+            .iter()
+            .any(|op| matches!(op, AugOp::MixUp(_) | AugOp::CutMix(_)))
+    }
+
+    /// Apply the policy to `img` (labels in `label`, one-hot or soft).
+    /// `partner` supplies the second image + label for pair ops.
+    pub fn apply(
+        &self,
+        img: &mut Image,
+        label: &mut [f32],
+        partner: Option<(&Image, &[f32])>,
+        rng: &mut Rng,
+    ) {
+        for op in &self.ops {
+            match op {
+                AugOp::HFlip => {
+                    if rng.bool(0.5) {
+                        ops::hflip(img);
+                    }
+                }
+                AugOp::PadCrop(p) => ops::pad_crop(img, *p, rng),
+                AugOp::Cutout(s) => ops::cutout(img, *s, rng),
+                AugOp::Brightness(a) => ops::brightness_jitter(img, *a, rng),
+                AugOp::AugMix(w) => ops::augmix_lite(img, *w, rng),
+                AugOp::Rot90 => ops::rotate90(img, rng),
+                AugOp::Desaturate(a) => ops::desaturate(img, *a, rng),
+                AugOp::Noise(a) => ops::pixel_noise(img, *a, rng),
+                AugOp::MixUp(alpha) => {
+                    if let Some((pimg, plabel)) = partner {
+                        let lam = pair::mixup(img, pimg, *alpha, rng);
+                        blend_labels(label, plabel, lam);
+                    }
+                }
+                AugOp::CutMix(alpha) => {
+                    if let Some((pimg, plabel)) = partner {
+                        let lam = pair::cutmix(img, pimg, *alpha, rng);
+                        blend_labels(label, plabel, lam);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn blend_labels(a: &mut [f32], b: &[f32], lam: f64) {
+    for (va, &vb) in a.iter_mut().zip(b) {
+        *va = (lam as f32) * *va + (1.0 - lam as f32) * vb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = AugPolicy::parse("hflip,crop4,cutout8,bright0.3,augmix3,mixup0.2,cutmix1.0")
+            .unwrap();
+        assert_eq!(
+            p.ops,
+            vec![
+                AugOp::HFlip,
+                AugOp::PadCrop(4),
+                AugOp::Cutout(8),
+                AugOp::Brightness(0.3),
+                AugOp::AugMix(3),
+                AugOp::MixUp(0.2),
+                AugOp::CutMix(1.0),
+            ]
+        );
+        assert!(p.needs_partner());
+    }
+
+    #[test]
+    fn parse_new_ops() {
+        let p = AugPolicy::parse("rot90,desat0.5,noise8").unwrap();
+        assert_eq!(
+            p.ops,
+            vec![AugOp::Rot90, AugOp::Desaturate(0.5), AugOp::Noise(8.0)]
+        );
+        assert!(!p.needs_partner());
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(AugPolicy::parse("hflip,teleport").is_err());
+        assert!(AugPolicy::parse("crop").is_err());
+        assert!(AugPolicy::parse("mixupX").is_err());
+    }
+
+    #[test]
+    fn parse_empty_and_none() {
+        assert_eq!(AugPolicy::parse("").unwrap(), AugPolicy::none());
+        assert_eq!(AugPolicy::parse("none").unwrap(), AugPolicy::none());
+        assert!(!AugPolicy::none().needs_partner());
+    }
+
+    #[test]
+    fn standard_has_no_pair_ops() {
+        assert!(!AugPolicy::standard().needs_partner());
+    }
+
+    #[test]
+    fn apply_without_partner_skips_pair_ops() {
+        let p = AugPolicy::parse("mixup1.0").unwrap();
+        let mut img = Image::zeros(4, 4, 1);
+        img.data.fill(100);
+        let mut label = vec![1.0, 0.0];
+        let mut rng = Rng::new(1);
+        p.apply(&mut img, &mut label, None, &mut rng);
+        assert!(img.data.iter().all(|&v| v == 100));
+        assert_eq!(label, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn apply_mixup_blends_labels() {
+        let p = AugPolicy::parse("mixup1.0").unwrap();
+        let mut img = Image::zeros(4, 4, 1);
+        img.data.fill(255);
+        let partner = Image::zeros(4, 4, 1);
+        let mut label = vec![1.0f32, 0.0];
+        let plabel = vec![0.0f32, 1.0];
+        let mut rng = Rng::new(2);
+        p.apply(&mut img, &mut label, Some((&partner, &plabel)), &mut rng);
+        let sum: f32 = label.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "labels stay a distribution: {label:?}");
+        assert!(label[0] < 1.0 && label[1] > 0.0);
+    }
+
+    #[test]
+    fn deterministic_under_same_rng() {
+        let p = AugPolicy::parse("hflip,crop4,cutout4").unwrap();
+        let mk = || {
+            let mut img = Image::zeros(8, 8, 3);
+            for (i, v) in img.data.iter_mut().enumerate() {
+                *v = (i % 251) as u8;
+            }
+            img
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut la = vec![1.0, 0.0];
+        let mut lb = vec![1.0, 0.0];
+        p.apply(&mut a, &mut la, None, &mut Rng::new(3));
+        p.apply(&mut b, &mut lb, None, &mut Rng::new(3));
+        assert_eq!(a, b);
+    }
+}

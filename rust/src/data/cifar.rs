@@ -1,0 +1,165 @@
+//! Reader for the real CIFAR-10 binary format.
+//!
+//! Keeps the data path honest when a copy of `cifar-10-batches-bin` exists
+//! (`OPTORCH_CIFAR_DIR` or a `data/` directory); all experiments fall back
+//! to [`crate::data::synth::SynthCifar`] otherwise (DESIGN.md §5).
+//!
+//! Format (per record, 3073 bytes): 1 label byte, then 3×1024 bytes of
+//! channel-planar pixels (all R, all G, all B), row-major 32×32.
+
+use crate::data::dataset::Dataset;
+use crate::data::image::Image;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+const REC: usize = 3073;
+const SIDE: usize = 32;
+const PLANE: usize = SIDE * SIDE;
+
+/// CIFAR-10 loaded fully into memory (HWC uint8).
+pub struct Cifar10 {
+    data: Vec<u8>, // n × 3072, already HWC
+    labels: Vec<usize>,
+}
+
+impl Cifar10 {
+    /// Load one or more `*_batch*.bin` files.
+    pub fn from_files(paths: &[PathBuf]) -> std::io::Result<Cifar10> {
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for p in paths {
+            let mut raw = Vec::new();
+            std::fs::File::open(p)?.read_to_end(&mut raw)?;
+            if raw.len() % REC != 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{}: size {} not a multiple of {REC}", p.display(), raw.len()),
+                ));
+            }
+            for rec in raw.chunks_exact(REC) {
+                let label = rec[0] as usize;
+                if label > 9 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("{}: label {label} out of range", p.display()),
+                    ));
+                }
+                labels.push(label);
+                // planar CHW → interleaved HWC
+                let px = &rec[1..];
+                for i in 0..PLANE {
+                    data.push(px[i]); // R
+                    data.push(px[PLANE + i]); // G
+                    data.push(px[2 * PLANE + i]); // B
+                }
+            }
+        }
+        Ok(Cifar10 { data, labels })
+    }
+
+    /// Try the conventional locations; `None` when the dataset is absent.
+    pub fn discover(train: bool) -> Option<Cifar10> {
+        let dir = std::env::var("OPTORCH_CIFAR_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("data/cifar-10-batches-bin"));
+        if !dir.is_dir() {
+            return None;
+        }
+        let names: Vec<PathBuf> = if train {
+            (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect()
+        } else {
+            vec![dir.join("test_batch.bin")]
+        };
+        if !names.iter().all(|p| p.is_file()) {
+            return None;
+        }
+        Self::from_files(&names).ok()
+    }
+
+    /// Parse records from an in-memory buffer (used by tests).
+    pub fn from_bytes(raw: &[u8]) -> std::io::Result<Cifar10> {
+        let tmp = std::env::temp_dir().join(format!(
+            "optorch_cifar_test_{}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&tmp, raw)?;
+        let out = Self::from_files(&[tmp.clone()]);
+        let _ = std::fs::remove_file(&tmp);
+        out
+    }
+}
+
+impl Dataset for Cifar10 {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (SIDE, SIDE, 3)
+    }
+
+    fn get(&self, index: usize) -> (Image, usize) {
+        let mut img = Image::zeros(SIDE, SIDE, 3);
+        img.data
+            .copy_from_slice(&self.data[index * PLANE * 3..(index + 1) * PLANE * 3]);
+        (img, self.labels[index])
+    }
+}
+
+/// True when a real CIFAR-10 copy is discoverable at `path`.
+pub fn available_at(path: &Path) -> bool {
+    (1..=5).all(|i| path.join(format!("data_batch_{i}.bin")).is_file())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_record(label: u8, fill: u8) -> Vec<u8> {
+        let mut rec = vec![label];
+        // R plane = fill, G = fill+1, B = fill+2
+        for ch in 0..3u8 {
+            rec.extend(std::iter::repeat(fill.wrapping_add(ch)).take(PLANE));
+        }
+        rec
+    }
+
+    #[test]
+    fn parses_planar_to_hwc() {
+        let mut raw = fake_record(3, 10);
+        raw.extend(fake_record(7, 100));
+        let d = Cifar10::from_bytes(&raw).unwrap();
+        assert_eq!(d.len(), 2);
+        let (img, label) = d.get(0);
+        assert_eq!(label, 3);
+        assert_eq!(img.get(0, 0, 0), 10);
+        assert_eq!(img.get(0, 0, 1), 11);
+        assert_eq!(img.get(0, 0, 2), 12);
+        let (img, label) = d.get(1);
+        assert_eq!(label, 7);
+        assert_eq!(img.get(31, 31, 2), 102);
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let raw = vec![0u8; 100];
+        assert!(Cifar10::from_bytes(&raw).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let raw = fake_record(11, 0);
+        assert!(Cifar10::from_bytes(&raw).is_err());
+    }
+
+    #[test]
+    fn discover_absent_returns_none() {
+        std::env::set_var("OPTORCH_CIFAR_DIR", "/nonexistent/cifar");
+        assert!(Cifar10::discover(true).is_none());
+        std::env::remove_var("OPTORCH_CIFAR_DIR");
+    }
+}

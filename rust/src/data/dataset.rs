@@ -1,0 +1,118 @@
+//! Dataset abstraction shared by the synthetic generator, the real CIFAR-10
+//! binary reader, and in-memory test datasets.
+
+use crate::data::image::Image;
+
+/// A labeled image dataset with random access.
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn num_classes(&self) -> usize;
+
+    /// `(h, w, c)` of every image.
+    fn shape(&self) -> (usize, usize, usize);
+
+    /// Fetch image `index` and its class label.
+    fn get(&self, index: usize) -> (Image, usize);
+
+    /// Indices grouped by class — the structure SBS sampling needs.
+    /// Default implementation scans the whole dataset once.
+    fn indices_by_class(&self) -> Vec<Vec<usize>> {
+        let mut by_class = vec![Vec::new(); self.num_classes()];
+        for i in 0..self.len() {
+            let (_, c) = self.get(i);
+            by_class[c].push(i);
+        }
+        by_class
+    }
+}
+
+/// A fully in-memory dataset (tests, tiny corpora).
+pub struct MemDataset {
+    pub images: Vec<Image>,
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl MemDataset {
+    pub fn new(images: Vec<Image>, labels: Vec<usize>, num_classes: usize) -> MemDataset {
+        assert_eq!(images.len(), labels.len());
+        assert!(labels.iter().all(|&l| l < num_classes));
+        MemDataset { images, labels, num_classes }
+    }
+}
+
+impl Dataset for MemDataset {
+    fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        let i = &self.images[0];
+        (i.h, i.w, i.c)
+    }
+
+    fn get(&self, index: usize) -> (Image, usize) {
+        (self.images[index].clone(), self.labels[index])
+    }
+}
+
+/// Cheap label-only override: `indices_by_class` for a `MemDataset` without
+/// cloning images.
+impl MemDataset {
+    pub fn class_index(&self) -> Vec<Vec<usize>> {
+        let mut by_class = vec![Vec::new(); self.num_classes];
+        for (i, &c) in self.labels.iter().enumerate() {
+            by_class[c].push(i);
+        }
+        by_class
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MemDataset {
+        let images = (0..6)
+            .map(|i| {
+                let mut im = Image::zeros(2, 2, 1);
+                im.data.fill(i as u8);
+                im
+            })
+            .collect();
+        MemDataset::new(images, vec![0, 1, 2, 0, 1, 2], 3)
+    }
+
+    #[test]
+    fn mem_dataset_roundtrip() {
+        let d = tiny();
+        assert_eq!(d.len(), 6);
+        assert_eq!(d.shape(), (2, 2, 1));
+        let (img, l) = d.get(4);
+        assert_eq!(l, 1);
+        assert_eq!(img.data, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn indices_by_class_partitions() {
+        let d = tiny();
+        let by = d.indices_by_class();
+        assert_eq!(by, vec![vec![0, 3], vec![1, 4], vec![2, 5]]);
+        assert_eq!(by, d.class_index());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_label_out_of_range() {
+        MemDataset::new(vec![Image::zeros(1, 1, 1)], vec![5], 3);
+    }
+}

@@ -1,0 +1,408 @@
+//! Batch encoding/decoding — the paper's Algorithms 1, 3 and 4.
+//!
+//! Packs N uint8 images positionally into one same-shaped tensor of wider
+//! words: pixel position p of the packed tensor holds
+//! `Σ_i digit_i(p) · B^i` with base `B = 256` (Algorithm 1) or `B = 128`
+//! plus a parity bitplane (Algorithm 4, "loss-less forced encoding").
+//!
+//! ## Capacity corrections (DESIGN.md §4)
+//!
+//! The paper claims 16 images per float64 word (and 32 with the offset
+//! trick); both are arithmetically impossible. Exact capacities enforced
+//! here:
+//!
+//! | encoding          | u64 word | f64 word (53-bit mantissa) |
+//! |-------------------|----------|----------------------------|
+//! | base-256 (Alg 1)  | 8        | 6                          |
+//! | base-128 (Alg 4)  | 9        | 7                          |
+//!
+//! (The paper also indexes `256^i` from `i = 1`, which would waste the
+//! lowest digit; we index from 0 as the decode algorithm implies.)
+//!
+//! The f64 flavour is what crosses the PJRT boundary (the L1 Pallas decode
+//! kernel consumes it); the u64 flavour maximizes density for host-side
+//! storage and transfer.
+
+use crate::data::image::ImageBatch;
+
+/// Word type the packed tensor uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WordType {
+    U64,
+    F64,
+}
+
+/// Packing scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    /// Algorithm 1: exact base-256 digits.
+    Base256,
+    /// Algorithm 4: base-128 digits + parity bitplane (lossless).
+    Lossless128,
+}
+
+impl Encoding {
+    /// Bits per image digit.
+    pub fn digit_bits(self) -> u32 {
+        match self {
+            Encoding::Base256 => 8,
+            Encoding::Lossless128 => 7,
+        }
+    }
+
+    pub fn base(self) -> u64 {
+        1u64 << self.digit_bits()
+    }
+
+    /// Maximum number of images a single word can hold exactly.
+    pub fn capacity(self, word: WordType) -> usize {
+        let mantissa_bits = match word {
+            WordType::U64 => 64,
+            WordType::F64 => 53, // IEEE-754 double significand (incl. implicit bit)
+        };
+        (mantissa_bits / self.digit_bits()) as usize
+    }
+}
+
+/// A fully-specified encoder configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeSpec {
+    pub encoding: Encoding,
+    pub word: WordType,
+}
+
+impl EncodeSpec {
+    pub fn new(encoding: Encoding, word: WordType) -> EncodeSpec {
+        EncodeSpec { encoding, word }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.encoding.capacity(self.word)
+    }
+}
+
+/// A packed batch: one word per pixel position plus (for lossless mode) the
+/// parity bitplane, and the pass-through labels.
+#[derive(Clone, Debug)]
+pub struct EncodedBatch {
+    pub spec_encoding: Encoding,
+    pub spec_word: WordType,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Packed words (length `h*w*c`), valid when `spec_word == U64`.
+    pub words_u64: Vec<u64>,
+    /// Packed words (length `h*w*c`), valid when `spec_word == F64`.
+    pub words_f64: Vec<f64>,
+    /// Parity bitplane for [`Encoding::Lossless128`], bit i of byte
+    /// `(img*pixels + p) / 8` — empty for Base256.
+    pub offsets: Vec<u8>,
+    pub labels: Vec<f32>,
+    pub num_classes: usize,
+}
+
+impl EncodedBatch {
+    /// Payload bytes actually shipped (words + offsets + labels excluded).
+    pub fn payload_bytes(&self) -> u64 {
+        let words = match self.spec_word {
+            WordType::U64 => self.words_u64.len() * 8,
+            WordType::F64 => self.words_f64.len() * 8,
+        };
+        (words + self.offsets.len()) as u64
+    }
+
+    /// Compression ratio vs a f32-materialized batch of the same images.
+    pub fn ratio_vs_f32(&self) -> f64 {
+        (self.n * self.h * self.w * self.c * 4) as f64 / self.payload_bytes() as f64
+    }
+
+    /// Compression ratio vs the paper's f64-materialized baseline.
+    pub fn ratio_vs_f64(&self) -> f64 {
+        (self.n * self.h * self.w * self.c * 8) as f64 / self.payload_bytes() as f64
+    }
+}
+
+/// Errors from encode/decode.
+#[derive(Debug, PartialEq)]
+pub enum EncodeError {
+    /// Batch has more images than the (encoding, word) pair can hold.
+    OverCapacity { n: usize, capacity: usize },
+    /// Batch is empty.
+    Empty,
+}
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::OverCapacity { n, capacity } => {
+                write!(f, "batch of {n} images exceeds encoding capacity {capacity}")
+            }
+            EncodeError::Empty => write!(f, "cannot encode an empty batch"),
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
+#[inline]
+fn offset_index(img: usize, pixel: usize, pixels: usize) -> (usize, u8) {
+    let bit = img * pixels + pixel;
+    (bit / 8, 1u8 << (bit % 8))
+}
+
+/// Algorithm 1 / 4: pack `batch` according to `spec`.
+pub fn encode_batch(batch: &ImageBatch, spec: EncodeSpec) -> Result<EncodedBatch, EncodeError> {
+    if batch.n == 0 {
+        return Err(EncodeError::Empty);
+    }
+    let cap = spec.capacity();
+    if batch.n > cap {
+        return Err(EncodeError::OverCapacity { n: batch.n, capacity: cap });
+    }
+    let pixels = batch.image_len();
+    let mut words = vec![0u64; pixels];
+    let mut offsets = Vec::new();
+    match spec.encoding {
+        Encoding::Base256 => {
+            // word(p) = Σ_i img_i(p) << (8 i)
+            for i in 0..batch.n {
+                let img = batch.image(i);
+                let shift = 8 * i as u32;
+                for (p, w) in words.iter_mut().enumerate() {
+                    *w |= (img[p] as u64) << shift;
+                }
+            }
+        }
+        Encoding::Lossless128 => {
+            // digit = pixel >> 1 (0..=127); parity bit recorded in the plane.
+            offsets = vec![0u8; (batch.n * pixels + 7) / 8];
+            for i in 0..batch.n {
+                let img = batch.image(i);
+                let shift = 7 * i as u32;
+                for (p, w) in words.iter_mut().enumerate() {
+                    let px = img[p] as u64;
+                    *w |= (px >> 1) << shift;
+                    if px & 1 == 1 {
+                        let (byte, mask) = offset_index(i, p, pixels);
+                        offsets[byte] |= mask;
+                    }
+                }
+            }
+        }
+    }
+    let (words_u64, words_f64) = match spec.word {
+        WordType::U64 => (words, Vec::new()),
+        WordType::F64 => {
+            // Exactness guaranteed by the capacity check: value < 2^53.
+            (Vec::new(), words.iter().map(|&w| w as f64).collect())
+        }
+    };
+    Ok(EncodedBatch {
+        spec_encoding: spec.encoding,
+        spec_word: spec.word,
+        n: batch.n,
+        h: batch.h,
+        w: batch.w,
+        c: batch.c,
+        words_u64,
+        words_f64,
+        offsets,
+        labels: batch.labels.clone(),
+        num_classes: batch.num_classes,
+    })
+}
+
+/// Algorithm 3 (+ offset reapplication for Algorithm 4): unpack to uint8.
+pub fn decode_batch(enc: &EncodedBatch) -> ImageBatch {
+    let pixels = enc.h * enc.w * enc.c;
+    let mut out = ImageBatch::zeros(enc.n, enc.h, enc.w, enc.c, enc.num_classes.max(1));
+    out.labels = enc.labels.clone();
+    out.num_classes = enc.num_classes;
+    let words: Vec<u64> = match enc.spec_word {
+        WordType::U64 => enc.words_u64.clone(),
+        WordType::F64 => enc.words_f64.iter().map(|&w| w as u64).collect(),
+    };
+    let bits = enc.spec_encoding.digit_bits();
+    let mask = enc.spec_encoding.base() - 1;
+    for i in 0..enc.n {
+        let shift = bits * i as u32;
+        let dst = out.image_mut(i);
+        match enc.spec_encoding {
+            Encoding::Base256 => {
+                for (p, &w) in words.iter().enumerate() {
+                    dst[p] = ((w >> shift) & mask) as u8;
+                }
+            }
+            Encoding::Lossless128 => {
+                for (p, &w) in words.iter().enumerate() {
+                    let digit = ((w >> shift) & mask) as u8;
+                    let (byte, bmask) = offset_index(i, p, pixels);
+                    let parity = (enc.offsets[byte] & bmask != 0) as u8;
+                    dst[p] = (digit << 1) | parity;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Split an oversized batch into capacity-sized packed groups — how the
+/// loader ships batches larger than one word's capacity.
+pub fn encode_batch_grouped(
+    batch: &ImageBatch,
+    spec: EncodeSpec,
+) -> Result<Vec<EncodedBatch>, EncodeError> {
+    if batch.n == 0 {
+        return Err(EncodeError::Empty);
+    }
+    let cap = spec.capacity();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < batch.n {
+        let take = cap.min(batch.n - start);
+        let mut sub = ImageBatch::zeros(take, batch.h, batch.w, batch.c, batch.num_classes);
+        let len = batch.image_len();
+        sub.data
+            .copy_from_slice(&batch.data[start * len..(start + take) * len]);
+        sub.labels.copy_from_slice(
+            &batch.labels[start * batch.num_classes..(start + take) * batch.num_classes],
+        );
+        out.push(encode_batch(&sub, spec)?);
+        start += take;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_batch(rng: &mut Rng, n: usize, h: usize, w: usize, c: usize) -> ImageBatch {
+        let mut b = ImageBatch::zeros(n, h, w, c, 10);
+        for v in b.data.iter_mut() {
+            *v = (rng.next_u32() & 0xff) as u8;
+        }
+        for i in 0..n {
+            let cls = rng.gen_range(10);
+            b.label_mut(i)[cls] = 1.0;
+        }
+        b
+    }
+
+    #[test]
+    fn capacities_match_design() {
+        assert_eq!(Encoding::Base256.capacity(WordType::U64), 8);
+        assert_eq!(Encoding::Base256.capacity(WordType::F64), 6);
+        assert_eq!(Encoding::Lossless128.capacity(WordType::U64), 9);
+        assert_eq!(Encoding::Lossless128.capacity(WordType::F64), 7);
+    }
+
+    #[test]
+    fn base256_u64_roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        let b = random_batch(&mut rng, 8, 7, 5, 3);
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap();
+        assert_eq!(decode_batch(&enc), b);
+    }
+
+    #[test]
+    fn base256_f64_roundtrip_exact_at_capacity() {
+        let mut rng = Rng::new(2);
+        let b = random_batch(&mut rng, 6, 4, 4, 3);
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::F64)).unwrap();
+        assert_eq!(decode_batch(&enc), b);
+    }
+
+    #[test]
+    fn base256_f64_saturated_pixels() {
+        // All-255 pixels maximize the packed value; must still be exact.
+        let mut b = ImageBatch::zeros(6, 2, 2, 1, 2);
+        b.data.fill(255);
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::F64)).unwrap();
+        assert_eq!(decode_batch(&enc).data, b.data);
+    }
+
+    #[test]
+    fn lossless128_roundtrip_all_word_types() {
+        let mut rng = Rng::new(3);
+        for (word, n) in [(WordType::U64, 9), (WordType::F64, 7)] {
+            let b = random_batch(&mut rng, n, 5, 3, 3);
+            let enc = encode_batch(&b, EncodeSpec::new(Encoding::Lossless128, word)).unwrap();
+            assert_eq!(decode_batch(&enc), b, "word {word:?}");
+        }
+    }
+
+    #[test]
+    fn lossless128_parity_extremes() {
+        let mut b = ImageBatch::zeros(9, 2, 2, 1, 2);
+        // alternate odd/even pixels
+        for (i, v) in b.data.iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 255 } else { 254 };
+        }
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Lossless128, WordType::U64)).unwrap();
+        assert_eq!(decode_batch(&enc).data, b.data);
+    }
+
+    #[test]
+    fn over_capacity_rejected() {
+        let b = ImageBatch::zeros(9, 2, 2, 1, 2);
+        let err = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap_err();
+        assert_eq!(err, EncodeError::OverCapacity { n: 9, capacity: 8 });
+        let b7 = ImageBatch::zeros(7, 2, 2, 1, 2);
+        assert!(encode_batch(&b7, EncodeSpec::new(Encoding::Base256, WordType::F64)).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let b = ImageBatch::zeros(0, 2, 2, 1, 2);
+        assert_eq!(
+            encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap_err(),
+            EncodeError::Empty
+        );
+    }
+
+    #[test]
+    fn partial_batch_roundtrip() {
+        // Fewer images than capacity: upper digits stay zero.
+        let mut rng = Rng::new(4);
+        let b = random_batch(&mut rng, 3, 4, 4, 3);
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap();
+        assert_eq!(decode_batch(&enc), b);
+    }
+
+    #[test]
+    fn grouped_encode_covers_whole_batch() {
+        let mut rng = Rng::new(5);
+        let b = random_batch(&mut rng, 20, 3, 3, 3);
+        let groups =
+            encode_batch_grouped(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap();
+        assert_eq!(groups.iter().map(|g| g.n).collect::<Vec<_>>(), vec![8, 8, 4]);
+        // Re-assemble and compare.
+        let mut rebuilt = Vec::new();
+        for g in &groups {
+            rebuilt.extend_from_slice(&decode_batch(g).data);
+        }
+        assert_eq!(rebuilt, b.data);
+    }
+
+    #[test]
+    fn payload_ratios_vs_baselines() {
+        // 8 images packed into u64 words: 8·pixels bytes vs 4·8·pixels (f32)
+        // → 4×, vs 8·8·pixels (f64) → 8×.
+        let b = ImageBatch::zeros(8, 8, 8, 3, 10);
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap();
+        assert!((enc.ratio_vs_f32() - 4.0).abs() < 1e-9);
+        assert!((enc.ratio_vs_f64() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn labels_pass_through() {
+        let mut rng = Rng::new(6);
+        let b = random_batch(&mut rng, 4, 2, 2, 1);
+        let enc = encode_batch(&b, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap();
+        assert_eq!(enc.labels, b.labels);
+        assert_eq!(decode_batch(&enc).labels, b.labels);
+    }
+}

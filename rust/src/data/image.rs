@@ -1,0 +1,192 @@
+//! Image and batch containers (uint8 HWC, batches NHWC-contiguous).
+//!
+//! These are the host-side types the data pipeline operates on before a
+//! batch is packed by [`crate::data::encode`] (E-D pipelines) or widened to
+//! f32 (baseline pipelines) and handed to the PJRT runtime.
+
+/// A single uint8 image, HWC layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<u8>,
+}
+
+impl Image {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Image {
+        Image { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> u8 {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: u8) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// A batch of same-shaped uint8 images, contiguous NHWC.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImageBatch {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<u8>,
+    /// Soft labels, `n × num_classes`, row-major. One-hot for plain samples;
+    /// mixed for MixUp/CutMix outputs.
+    pub labels: Vec<f32>,
+    pub num_classes: usize,
+}
+
+impl ImageBatch {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize, num_classes: usize) -> ImageBatch {
+        ImageBatch {
+            n,
+            h,
+            w,
+            c,
+            data: vec![0; n * h * w * c],
+            labels: vec![0.0; n * num_classes],
+            num_classes,
+        }
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Borrow image `i`'s bytes.
+    pub fn image(&self, i: usize) -> &[u8] {
+        let len = self.image_len();
+        &self.data[i * len..(i + 1) * len]
+    }
+
+    /// Mutably borrow image `i`'s bytes.
+    pub fn image_mut(&mut self, i: usize) -> &mut [u8] {
+        let len = self.image_len();
+        &mut self.data[i * len..(i + 1) * len]
+    }
+
+    /// Copy an [`Image`] + one-hot label into slot `i`.
+    pub fn put(&mut self, i: usize, img: &Image, class: usize) {
+        assert_eq!((img.h, img.w, img.c), (self.h, self.w, self.c), "shape mismatch");
+        assert!(class < self.num_classes);
+        self.image_mut(i).copy_from_slice(&img.data);
+        let row = &mut self.labels[i * self.num_classes..(i + 1) * self.num_classes];
+        row.fill(0.0);
+        row[class] = 1.0;
+    }
+
+    /// Soft-label row for image `i`.
+    pub fn label(&self, i: usize) -> &[f32] {
+        &self.labels[i * self.num_classes..(i + 1) * self.num_classes]
+    }
+
+    pub fn label_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.labels[i * self.num_classes..(i + 1) * self.num_classes]
+    }
+
+    /// Hard label = argmax of the soft row.
+    pub fn hard_label(&self, i: usize) -> usize {
+        let row = self.label(i);
+        let mut best = 0;
+        for (j, v) in row.iter().enumerate() {
+            if *v > row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Widen the batch to f32 in `[0,1)` (the baseline pipelines' payload).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&b| b as f32 / 255.0).collect()
+    }
+
+    /// Bytes of the raw uint8 payload.
+    pub fn payload_bytes_u8(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// Bytes if materialized as f32 (what standard loaders ship).
+    pub fn payload_bytes_f32(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Bytes if materialized as f64 (the paper's stated baseline).
+    pub fn payload_bytes_f64(&self) -> u64 {
+        (self.data.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_indexing_roundtrip() {
+        let mut img = Image::zeros(4, 5, 3);
+        img.set(2, 3, 1, 200);
+        assert_eq!(img.get(2, 3, 1), 200);
+        assert_eq!(img.get(2, 3, 0), 0);
+        assert_eq!(img.pixels(), 60);
+    }
+
+    #[test]
+    fn batch_put_and_read_back() {
+        let mut b = ImageBatch::zeros(2, 2, 2, 1, 3);
+        let mut img = Image::zeros(2, 2, 1);
+        img.data.copy_from_slice(&[1, 2, 3, 4]);
+        b.put(1, &img, 2);
+        assert_eq!(b.image(1), &[1, 2, 3, 4]);
+        assert_eq!(b.image(0), &[0, 0, 0, 0]);
+        assert_eq!(b.label(1), &[0.0, 0.0, 1.0]);
+        assert_eq!(b.hard_label(1), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn batch_put_rejects_wrong_shape() {
+        let mut b = ImageBatch::zeros(1, 2, 2, 1, 2);
+        let img = Image::zeros(3, 3, 1);
+        b.put(0, &img, 0);
+    }
+
+    #[test]
+    fn payload_sizes() {
+        let b = ImageBatch::zeros(16, 32, 32, 3, 10);
+        assert_eq!(b.payload_bytes_u8(), 16 * 32 * 32 * 3);
+        assert_eq!(b.payload_bytes_f32(), 4 * 16 * 32 * 32 * 3);
+        assert_eq!(b.payload_bytes_f64(), 8 * 16 * 32 * 32 * 3);
+    }
+
+    #[test]
+    fn to_f32_normalizes() {
+        let mut b = ImageBatch::zeros(1, 1, 1, 1, 2);
+        b.data[0] = 255;
+        let f = b.to_f32();
+        assert!((f[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn soft_labels_mix() {
+        let mut b = ImageBatch::zeros(1, 1, 1, 1, 2);
+        b.label_mut(0).copy_from_slice(&[0.3, 0.7]);
+        assert_eq!(b.hard_label(0), 1);
+    }
+}

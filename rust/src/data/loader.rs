@@ -1,0 +1,495 @@
+//! Parallel encode–decode (E-D) loader — the paper's Figure 1 pipeline.
+//!
+//! A producer thread samples, augments and **encodes** batches for the next
+//! steps while the trainer consumes the current one; a bounded channel
+//! provides backpressure so the producer never runs more than
+//! `prefetch_depth` batches ahead. The baseline (synchronous) mode performs
+//! the same work inline on the consumer thread, which is exactly the
+//! pipeline difference Figure 1 illustrates.
+//!
+//! The paper also "dumps" encoded batches for reuse across epochs; the
+//! [`dump`] submodule provides that binary cache.
+
+use crate::data::dataset::Dataset;
+use crate::data::encode::{encode_batch_grouped, EncodeSpec, EncodedBatch};
+use crate::data::image::ImageBatch;
+use crate::data::sampler::SbsSampler;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What the loader hands the trainer per step.
+#[derive(Clone, Debug)]
+pub enum BatchPayload {
+    /// Baseline pipelines: f32 pixels in `[0,1)` + soft labels.
+    Raw { data: Vec<f32>, labels: Vec<f32>, n: usize },
+    /// E-D pipelines: capacity-sized packed groups (see `encode`).
+    Encoded(Vec<EncodedBatch>),
+}
+
+impl BatchPayload {
+    /// Number of images carried.
+    pub fn len(&self) -> usize {
+        match self {
+            BatchPayload::Raw { n, .. } => *n,
+            BatchPayload::Encoded(gs) => gs.iter().map(|g| g.n).sum(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Host-side payload bytes (the quantity the paper's 16× claim is about).
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            BatchPayload::Raw { data, .. } => (data.len() * 4) as u64,
+            BatchPayload::Encoded(gs) => gs.iter().map(|g| g.payload_bytes()).sum(),
+        }
+    }
+}
+
+/// Loader operating mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoaderMode {
+    /// Produce batches inline on `next()` (standard pipeline).
+    Synchronous,
+    /// Produce on a background thread with a bounded prefetch queue
+    /// (the paper's parallel E-D pipeline).
+    Parallel { prefetch_depth: usize },
+}
+
+/// Producer-side counters for the Fig-1 overlap analysis.
+#[derive(Default, Debug)]
+pub struct LoaderStats {
+    /// ns the producer spent generating+encoding batches.
+    pub produce_ns: AtomicU64,
+    /// ns the producer spent blocked on the full queue (backpressure).
+    pub blocked_ns: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+impl LoaderStats {
+    pub fn produce_secs(&self) -> f64 {
+        self.produce_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+    pub fn blocked_secs(&self) -> f64 {
+        self.blocked_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+fn make_payload(
+    batch: &ImageBatch,
+    spec: Option<EncodeSpec>,
+) -> Result<BatchPayload, crate::data::encode::EncodeError> {
+    Ok(match spec {
+        None => BatchPayload::Raw {
+            data: batch.to_f32(),
+            labels: batch.labels.clone(),
+            n: batch.n,
+        },
+        Some(s) => BatchPayload::Encoded(encode_batch_grouped(batch, s)?),
+    })
+}
+
+/// Epoch-scoped batch source with both modes behind one interface.
+pub enum EdLoader {
+    Sync {
+        dataset: Arc<dyn Dataset>,
+        sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        remaining: usize,
+        stats: Arc<LoaderStats>,
+    },
+    Par {
+        rx: Receiver<BatchPayload>,
+        handle: Option<std::thread::JoinHandle<()>>,
+        stats: Arc<LoaderStats>,
+    },
+}
+
+impl EdLoader {
+    /// Build a loader producing `num_batches` batches.
+    ///
+    /// `spec = None` ships raw f32 batches (B / M-P / S-C pipelines);
+    /// `spec = Some(_)` ships packed batches (E-D pipelines).
+    pub fn new(
+        dataset: Arc<dyn Dataset>,
+        sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        num_batches: usize,
+        mode: LoaderMode,
+    ) -> EdLoader {
+        let stats = Arc::new(LoaderStats::default());
+        match mode {
+            LoaderMode::Synchronous => EdLoader::Sync {
+                dataset,
+                sampler,
+                spec,
+                remaining: num_batches,
+                stats,
+            },
+            LoaderMode::Parallel { prefetch_depth } => {
+                let (tx, rx) = sync_channel(prefetch_depth.max(1));
+                let pstats = stats.clone();
+                let mut sampler = sampler;
+                let handle = std::thread::Builder::new()
+                    .name("optorch-ed-producer".into())
+                    .spawn(move || {
+                        for _ in 0..num_batches {
+                            let t0 = Instant::now();
+                            let batch = sampler.next_batch(dataset.as_ref());
+                            let payload = match make_payload(&batch, spec) {
+                                Ok(p) => p,
+                                Err(e) => {
+                                    // capacity violations are programming errors
+                                    // upstream; surface loudly.
+                                    panic!("E-D producer encode failed: {e}");
+                                }
+                            };
+                            pstats
+                                .produce_ns
+                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            let t1 = Instant::now();
+                            if tx.send(payload).is_err() {
+                                return; // consumer dropped; stop quietly
+                            }
+                            pstats
+                                .blocked_ns
+                                .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            pstats.batches.fetch_add(1, Ordering::Relaxed);
+                        }
+                    })
+                    .expect("spawn E-D producer");
+                EdLoader::Par { rx, handle: Some(handle), stats }
+            }
+        }
+    }
+
+    /// Next batch, or `None` at end of the configured run.
+    pub fn next(&mut self) -> Option<BatchPayload> {
+        match self {
+            EdLoader::Sync { dataset, sampler, spec, remaining, stats } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                *remaining -= 1;
+                let t0 = Instant::now();
+                let batch = sampler.next_batch(dataset.as_ref());
+                let payload = make_payload(&batch, *spec).expect("encode failed");
+                stats
+                    .produce_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                Some(payload)
+            }
+            EdLoader::Par { rx, .. } => rx.recv().ok(),
+        }
+    }
+
+    pub fn stats(&self) -> Arc<LoaderStats> {
+        match self {
+            EdLoader::Sync { stats, .. } => stats.clone(),
+            EdLoader::Par { stats, .. } => stats.clone(),
+        }
+    }
+}
+
+impl Drop for EdLoader {
+    fn drop(&mut self) {
+        if let EdLoader::Par { rx, handle, .. } = self {
+            // Drain so the producer unblocks, then join.
+            while rx.try_recv().is_ok() {}
+            // Dropping the receiver ends the producer's send loop.
+            if let Some(h) = handle.take() {
+                // Receiver is still alive here; drain until the channel closes.
+                loop {
+                    match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                        Ok(_) => continue,
+                        Err(_) => break,
+                    }
+                }
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Binary cache for encoded batches — the paper's "dump" step in Figure 1.
+pub mod dump {
+    use super::*;
+    use crate::data::encode::{Encoding, WordType};
+    use std::io::{Read, Write};
+    use std::path::Path;
+
+    const MAGIC: &[u8; 8] = b"OPTORCH1";
+
+    fn push_u32(buf: &mut Vec<u8>, v: u32) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Serialize one encoded batch.
+    pub fn to_bytes(e: &EncodedBatch) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.push(match e.spec_encoding {
+            Encoding::Base256 => 0,
+            Encoding::Lossless128 => 1,
+        });
+        buf.push(match e.spec_word {
+            WordType::U64 => 0,
+            WordType::F64 => 1,
+        });
+        for v in [e.n, e.h, e.w, e.c, e.num_classes] {
+            push_u32(&mut buf, v as u32);
+        }
+        push_u32(&mut buf, e.words_u64.len() as u32);
+        for w in &e.words_u64 {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        push_u32(&mut buf, e.words_f64.len() as u32);
+        for w in &e.words_f64 {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        push_u32(&mut buf, e.offsets.len() as u32);
+        buf.extend_from_slice(&e.offsets);
+        push_u32(&mut buf, e.labels.len() as u32);
+        for l in &e.labels {
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        buf
+    }
+
+    fn take<'a>(b: &mut &'a [u8], n: usize) -> std::io::Result<&'a [u8]> {
+        if b.len() < n {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "truncated dump",
+            ));
+        }
+        let (head, tail) = b.split_at(n);
+        *b = tail;
+        Ok(head)
+    }
+
+    fn take_u32(b: &mut &[u8]) -> std::io::Result<u32> {
+        Ok(u32::from_le_bytes(take(b, 4)?.try_into().unwrap()))
+    }
+
+    /// Deserialize one encoded batch.
+    pub fn from_bytes(mut b: &[u8]) -> std::io::Result<EncodedBatch> {
+        let magic = take(&mut b, 8)?;
+        if magic != MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad magic",
+            ));
+        }
+        let enc = match take(&mut b, 1)?[0] {
+            0 => Encoding::Base256,
+            1 => Encoding::Lossless128,
+            x => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad encoding tag {x}"),
+                ))
+            }
+        };
+        let word = match take(&mut b, 1)?[0] {
+            0 => WordType::U64,
+            1 => WordType::F64,
+            x => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad word tag {x}"),
+                ))
+            }
+        };
+        let n = take_u32(&mut b)? as usize;
+        let h = take_u32(&mut b)? as usize;
+        let w = take_u32(&mut b)? as usize;
+        let c = take_u32(&mut b)? as usize;
+        let num_classes = take_u32(&mut b)? as usize;
+        let nu = take_u32(&mut b)? as usize;
+        let mut words_u64 = Vec::with_capacity(nu);
+        for _ in 0..nu {
+            words_u64.push(u64::from_le_bytes(take(&mut b, 8)?.try_into().unwrap()));
+        }
+        let nf = take_u32(&mut b)? as usize;
+        let mut words_f64 = Vec::with_capacity(nf);
+        for _ in 0..nf {
+            words_f64.push(f64::from_le_bytes(take(&mut b, 8)?.try_into().unwrap()));
+        }
+        let no = take_u32(&mut b)? as usize;
+        let offsets = take(&mut b, no)?.to_vec();
+        let nl = take_u32(&mut b)? as usize;
+        let mut labels = Vec::with_capacity(nl);
+        for _ in 0..nl {
+            labels.push(f32::from_le_bytes(take(&mut b, 4)?.try_into().unwrap()));
+        }
+        Ok(EncodedBatch {
+            spec_encoding: enc,
+            spec_word: word,
+            n,
+            h,
+            w,
+            c,
+            words_u64,
+            words_f64,
+            offsets,
+            labels,
+            num_classes,
+        })
+    }
+
+    /// Write a batch to `path`.
+    pub fn write(path: &Path, e: &EncodedBatch) -> std::io::Result<()> {
+        std::fs::File::create(path)?.write_all(&to_bytes(e))
+    }
+
+    /// Read a batch from `path`.
+    pub fn read(path: &Path) -> std::io::Result<EncodedBatch> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::augment::AugPolicy;
+    use crate::data::encode::{decode_batch, Encoding, WordType};
+    use crate::data::synth::{Split, SynthCifar};
+
+    fn setup(
+        batches: usize,
+        spec: Option<EncodeSpec>,
+        mode: LoaderMode,
+    ) -> EdLoader {
+        let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 200, 7));
+        let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), 1).unwrap();
+        EdLoader::new(d, sampler, spec, batches, mode)
+    }
+
+    #[test]
+    fn sync_loader_yields_exact_count() {
+        let mut l = setup(5, None, LoaderMode::Synchronous);
+        let mut n = 0;
+        while let Some(b) = l.next() {
+            assert_eq!(b.len(), 16);
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn parallel_loader_yields_exact_count() {
+        let mut l = setup(7, None, LoaderMode::Parallel { prefetch_depth: 2 });
+        let mut n = 0;
+        while let Some(b) = l.next() {
+            assert_eq!(b.len(), 16);
+            n += 1;
+        }
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn parallel_and_sync_agree_given_same_seed() {
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let mut a = setup(3, spec, LoaderMode::Synchronous);
+        let mut b = setup(3, spec, LoaderMode::Parallel { prefetch_depth: 4 });
+        loop {
+            match (a.next(), b.next()) {
+                (None, None) => break,
+                (Some(BatchPayload::Encoded(x)), Some(BatchPayload::Encoded(y))) => {
+                    assert_eq!(x.len(), y.len());
+                    for (gx, gy) in x.iter().zip(&y) {
+                        assert_eq!(gx.words_u64, gy.words_u64);
+                        assert_eq!(gx.labels, gy.labels);
+                    }
+                }
+                other => panic!("mismatch: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_payload_decodes_to_valid_images() {
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let mut l = setup(1, spec, LoaderMode::Synchronous);
+        match l.next().unwrap() {
+            BatchPayload::Encoded(groups) => {
+                assert_eq!(groups.iter().map(|g| g.n).sum::<usize>(), 16);
+                for g in &groups {
+                    let img = decode_batch(g);
+                    assert_eq!(img.h, 32);
+                    // labels are soft distributions
+                    for i in 0..img.n {
+                        let s: f32 = img.label(i).iter().sum();
+                        assert!((s - 1.0).abs() < 1e-5);
+                    }
+                }
+            }
+            other => panic!("expected encoded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_bytes_encoded_smaller_than_raw() {
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let mut raw = setup(1, None, LoaderMode::Synchronous);
+        let mut enc = setup(1, spec, LoaderMode::Synchronous);
+        let rb = raw.next().unwrap().payload_bytes();
+        let eb = enc.next().unwrap().payload_bytes();
+        assert!(eb * 3 < rb, "encoded {eb} raw {rb}"); // 4× expected
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut l = setup(4, None, LoaderMode::Parallel { prefetch_depth: 1 });
+        while l.next().is_some() {}
+        let stats = l.stats();
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 4);
+        assert!(stats.produce_ns.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn dropping_parallel_loader_midway_is_clean() {
+        let mut l = setup(100, None, LoaderMode::Parallel { prefetch_depth: 2 });
+        let _ = l.next();
+        drop(l); // must not hang or panic
+    }
+
+    #[test]
+    fn dump_roundtrip() {
+        let spec = Some(EncodeSpec::new(Encoding::Lossless128, WordType::U64));
+        let mut l = setup(1, spec, LoaderMode::Synchronous);
+        if let Some(BatchPayload::Encoded(groups)) = l.next() {
+            for g in &groups {
+                let bytes = dump::to_bytes(g);
+                let back = dump::from_bytes(&bytes).unwrap();
+                assert_eq!(back.words_u64, g.words_u64);
+                assert_eq!(back.offsets, g.offsets);
+                assert_eq!(back.labels, g.labels);
+                assert_eq!(decode_batch(&back), decode_batch(g));
+            }
+        } else {
+            panic!("expected encoded payload");
+        }
+    }
+
+    #[test]
+    fn dump_rejects_corruption() {
+        assert!(dump::from_bytes(b"short").is_err());
+        assert!(dump::from_bytes(b"NOTMAGIC________________").is_err());
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let mut l = setup(1, spec, LoaderMode::Synchronous);
+        if let Some(BatchPayload::Encoded(groups)) = l.next() {
+            let mut bytes = dump::to_bytes(&groups[0]);
+            bytes.truncate(bytes.len() / 2);
+            assert!(dump::from_bytes(&bytes).is_err());
+        }
+    }
+}

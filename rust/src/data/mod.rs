@@ -1,0 +1,11 @@
+//! Data-flow layer: datasets, augmentation, SBS sampling, batch encoding,
+//! and the parallel encode–decode loader (the paper's §II-A).
+
+pub mod augment;
+pub mod cifar;
+pub mod dataset;
+pub mod encode;
+pub mod image;
+pub mod loader;
+pub mod sampler;
+pub mod synth;

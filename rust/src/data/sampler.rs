@@ -1,0 +1,455 @@
+//! Selective-batch-sampling (SBS) — the paper's Algorithm 2.
+//!
+//! Composes each batch from a *controlled* number of examples per class
+//! (`round(weight[c] · batch_size)`), then applies that class's
+//! augmentation policy to exactly those slots. A uniform-weight SBS with
+//! the same policy everywhere degrades to a standard shuffled sampler,
+//! which is the paper's baseline.
+
+use crate::data::augment::AugPolicy;
+use crate::data::dataset::Dataset;
+use crate::data::image::ImageBatch;
+use crate::util::rng::Rng;
+
+/// Per-class sampling weight + augmentation policy.
+#[derive(Clone, Debug)]
+pub struct ClassSpec {
+    pub weight: f64,
+    pub policy: AugPolicy,
+    /// Pair ops (MixUp/CutMix) draw their partner from the whole dataset
+    /// instead of the same class — produces genuinely soft labels (the
+    /// paper's "specific combination of classes").
+    pub partner_from_any_class: bool,
+}
+
+impl ClassSpec {
+    pub fn new(weight: f64, policy: AugPolicy) -> ClassSpec {
+        ClassSpec { weight, policy, partner_from_any_class: false }
+    }
+
+    pub fn with_cross_class_partner(mut self) -> ClassSpec {
+        self.partner_from_any_class = true;
+        self
+    }
+}
+
+/// Selective batch sampler.
+#[derive(Debug)]
+pub struct SbsSampler {
+    pub batch_size: usize,
+    specs: Vec<ClassSpec>,
+    /// Per-class index pools; refilled (reshuffled) when exhausted.
+    pools: Vec<Vec<usize>>,
+    cursors: Vec<usize>,
+    by_class: Vec<Vec<usize>>,
+    rng: Rng,
+}
+
+/// Errors from sampler construction.
+#[derive(Debug, PartialEq)]
+pub enum SamplerError {
+    WeightSumZero,
+    WrongSpecCount { got: usize, want: usize },
+    EmptyClass(usize),
+    BatchTooSmall,
+}
+
+impl std::fmt::Display for SamplerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SamplerError::WeightSumZero => write!(f, "class weights sum to zero"),
+            SamplerError::WrongSpecCount { got, want } => {
+                write!(f, "got {got} class specs, dataset has {want} classes")
+            }
+            SamplerError::EmptyClass(c) => {
+                write!(f, "class {c} has weight > 0 but no examples")
+            }
+            SamplerError::BatchTooSmall => write!(f, "batch size must be ≥ 1"),
+        }
+    }
+}
+
+impl std::error::Error for SamplerError {}
+
+impl SbsSampler {
+    /// Uniform weights, one shared policy — the standard pipeline.
+    pub fn uniform(
+        dataset: &dyn Dataset,
+        batch_size: usize,
+        policy: AugPolicy,
+        seed: u64,
+    ) -> Result<SbsSampler, SamplerError> {
+        let specs = (0..dataset.num_classes())
+            .map(|_| ClassSpec::new(1.0, policy.clone()))
+            .collect();
+        Self::new(dataset, batch_size, specs, seed)
+    }
+
+    /// Fully-specified SBS.
+    pub fn new(
+        dataset: &dyn Dataset,
+        batch_size: usize,
+        specs: Vec<ClassSpec>,
+        seed: u64,
+    ) -> Result<SbsSampler, SamplerError> {
+        if batch_size == 0 {
+            return Err(SamplerError::BatchTooSmall);
+        }
+        if specs.len() != dataset.num_classes() {
+            return Err(SamplerError::WrongSpecCount {
+                got: specs.len(),
+                want: dataset.num_classes(),
+            });
+        }
+        let total: f64 = specs.iter().map(|s| s.weight.max(0.0)).sum();
+        if total <= 0.0 {
+            return Err(SamplerError::WeightSumZero);
+        }
+        let by_class = dataset.indices_by_class();
+        for (c, spec) in specs.iter().enumerate() {
+            if spec.weight > 0.0 && by_class[c].is_empty() {
+                return Err(SamplerError::EmptyClass(c));
+            }
+        }
+        let pools = by_class.clone();
+        let cursors = vec![0; by_class.len()];
+        Ok(SbsSampler {
+            batch_size,
+            specs,
+            pools,
+            cursors,
+            by_class,
+            rng: Rng::new(seed).split(0x5B5),
+        })
+    }
+
+    /// Integer per-class counts for one batch: largest-remainder rounding of
+    /// `weight[c]/Σweights · batch_size`, guaranteeing Σ counts == batch.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let total: f64 = self.specs.iter().map(|s| s.weight.max(0.0)).sum();
+        let exact: Vec<f64> = self
+            .specs
+            .iter()
+            .map(|s| s.weight.max(0.0) / total * self.batch_size as f64)
+            .collect();
+        let mut counts: Vec<usize> = exact.iter().map(|&x| x.floor() as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        // distribute remainders by largest fractional part (stable by class id)
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by(|&a, &b| {
+            let fa = exact[a] - exact[a].floor();
+            let fb = exact[b] - exact[b].floor();
+            fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        });
+        let mut i = 0;
+        while assigned < self.batch_size {
+            let c = order[i % order.len()];
+            if self.specs[c].weight > 0.0 {
+                counts[c] += 1;
+                assigned += 1;
+            }
+            i += 1;
+        }
+        counts
+    }
+
+    fn draw_index(&mut self, class: usize) -> usize {
+        if self.cursors[class] >= self.pools[class].len() {
+            // refill + reshuffle this class's pool
+            self.pools[class] = self.by_class[class].clone();
+            let mut r = self.rng.split(class as u64 ^ 0xF00D);
+            r.shuffle(&mut self.pools[class]);
+            // keep the stream moving so refills differ over time
+            let salt = self.rng.next_u64();
+            let mut r2 = Rng::new(salt);
+            r2.shuffle(&mut self.pools[class]);
+            self.cursors[class] = 0;
+        }
+        let idx = self.pools[class][self.cursors[class]];
+        self.cursors[class] += 1;
+        idx
+    }
+
+    /// Produce the next batch: select per-class counts, fetch, pre-process
+    /// each class with its own policy (Algorithm 2's "pre-process & dump").
+    ///
+    /// Hot path (runs on the E-D producer thread): images are written
+    /// straight into their shuffled slot — no second batch copy — and the
+    /// per-slot policy is borrowed, not cloned (§Perf iteration 1).
+    pub fn next_batch(&mut self, dataset: &dyn Dataset) -> ImageBatch {
+        let (h, w, c) = dataset.shape();
+        let k = dataset.num_classes();
+        let mut batch = ImageBatch::zeros(self.batch_size, h, w, c, k);
+        let counts = self.class_counts();
+        // Slot permutation up front so class blocks don't create ordered
+        // batches; images land in their final position directly.
+        let mut perm: Vec<usize> = (0..self.batch_size).collect();
+        self.rng.shuffle(&mut perm);
+        let mut label_row = vec![0.0f32; k];
+        let mut prow = vec![0.0f32; k];
+        let mut slot = 0;
+        for (class, &count) in counts.iter().enumerate() {
+            for _ in 0..count {
+                let idx = self.draw_index(class);
+                let needs_partner = self.specs[class].policy.needs_partner();
+                let partner = if needs_partner {
+                    // partner from the same class pool by default (keeps the
+                    // SBS class ratio exact); cross-class when requested.
+                    let pidx = if self.specs[class].partner_from_any_class {
+                        let mut r = Rng::new(self.rng.next_u64());
+                        r.gen_range(dataset.len())
+                    } else {
+                        self.draw_index(class)
+                    };
+                    Some(dataset.get(pidx))
+                } else {
+                    None
+                };
+                let (mut img, label) = dataset.get(idx);
+                debug_assert_eq!(label, class);
+                label_row.fill(0.0);
+                label_row[label] = 1.0;
+                let mut rng = self.rng.split(slot as u64 ^ 0xA06);
+                // advance parent stream so consecutive batches differ
+                let _ = self.rng.next_u64();
+                let policy = &self.specs[class].policy;
+                if let Some((pimg, plabel)) = &partner {
+                    prow.fill(0.0);
+                    prow[*plabel] = 1.0;
+                    policy.apply(&mut img, &mut label_row, Some((pimg, &prow)), &mut rng);
+                } else {
+                    policy.apply(&mut img, &mut label_row, None, &mut rng);
+                }
+                let dst = perm[slot];
+                batch.image_mut(dst).copy_from_slice(&img.data);
+                batch.label_mut(dst).copy_from_slice(&label_row);
+                slot += 1;
+            }
+        }
+        debug_assert_eq!(slot, self.batch_size);
+        batch
+    }
+
+    /// Number of batches in one nominal epoch over `dataset`.
+    pub fn batches_per_epoch(&self, dataset: &dyn Dataset) -> usize {
+        (dataset.len() + self.batch_size - 1) / self.batch_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::MemDataset;
+    use crate::data::image::Image;
+
+    fn dataset(per_class: usize, classes: usize) -> MemDataset {
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..classes {
+            for i in 0..per_class {
+                let mut img = Image::zeros(4, 4, 3);
+                img.data.fill((c * 16 + i) as u8);
+                images.push(img);
+                labels.push(c);
+            }
+        }
+        MemDataset::new(images, labels, classes)
+    }
+
+    #[test]
+    fn uniform_counts_sum_to_batch() {
+        let d = dataset(20, 10);
+        let s = SbsSampler::uniform(&d, 16, AugPolicy::none(), 1).unwrap();
+        let counts = s.class_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 16);
+        // 16/10 → all classes get 1, six get 2
+        assert!(counts.iter().all(|&c| c == 1 || c == 2));
+    }
+
+    #[test]
+    fn weighted_counts_respect_ratio() {
+        let d = dataset(50, 4);
+        let specs = vec![
+            ClassSpec::new(0.5, AugPolicy::none()),
+            ClassSpec::new(0.25, AugPolicy::none()),
+            ClassSpec::new(0.25, AugPolicy::none()),
+            ClassSpec::new(0.0, AugPolicy::none()),
+        ];
+        let s = SbsSampler::new(&d, 16, specs, 1).unwrap();
+        assert_eq!(s.class_counts(), vec![8, 4, 4, 0]);
+    }
+
+    #[test]
+    fn zero_weight_class_never_sampled() {
+        let d = dataset(10, 3);
+        let specs = vec![
+            ClassSpec::new(1.0, AugPolicy::none()),
+            ClassSpec::new(1.0, AugPolicy::none()),
+            ClassSpec::new(0.0, AugPolicy::none()),
+        ];
+        let mut s = SbsSampler::new(&d, 8, specs, 2).unwrap();
+        for _ in 0..5 {
+            let b = s.next_batch(&d);
+            for i in 0..b.n {
+                assert_ne!(b.hard_label(i), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_composition_matches_counts() {
+        let d = dataset(30, 5);
+        let mut s = SbsSampler::uniform(&d, 20, AugPolicy::none(), 3).unwrap();
+        let b = s.next_batch(&d);
+        let mut per_class = vec![0usize; 5];
+        for i in 0..b.n {
+            per_class[b.hard_label(i)] += 1;
+        }
+        assert_eq!(per_class, vec![4, 4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn epoch_covers_distinct_examples_before_repeat() {
+        // With batch = per_class·classes, one batch should touch each class's
+        // pool without repeats until the pool refills.
+        let d = dataset(8, 2);
+        let mut s = SbsSampler::uniform(&d, 8, AugPolicy::none(), 4).unwrap();
+        let b1 = s.next_batch(&d);
+        let b2 = s.next_batch(&d);
+        // each batch has 4 from each class; 8 per class total → the two
+        // batches together must cover all 16 images exactly once
+        let mut seen = std::collections::HashSet::new();
+        for b in [&b1, &b2] {
+            for i in 0..b.n {
+                seen.insert(b.image(i).to_vec());
+            }
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn construction_errors() {
+        let d = dataset(5, 2);
+        assert_eq!(
+            SbsSampler::uniform(&d, 0, AugPolicy::none(), 1).unwrap_err(),
+            SamplerError::BatchTooSmall
+        );
+        let wrong = vec![ClassSpec::new(1.0, AugPolicy::none())];
+        assert!(matches!(
+            SbsSampler::new(&d, 4, wrong, 1).unwrap_err(),
+            SamplerError::WrongSpecCount { .. }
+        ));
+        let zeros = vec![
+            ClassSpec::new(0.0, AugPolicy::none()),
+            ClassSpec::new(0.0, AugPolicy::none()),
+        ];
+        assert_eq!(
+            SbsSampler::new(&d, 4, zeros, 1).unwrap_err(),
+            SamplerError::WeightSumZero
+        );
+    }
+
+    #[test]
+    fn per_class_policies_apply_only_to_their_class() {
+        // Class 0 gets cutout (guaranteed zero pixels on a 255-filled
+        // dataset); class 1 gets none.
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..2 {
+            for _ in 0..10 {
+                let mut img = Image::zeros(8, 8, 1);
+                img.data.fill(255);
+                images.push(img);
+                labels.push(c);
+            }
+        }
+        let d = MemDataset::new(images, labels, 2);
+        let specs = vec![
+            ClassSpec::new(1.0, AugPolicy::parse("cutout6").unwrap()),
+            ClassSpec::new(1.0, AugPolicy::none()),
+        ];
+        let mut s = SbsSampler::new(&d, 8, specs, 5).unwrap();
+        let b = s.next_batch(&d);
+        for i in 0..b.n {
+            let zeros = b.image(i).iter().filter(|&&v| v == 0).count();
+            if b.hard_label(i) == 0 {
+                assert!(zeros > 0, "class-0 slot missing cutout");
+            } else {
+                assert_eq!(zeros, 0, "class-1 slot unexpectedly augmented");
+            }
+        }
+    }
+
+    #[test]
+    fn mixup_policy_produces_soft_labels_within_class() {
+        let d = dataset(20, 2);
+        let specs = vec![
+            ClassSpec::new(1.0, AugPolicy::parse("mixup1.0").unwrap()),
+            ClassSpec::new(1.0, AugPolicy::none()),
+        ];
+        let mut s = SbsSampler::new(&d, 8, specs, 6).unwrap();
+        let b = s.next_batch(&d);
+        for i in 0..b.n {
+            let sum: f32 = b.label(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = dataset(16, 4);
+        let mut a = SbsSampler::uniform(&d, 8, AugPolicy::standard(), 9).unwrap();
+        let mut b = SbsSampler::uniform(&d, 8, AugPolicy::standard(), 9).unwrap();
+        for _ in 0..3 {
+            let ba = a.next_batch(&d);
+            let bb = b.next_batch(&d);
+            assert_eq!(ba.data, bb.data);
+            assert_eq!(ba.labels, bb.labels);
+        }
+    }
+
+    #[test]
+    fn batches_per_epoch_rounds_up() {
+        let d = dataset(13, 2); // 26 examples
+        let s = SbsSampler::uniform(&d, 8, AugPolicy::none(), 1).unwrap();
+        assert_eq!(s.batches_per_epoch(&d), 4);
+    }
+}
+
+#[cfg(test)]
+mod cross_class_tests {
+    use super::*;
+    use crate::data::dataset::MemDataset;
+    use crate::data::image::Image;
+
+    #[test]
+    fn cross_class_mixup_softens_labels() {
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..2 {
+            for _ in 0..20 {
+                let mut img = Image::zeros(4, 4, 1);
+                img.data.fill(if c == 0 { 255 } else { 0 });
+                images.push(img);
+                labels.push(c);
+            }
+        }
+        let d = MemDataset::new(images, labels, 2);
+        let specs = vec![
+            ClassSpec::new(1.0, AugPolicy::parse("mixup1.0").unwrap())
+                .with_cross_class_partner(),
+            ClassSpec::new(1.0, AugPolicy::none()),
+        ];
+        let mut s = SbsSampler::new(&d, 16, specs, 3).unwrap();
+        let mut soft = 0;
+        for _ in 0..4 {
+            let b = s.next_batch(&d);
+            for i in 0..b.n {
+                if b.label(i).iter().filter(|&&v| v > 0.01 && v < 0.99).count() >= 2 {
+                    soft += 1;
+                }
+            }
+        }
+        assert!(soft > 0, "cross-class mixup must produce soft labels");
+    }
+}

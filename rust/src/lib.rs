@@ -1,0 +1,55 @@
+//! # OpTorch (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *"OpTorch: Optimized deep learning
+//! architectures for resource limited environments"* (Ahmed & Naveed, 2021).
+//!
+//! OpTorch trains CNN image classifiers under tight memory budgets by
+//! combining **data-flow** optimizations (packed batch encoding, a decoding
+//! layer inside the network, selective-batch-sampling, a parallel
+//! encode–decode loader) with **gradient-flow** optimizations (sequential
+//! activation checkpoints and mixed-precision state).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * Layer 1 — Pallas kernels (decode/encode/lossless/matmul) authored in
+//!   `python/compile/kernels/`, lowered at build time.
+//! * Layer 2 — JAX model zoo + train/eval/init steps in
+//!   `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * Layer 3 — this crate: data pipeline, memory simulator, checkpoint
+//!   planner, PJRT runtime and the training coordinator. Python never runs
+//!   on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use optorch::prelude::*;
+//!
+//! let cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("ed+sc").unwrap());
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final accuracy {:.3}", report.final_eval_accuracy);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{Pipeline, TrainConfig};
+    pub use crate::coordinator::{Trainer, TrainReport};
+    pub use crate::data::encode::{EncodeSpec, Encoding};
+    pub use crate::data::loader::EdLoader;
+    pub use crate::data::sampler::SbsSampler;
+    pub use crate::data::synth::SynthCifar;
+    pub use crate::memory::planner::{plan_checkpoints, PlannerKind};
+    pub use crate::memory::simulator::{simulate, MemoryReport};
+    pub use crate::models::{arch_by_name, ArchProfile};
+    pub use crate::runtime::Runtime;
+}

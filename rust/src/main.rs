@@ -1,0 +1,175 @@
+//! `optorch` launcher — the Layer-3 entrypoint.
+//!
+//! See `optorch help` (or [`optorch::cli::USAGE`]) for the command set.
+
+use anyhow::{anyhow, Result};
+use optorch::cli::{Cli, USAGE};
+use optorch::config::{Pipeline, TrainConfig};
+use optorch::coordinator::{report, Trainer};
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::memory::simulator::simulate;
+use optorch::models::{all_arch_names, arch_by_name};
+use optorch::util::bench::{fmt_bytes, Table};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn main() {
+    let cli = match Cli::from_env() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cli.subcommand.as_str() {
+        "train" => cmd_train(&cli),
+        "memsim" => cmd_memsim(&cli),
+        "plan" => cmd_plan(&cli),
+        "models" => cmd_models(),
+        "figures" => cmd_figures(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let file_text = match cli.get("config") {
+        Some(path) => Some(std::fs::read_to_string(path)?),
+        None => None,
+    };
+    let mut overrides: BTreeMap<String, String> = cli.opts.clone();
+    overrides.remove("config");
+    overrides.remove("out_csv");
+    overrides.remove("save_state");
+    overrides.remove("load_state");
+    let cfg = TrainConfig::from_sources(file_text.as_deref(), &overrides)
+        .map_err(|e| anyhow!(e))?;
+    println!(
+        "training {} with pipeline {} ({} epochs, batch {})",
+        cfg.model,
+        cfg.pipeline.label(),
+        cfg.epochs,
+        cfg.batch_size
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    if let Some(path) = cli.get("load_state") {
+        trainer.load_state(std::path::Path::new(path))?;
+        println!("resumed state from {path}");
+    }
+    let rep = trainer.run()?;
+    if let Some(path) = cli.get("save_state") {
+        trainer.save_state(std::path::Path::new(path))?;
+        println!("state saved to {path}");
+    }
+    println!("{}", report::markdown_summary(&rep));
+    if let Some(out) = cli.get("out_csv") {
+        report::write_history_csv(&PathBuf::from(out), &rep)?;
+        println!("history written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_memsim(cli: &Cli) -> Result<()> {
+    let model = cli.get("model").unwrap_or("resnet18");
+    let pipeline = Pipeline::parse(cli.get("pipeline").unwrap_or("b")).map_err(|e| anyhow!(e))?;
+    let batch = cli.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap_or(16);
+    let h = cli.get_usize("height").map_err(|e| anyhow!(e))?.unwrap_or(512);
+    let w = cli.get_usize("width").map_err(|e| anyhow!(e))?.unwrap_or(512);
+    let classes = cli.get_usize("classes").map_err(|e| anyhow!(e))?.unwrap_or(1000);
+    let arch = arch_by_name(model, (h, w, 3), classes)
+        .ok_or_else(|| anyhow!("unknown model '{model}' (try `optorch models`)"))?;
+    let ckpts = if pipeline.sc {
+        plan_checkpoints(&arch, PlannerKind::Sqrt, pipeline, batch).checkpoints
+    } else {
+        vec![]
+    };
+    let rep = simulate(&arch, pipeline, batch, &ckpts);
+    println!(
+        "{model} [{}] batch {batch} @{h}x{w}: peak {} (state {}, input {}, activations {})",
+        pipeline.label(),
+        fmt_bytes(rep.peak_bytes),
+        fmt_bytes(rep.state_bytes),
+        fmt_bytes(rep.input_bytes),
+        fmt_bytes(rep.peak_activation_bytes),
+    );
+    if cli.has_flag("timeline") {
+        print!("{}", report::timeline_csv(&rep));
+    }
+    Ok(())
+}
+
+fn cmd_plan(cli: &Cli) -> Result<()> {
+    let model = cli.get("model").unwrap_or("resnet18");
+    let batch = cli.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap_or(16);
+    let h = cli.get_usize("height").map_err(|e| anyhow!(e))?.unwrap_or(224);
+    let arch = arch_by_name(model, (h, h, 3), 1000)
+        .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let kinds: Vec<PlannerKind> = match cli.get("kind") {
+        Some(k) => vec![PlannerKind::parse(k).map_err(|e| anyhow!(e))?],
+        None => vec![
+            PlannerKind::Uniform(4),
+            PlannerKind::Sqrt,
+            PlannerKind::Bottleneck(4),
+            PlannerKind::Optimal,
+        ],
+    };
+    let mut table = Table::new(&["planner", "checkpoints", "peak", "recompute overhead"]);
+    for kind in kinds {
+        let plan = plan_checkpoints(&arch, kind, Pipeline::BASELINE, batch);
+        table.row(&[
+            format!("{kind:?}"),
+            format!("{:?}", plan.checkpoints),
+            fmt_bytes(plan.peak_bytes),
+            format!("{:.1}% of fwd FLOPs", plan.recompute_overhead * 100.0),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    let mut table = Table::new(&["model", "input", "layers", "params", "fwd GFLOPs/img"]);
+    for name in all_arch_names() {
+        let input = if name.contains("inception_v3") {
+            (299, 299, 3)
+        } else if name.contains("mini") || name.contains("lite") || name == "tiny_cnn" {
+            (32, 32, 3)
+        } else {
+            (224, 224, 3)
+        };
+        let classes = if input.0 == 32 { 10 } else { 1000 };
+        let p = arch_by_name(&name, input, classes).unwrap();
+        table.row(&[
+            name.clone(),
+            format!("{}x{}x{}", input.0, input.1, input.2),
+            format!("{}", p.depth()),
+            format!("{}", p.param_count()),
+            format!("{:.2}", p.flops(1) as f64 / 1e9),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_figures() -> Result<()> {
+    println!("regenerate figures with:");
+    for b in [
+        "fig8_memory_timeline",
+        "fig9_time_accuracy",
+        "fig10_memory_grid",
+        "fig11_checkpoint_placement",
+        "ed_overlap",
+        "encode_throughput",
+        "step_latency",
+    ] {
+        println!("  cargo bench --bench {b}");
+    }
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Training-memory model: the substrate behind Figures 8, 10 and 11.
+//!
+//! The paper measures GPU memory; this environment has none, so the
+//! figures are regenerated from an analytic simulator that replays the
+//! exact schedules the pipelines induce (DESIGN.md §5). The simulator is
+//! cross-validated against XLA's `compiled.memory_analysis()` on the
+//! trainable minis (`python/tests/test_remat_memory.py`).
+
+pub mod planner;
+pub mod simulator;

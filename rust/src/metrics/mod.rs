@@ -1,0 +1,178 @@
+//! Training metrics: loss/accuracy trackers, timers, CSV history.
+
+use std::time::Instant;
+
+/// Running mean tracker.
+#[derive(Clone, Debug, Default)]
+pub struct Mean {
+    sum: f64,
+    n: u64,
+}
+
+impl Mean {
+    pub fn add(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn add_weighted(&mut self, v: f64, w: u64) {
+        self.sum += v * w as f64;
+        self.n += w;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+/// One epoch's record.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_accuracy: f64,
+    pub eval_loss: Option<f64>,
+    pub eval_accuracy: Option<f64>,
+    pub wall_secs: f64,
+    pub images: u64,
+}
+
+impl EpochRecord {
+    pub fn images_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.images as f64 / self.wall_secs
+        }
+    }
+}
+
+/// Full-run history with CSV export.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.epochs.push(rec);
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.wall_secs).sum()
+    }
+
+    pub fn final_eval_accuracy(&self) -> Option<f64> {
+        self.epochs.iter().rev().find_map(|e| e.eval_accuracy)
+    }
+
+    /// CSV with a fixed header; `None` cells are empty.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "epoch,train_loss,train_accuracy,eval_loss,eval_accuracy,wall_secs,images_per_sec\n",
+        );
+        for e in &self.epochs {
+            s.push_str(&format!(
+                "{},{:.6},{:.4},{},{},{:.3},{:.1}\n",
+                e.epoch,
+                e.train_loss,
+                e.train_accuracy,
+                e.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                e.eval_accuracy.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                e.wall_secs,
+                e.images_per_sec(),
+            ));
+        }
+        s
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_accumulates() {
+        let mut m = Mean::default();
+        assert!(m.mean().is_nan());
+        m.add(2.0);
+        m.add(4.0);
+        assert_eq!(m.mean(), 3.0);
+        assert_eq!(m.count(), 2);
+        m.add_weighted(10.0, 8);
+        assert_eq!(m.count(), 10);
+        assert!((m.mean() - 8.6).abs() < 1e-9);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn history_csv_shape() {
+        let mut h = History::default();
+        h.push(EpochRecord {
+            epoch: 0,
+            train_loss: 2.30,
+            train_accuracy: 0.1,
+            eval_loss: None,
+            eval_accuracy: None,
+            wall_secs: 1.5,
+            images: 300,
+        });
+        h.push(EpochRecord {
+            epoch: 1,
+            train_loss: 1.20,
+            train_accuracy: 0.55,
+            eval_loss: Some(1.3),
+            eval_accuracy: Some(0.52),
+            wall_secs: 1.4,
+            images: 300,
+        });
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().ends_with(",,1.500,200.0"));
+        assert_eq!(h.final_eval_accuracy(), Some(0.52));
+        assert!((h.total_wall_secs() - 2.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn images_per_sec_guards_zero() {
+        let e = EpochRecord {
+            epoch: 0,
+            train_loss: 0.0,
+            train_accuracy: 0.0,
+            eval_loss: None,
+            eval_accuracy: None,
+            wall_secs: 0.0,
+            images: 10,
+        };
+        assert_eq!(e.images_per_sec(), 0.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! EfficientNet profiles (Tan & Le 2019), B0–B7 via compound scaling,
+//! plus the trainable `effnet_lite` mini (mirrors model.py).
+
+use crate::models::layer::{bn_params, conv2d, dwconv2d, LayerKind, LayerProfile};
+use crate::models::ArchProfile;
+
+/// (width, depth, resolution) compound-scaling coefficients.
+pub fn scaling(variant: usize) -> (f64, f64, usize) {
+    match variant {
+        0 => (1.0, 1.0, 224),
+        1 => (1.0, 1.1, 240),
+        2 => (1.1, 1.2, 260),
+        3 => (1.2, 1.4, 300),
+        4 => (1.4, 1.8, 380),
+        5 => (1.6, 2.2, 456),
+        6 => (1.8, 2.6, 528),
+        7 => (2.0, 3.1, 600),
+        _ => panic!("efficientnet variant b{variant} does not exist"),
+    }
+}
+
+/// Round channel count to a multiple of 8, never dropping below 90%
+/// (the reference `round_filters`).
+pub fn round_filters(c: usize, width: f64) -> usize {
+    let scaled = c as f64 * width;
+    let mut new = ((scaled + 4.0) as usize / 8) * 8;
+    new = new.max(8);
+    if (new as f64) < 0.9 * scaled {
+        new += 8;
+    }
+    new
+}
+
+/// Ceiling depth scaling (the reference `round_repeats`).
+pub fn round_repeats(n: usize, depth: f64) -> usize {
+    (n as f64 * depth).ceil() as usize
+}
+
+/// MBConv block profile. `expand` is the expansion factor (1 or 6).
+fn mbconv(
+    name: &str,
+    in_shape: (usize, usize, usize),
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    expand: usize,
+) -> (LayerProfile, (usize, usize, usize)) {
+    let in_c = in_shape.2;
+    let exp_c = in_c * expand;
+    let mut params = 0u64;
+    let mut flops = 0u64;
+    let mut acts = 0u64;
+    let mut shape = in_shape;
+    if expand != 1 {
+        let (s, p, f) = conv2d(shape, exp_c, 1, 1, false);
+        params += p + bn_params(exp_c);
+        flops += f;
+        acts += 3 * (s.0 * s.1 * s.2) as u64;
+        shape = s;
+    }
+    let (s, p, f) = dwconv2d((shape.0, shape.1, exp_c), k, stride);
+    params += p + bn_params(exp_c);
+    flops += f;
+    acts += 3 * (s.0 * s.1 * s.2) as u64;
+    shape = s;
+    // Squeeze-and-excitation: se_c based on block *input* channels (ratio ¼).
+    let se_c = (in_c / 4).max(1);
+    params += (exp_c * se_c + se_c) as u64 + (se_c * exp_c + exp_c) as u64;
+    flops += 2 * (exp_c * se_c + se_c * exp_c) as u64;
+    acts += (se_c + exp_c) as u64 + (shape.0 * shape.1 * exp_c) as u64; // scaled map
+    // Projection.
+    let (s, p, f) = conv2d(shape, out_c, 1, 1, false);
+    params += p + bn_params(out_c);
+    flops += f;
+    acts += (s.0 * s.1 * s.2) as u64;
+    shape = s;
+    // Skip connection adds one more live tensor when shapes match.
+    if stride == 1 && in_c == out_c {
+        acts += (s.0 * s.1 * s.2) as u64;
+    }
+    (
+        LayerProfile {
+            name: name.to_string(),
+            kind: LayerKind::Block,
+            out_shape: shape,
+            act_elems: acts,
+            params,
+            flops_per_image: flops,
+        },
+        shape,
+    )
+}
+
+/// Baseline (B0) stage table: (expand, out_c, repeats, stride, kernel).
+const B0_STAGES: [(usize, usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+];
+
+/// Build EfficientNet-B{variant}. `input` overrides the native resolution
+/// (pass the native one for paper-faithful profiles).
+pub fn efficientnet(variant: usize, input: (usize, usize, usize), classes: usize) -> ArchProfile {
+    let (width, depth, _res) = scaling(variant);
+    let mut layers = Vec::new();
+    let stem_c = round_filters(32, width);
+    let (mut shape, p, f) = conv2d(input, stem_c, 3, 2, false);
+    layers.push(LayerProfile {
+        name: "stem".into(),
+        kind: LayerKind::Conv,
+        out_shape: shape,
+        act_elems: 3 * (shape.0 * shape.1 * shape.2) as u64,
+        params: p + bn_params(stem_c),
+        flops_per_image: f,
+    });
+    for (si, &(expand, out_c, repeats, stride, k)) in B0_STAGES.iter().enumerate() {
+        let out_c = round_filters(out_c, width);
+        let repeats = round_repeats(repeats, depth);
+        for r in 0..repeats {
+            let s = if r == 0 { stride } else { 1 };
+            let nm = format!("mbconv{}.{}", si + 1, r);
+            let (layer, sh) = mbconv(&nm, shape, out_c, k, s, expand);
+            shape = sh;
+            layers.push(layer);
+        }
+    }
+    let head_c = round_filters(1280, width);
+    let (s, p, f) = conv2d(shape, head_c, 1, 1, false);
+    layers.push(LayerProfile {
+        name: "head_conv".into(),
+        kind: LayerKind::Conv,
+        out_shape: s,
+        act_elems: 3 * (s.0 * s.1 * s.2) as u64,
+        params: p + bn_params(head_c),
+        flops_per_image: f,
+    });
+    layers.push(LayerProfile {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool,
+        out_shape: (1, 1, head_c),
+        act_elems: head_c as u64,
+        params: 0,
+        flops_per_image: (s.0 * s.1 * head_c) as u64,
+    });
+    layers.push(LayerProfile {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        out_shape: (1, 1, classes),
+        act_elems: classes as u64,
+        params: (head_c * classes + classes) as u64,
+        flops_per_image: 2 * (head_c * classes) as u64,
+    });
+    ArchProfile { name: format!("efficientnet_b{variant}"), input, layers }
+}
+
+/// Trainable mini: 3 MBConv stages on 32×32 (mirrors model.py::effnet_lite).
+pub fn effnet_lite(input: (usize, usize, usize), classes: usize) -> ArchProfile {
+    let mut layers = Vec::new();
+    let (mut shape, p, f) = conv2d(input, 16, 3, 1, false);
+    layers.push(LayerProfile {
+        name: "stem".into(),
+        kind: LayerKind::Conv,
+        out_shape: shape,
+        act_elems: 3 * (shape.0 * shape.1 * shape.2) as u64,
+        params: p + bn_params(16),
+        flops_per_image: f,
+    });
+    for (i, &(out_c, stride, reps)) in [(24usize, 2usize, 2usize), (40, 2, 2), (80, 2, 1)]
+        .iter()
+        .enumerate()
+    {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            let (layer, sh) = mbconv(&format!("mb{}.{r}", i + 1), shape, out_c, 3, s, 6);
+            shape = sh;
+            layers.push(layer);
+        }
+    }
+    let (s, p, f) = conv2d(shape, 160, 1, 1, false);
+    layers.push(LayerProfile {
+        name: "head_conv".into(),
+        kind: LayerKind::Conv,
+        out_shape: s,
+        act_elems: 3 * (s.0 * s.1 * s.2) as u64,
+        params: p + bn_params(160),
+        flops_per_image: f,
+    });
+    layers.push(LayerProfile {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool,
+        out_shape: (1, 1, 160),
+        act_elems: 160,
+        params: 0,
+        flops_per_image: (s.0 * s.1 * 160) as u64,
+    });
+    layers.push(LayerProfile {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        out_shape: (1, 1, classes),
+        act_elems: classes as u64,
+        params: (160 * classes + classes) as u64,
+        flops_per_image: 2 * (160 * classes) as u64,
+    });
+    ArchProfile { name: "effnet_lite".into(), input, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_filters_reference_values() {
+        assert_eq!(round_filters(32, 1.0), 32);
+        assert_eq!(round_filters(32, 1.1), 32); // b2 stem
+        assert_eq!(round_filters(32, 1.4), 48); // b4 stem
+        assert_eq!(round_filters(320, 2.0), 640); // b7 last stage
+        assert_eq!(round_filters(1280, 1.2), 1536); // b3 head
+    }
+
+    #[test]
+    fn round_repeats_ceils() {
+        assert_eq!(round_repeats(2, 1.0), 2);
+        assert_eq!(round_repeats(2, 1.1), 3);
+        assert_eq!(round_repeats(3, 3.1), 10);
+    }
+
+    #[test]
+    fn b0_structure() {
+        let p = efficientnet(0, (224, 224, 3), 1000);
+        // stem + 16 blocks + head_conv + pool + fc
+        assert_eq!(p.depth(), 1 + 16 + 3);
+        // native B0 downsamples 224 → 7
+        let last_block = &p.layers[p.depth() - 4];
+        assert_eq!((last_block.out_shape.0, last_block.out_shape.1), (7, 7));
+        assert_eq!(last_block.out_shape.2, 320);
+    }
+
+    #[test]
+    fn deeper_variants_have_more_blocks() {
+        let b0 = efficientnet(0, (224, 224, 3), 1000);
+        let b3 = efficientnet(3, (300, 300, 3), 1000);
+        let b7 = efficientnet(7, (600, 600, 3), 1000);
+        assert!(b3.depth() > b0.depth());
+        assert!(b7.depth() > b3.depth());
+    }
+
+    #[test]
+    fn mbconv1_has_no_expansion_conv() {
+        // First stage uses expand=1: params must exclude a 1×1 expand conv.
+        let (blk, _) = mbconv("t", (112, 112, 32), 16, 3, 1, 1);
+        // dw(32,3x3)=288 +bn 64 + se(32→8: 264, 8→32: 288) + proj 32·16=512 + bn 32
+        assert_eq!(blk.params, 288 + 64 + (32 * 8 + 8) as u64 + (8 * 32 + 32) as u64 + 512 + 32);
+    }
+
+    #[test]
+    fn effnet_lite_is_tiny() {
+        let p = effnet_lite((32, 32, 3), 10);
+        assert!(p.param_count() < 500_000, "{}", p.param_count());
+        assert_eq!(p.layers.last().unwrap().out_shape, (1, 1, 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not exist")]
+    fn b8_rejected() {
+        scaling(8);
+    }
+}

@@ -1,0 +1,296 @@
+//! Inception-V3 profile (Szegedy et al. 2015), torchvision structure
+//! (no aux head), plus the trainable `inception_lite` mini.
+
+use crate::models::layer::{bn_params, LayerKind, LayerProfile};
+use crate::models::ArchProfile;
+
+/// conv+BN with an arbitrary (kh, kw) kernel at a fixed resolution.
+/// Returns (params, flops, output elems) for `out_hw` spatial size.
+fn conv_bn(in_c: usize, out_c: usize, kh: usize, kw: usize, out_hw: (usize, usize)) -> (u64, u64, u64) {
+    let params = (in_c * out_c * kh * kw) as u64 + bn_params(out_c);
+    let out_elems = (out_hw.0 * out_hw.1 * out_c) as u64;
+    let flops = 2 * (out_hw.0 * out_hw.1) as u64 * (in_c * out_c * kh * kw) as u64;
+    (params, flops, out_elems)
+}
+
+/// VALID conv output size.
+fn valid(h: usize, k: usize, s: usize) -> usize {
+    (h - k) / s + 1
+}
+
+/// Accumulator for a fused inception block.
+#[derive(Default)]
+struct Acc {
+    params: u64,
+    flops: u64,
+    acts: u64,
+}
+
+impl Acc {
+    fn add(&mut self, (p, f, e): (u64, u64, u64)) {
+        self.params += p;
+        self.flops += f;
+        // standard training keeps each conv's output + post-BN/ReLU tensor
+        self.acts += 3 * e;
+    }
+
+    fn into_layer(self, name: &str, out_shape: (usize, usize, usize)) -> LayerProfile {
+        LayerProfile {
+            name: name.to_string(),
+            kind: LayerKind::Block,
+            out_shape,
+            act_elems: self.acts + (out_shape.0 * out_shape.1 * out_shape.2) as u64, // concat
+            params: self.params,
+            flops_per_image: self.flops,
+        }
+    }
+}
+
+fn inception_a(name: &str, hw: usize, in_c: usize, pool_f: usize) -> LayerProfile {
+    let o = (hw, hw);
+    let mut a = Acc::default();
+    a.add(conv_bn(in_c, 64, 1, 1, o)); // b1
+    a.add(conv_bn(in_c, 48, 1, 1, o)); // b5 reduce
+    a.add(conv_bn(48, 64, 5, 5, o));
+    a.add(conv_bn(in_c, 64, 1, 1, o)); // b3dbl
+    a.add(conv_bn(64, 96, 3, 3, o));
+    a.add(conv_bn(96, 96, 3, 3, o));
+    a.add(conv_bn(in_c, pool_f, 1, 1, o)); // pool proj
+    a.into_layer(name, (hw, hw, 64 + 64 + 96 + pool_f))
+}
+
+fn inception_b(name: &str, hw_in: usize, in_c: usize) -> LayerProfile {
+    let hw = valid(hw_in, 3, 2);
+    let o = (hw, hw);
+    let mut a = Acc::default();
+    a.add(conv_bn(in_c, 384, 3, 3, o)); // strided 3×3
+    a.add(conv_bn(in_c, 64, 1, 1, (hw_in, hw_in)));
+    a.add(conv_bn(64, 96, 3, 3, (hw_in, hw_in)));
+    a.add(conv_bn(96, 96, 3, 3, o)); // strided
+    // maxpool branch passthrough contributes activations only
+    a.acts += (hw * hw * in_c) as u64;
+    a.into_layer(name, (hw, hw, 384 + 96 + in_c))
+}
+
+fn inception_c(name: &str, hw: usize, in_c: usize, c7: usize) -> LayerProfile {
+    let o = (hw, hw);
+    let mut a = Acc::default();
+    a.add(conv_bn(in_c, 192, 1, 1, o)); // b1
+    a.add(conv_bn(in_c, c7, 1, 1, o)); // b7
+    a.add(conv_bn(c7, c7, 1, 7, o));
+    a.add(conv_bn(c7, 192, 7, 1, o));
+    a.add(conv_bn(in_c, c7, 1, 1, o)); // b7dbl
+    a.add(conv_bn(c7, c7, 7, 1, o));
+    a.add(conv_bn(c7, c7, 1, 7, o));
+    a.add(conv_bn(c7, c7, 7, 1, o));
+    a.add(conv_bn(c7, 192, 1, 7, o));
+    a.add(conv_bn(in_c, 192, 1, 1, o)); // pool proj
+    a.into_layer(name, (hw, hw, 768))
+}
+
+fn inception_d(name: &str, hw_in: usize, in_c: usize) -> LayerProfile {
+    let hw = valid(hw_in, 3, 2);
+    let o_in = (hw_in, hw_in);
+    let o = (hw, hw);
+    let mut a = Acc::default();
+    a.add(conv_bn(in_c, 192, 1, 1, o_in)); // b3
+    a.add(conv_bn(192, 320, 3, 3, o));
+    a.add(conv_bn(in_c, 192, 1, 1, o_in)); // b7x3
+    a.add(conv_bn(192, 192, 1, 7, o_in));
+    a.add(conv_bn(192, 192, 7, 1, o_in));
+    a.add(conv_bn(192, 192, 3, 3, o));
+    a.acts += (hw * hw * in_c) as u64; // maxpool passthrough
+    a.into_layer(name, (hw, hw, 320 + 192 + in_c))
+}
+
+fn inception_e(name: &str, hw: usize, in_c: usize) -> LayerProfile {
+    let o = (hw, hw);
+    let mut a = Acc::default();
+    a.add(conv_bn(in_c, 320, 1, 1, o)); // b1
+    a.add(conv_bn(in_c, 384, 1, 1, o)); // b3 split
+    a.add(conv_bn(384, 384, 1, 3, o));
+    a.add(conv_bn(384, 384, 3, 1, o));
+    a.add(conv_bn(in_c, 448, 1, 1, o)); // b3dbl split
+    a.add(conv_bn(448, 384, 3, 3, o));
+    a.add(conv_bn(384, 384, 1, 3, o));
+    a.add(conv_bn(384, 384, 3, 1, o));
+    a.add(conv_bn(in_c, 192, 1, 1, o)); // pool proj
+    a.into_layer(name, (hw, hw, 2048))
+}
+
+/// Full Inception-V3 at 299×299 (or any input ≥ 75).
+pub fn inception_v3(input: (usize, usize, usize), classes: usize) -> ArchProfile {
+    let mut layers = Vec::new();
+    let mut hw = input.0;
+    let push_conv =
+        |layers: &mut Vec<LayerProfile>, name: &str, in_c: usize, out_c: usize, k: usize, s: usize, v: bool, hw: &mut usize| {
+            let out_hw = if v { valid(*hw, k, s) } else { (*hw + s - 1) / s };
+            let (p, f, e) = conv_bn(in_c, out_c, k, k, (out_hw, out_hw));
+            layers.push(LayerProfile {
+                name: name.into(),
+                kind: LayerKind::Conv,
+                out_shape: (out_hw, out_hw, out_c),
+                act_elems: 3 * e,
+                params: p,
+                flops_per_image: f,
+            });
+            *hw = out_hw;
+        };
+    push_conv(&mut layers, "conv1a", 3, 32, 3, 2, true, &mut hw);
+    push_conv(&mut layers, "conv2a", 32, 32, 3, 1, true, &mut hw);
+    push_conv(&mut layers, "conv2b", 32, 64, 3, 1, false, &mut hw);
+    hw = valid(hw, 3, 2); // maxpool1
+    layers.push(LayerProfile {
+        name: "maxpool1".into(),
+        kind: LayerKind::Pool,
+        out_shape: (hw, hw, 64),
+        act_elems: (hw * hw * 64) as u64,
+        params: 0,
+        flops_per_image: (hw * hw * 64 * 9) as u64,
+    });
+    push_conv(&mut layers, "conv3b", 64, 80, 1, 1, true, &mut hw);
+    push_conv(&mut layers, "conv4a", 80, 192, 3, 1, true, &mut hw);
+    hw = valid(hw, 3, 2); // maxpool2
+    layers.push(LayerProfile {
+        name: "maxpool2".into(),
+        kind: LayerKind::Pool,
+        out_shape: (hw, hw, 192),
+        act_elems: (hw * hw * 192) as u64,
+        params: 0,
+        flops_per_image: (hw * hw * 192 * 9) as u64,
+    });
+    // 35×35 stages
+    layers.push(inception_a("mixed5b", hw, 192, 32));
+    layers.push(inception_a("mixed5c", hw, 256, 64));
+    layers.push(inception_a("mixed5d", hw, 288, 64));
+    let b = inception_b("mixed6a", hw, 288);
+    hw = b.out_shape.0;
+    layers.push(b);
+    // 17×17 stages
+    layers.push(inception_c("mixed6b", hw, 768, 128));
+    layers.push(inception_c("mixed6c", hw, 768, 160));
+    layers.push(inception_c("mixed6d", hw, 768, 160));
+    layers.push(inception_c("mixed6e", hw, 768, 192));
+    let d = inception_d("mixed7a", hw, 768);
+    hw = d.out_shape.0;
+    layers.push(d);
+    // 8×8 stages
+    layers.push(inception_e("mixed7b", hw, 1280));
+    layers.push(inception_e("mixed7c", hw, 2048));
+    layers.push(LayerProfile {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool,
+        out_shape: (1, 1, 2048),
+        act_elems: 2048,
+        params: 0,
+        flops_per_image: (hw * hw * 2048) as u64,
+    });
+    layers.push(LayerProfile {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        out_shape: (1, 1, classes),
+        act_elems: classes as u64,
+        params: (2048 * classes + classes) as u64,
+        flops_per_image: 2 * (2048 * classes) as u64,
+    });
+    ArchProfile { name: "inception_v3".into(), input, layers }
+}
+
+/// Trainable mini: stem + 2 small inception-A-style blocks on 32×32
+/// (mirrors model.py::inception_lite).
+pub fn inception_lite(input: (usize, usize, usize), classes: usize) -> ArchProfile {
+    let mut layers = Vec::new();
+    let hw = input.0;
+    let (p, f, e) = conv_bn(3, 32, 3, 3, (hw, hw));
+    layers.push(LayerProfile {
+        name: "stem".into(),
+        kind: LayerKind::Conv,
+        out_shape: (hw, hw, 32),
+        act_elems: 3 * e,
+        params: p,
+        flops_per_image: f,
+    });
+    let hw2 = hw / 2;
+    // mini block 1 at half resolution (stride via pooling)
+    layers.push(LayerProfile {
+        name: "pool1".into(),
+        kind: LayerKind::Pool,
+        out_shape: (hw2, hw2, 32),
+        act_elems: (hw2 * hw2 * 32) as u64,
+        params: 0,
+        flops_per_image: (hw2 * hw2 * 32 * 4) as u64,
+    });
+    let mk_mini = |name: &str, hw: usize, in_c: usize| -> LayerProfile {
+        let o = (hw, hw);
+        let mut a = Acc::default();
+        a.add(conv_bn(in_c, 32, 1, 1, o));
+        a.add(conv_bn(in_c, 24, 1, 1, o));
+        a.add(conv_bn(24, 32, 3, 3, o));
+        a.add(conv_bn(in_c, 16, 1, 1, o));
+        a.add(conv_bn(16, 32, 5, 5, o));
+        a.into_layer(name, (hw, hw, 96))
+    };
+    layers.push(mk_mini("mini_a1", hw2, 32));
+    let hw4 = hw2 / 2;
+    layers.push(LayerProfile {
+        name: "pool2".into(),
+        kind: LayerKind::Pool,
+        out_shape: (hw4, hw4, 96),
+        act_elems: (hw4 * hw4 * 96) as u64,
+        params: 0,
+        flops_per_image: (hw4 * hw4 * 96 * 4) as u64,
+    });
+    layers.push(mk_mini("mini_a2", hw4, 96));
+    layers.push(LayerProfile {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool,
+        out_shape: (1, 1, 96),
+        act_elems: 96,
+        params: 0,
+        flops_per_image: (hw4 * hw4 * 96) as u64,
+    });
+    layers.push(LayerProfile {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        out_shape: (1, 1, classes),
+        act_elems: classes as u64,
+        params: (96 * classes + classes) as u64,
+        flops_per_image: 2 * (96 * classes) as u64,
+    });
+    ArchProfile { name: "inception_lite".into(), input, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolution_chain_matches_reference() {
+        let p = inception_v3((299, 299, 3), 1000);
+        let by_name = |n: &str| p.layers.iter().find(|l| l.name == n).unwrap();
+        assert_eq!(by_name("conv1a").out_shape.0, 149);
+        assert_eq!(by_name("conv2a").out_shape.0, 147);
+        assert_eq!(by_name("maxpool2").out_shape, (35, 35, 192));
+        assert_eq!(by_name("mixed5d").out_shape, (35, 35, 288));
+        assert_eq!(by_name("mixed6a").out_shape, (17, 17, 768));
+        assert_eq!(by_name("mixed7a").out_shape, (8, 8, 1280));
+        assert_eq!(by_name("mixed7c").out_shape, (8, 8, 2048));
+    }
+
+    #[test]
+    fn block_output_channels() {
+        let a = inception_a("t", 35, 192, 32);
+        assert_eq!(a.out_shape.2, 256);
+        let c = inception_c("t", 17, 768, 128);
+        assert_eq!(c.out_shape.2, 768);
+        let e = inception_e("t", 8, 1280);
+        assert_eq!(e.out_shape.2, 2048);
+    }
+
+    #[test]
+    fn lite_is_small() {
+        let p = inception_lite((32, 32, 3), 10);
+        assert!(p.param_count() < 300_000, "{}", p.param_count());
+        assert_eq!(p.layers.last().unwrap().out_shape, (1, 1, 10));
+    }
+}

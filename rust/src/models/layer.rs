@@ -1,0 +1,125 @@
+//! Layer-level profile: the unit the memory simulator schedules.
+
+/// What kind of computation a layer performs (affects recompute cost
+//  accounting and planner heuristics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    /// Depthwise conv (EfficientNet).
+    DwConv,
+    Pool,
+    /// Fused residual/inception super-block.
+    Block,
+    Dense,
+    /// Element-wise (activation, BN at inference granularity).
+    Pointwise,
+    /// The E-D pipelines' in-graph decode layer.
+    Decode,
+}
+
+/// One schedulable layer of an architecture profile.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Output shape per image `(h, w, c)`.
+    pub out_shape: (usize, usize, usize),
+    /// Activation elements this layer keeps live for backward under
+    /// standard training, per image. For fused blocks this includes the
+    /// internal tensors (both branches, pre-activations), which is what a
+    /// framework stores.
+    pub act_elems: u64,
+    /// Trainable parameters.
+    pub params: u64,
+    /// Forward FLOPs per image (MACs × 2).
+    pub flops_per_image: u64,
+}
+
+impl LayerProfile {
+    pub fn out_elems(&self) -> u64 {
+        let (h, w, c) = self.out_shape;
+        (h * w * c) as u64
+    }
+}
+
+/// Conv2d shape/cost helper: returns (out_h, out_w), params, flops/img.
+pub fn conv2d(
+    in_shape: (usize, usize, usize),
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    bias: bool,
+) -> ((usize, usize, usize), u64, u64) {
+    let (h, w, in_c) = in_shape;
+    // "same"-style padding: out = ceil(in / stride)
+    let oh = (h + stride - 1) / stride;
+    let ow = (w + stride - 1) / stride;
+    let params = (in_c * out_c * k * k + if bias { out_c } else { 0 }) as u64;
+    let flops = 2 * (oh * ow) as u64 * (in_c * out_c * k * k) as u64;
+    ((oh, ow, out_c), params, flops)
+}
+
+/// Depthwise conv helper.
+pub fn dwconv2d(
+    in_shape: (usize, usize, usize),
+    k: usize,
+    stride: usize,
+) -> ((usize, usize, usize), u64, u64) {
+    let (h, w, c) = in_shape;
+    let oh = (h + stride - 1) / stride;
+    let ow = (w + stride - 1) / stride;
+    let params = (c * k * k) as u64;
+    let flops = 2 * (oh * ow) as u64 * (c * k * k) as u64;
+    ((oh, ow, c), params, flops)
+}
+
+/// BatchNorm parameter count (scale + shift; running stats not trainable).
+pub fn bn_params(c: usize) -> u64 {
+    2 * c as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_and_params() {
+        // 3→64, 7×7 stride 2 on 224²: torchvision conv1 = 9408 params.
+        let (shape, params, flops) = conv2d((224, 224, 3), 64, 7, 2, false);
+        assert_eq!(shape, (112, 112, 64));
+        assert_eq!(params, 9408);
+        assert_eq!(flops, 2 * 112 * 112 * 9408);
+    }
+
+    #[test]
+    fn conv_bias_counted() {
+        let (_, params, _) = conv2d((8, 8, 16), 32, 3, 1, true);
+        assert_eq!(params, 16 * 32 * 9 + 32);
+    }
+
+    #[test]
+    fn dwconv_params_independent_of_channel_mixing() {
+        let (shape, params, _) = dwconv2d((56, 56, 144), 3, 2);
+        assert_eq!(shape, (28, 28, 144));
+        assert_eq!(params, 144 * 9);
+    }
+
+    #[test]
+    fn odd_sizes_ceil_divide() {
+        let (shape, _, _) = conv2d((299, 299, 3), 32, 3, 2, false);
+        assert_eq!(shape, (150, 150, 32));
+    }
+
+    #[test]
+    fn out_elems() {
+        let l = LayerProfile {
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            out_shape: (4, 5, 6),
+            act_elems: 1,
+            params: 0,
+            flops_per_image: 0,
+        };
+        assert_eq!(l.out_elems(), 120);
+    }
+}

@@ -1,0 +1,174 @@
+//! Architecture profiles — analytic layer graphs for every model the paper
+//! evaluates (ResNet-18/34/50/101, EfficientNet-B0…B7, Inception-V3) plus
+//! the trainable mini variants the end-to-end experiments use.
+//!
+//! A profile is a *sequential* list of [`LayerProfile`]s with exact output
+//! shapes, parameter counts and FLOP estimates. The memory simulator
+//! (`crate::memory`) replays forward/backward schedules over these graphs
+//! to reproduce Figures 8 and 10; the checkpoint planner searches over
+//! them for Figure 11. Branchy blocks (residual, inception) are modeled as
+//! fused sequential super-layers whose activation footprint includes all
+//! internal tensors that standard training keeps live — which is the
+//! quantity the paper's figures measure.
+
+mod effnet;
+mod inception;
+mod layer;
+mod registry;
+mod resnet;
+
+pub use layer::{LayerKind, LayerProfile};
+pub use registry::{all_arch_names, arch_by_name, paper_fig10_models, trainable_models};
+
+/// A full architecture profile.
+#[derive(Clone, Debug)]
+pub struct ArchProfile {
+    pub name: String,
+    /// Input `(h, w, c)` the profile was built for.
+    pub input: (usize, usize, usize),
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ArchProfile {
+    /// Total parameter count.
+    pub fn param_count(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Total forward FLOPs for batch size `b`.
+    pub fn flops(&self, b: usize) -> u64 {
+        self.layers.iter().map(|l| l.flops_per_image).sum::<u64>() * b as u64
+    }
+
+    /// Activation elements stored by standard training across the whole
+    /// forward pass (what checkpointing trades away), batch `b`.
+    pub fn total_activation_elems(&self, b: usize) -> u64 {
+        self.layers.iter().map(|l| l.act_elems).sum::<u64>() * b as u64
+    }
+
+    /// Largest single-layer activation, batch `b` (lower bound on any
+    /// schedule's working set).
+    pub fn max_activation_elems(&self, b: usize) -> u64 {
+        self.layers.iter().map(|l| l.act_elems).max().unwrap_or(0) * b as u64
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_param_count_close_to_reference() {
+        // torchvision resnet18: 11,689,512 params. Our analytic profile
+        // must land within 2%.
+        let p = arch_by_name("resnet18", (224, 224, 3), 1000).unwrap();
+        let count = p.param_count() as f64;
+        assert!(
+            (count - 11_689_512.0).abs() / 11_689_512.0 < 0.02,
+            "resnet18 params {count}"
+        );
+    }
+
+    #[test]
+    fn resnet50_param_count_close_to_reference() {
+        // torchvision resnet50: 25,557,032 params.
+        let p = arch_by_name("resnet50", (224, 224, 3), 1000).unwrap();
+        let count = p.param_count() as f64;
+        assert!(
+            (count - 25_557_032.0).abs() / 25_557_032.0 < 0.02,
+            "resnet50 params {count}"
+        );
+    }
+
+    #[test]
+    fn resnet101_deeper_than_resnet50() {
+        let a = arch_by_name("resnet50", (224, 224, 3), 1000).unwrap();
+        let b = arch_by_name("resnet101", (224, 224, 3), 1000).unwrap();
+        assert!(b.depth() > a.depth());
+        assert!(b.param_count() > a.param_count());
+    }
+
+    #[test]
+    fn efficientnet_scaling_monotonic() {
+        // B0 < B1 < ... < B7 in params and activations.
+        let mut prev: Option<ArchProfile> = None;
+        for i in 0..8 {
+            let p = arch_by_name(&format!("efficientnet_b{i}"), (224, 224, 3), 1000).unwrap();
+            if let Some(q) = &prev {
+                assert!(p.param_count() > q.param_count(), "b{i} params");
+                assert!(
+                    p.total_activation_elems(1) > q.total_activation_elems(1),
+                    "b{i} acts"
+                );
+            }
+            prev = Some(p);
+        }
+    }
+
+    #[test]
+    fn efficientnet_b0_param_count_close_to_reference() {
+        // torchvision efficientnet_b0: 5,288,548 params. Analytic MBConv
+        // bookkeeping tolerates 5%.
+        let p = arch_by_name("efficientnet_b0", (224, 224, 3), 1000).unwrap();
+        let count = p.param_count() as f64;
+        assert!(
+            (count - 5_288_548.0).abs() / 5_288_548.0 < 0.05,
+            "efficientnet_b0 params {count}"
+        );
+    }
+
+    #[test]
+    fn inception_v3_param_count_close_to_reference() {
+        // torchvision inception_v3 (no aux): ~25.1M params.
+        let p = arch_by_name("inception_v3", (299, 299, 3), 1000).unwrap();
+        let count = p.param_count() as f64;
+        assert!(
+            (count - 25.1e6).abs() / 25.1e6 < 0.08,
+            "inception_v3 params {count}"
+        );
+    }
+
+    #[test]
+    fn shapes_chain_consistently() {
+        for name in all_arch_names() {
+            let input = if name.contains("inception") { (299, 299, 3) } else { (224, 224, 3) };
+            let p = arch_by_name(&name, input, 1000).unwrap();
+            assert!(!p.layers.is_empty(), "{name} empty");
+            for (i, l) in p.layers.iter().enumerate() {
+                assert!(l.act_elems > 0, "{name} layer {i} ({}) zero acts", l.name);
+            }
+            // final layer is the classifier head: out elems == classes
+            let last = p.layers.last().unwrap();
+            assert_eq!(last.out_shape, (1, 1, 1000), "{name} head shape");
+        }
+    }
+
+    #[test]
+    fn profiles_scale_with_input_resolution() {
+        let small = arch_by_name("resnet18", (32, 32, 3), 10).unwrap();
+        let big = arch_by_name("resnet18", (512, 512, 3), 10).unwrap();
+        assert_eq!(small.param_count(), big.param_count(), "params are res-independent");
+        assert!(big.total_activation_elems(1) > 100 * small.total_activation_elems(1));
+    }
+
+    #[test]
+    fn trainable_minis_are_small() {
+        for name in trainable_models() {
+            let p = arch_by_name(&name, (32, 32, 3), 10).unwrap();
+            assert!(
+                p.param_count() < 5_000_000,
+                "{name} too big for CPU training: {}",
+                p.param_count()
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_arch_is_none() {
+        assert!(arch_by_name("alexnet", (224, 224, 3), 1000).is_none());
+    }
+}

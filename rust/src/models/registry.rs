@@ -1,0 +1,98 @@
+//! Model registry: name → profile builder.
+
+use crate::models::{effnet, inception, resnet, ArchProfile};
+
+/// Build the profile for `name` at `input` resolution with `classes`
+/// output classes. `None` for unknown names.
+pub fn arch_by_name(name: &str, input: (usize, usize, usize), classes: usize) -> Option<ArchProfile> {
+    let p = match name {
+        "resnet18" => resnet::resnet(name, input, classes, [2, 2, 2, 2], false),
+        "resnet34" => resnet::resnet(name, input, classes, [3, 4, 6, 3], false),
+        "resnet50" => resnet::resnet(name, input, classes, [3, 4, 6, 3], true),
+        "resnet101" => resnet::resnet(name, input, classes, [3, 4, 23, 3], true),
+        "inception_v3" => inception::inception_v3(input, classes),
+        "tiny_cnn" => resnet::tiny_cnn(input, classes),
+        "resnet_mini18" => resnet::resnet_mini(name, input, classes, [2, 2, 2, 2], false, 16),
+        "resnet_mini34" => resnet::resnet_mini(name, input, classes, [3, 4, 6, 3], false, 16),
+        "resnet_mini50" => resnet::resnet_mini(name, input, classes, [3, 4, 6, 3], true, 16),
+        "effnet_lite" => effnet::effnet_lite(input, classes),
+        "inception_lite" => inception::inception_lite(input, classes),
+        _ => {
+            if let Some(v) = name.strip_prefix("efficientnet_b") {
+                let variant: usize = v.parse().ok()?;
+                if variant > 7 {
+                    return None;
+                }
+                effnet::efficientnet(variant, input, classes)
+            } else {
+                return None;
+            }
+        }
+    };
+    Some(p)
+}
+
+/// Every profiled architecture (full-scale + minis).
+pub fn all_arch_names() -> Vec<String> {
+    let mut v: Vec<String> = vec![
+        "resnet18".into(),
+        "resnet34".into(),
+        "resnet50".into(),
+        "resnet101".into(),
+        "inception_v3".into(),
+    ];
+    for i in 0..8 {
+        v.push(format!("efficientnet_b{i}"));
+    }
+    v.extend(trainable_models());
+    v
+}
+
+/// Models small enough to train end-to-end on CPU (mirrored in model.py).
+pub fn trainable_models() -> Vec<String> {
+    vec![
+        "tiny_cnn".into(),
+        "resnet_mini18".into(),
+        "resnet_mini34".into(),
+        "resnet_mini50".into(),
+        "effnet_lite".into(),
+        "inception_lite".into(),
+    ]
+}
+
+/// The model set Figure 10 plots (full-scale paper models).
+pub fn paper_fig10_models() -> Vec<String> {
+    let mut v: Vec<String> = vec!["resnet18".into(), "resnet34".into(), "resnet50".into()];
+    for i in 0..8 {
+        v.push(format!("efficientnet_b{i}"));
+    }
+    v.push("inception_v3".into());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in all_arch_names() {
+            assert!(
+                arch_by_name(&name, (224, 224, 3), 10).is_some(),
+                "missing {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_set_has_12_models() {
+        assert_eq!(paper_fig10_models().len(), 12);
+    }
+
+    #[test]
+    fn efficientnet_suffix_parsing() {
+        assert!(arch_by_name("efficientnet_b9", (224, 224, 3), 10).is_none());
+        assert!(arch_by_name("efficientnet_bx", (224, 224, 3), 10).is_none());
+        assert!(arch_by_name("efficientnet_b7", (224, 224, 3), 10).is_some());
+    }
+}

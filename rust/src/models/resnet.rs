@@ -1,0 +1,269 @@
+//! ResNet profiles (He et al. 2015): 18/34 (basic blocks), 50/101
+//! (bottlenecks), plus the CIFAR-scale `resnet_mini*` trainable variants
+//! that mirror `python/compile/model.py`.
+
+use crate::models::layer::{bn_params, conv2d, LayerKind, LayerProfile};
+use crate::models::ArchProfile;
+
+/// Basic residual block (two 3×3 convs). Returns the fused super-layer.
+fn basic_block(
+    name: &str,
+    in_shape: (usize, usize, usize),
+    out_c: usize,
+    stride: usize,
+) -> (LayerProfile, (usize, usize, usize)) {
+    let (s1, p1, f1) = conv2d(in_shape, out_c, 3, stride, false);
+    let (s2, p2, f2) = conv2d(s1, out_c, 3, 1, false);
+    let mut params = p1 + bn_params(out_c) + p2 + bn_params(out_c);
+    let mut flops = f1 + f2;
+    // Activations standard training keeps: each conv's output plus its
+    // post-BN/ReLU tensor, plus the residual sum.
+    let mut acts = 3 * (s1.0 * s1.1 * s1.2) as u64 + 3 * (s2.0 * s2.1 * s2.2) as u64
+        + (s2.0 * s2.1 * s2.2) as u64;
+    let needs_proj = stride != 1 || in_shape.2 != out_c;
+    if needs_proj {
+        let (sp, pp, fp) = conv2d(in_shape, out_c, 1, stride, false);
+        params += pp + bn_params(out_c);
+        flops += fp;
+        acts += (sp.0 * sp.1 * sp.2) as u64;
+    }
+    (
+        LayerProfile {
+            name: name.to_string(),
+            kind: LayerKind::Block,
+            out_shape: s2,
+            act_elems: acts,
+            params,
+            flops_per_image: flops,
+        },
+        s2,
+    )
+}
+
+/// Bottleneck residual block (1×1 → 3×3 → 1×1, expansion 4).
+fn bottleneck_block(
+    name: &str,
+    in_shape: (usize, usize, usize),
+    mid_c: usize,
+    stride: usize,
+) -> (LayerProfile, (usize, usize, usize)) {
+    let out_c = mid_c * 4;
+    let (s1, p1, f1) = conv2d(in_shape, mid_c, 1, 1, false);
+    let (s2, p2, f2) = conv2d(s1, mid_c, 3, stride, false);
+    let (s3, p3, f3) = conv2d(s2, out_c, 1, 1, false);
+    let mut params =
+        p1 + bn_params(mid_c) + p2 + bn_params(mid_c) + p3 + bn_params(out_c);
+    let mut flops = f1 + f2 + f3;
+    let mut acts = 3 * (s1.0 * s1.1 * s1.2) as u64
+        + 3 * (s2.0 * s2.1 * s2.2) as u64
+        + 3 * (s3.0 * s3.1 * s3.2) as u64
+        + (s3.0 * s3.1 * s3.2) as u64;
+    let needs_proj = stride != 1 || in_shape.2 != out_c;
+    if needs_proj {
+        let (sp, pp, fp) = conv2d(in_shape, out_c, 1, stride, false);
+        params += pp + bn_params(out_c);
+        flops += fp;
+        acts += (sp.0 * sp.1 * sp.2) as u64;
+    }
+    (
+        LayerProfile {
+            name: name.to_string(),
+            kind: LayerKind::Block,
+            out_shape: s3,
+            act_elems: acts,
+            params,
+            flops_per_image: flops,
+        },
+        s3,
+    )
+}
+
+/// ImageNet-style stem: 7×7/2 conv + BN/ReLU + 3×3/2 maxpool.
+fn imagenet_stem(input: (usize, usize, usize), layers: &mut Vec<LayerProfile>) -> (usize, usize, usize) {
+    let (s, p, f) = conv2d(input, 64, 7, 2, false);
+    layers.push(LayerProfile {
+        name: "conv1".into(),
+        kind: LayerKind::Conv,
+        out_shape: s,
+        act_elems: 3 * (s.0 * s.1 * s.2) as u64,
+        params: p + bn_params(64),
+        flops_per_image: f,
+    });
+    let pooled = ((s.0 + 1) / 2, (s.1 + 1) / 2, s.2);
+    layers.push(LayerProfile {
+        name: "maxpool".into(),
+        kind: LayerKind::Pool,
+        out_shape: pooled,
+        act_elems: (pooled.0 * pooled.1 * pooled.2) as u64,
+        params: 0,
+        flops_per_image: (pooled.0 * pooled.1 * pooled.2 * 9) as u64,
+    });
+    pooled
+}
+
+fn head(
+    shape: (usize, usize, usize),
+    classes: usize,
+    layers: &mut Vec<LayerProfile>,
+) {
+    let c = shape.2;
+    layers.push(LayerProfile {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool,
+        out_shape: (1, 1, c),
+        act_elems: c as u64,
+        params: 0,
+        flops_per_image: (shape.0 * shape.1 * c) as u64,
+    });
+    layers.push(LayerProfile {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        out_shape: (1, 1, classes),
+        act_elems: classes as u64,
+        params: (c * classes + classes) as u64,
+        flops_per_image: 2 * (c * classes) as u64,
+    });
+}
+
+/// Generic ResNet builder. `blocks[i]` = number of blocks in stage i,
+/// `bottleneck` selects the block type.
+pub fn resnet(
+    name: &str,
+    input: (usize, usize, usize),
+    classes: usize,
+    blocks: [usize; 4],
+    bottleneck: bool,
+) -> ArchProfile {
+    let mut layers = Vec::new();
+    let mut shape = imagenet_stem(input, &mut layers);
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&n, &w)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let nm = format!("layer{}.{}", stage + 1, b);
+            let (layer, s) = if bottleneck {
+                bottleneck_block(&nm, shape, w, stride)
+            } else {
+                basic_block(&nm, shape, w, stride)
+            };
+            shape = s;
+            layers.push(layer);
+        }
+    }
+    head(shape, classes, &mut layers);
+    ArchProfile { name: name.to_string(), input, layers }
+}
+
+/// CIFAR-scale mini ResNet: 3×3 stem (no maxpool), widths from
+/// `base_width`, mirrors `python/compile/model.py::resnet_mini*`.
+pub fn resnet_mini(
+    name: &str,
+    input: (usize, usize, usize),
+    classes: usize,
+    blocks: [usize; 4],
+    bottleneck: bool,
+    base_width: usize,
+) -> ArchProfile {
+    let mut layers = Vec::new();
+    let (s, p, f) = conv2d(input, base_width, 3, 1, false);
+    layers.push(LayerProfile {
+        name: "conv1".into(),
+        kind: LayerKind::Conv,
+        out_shape: s,
+        act_elems: 3 * (s.0 * s.1 * s.2) as u64,
+        params: p + bn_params(base_width),
+        flops_per_image: f,
+    });
+    let mut shape = s;
+    let widths = [base_width, base_width * 2, base_width * 4, base_width * 8];
+    for (stage, (&n, &w)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let nm = format!("layer{}.{}", stage + 1, b);
+            let (layer, sh) = if bottleneck {
+                bottleneck_block(&nm, shape, w, stride)
+            } else {
+                basic_block(&nm, shape, w, stride)
+            };
+            shape = sh;
+            layers.push(layer);
+        }
+    }
+    head(shape, classes, &mut layers);
+    ArchProfile { name: name.to_string(), input, layers }
+}
+
+/// `tiny_cnn`: 3-conv net for fast end-to-end runs; mirrors model.py.
+pub fn tiny_cnn(input: (usize, usize, usize), classes: usize) -> ArchProfile {
+    let mut layers = Vec::new();
+    let mut shape = input;
+    for (i, (c, stride)) in [(16usize, 1usize), (32, 2), (64, 2)].iter().enumerate() {
+        let (s, p, f) = conv2d(shape, *c, 3, *stride, true);
+        layers.push(LayerProfile {
+            name: format!("conv{}", i + 1),
+            kind: LayerKind::Conv,
+            out_shape: s,
+            act_elems: 3 * (s.0 * s.1 * s.2) as u64,
+            params: p,
+            flops_per_image: f,
+        });
+        shape = s;
+    }
+    head(shape, classes, &mut layers);
+    ArchProfile { name: "tiny_cnn".into(), input, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_structure() {
+        let p = resnet("resnet18", (224, 224, 3), 1000, [2, 2, 2, 2], false);
+        // conv1 + pool + 8 blocks + avgpool + fc
+        assert_eq!(p.depth(), 2 + 8 + 2);
+        assert_eq!(p.layers[2].out_shape, (56, 56, 64));
+        assert_eq!(p.layers[9].out_shape, (7, 7, 512));
+    }
+
+    #[test]
+    fn resnet50_expansion() {
+        let p = resnet("resnet50", (224, 224, 3), 1000, [3, 4, 6, 3], true);
+        assert_eq!(p.depth(), 2 + 16 + 2);
+        // last stage output has 2048 channels
+        let last_block = &p.layers[p.depth() - 3];
+        assert_eq!(last_block.out_shape, (7, 7, 2048));
+    }
+
+    #[test]
+    fn stride_only_first_block_of_stage() {
+        let p = resnet("resnet18", (224, 224, 3), 1000, [2, 2, 2, 2], false);
+        // stage 2 blocks: first halves resolution, second keeps it
+        assert_eq!(p.layers[4].out_shape.0, 28);
+        assert_eq!(p.layers[5].out_shape.0, 28);
+    }
+
+    #[test]
+    fn mini_keeps_resolution_at_stem() {
+        let p = resnet_mini("resnet_mini18", (32, 32, 3), 10, [2, 2, 2, 2], false, 16);
+        assert_eq!(p.layers[0].out_shape, (32, 32, 16));
+        let last_block = &p.layers[p.depth() - 3];
+        assert_eq!(last_block.out_shape, (4, 4, 128));
+    }
+
+    #[test]
+    fn tiny_cnn_small() {
+        let p = tiny_cnn((32, 32, 3), 10);
+        assert!(p.param_count() < 50_000, "{}", p.param_count());
+        assert_eq!(p.layers.last().unwrap().out_shape, (1, 1, 10));
+    }
+
+    #[test]
+    fn projection_only_when_needed() {
+        // stage-1 non-first blocks have no projection: params are exactly
+        // 2 convs + 2 bns
+        let p = resnet("resnet18", (224, 224, 3), 1000, [2, 2, 2, 2], false);
+        let blk = &p.layers[3]; // layer1.1
+        assert_eq!(blk.params, (64 * 64 * 9 + 128) as u64 * 2);
+    }
+}

@@ -1,0 +1,342 @@
+//! Executable loading + train/eval/init execution over PJRT.
+
+use crate::data::encode::EncodedBatch;
+use crate::data::loader::BatchPayload;
+use crate::runtime::manifest::{BatchKind, Manifest, ManifestEntry};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shared PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+/// Training state: one `Literal` per manifest state tensor
+/// (params ⊎ optimizer momentum), shuttled through each step.
+pub struct TrainState {
+    pub tensors: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total bytes held.
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// Output of one train/eval step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Correct predictions in the batch.
+    pub correct: u32,
+    pub batch_size: u32,
+}
+
+impl StepOutput {
+    pub fn accuracy(&self) -> f64 {
+        if self.batch_size == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.batch_size as f64
+        }
+    }
+}
+
+/// A (model, pipeline)'s compiled executables.
+pub struct LoadedModel {
+    pub entry: ManifestEntry,
+    train: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    eval: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    init: std::rc::Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&mut self, file: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.insert(file.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Load (and compile) a (model, pipeline)'s artifacts.
+    pub fn load(&mut self, model: &str, pipeline: &str) -> Result<LoadedModel> {
+        let entry = self
+            .manifest
+            .find(model, pipeline)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for model='{model}' pipeline='{pipeline}' \
+                     (available: {:?}) — run `make artifacts`",
+                    self.manifest.models()
+                )
+            })?
+            .clone();
+        Ok(LoadedModel {
+            train: self.compile(&entry.train_hlo)?,
+            eval: self.compile(&entry.eval_hlo)?,
+            init: self.compile(&entry.init_hlo)?,
+            entry,
+        })
+    }
+}
+
+/// Build the batch literal from a loader payload, validating against the
+/// manifest spec.
+pub fn batch_literal(entry: &ManifestEntry, payload: &BatchPayload) -> Result<xla::Literal> {
+    match (entry.batch_kind, payload) {
+        (BatchKind::Raw, BatchPayload::Raw { data, n, .. }) => {
+            if *n != entry.batch_size {
+                bail!("batch has {n} images, artifact expects {}", entry.batch_size);
+            }
+            let dims: Vec<i64> = entry.batch_spec.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(data).reshape(&dims)?)
+        }
+        (BatchKind::Encoded, BatchPayload::Encoded(groups)) => {
+            encoded_literal(entry, groups)
+        }
+        (kind, payload) => bail!(
+            "payload kind mismatch: artifact wants {kind:?}, loader produced {}",
+            match payload {
+                BatchPayload::Raw { .. } => "raw",
+                BatchPayload::Encoded(_) => "encoded",
+            }
+        ),
+    }
+}
+
+fn encoded_literal(entry: &ManifestEntry, groups: &[EncodedBatch]) -> Result<xla::Literal> {
+    if groups.len() != entry.groups {
+        bail!(
+            "encoded payload has {} groups, artifact expects {}",
+            groups.len(),
+            entry.groups
+        );
+    }
+    let (h, w, c) = entry.input;
+    let px = h * w * c;
+    let mut data = Vec::with_capacity(entry.groups * px);
+    for g in groups {
+        if g.words_f64.len() != px {
+            bail!("group word count {} != {px}", g.words_f64.len());
+        }
+        data.extend_from_slice(&g.words_f64);
+    }
+    let dims: Vec<i64> = entry.batch_spec.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+/// Labels literal `[B, K]` from the payload's soft labels.
+/// Raw payloads borrow the label slice directly (§Perf: no per-step clone).
+pub fn labels_literal(entry: &ManifestEntry, payload: &BatchPayload) -> Result<xla::Literal> {
+    let want = entry.batch_size * entry.num_classes;
+    let lit = match payload {
+        BatchPayload::Raw { labels, .. } => {
+            if labels.len() != want {
+                bail!("labels length {} != {want}", labels.len());
+            }
+            xla::Literal::vec1(labels)
+        }
+        BatchPayload::Encoded(groups) => {
+            let mut v = Vec::with_capacity(want);
+            for g in groups {
+                v.extend_from_slice(&g.labels);
+            }
+            if v.len() != want {
+                bail!("labels length {} != {want}", v.len());
+            }
+            xla::Literal::vec1(&v)
+        }
+    };
+    Ok(lit.reshape(&[entry.batch_size as i64, entry.num_classes as i64])?)
+}
+
+impl LoadedModel {
+    /// Initialize training state from a seed (runs the init artifact).
+    pub fn init_state(&self, seed: u64) -> Result<TrainState> {
+        let seed_lit = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]).reshape(&[2])?;
+        let result = self.init.execute::<xla::Literal>(&[seed_lit])?[0][0]
+            .to_literal_sync()?;
+        let tensors = result.to_tuple()?;
+        if tensors.len() != self.entry.state.len() {
+            bail!(
+                "init returned {} tensors, manifest lists {}",
+                tensors.len(),
+                self.entry.state.len()
+            );
+        }
+        Ok(TrainState { tensors })
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        state_tensors: &[xla::Literal],
+        payload: &BatchPayload,
+        lr: Option<f32>,
+    ) -> Result<Vec<xla::Literal>> {
+        let batch = batch_literal(&self.entry, payload)?;
+        let labels = labels_literal(&self.entry, payload)?;
+        let lr_lit = lr.map(xla::Literal::scalar);
+        let mut args: Vec<&xla::Literal> = state_tensors.iter().collect();
+        args.push(&batch);
+        args.push(&labels);
+        if let Some(l) = &lr_lit {
+            args.push(l);
+        }
+        let out = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// One optimizer step at the manifest's base learning rate.
+    pub fn train_step(&self, state: &mut TrainState, payload: &BatchPayload) -> Result<StepOutput> {
+        self.train_step_lr(state, payload, self.entry.lr as f32)
+    }
+
+    /// One optimizer step with an explicit learning rate (the artifact
+    /// takes LR as a runtime scalar — schedules need no recompilation).
+    pub fn train_step_lr(
+        &self,
+        state: &mut TrainState,
+        payload: &BatchPayload,
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let mut out = self.run(&self.train, &state.tensors, payload, Some(lr))?;
+        let s = self.entry.state.len();
+        if out.len() != s + 2 {
+            bail!("train step returned {} tensors, expected {}", out.len(), s + 2);
+        }
+        let correct = out.pop().unwrap().convert(xla::PrimitiveType::F32)?.get_first_element::<f32>()?;
+        let loss = out.pop().unwrap().convert(xla::PrimitiveType::F32)?.get_first_element::<f32>()?;
+        state.tensors = out;
+        Ok(StepOutput {
+            loss,
+            correct: correct.round() as u32,
+            batch_size: self.entry.batch_size as u32,
+        })
+    }
+
+    /// Loss + correct-count on one batch without touching the state.
+    /// The eval artifact takes only the parameter half of the state
+    /// (momentum would be dead inputs — XLA strips them at compile).
+    pub fn eval_step(&self, state: &TrainState, payload: &BatchPayload) -> Result<StepOutput> {
+        let n_params = self.entry.state.len() / 2;
+        let out = self.run(&self.eval, &state.tensors[..n_params], payload, None)?;
+        if out.len() != 2 {
+            bail!("eval step returned {} tensors, expected 2", out.len());
+        }
+        let loss = out[0].convert(xla::PrimitiveType::F32)?.get_first_element::<f32>()?;
+        let correct = out[1].convert(xla::PrimitiveType::F32)?.get_first_element::<f32>()?;
+        Ok(StepOutput {
+            loss,
+            correct: correct.round() as u32,
+            batch_size: self.entry.batch_size as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, TensorSpec};
+
+    fn raw_entry() -> ManifestEntry {
+        ManifestEntry {
+            model: "m".into(),
+            pipeline: "baseline".into(),
+            input: (4, 4, 3),
+            num_classes: 10,
+            batch_size: 2,
+            groups: 0,
+            group_capacity: 0,
+            batch_kind: BatchKind::Raw,
+            batch_spec: TensorSpec {
+                name: "batch".into(),
+                shape: vec![2, 4, 4, 3],
+                dtype: Dtype::F32,
+            },
+            labels_spec: TensorSpec {
+                name: "labels".into(),
+                shape: vec![2, 10],
+                dtype: Dtype::F32,
+            },
+            state: vec![TensorSpec { name: "w".into(), shape: vec![3], dtype: Dtype::F32 }],
+            train_hlo: "x".into(),
+            eval_hlo: "x".into(),
+            init_hlo: "x".into(),
+            lr: 0.1,
+            momentum: 0.9,
+            loss_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn batch_literal_raw_shape() {
+        let e = raw_entry();
+        let payload = BatchPayload::Raw {
+            data: vec![0.5; 2 * 4 * 4 * 3],
+            labels: vec![0.1; 20],
+            n: 2,
+        };
+        let lit = batch_literal(&e, &payload).unwrap();
+        assert_eq!(lit.element_count(), 96);
+        let labels = labels_literal(&e, &payload).unwrap();
+        assert_eq!(labels.element_count(), 20);
+    }
+
+    #[test]
+    fn batch_literal_rejects_wrong_count() {
+        let e = raw_entry();
+        let payload = BatchPayload::Raw { data: vec![0.0; 48], labels: vec![0.0; 10], n: 1 };
+        assert!(batch_literal(&e, &payload).is_err());
+    }
+
+    #[test]
+    fn batch_literal_rejects_kind_mismatch() {
+        let e = raw_entry();
+        let payload = BatchPayload::Encoded(vec![]);
+        assert!(batch_literal(&e, &payload).is_err());
+    }
+
+    #[test]
+    fn step_output_accuracy() {
+        let s = StepOutput { loss: 1.0, correct: 12, batch_size: 16 };
+        assert!((s.accuracy() - 0.75).abs() < 1e-9);
+        let z = StepOutput { loss: 1.0, correct: 0, batch_size: 0 };
+        assert_eq!(z.accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the rust runtime (reader). See DESIGN.md §2.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F16,
+    F32,
+    F64,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype, String> {
+        match s {
+            "f16" | "float16" => Ok(Dtype::F16),
+            "f32" | "float32" => Ok(Dtype::F32),
+            "f64" | "float64" => Ok(Dtype::F64),
+            "u32" | "uint32" => Ok(Dtype::U32),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F16 => 2,
+            Dtype::F32 | Dtype::U32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("tensor missing name")?
+            .to_string();
+        let dtype = Dtype::parse(
+            j.get("dtype").and_then(Json::as_str).ok_or("tensor missing dtype")?,
+        )?;
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("tensor missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| format!("bad dim in {name}")))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// How the batch input is shipped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    /// f32 `[B, H, W, C]`.
+    Raw,
+    /// Packed base-256 f64 words `[G, H, W, C]` (E-D pipelines).
+    Encoded,
+}
+
+/// One (model, pipeline) artifact set.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub model: String,
+    pub pipeline: String,
+    pub input: (usize, usize, usize),
+    pub num_classes: usize,
+    pub batch_size: usize,
+    /// Encoded-group count (E-D) and per-group capacity; 0 for raw.
+    pub groups: usize,
+    pub group_capacity: usize,
+    pub batch_kind: BatchKind,
+    pub batch_spec: TensorSpec,
+    pub labels_spec: TensorSpec,
+    pub state: Vec<TensorSpec>,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub init_hlo: String,
+    pub lr: f64,
+    pub momentum: f64,
+    pub loss_scale: f64,
+}
+
+impl ManifestEntry {
+    pub fn state_bytes(&self) -> usize {
+        self.state.iter().map(TensorSpec::bytes).sum()
+    }
+
+    fn from_json(j: &Json) -> Result<ManifestEntry, String> {
+        let get_str = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or(format!("entry missing '{k}'"))
+        };
+        let get_usize = |k: &str| -> Result<usize, String> {
+            j.get(k).and_then(Json::as_usize).ok_or(format!("entry missing '{k}'"))
+        };
+        let get_f64 = |k: &str| -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or(format!("entry missing '{k}'"))
+        };
+        let input_arr = j
+            .get("input")
+            .and_then(Json::as_arr)
+            .ok_or("entry missing 'input'")?;
+        if input_arr.len() != 3 {
+            return Err("'input' must be [h, w, c]".into());
+        }
+        let input = (
+            input_arr[0].as_usize().ok_or("bad input dim")?,
+            input_arr[1].as_usize().ok_or("bad input dim")?,
+            input_arr[2].as_usize().ok_or("bad input dim")?,
+        );
+        let batch_kind = match get_str("batch_kind")?.as_str() {
+            "raw" => BatchKind::Raw,
+            "encoded" => BatchKind::Encoded,
+            other => return Err(format!("unknown batch_kind '{other}'")),
+        };
+        let state = j
+            .get("state")
+            .and_then(Json::as_arr)
+            .ok_or("entry missing 'state'")?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        if state.is_empty() {
+            return Err("entry has empty state".into());
+        }
+        Ok(ManifestEntry {
+            model: get_str("model")?,
+            pipeline: get_str("pipeline")?,
+            input,
+            num_classes: get_usize("num_classes")?,
+            batch_size: get_usize("batch_size")?,
+            groups: get_usize("groups").unwrap_or(0),
+            group_capacity: get_usize("group_capacity").unwrap_or(0),
+            batch_kind,
+            batch_spec: TensorSpec::from_json(j.get("batch").ok_or("entry missing 'batch'")?)?,
+            labels_spec: TensorSpec::from_json(
+                j.get("labels").ok_or("entry missing 'labels'")?,
+            )?,
+            state,
+            train_hlo: get_str("train_hlo")?,
+            eval_hlo: get_str("eval_hlo")?,
+            init_hlo: get_str("init_hlo")?,
+            lr: get_f64("lr")?,
+            momentum: get_f64("momentum")?,
+            loss_scale: get_f64("loss_scale").unwrap_or(1.0),
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse manifest text (exposed for tests).
+    pub fn from_text(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing 'entries'")?
+            .iter()
+            .map(ManifestEntry::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::from_text(dir, &text)
+    }
+
+    /// Look up a (model, pipeline-name) entry.
+    pub fn find(&self, model: &str, pipeline: &str) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.model == model && e.pipeline == pipeline)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.iter().map(|e| e.model.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Absolute path of an HLO file referenced by an entry.
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+            "version": 1,
+            "entries": [{
+                "model": "tiny_cnn", "pipeline": "baseline",
+                "input": [32, 32, 3], "num_classes": 10, "batch_size": 16,
+                "batch_kind": "raw",
+                "batch": {"name": "batch", "shape": [16, 32, 32, 3], "dtype": "f32"},
+                "labels": {"name": "labels", "shape": [16, 10], "dtype": "f32"},
+                "state": [
+                    {"name": "conv1/w", "shape": [3, 3, 3, 16], "dtype": "f32"},
+                    {"name": "conv1/b", "shape": [16], "dtype": "f32"}
+                ],
+                "train_hlo": "tiny_cnn_baseline.train.hlo.txt",
+                "eval_hlo": "tiny_cnn_baseline.eval.hlo.txt",
+                "init_hlo": "tiny_cnn_baseline.init.hlo.txt",
+                "lr": 0.05, "momentum": 0.9
+            }]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_text(Path::new("artifacts"), &sample()).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("tiny_cnn", "baseline").unwrap();
+        assert_eq!(e.input, (32, 32, 3));
+        assert_eq!(e.batch_kind, BatchKind::Raw);
+        assert_eq!(e.state.len(), 2);
+        assert_eq!(e.state[0].elems(), 3 * 3 * 3 * 16);
+        assert_eq!(e.state_bytes(), (432 + 16) * 4);
+        assert_eq!(e.loss_scale, 1.0); // default
+        assert!(m.find("tiny_cnn", "ed").is_none());
+        assert_eq!(m.models(), vec!["tiny_cnn"]);
+        assert_eq!(
+            m.hlo_path(&e.train_hlo),
+            Path::new("artifacts/tiny_cnn_baseline.train.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let text = r#"{"version": 2, "entries": []}"#;
+        assert!(Manifest::from_text(Path::new("a"), text).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let text = r#"{"version": 1, "entries": [{"model": "m"}]}"#;
+        let err = Manifest::from_text(Path::new("a"), text).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_state() {
+        let text = sample().replace(
+            r#""state": [
+                    {"name": "conv1/w", "shape": [3, 3, 3, 16], "dtype": "f32"},
+                    {"name": "conv1/b", "shape": [16], "dtype": "f32"}
+                ]"#,
+            r#""state": []"#,
+        );
+        assert!(Manifest::from_text(Path::new("a"), &text).is_err());
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(Dtype::parse("f16").unwrap(), Dtype::F16);
+        assert_eq!(Dtype::parse("float64").unwrap(), Dtype::F64);
+        assert!(Dtype::parse("int8").is_err());
+        assert_eq!(Dtype::F16.bytes(), 2);
+        assert_eq!(Dtype::F64.bytes(), 8);
+    }
+}

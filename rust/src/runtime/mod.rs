@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, emitted
+//! once by `python/compile/aot.py`) and executes them from the training
+//! hot path. Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (tensor specs, file
+//!   names, hyper-parameters) with the in-crate JSON parser.
+//! * [`exec`] — compiles HLO text on the PJRT CPU client and drives the
+//!   train/eval/init executables; training state lives as XLA `Literal`s
+//!   between steps (the 0.1.6 `xla` crate returns tuple outputs as a
+//!   single buffer, so state crosses the host boundary per step — see
+//!   DESIGN.md §Perf for the measured cost).
+
+pub mod exec;
+pub mod manifest;
+pub mod state_io;
+
+pub use exec::{LoadedModel, Runtime, StepOutput, TrainState};
+pub use manifest::{BatchKind, Dtype, Manifest, ManifestEntry, TensorSpec};

@@ -1,0 +1,173 @@
+//! Training-state checkpointing to disk: save/resume runs across
+//! processes. Tensors are stored as f32 (f16 state is widened on save and
+//! re-narrowed on load — exact, since f16 ⊂ f32), with the manifest specs
+//! validating shape and order on both sides.
+//!
+//! Format: magic, tensor count, then per tensor: name-len, name bytes,
+//! elem count, f32 little-endian data.
+
+use crate::runtime::manifest::{Dtype, ManifestEntry};
+use crate::runtime::TrainState;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"OPTSTAT1";
+
+/// Serialize `state` (validated against `entry`) to `path`.
+pub fn save(path: &Path, entry: &ManifestEntry, state: &TrainState) -> Result<()> {
+    if state.tensors.len() != entry.state.len() {
+        bail!(
+            "state has {} tensors, manifest lists {}",
+            state.tensors.len(),
+            entry.state.len()
+        );
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(state.tensors.len() as u32).to_le_bytes());
+    for (tensor, spec) in state.tensors.iter().zip(&entry.state) {
+        let widened = tensor
+            .convert(xla::PrimitiveType::F32)
+            .with_context(|| format!("widen {}", spec.name))?;
+        let data: Vec<f32> = widened.to_vec()?;
+        if data.len() != spec.elems() {
+            bail!("{}: {} elems, spec says {}", spec.name, data.len(), spec.elems());
+        }
+        buf.extend_from_slice(&(spec.name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(spec.name.as_bytes());
+        buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        for v in data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::File::create(path)?.write_all(&buf)?;
+    Ok(())
+}
+
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> Result<&'a [u8]> {
+    if b.len() < n {
+        bail!("truncated state file while reading {what}");
+    }
+    let (head, tail) = b.split_at(n);
+    *b = tail;
+    Ok(head)
+}
+
+/// Load a state checkpoint for `entry` from `path`.
+pub fn load(path: &Path, entry: &ManifestEntry) -> Result<TrainState> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut raw)?;
+    let mut b: &[u8] = &raw;
+    if take(&mut b, 8, "magic")? != MAGIC {
+        bail!("{}: not an optorch state file", path.display());
+    }
+    let count = u32::from_le_bytes(take(&mut b, 4, "count")?.try_into().unwrap()) as usize;
+    if count != entry.state.len() {
+        bail!(
+            "{}: {count} tensors, artifact for {}/{} expects {}",
+            path.display(),
+            entry.model,
+            entry.pipeline,
+            entry.state.len()
+        );
+    }
+    let mut tensors = Vec::with_capacity(count);
+    for spec in &entry.state {
+        let name_len =
+            u32::from_le_bytes(take(&mut b, 4, "name len")?.try_into().unwrap()) as usize;
+        let name = std::str::from_utf8(take(&mut b, name_len, "name")?)
+            .context("tensor name not utf-8")?;
+        if name != spec.name {
+            bail!("tensor order mismatch: file has '{name}', manifest expects '{}'", spec.name);
+        }
+        let elems =
+            u32::from_le_bytes(take(&mut b, 4, "elem count")?.try_into().unwrap()) as usize;
+        if elems != spec.elems() {
+            bail!("{name}: {elems} elems, spec says {}", spec.elems());
+        }
+        let bytes = take(&mut b, elems * 4, "tensor data")?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let mut lit = xla::Literal::vec1(&data);
+        if !dims.is_empty() {
+            lit = lit.reshape(&dims)?;
+        }
+        if spec.dtype == Dtype::F16 {
+            lit = lit.convert(xla::PrimitiveType::F16)?;
+        }
+        tensors.push(lit);
+    }
+    if !b.is_empty() {
+        bail!("{}: trailing bytes after state", path.display());
+    }
+    Ok(TrainState { tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    // Round-trip tests that need real literals live in
+    // rust/tests/integration_runtime.rs (they require the PJRT artifacts);
+    // header validation is testable here.
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn entry() -> ManifestEntry {
+        ManifestEntry {
+            model: "m".into(),
+            pipeline: "baseline".into(),
+            input: (4, 4, 3),
+            num_classes: 10,
+            batch_size: 2,
+            groups: 0,
+            group_capacity: 0,
+            batch_kind: crate::runtime::BatchKind::Raw,
+            batch_spec: TensorSpec { name: "batch".into(), shape: vec![2, 4, 4, 3], dtype: Dtype::F32 },
+            labels_spec: TensorSpec { name: "labels".into(), shape: vec![2, 10], dtype: Dtype::F32 },
+            state: vec![TensorSpec { name: "w".into(), shape: vec![3], dtype: Dtype::F32 }],
+            train_hlo: "x".into(),
+            eval_hlo: "x".into(),
+            init_hlo: "x".into(),
+            lr: 0.1,
+            momentum: 0.9,
+            loss_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join(format!("optorch_sio_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.state");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(load(&p, &entry()).is_err());
+        std::fs::write(&p, b"OPT").unwrap();
+        assert!(load(&p, &entry()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_tensor_count_mismatch() {
+        let dir = std::env::temp_dir().join(format!("optorch_sio2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("count.state");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&5u32.to_le_bytes()); // entry expects 1
+        std::fs::write(&p, &buf).unwrap();
+        let err = match load(&p, &entry()) {
+            Err(e) => e,
+            Ok(_) => panic!("expected count mismatch"),
+        };
+        assert!(err.to_string().contains("expects 1"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,186 @@
+//! Tiny benchmark harness (criterion substitute — see DESIGN.md §5).
+//!
+//! `cargo bench` runs each `rust/benches/*.rs` with `harness = false`; those
+//! binaries use this module for warmup, repeated timing, and robust
+//! statistics, and print paper-style tables for the figure reproductions.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            ns[n / 2]
+        } else {
+            0.5 * (ns[n / 2 - 1] + ns[n / 2])
+        };
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+/// Human-readable duration (ns → µs → ms → s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b < K {
+        format!("{b:.0} B")
+    } else if b < K * K {
+        format!("{:.1} KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1} MiB", b / (K * K))
+    } else {
+        format!("{:.2} GiB", b / (K * K * K))
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(samples)
+}
+
+/// Auto-calibrating variant: picks an iteration count that targets
+/// `target_total` of measurement time (like criterion's auto mode).
+pub fn bench_auto<F: FnMut()>(target_total: Duration, mut f: F) -> Stats {
+    // One probe run to size the loop.
+    let t0 = Instant::now();
+    f();
+    let probe = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_total.as_nanos() as f64 / probe).ceil() as usize).clamp(3, 10_000);
+    bench(iters.min(3), iters, f)
+}
+
+/// Simple fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!((s.mean_ns - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_even_median() {
+        let s = Stats::from_samples(vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.median_ns, 2.5);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(512.0), "512 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Substrate utilities: RNG, JSON, property testing, bench harness, logging.
+
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod propcheck;
+pub mod rng;

@@ -1,0 +1,108 @@
+//! Config-file + CLI-override integration, and failure-injection tests on
+//! the data pipeline (corrupted dumps, panicking producers, bad configs).
+
+use optorch::cli::Cli;
+use optorch::config::TrainConfig;
+use optorch::data::loader::dump;
+use std::collections::BTreeMap;
+
+#[test]
+fn shipped_config_files_parse() {
+    for name in ["configs/quickstart.toml", "configs/fig9_cell.toml"] {
+        let text = std::fs::read_to_string(name).unwrap();
+        let cfg = TrainConfig::from_sources(Some(&text), &BTreeMap::new())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        cfg.validate().unwrap();
+    }
+}
+
+#[test]
+fn cli_overrides_beat_config_file() {
+    let text = std::fs::read_to_string("configs/quickstart.toml").unwrap();
+    let mut ov = BTreeMap::new();
+    ov.insert("epochs".to_string(), "1".to_string());
+    ov.insert("pipeline".to_string(), "mp".to_string());
+    let cfg = TrainConfig::from_sources(Some(&text), &ov).unwrap();
+    assert_eq!(cfg.epochs, 1);
+    assert_eq!(cfg.pipeline.name(), "mp");
+    assert_eq!(cfg.model, "tiny_cnn"); // from file
+}
+
+#[test]
+fn cli_parse_mirrors_train_config_keys() {
+    // every --key the launcher forwards must be accepted by from_sources
+    let cli = Cli::parse(
+        "train --model tiny_cnn --pipeline ed+sc --epochs 2 --batch_size 16 \
+         --train_size 320 --test_size 64 --seed 9 --prefetch_depth 2 \
+         --augment hflip --eval_every 1 --max_batches_per_epoch 3 --dataset synth10"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    let cfg = TrainConfig::from_sources(None, &cli.opts).unwrap();
+    assert_eq!(cfg.model, "tiny_cnn");
+    assert_eq!(cfg.seed, 9);
+    assert_eq!(cfg.max_batches_per_epoch, 3);
+}
+
+#[test]
+fn corrupted_dump_bytes_never_panic() {
+    // fuzz the dump parser with truncations and bit flips of a valid blob
+    use optorch::data::encode::{encode_batch, EncodeSpec, Encoding, WordType};
+    use optorch::data::image::ImageBatch;
+    let mut batch = ImageBatch::zeros(4, 6, 6, 3, 10);
+    for (i, v) in batch.data.iter_mut().enumerate() {
+        *v = (i % 251) as u8;
+    }
+    let blob = dump::to_bytes(
+        &encode_batch(&batch, EncodeSpec::new(Encoding::Base256, WordType::U64)).unwrap(),
+    );
+    // truncation at every prefix boundary
+    for cut in (0..blob.len()).step_by(7) {
+        let _ = dump::from_bytes(&blob[..cut]); // must return Err, not panic
+    }
+    // bit flips across the header region
+    let mut rng = optorch::util::rng::Rng::new(1);
+    for _ in 0..200 {
+        let mut bad = blob.clone();
+        let at = rng.gen_range(bad.len().min(64));
+        bad[at] ^= 1 << rng.gen_range(8);
+        let _ = dump::from_bytes(&bad); // Err or equivalent batch — never panic
+    }
+}
+
+#[test]
+fn loader_drop_under_backpressure_terminates() {
+    // producer blocked on a full queue + consumer drops: must not deadlock
+    use optorch::data::augment::AugPolicy;
+    use optorch::data::dataset::Dataset;
+    use optorch::data::loader::{EdLoader, LoaderMode};
+    use optorch::data::sampler::SbsSampler;
+    use optorch::data::synth::{Split, SynthCifar};
+    use std::sync::Arc;
+    for _ in 0..5 {
+        let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 400, 3));
+        let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), 1).unwrap();
+        let mut loader =
+            EdLoader::new(d, sampler, None, 50, LoaderMode::Parallel { prefetch_depth: 1 });
+        let _ = loader.next();
+        drop(loader);
+    }
+}
+
+#[test]
+fn bad_config_values_error_cleanly() {
+    for (k, v) in [
+        ("pipeline", "hyperdrive"),
+        ("dataset", "imagenet"),
+        ("batch_size", "zero"),
+        ("augment", "sharpen5"),
+    ] {
+        let mut ov = BTreeMap::new();
+        ov.insert(k.to_string(), v.to_string());
+        assert!(
+            TrainConfig::from_sources(None, &ov).is_err(),
+            "{k}={v} should fail"
+        );
+    }
+}

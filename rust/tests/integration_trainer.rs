@@ -1,0 +1,185 @@
+//! Integration: the full coordinator (dataset → sampler → loader → PJRT →
+//! metrics) on short real runs, including the paper's accuracy-equality
+//! claim at small scale.
+
+use optorch::config::{Pipeline, TrainConfig};
+use optorch::coordinator::{report, Trainer};
+use std::path::Path;
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").is_file() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        false
+    }
+}
+
+fn quick_cfg(model: &str, pipe: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(model, Pipeline::parse(pipe).unwrap());
+    cfg.epochs = 1;
+    cfg.train_size = 320;
+    cfg.test_size = 96;
+    cfg.seed = 1234;
+    cfg
+}
+
+#[test]
+fn trainer_runs_every_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    for pipe in ["b", "ed", "mp", "sc", "ed+mp", "ed+sc", "mp+sc", "ed+mp+sc"] {
+        let cfg = quick_cfg("tiny_cnn", pipe);
+        let rep = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(rep.history.epochs.len(), 1, "{pipe}");
+        let e = &rep.history.epochs[0];
+        assert!(e.train_loss.is_finite(), "{pipe}");
+        assert_eq!(e.images, 320, "{pipe}");
+        assert!(rep.final_eval_accuracy >= 0.0 && rep.final_eval_accuracy <= 1.0);
+    }
+}
+
+#[test]
+fn pipelines_reach_equal_accuracy() {
+    // The paper's central claim: optimization pipelines do not change
+    // accuracy. Same seed, same data, 2 epochs — require a tight band.
+    if !have_artifacts() {
+        return;
+    }
+    let mut accs = Vec::new();
+    for pipe in ["b", "ed", "sc", "ed+sc"] {
+        let mut cfg = quick_cfg("tiny_cnn", pipe);
+        cfg.epochs = 2;
+        cfg.train_size = 640;
+        let rep = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        accs.push((pipe, rep.final_eval_accuracy));
+    }
+    let max = accs.iter().map(|(_, a)| *a).fold(0.0f64, f64::max);
+    let min = accs.iter().map(|(_, a)| *a).fold(1.0f64, f64::min);
+    assert!(max - min < 0.15, "accuracy spread too wide: {accs:?}");
+}
+
+#[test]
+fn same_seed_same_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = quick_cfg("tiny_cnn", "b");
+    let a = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let b = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(a.history.epochs[0].train_loss, b.history.epochs[0].train_loss);
+    assert_eq!(a.final_eval_accuracy, b.final_eval_accuracy);
+}
+
+#[test]
+fn different_seeds_differ() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg("tiny_cnn", "b");
+    let a = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    cfg.seed = 999;
+    let b = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_ne!(a.history.epochs[0].train_loss, b.history.epochs[0].train_loss);
+}
+
+#[test]
+fn parallel_ed_loader_feeds_trainer_correctly() {
+    if !have_artifacts() {
+        return;
+    }
+    // E-D uses the background producer; loss trajectory must still be sane
+    // and producer stats populated.
+    let mut cfg = quick_cfg("tiny_cnn", "ed");
+    cfg.epochs = 2;
+    let rep = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert!(rep.loader_produce_secs > 0.0);
+    let e0 = &rep.history.epochs[0];
+    let e1 = &rep.history.epochs[1];
+    assert!(e1.train_loss < e0.train_loss, "{} !< {}", e1.train_loss, e0.train_loss);
+}
+
+#[test]
+fn max_batches_caps_epoch() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg("tiny_cnn", "b");
+    cfg.max_batches_per_epoch = 5;
+    let rep = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(rep.history.epochs[0].images, 5 * 16);
+}
+
+#[test]
+fn wrong_batch_size_rejected_at_construction() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg("tiny_cnn", "b");
+    cfg.batch_size = 32; // artifacts are compiled for 16
+    let err = match Trainer::from_config(&cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("expected batch-size mismatch error"),
+    };
+    assert!(err.to_string().contains("batch_size"), "{err}");
+}
+
+#[test]
+fn report_writers_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = quick_cfg("tiny_cnn", "b");
+    let rep = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let dir = std::env::temp_dir().join(format!("optorch_it_{}", std::process::id()));
+    let path = dir.join("h.csv");
+    report::write_history_csv(&path, &rep).unwrap();
+    let txt = std::fs::read_to_string(&path).unwrap();
+    assert!(txt.lines().count() >= 2);
+    let md = report::markdown_summary(&rep);
+    assert!(md.contains("tiny_cnn"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_binary_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let exe = env!("CARGO_BIN_EXE_optorch");
+    let out = std::process::Command::new(exe)
+        .args([
+            "train",
+            "--model",
+            "tiny_cnn",
+            "--pipeline",
+            "ed+sc",
+            "--epochs",
+            "1",
+            "--train_size",
+            "160",
+            "--test_size",
+            "64",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("final eval accuracy"), "{stdout}");
+
+    // memsim + plan + models subcommands
+    for args in [
+        vec!["memsim", "--model", "resnet18", "--pipeline", "sc"],
+        vec!["plan", "--model", "tiny_cnn", "--height", "64"],
+        vec!["models"],
+        vec!["help"],
+    ] {
+        let out = std::process::Command::new(exe).args(&args).output().unwrap();
+        assert!(out.status.success(), "{args:?}: {}", String::from_utf8_lossy(&out.stderr));
+    }
+
+    // unknown command exits non-zero
+    let out = std::process::Command::new(exe).arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,267 @@
+//! Property-based tests (propcheck) on coordinator/data/memory invariants:
+//! batching, routing (SBS composition), encode round-trips, loader
+//! equivalence, simulator monotonicity, planner validity.
+
+use optorch::config::Pipeline;
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::{Dataset, MemDataset};
+use optorch::data::encode::{
+    decode_batch, encode_batch, encode_batch_grouped, EncodeSpec, Encoding, WordType,
+};
+use optorch::data::image::{Image, ImageBatch};
+use optorch::data::loader::{dump, BatchPayload, EdLoader, LoaderMode};
+use optorch::data::sampler::{ClassSpec, SbsSampler};
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::memory::simulator::simulate;
+use optorch::models::arch_by_name;
+use optorch::util::propcheck::{check, check_with};
+use optorch::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_image_batch(rng: &mut Rng, n: usize) -> ImageBatch {
+    let h = 1 + rng.gen_range(12);
+    let w = 1 + rng.gen_range(12);
+    let c = 1 + rng.gen_range(3);
+    let mut b = ImageBatch::zeros(n, h, w, c, 10);
+    for v in b.data.iter_mut() {
+        *v = (rng.next_u32() & 0xff) as u8;
+    }
+    for i in 0..n {
+        let cls = rng.gen_range(10);
+        b.label_mut(i)[cls] = 1.0;
+    }
+    b
+}
+
+#[test]
+fn prop_encode_roundtrip_any_spec() {
+    check("encode/decode roundtrip", |rng| {
+        let enc = if rng.bool(0.5) { Encoding::Base256 } else { Encoding::Lossless128 };
+        let word = if rng.bool(0.5) { WordType::U64 } else { WordType::F64 };
+        let spec = EncodeSpec::new(enc, word);
+        let n = 1 + rng.gen_range(spec.capacity());
+        (spec, random_image_batch(rng, n))
+    }, |(spec, batch)| {
+        let encoded = encode_batch(batch, *spec).map_err(|e| e.to_string())?;
+        if decode_batch(&encoded) == *batch {
+            Ok(())
+        } else {
+            Err("roundtrip mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_grouped_encode_partitions_batch() {
+    check("grouped encode partitions", |rng| {
+        let n = 1 + rng.gen_range(40);
+        random_image_batch(rng, n)
+    }, |batch| {
+        let spec = EncodeSpec::new(Encoding::Base256, WordType::U64);
+        let groups = encode_batch_grouped(batch, spec).map_err(|e| e.to_string())?;
+        let total: usize = groups.iter().map(|g| g.n).sum();
+        if total != batch.n {
+            return Err(format!("group sizes sum {total} != {}", batch.n));
+        }
+        if groups.iter().rev().skip(1).any(|g| g.n != spec.capacity()) {
+            return Err("only the last group may be partial".into());
+        }
+        let mut rebuilt = Vec::new();
+        let mut labels = Vec::new();
+        for g in &groups {
+            let d = decode_batch(g);
+            rebuilt.extend_from_slice(&d.data);
+            labels.extend_from_slice(&d.labels);
+        }
+        if rebuilt != batch.data || labels != batch.labels {
+            return Err("content mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dump_roundtrip() {
+    check("dump serialization roundtrip", |rng| {
+        let n = 1 + rng.gen_range(8);
+        random_image_batch(rng, n)
+    }, |batch| {
+        let spec = EncodeSpec::new(Encoding::Lossless128, WordType::U64);
+        let enc = encode_batch(batch, spec).map_err(|e| e.to_string())?;
+        let back = dump::from_bytes(&dump::to_bytes(&enc)).map_err(|e| e.to_string())?;
+        if decode_batch(&back) == *batch {
+            Ok(())
+        } else {
+            Err("dump roundtrip mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_sbs_batch_composition_matches_weights() {
+    check_with("SBS composition", 48, 0xBA7C, |rng| {
+        let classes = 2 + rng.gen_range(6);
+        let per_class = 8 + rng.gen_range(24);
+        let batch_size = 4 + rng.gen_range(28);
+        let weights: Vec<f64> = (0..classes).map(|_| rng.f64() + 0.05).collect();
+        (classes, per_class, batch_size, weights, rng.next_u64())
+    }, |(classes, per_class, batch_size, weights, seed)| {
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..*classes {
+            for _ in 0..*per_class {
+                images.push(Image::zeros(4, 4, 1));
+                labels.push(c);
+            }
+        }
+        let d = MemDataset::new(images, labels, *classes);
+        let specs: Vec<ClassSpec> = weights
+            .iter()
+            .map(|&w| ClassSpec::new(w, AugPolicy::none()))
+            .collect();
+        let mut s = SbsSampler::new(&d, *batch_size, specs, *seed)
+            .map_err(|e| e.to_string())?;
+        let counts = s.class_counts();
+        if counts.iter().sum::<usize>() != *batch_size {
+            return Err(format!("counts {counts:?} don't sum to {batch_size}"));
+        }
+        // realized batch matches the declared counts exactly
+        let b = s.next_batch(&d);
+        let mut realized = vec![0usize; *classes];
+        for i in 0..b.n {
+            realized[b.hard_label(i)] += 1;
+        }
+        if realized != counts {
+            return Err(format!("realized {realized:?} != counts {counts:?}"));
+        }
+        // largest-remainder rounding: each count within 1 of exact share
+        let total: f64 = weights.iter().sum();
+        for (c, &cnt) in counts.iter().enumerate() {
+            let exact = weights[c] / total * *batch_size as f64;
+            if (cnt as f64 - exact).abs() > 1.0 {
+                return Err(format!("class {c}: count {cnt} vs exact {exact:.2}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_loader_equals_sync() {
+    check_with("parallel == sync loader", 16, 0x10AD, |rng| {
+        (rng.next_u64(), 1 + rng.gen_range(6))
+    }, |(seed, batches)| {
+        let make = |mode| {
+            let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 200, 3));
+            let sampler =
+                SbsSampler::uniform(d.as_ref(), 8, AugPolicy::standard(), *seed).unwrap();
+            let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+            EdLoader::new(d, sampler, spec, *batches, mode)
+        };
+        let mut a = make(LoaderMode::Synchronous);
+        let mut b = make(LoaderMode::Parallel { prefetch_depth: 2 });
+        loop {
+            match (a.next(), b.next()) {
+                (None, None) => return Ok(()),
+                (Some(BatchPayload::Encoded(x)), Some(BatchPayload::Encoded(y))) => {
+                    for (gx, gy) in x.iter().zip(&y) {
+                        if gx.words_u64 != gy.words_u64 || gx.labels != gy.labels {
+                            return Err("payload mismatch".into());
+                        }
+                    }
+                }
+                _ => return Err("length/kind mismatch".into()),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_sc_never_exceeds_baseline_with_plan() {
+    check_with("S-C(optimal) ≤ baseline peak", 24, 0x51D, |rng| {
+        let models = ["tiny_cnn", "resnet18", "resnet50", "efficientnet_b0"];
+        let model = models[rng.gen_range(models.len())];
+        let h = [64usize, 128, 224][rng.gen_range(3)];
+        let batch = 1 + rng.gen_range(32);
+        (model.to_string(), h, batch)
+    }, |(model, h, batch)| {
+        let arch = arch_by_name(model, (*h, *h, 3), 10).ok_or("unknown arch")?;
+        let base = simulate(&arch, Pipeline::BASELINE, *batch, &[]);
+        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, *batch);
+        let sc = simulate(&arch, Pipeline::parse("sc").unwrap(), *batch, &plan.checkpoints);
+        if sc.peak_bytes <= base.peak_bytes {
+            Ok(())
+        } else {
+            Err(format!("sc {} > base {}", sc.peak_bytes, base.peak_bytes))
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_mp_halves_peak() {
+    check_with("M-P ≈ half of baseline", 24, 0x3b, |rng| {
+        let models = ["resnet18", "resnet34", "efficientnet_b0", "inception_v3"];
+        let model = models[rng.gen_range(models.len())];
+        let batch = 2 + rng.gen_range(30);
+        (model.to_string(), batch)
+    }, |(model, batch)| {
+        let h = if model.contains("inception") { 299 } else { 224 };
+        let arch = arch_by_name(model, (h, h, 3), 1000).ok_or("unknown arch")?;
+        let base = simulate(&arch, Pipeline::BASELINE, *batch, &[]).peak_bytes as f64;
+        let mp = simulate(&arch, Pipeline::parse("mp").unwrap(), *batch, &[]).peak_bytes as f64;
+        let ratio = base / mp;
+        if (1.7..=2.3).contains(&ratio) {
+            Ok(())
+        } else {
+            Err(format!("ratio {ratio}"))
+        }
+    });
+}
+
+#[test]
+fn prop_planner_checkpoints_valid_for_any_arch() {
+    check_with("planner output validity", 32, 0x9999, |rng| {
+        let names = optorch::models::all_arch_names();
+        let name = names[rng.gen_range(names.len())].clone();
+        let kinds = [
+            PlannerKind::Uniform(1 + rng.gen_range(8)),
+            PlannerKind::Sqrt,
+            PlannerKind::Bottleneck(1 + rng.gen_range(6)),
+        ];
+        (name, kinds[rng.gen_range(3)], 1 + rng.gen_range(16))
+    }, |(name, kind, batch)| {
+        let h = if name.contains("inception_v3") { 299 } else { 96 };
+        let arch = arch_by_name(name, (h, h, 3), 10).ok_or("unknown arch")?;
+        let plan = plan_checkpoints(&arch, *kind, Pipeline::BASELINE, *batch);
+        let mut sorted = plan.checkpoints.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted != plan.checkpoints {
+            return Err("not sorted/deduped".into());
+        }
+        if plan.checkpoints.iter().any(|&c| c >= arch.layers.len()) {
+            return Err("checkpoint out of range".into());
+        }
+        if !(0.0..=1.0).contains(&plan.recompute_overhead) {
+            return Err(format!("overhead {}", plan.recompute_overhead));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_synth_dataset_is_pure() {
+    check("synthetic dataset purity", |rng| {
+        (rng.next_u64(), rng.gen_range(500))
+    }, |(seed, idx)| {
+        let d = SynthCifar::cifar10(Split::Train, 500, *seed);
+        let (a, la) = d.get(*idx);
+        let (b, lb) = d.get(*idx);
+        if a == b && la == lb {
+            Ok(())
+        } else {
+            Err("dataset not pure".into())
+        }
+    });
+}
