@@ -1,13 +1,27 @@
 //! E6 / "up to 16×" claim: encode/decode correctness at capacity, honest
-//! payload ratios vs f32/f64 baselines (DESIGN.md §Corrections), and
-//! host-side encode/decode throughput for the paper's 512×512×3 images.
+//! payload ratios vs f32/f64 baselines (DESIGN.md §Corrections), host-side
+//! encode/decode throughput for the paper's 512×512×3 images, and the
+//! producer-pool sweep: aggregate encode MB/s and steady-state allocations
+//! per batch for `num_workers ∈ {0, 1, 2, 4, 8}`.
+//!
+//! Emits `BENCH_encode.json` so future changes can track the perf
+//! trajectory (fields: single-thread MB/s per spec, and per worker count
+//! the aggregate MB/s + pool allocs per steady-state batch).
 
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
 use optorch::data::encode::{
-    decode_batch, encode_batch, EncodeSpec, Encoding, WordType,
+    decode_batch, encode_batch, encode_batch_into, EncodeSpec, EncodedBatch, Encoding, WordType,
 };
 use optorch::data::image::ImageBatch;
+use optorch::data::loader::{EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
 use optorch::util::bench::{bench, fmt_bytes, fmt_ns, Table};
 use optorch::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
 
 fn random_batch(n: usize, h: usize, w: usize) -> ImageBatch {
     let mut rng = Rng::new(7);
@@ -18,7 +32,15 @@ fn random_batch(n: usize, h: usize, w: usize) -> ImageBatch {
     b
 }
 
-fn main() {
+struct SpecRow {
+    name: &'static str,
+    mb_per_s: f64,
+    mb_per_s_into: f64,
+}
+
+/// Single-thread encode table (the paper's E6 numbers) + the `*_into`
+/// buffer-reusing variant, which shows the allocation tax the pool removes.
+fn single_thread(rows: &mut Vec<SpecRow>) {
     println!("=== E6: batch encoding (Algorithms 1/3/4) ===\n");
     let specs = [
         ("base-256 / u64", EncodeSpec::new(Encoding::Base256, WordType::U64)),
@@ -34,6 +56,7 @@ fn main() {
         "vs f32 batch",
         "vs f64 batch",
         "encode",
+        "encode_into",
         "decode",
         "MB/s enc",
     ]);
@@ -46,9 +69,15 @@ fn main() {
         let e_stats = bench(2, 10, || {
             let _ = encode_batch(&batch, spec).unwrap();
         });
+        let mut shell = EncodedBatch::empty(spec);
+        let i_stats = bench(2, 10, || {
+            encode_batch_into(&batch, spec, &mut shell).unwrap();
+        });
         let d_stats = bench(2, 10, || {
             let _ = decode_batch(&enc);
         });
+        let mbs = raw_bytes / (e_stats.median_ns / 1e9) / 1e6;
+        let mbs_into = raw_bytes / (i_stats.median_ns / 1e9) / 1e6;
         t.row(&[
             name.to_string(),
             format!("{n} imgs/word"),
@@ -56,11 +85,115 @@ fn main() {
             format!("{:.1}x", enc.ratio_vs_f32()),
             format!("{:.1}x", enc.ratio_vs_f64()),
             fmt_ns(e_stats.median_ns),
+            fmt_ns(i_stats.median_ns),
             fmt_ns(d_stats.median_ns),
-            format!("{:.0}", raw_bytes / (e_stats.median_ns / 1e9) / 1e6),
+            format!("{mbs:.0}"),
         ]);
+        rows.push(SpecRow { name, mb_per_s: mbs, mb_per_s_into: mbs_into });
     }
     t.print();
+}
+
+struct SweepRow {
+    num_workers: usize,
+    mb_per_s: f64,
+    allocs_steady_per_batch: f64,
+}
+
+/// Run one loader epoch to completion, recycling every payload; returns
+/// (wall seconds, raw uint8 bytes produced).
+fn run_epoch(
+    seed: u64,
+    batches: usize,
+    hw: usize,
+    mode: LoaderMode,
+    pool: Arc<BufferPool>,
+) -> (f64, u64) {
+    let d: Arc<dyn Dataset> =
+        Arc::new(SynthCifar::cifar10(Split::Train, batches * 16, 3).with_shape(hw, hw));
+    let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), seed).unwrap();
+    let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+    let mut loader = EdLoader::with_pool(d, sampler, spec, batches, mode, pool);
+    let bytes_per_batch = (16 * hw * hw * 3) as u64;
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    while let Some(p) = loader.next() {
+        assert!(!p.is_empty());
+        loader.recycle(p);
+        n += 1;
+    }
+    (t0.elapsed().as_secs_f64(), n * bytes_per_batch)
+}
+
+/// The producer-pool sweep: aggregate throughput of the full produce path
+/// (sample + encode) per worker count, plus steady-state pool allocations.
+fn worker_sweep(rows: &mut Vec<SweepRow>) {
+    println!("\n=== producer-pool sweep (batch 16 @ 128², base-256/u64, recycling consumer) ===\n");
+    let (batches, hw) = (48usize, 128usize);
+    let mut t = Table::new(&["num_workers", "wall (s)", "aggregate MB/s", "allocs/steady batch"]);
+    for workers in [0usize, 1, 2, 4, 8] {
+        let mode = LoaderMode::Parallel { prefetch_depth: 4, num_workers: workers };
+        let pool = Arc::new(BufferPool::default());
+        // epoch 1 warms the pool; epoch 2 is the measured steady state
+        let _ = run_epoch(1, batches, hw, mode, pool.clone());
+        let warm_allocs = pool.allocs();
+        let (secs, bytes) = run_epoch(2, batches, hw, mode, pool.clone());
+        let steady_allocs = (pool.allocs() - warm_allocs) as f64 / batches as f64;
+        let mbs = bytes as f64 / secs / 1e6;
+        t.row(&[
+            format!("{workers}"),
+            format!("{secs:.2}"),
+            format!("{mbs:.0}"),
+            format!("{steady_allocs:.2}"),
+        ]);
+        rows.push(SweepRow { num_workers: workers, mb_per_s: mbs, allocs_steady_per_batch: steady_allocs });
+    }
+    t.print();
+    let base = rows.iter().find(|r| r.num_workers == 0).map(|r| r.mb_per_s);
+    if let (Some(base), Some(four)) = (base, rows.iter().find(|r| r.num_workers == 4)) {
+        println!(
+            "\nnum_workers=4 vs single producer: {:.2}x aggregate encode throughput \
+             (target ≥ 2x on ≥4-core hosts)",
+            four.mb_per_s / base
+        );
+    }
+}
+
+fn json_escape_free(s: &str) -> String {
+    // bench names contain only [a-z0-9 /-]; keep it simple
+    s.replace('"', "'")
+}
+
+fn write_json(specs: &[SpecRow], sweep: &[SweepRow]) -> std::io::Result<()> {
+    let mut j = String::from("{\n  \"single_thread\": [\n");
+    for (i, r) in specs.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"encoding\": \"{}\", \"mb_per_s\": {:.1}, \"mb_per_s_into\": {:.1}}}{}\n",
+            json_escape_free(r.name),
+            r.mb_per_s,
+            r.mb_per_s_into,
+            if i + 1 < specs.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n  \"worker_sweep\": [\n");
+    for (i, r) in sweep.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"num_workers\": {}, \"mb_per_s\": {:.1}, \"allocs_steady_per_batch\": {:.3}}}{}\n",
+            r.num_workers,
+            r.mb_per_s,
+            r.allocs_steady_per_batch,
+            if i + 1 < sweep.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write("BENCH_encode.json", j)
+}
+
+fn main() {
+    let mut spec_rows = Vec::new();
+    let mut sweep_rows = Vec::new();
+    single_thread(&mut spec_rows);
+    worker_sweep(&mut sweep_rows);
 
     println!(
         "\npaper claim: 'save memory up-to 16X'. Honest accounting (DESIGN.md §4):\n\
@@ -71,4 +204,9 @@ fn main() {
             .unwrap()
             .ratio_vs_f64()
     );
+
+    match write_json(&spec_rows, &sweep_rows) {
+        Ok(()) => println!("\nwrote BENCH_encode.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_encode.json: {e}"),
+    }
 }

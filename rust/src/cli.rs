@@ -82,7 +82,11 @@ USAGE:
 COMMANDS:
   train     Train a model.            --model NAME --pipeline b|ed|mp|sc|ed+sc|...
             [--epochs N] [--batch_size N] [--dataset synth10|synth100|cifar10]
-            [--config FILE] [--train_size N] [--seed N] ...
+            [--config FILE] [--train_size N] [--seed N]
+            [--num_workers N|auto] [--prefetch_depth N] ...
+            E-D producer pool: num_workers sizes the encode-worker pool
+            (0 = single producer thread, auto = cores-1, default auto);
+            prefetch_depth bounds how far producers run ahead.
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--budget BYTES] [--kind dp|sqrt|uniform]

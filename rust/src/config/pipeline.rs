@@ -83,6 +83,13 @@ impl Pipeline {
         }
     }
 
+    /// Whether this pipeline runs the background producer pool (the E-D
+    /// data flow is what overlaps encode with training; all other
+    /// pipelines materialize batches inline).
+    pub fn parallel_loader(&self) -> bool {
+        self.ed
+    }
+
     /// The 8 combinations, baseline first (Fig 9/10 grids).
     pub fn all() -> Vec<Pipeline> {
         let mut v = Vec::new();
@@ -161,6 +168,13 @@ mod tests {
             labels,
             vec!["B", "E-D", "M-P", "S-C", "M-P + S-C", "E-D + S-C"]
         );
+    }
+
+    #[test]
+    fn only_ed_pipelines_use_the_parallel_loader() {
+        for p in Pipeline::all() {
+            assert_eq!(p.parallel_loader(), p.ed, "{p}");
+        }
     }
 
     #[test]

@@ -51,6 +51,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Prefetch queue depth for the parallel E-D loader.
     pub prefetch_depth: usize,
+    /// Encode workers in the E-D producer pool. `Some(0)` keeps the classic
+    /// single producer thread; `None` (default) sizes the pool to
+    /// `available_parallelism - 1`. Any worker count yields byte-identical
+    /// batches for the same seed.
+    pub num_workers: Option<usize>,
     /// Augmentation policy applied to every class (SBS per-class policies
     /// are configured programmatically via [`crate::data::sampler`]).
     pub augment: String,
@@ -77,6 +82,7 @@ impl TrainConfig {
             epochs: 3,
             seed: 42,
             prefetch_depth: 4,
+            num_workers: None,
             augment: "hflip,crop4".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             eval_every: 1,
@@ -125,6 +131,15 @@ impl TrainConfig {
         if let Some(v) = kv.get_usize("prefetch_depth")? {
             cfg.prefetch_depth = v;
         }
+        if let Some(v) = kv.get_str("num_workers") {
+            cfg.num_workers = match v {
+                "auto" => None,
+                n => Some(
+                    n.parse()
+                        .map_err(|_| format!("num_workers: expected integer or 'auto', got '{n}'"))?,
+                ),
+            };
+        }
         if let Some(a) = kv.get_str("augment") {
             cfg.augment = a.to_string();
         }
@@ -158,10 +173,19 @@ impl TrainConfig {
         Ok(())
     }
 
-    /// Loader mode implied by the pipeline: E-D runs the parallel producer.
+    /// The configured worker count with the `auto` default resolved.
+    pub fn resolved_num_workers(&self) -> usize {
+        self.num_workers
+            .unwrap_or_else(crate::data::loader::default_num_workers)
+    }
+
+    /// Loader mode implied by the pipeline: E-D runs the producer pool.
     pub fn loader_mode(&self) -> LoaderMode {
-        if self.pipeline.ed {
-            LoaderMode::Parallel { prefetch_depth: self.prefetch_depth }
+        if self.pipeline.parallel_loader() {
+            LoaderMode::Parallel {
+                prefetch_depth: self.prefetch_depth,
+                num_workers: self.resolved_num_workers(),
+            }
         } else {
             LoaderMode::Synchronous
         }
@@ -232,6 +256,38 @@ mod tests {
         assert!(matches!(ed.loader_mode(), LoaderMode::Parallel { .. }));
         let spec = ed.encode_spec().unwrap();
         assert_eq!(spec.capacity(), 6); // f64 base-256
+    }
+
+    #[test]
+    fn num_workers_parses_and_reaches_loader_mode() {
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "ed".to_string());
+        ov.insert("num_workers".to_string(), "3".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.num_workers, Some(3));
+        assert_eq!(
+            cfg.loader_mode(),
+            LoaderMode::Parallel { prefetch_depth: 4, num_workers: 3 }
+        );
+        // 0 = classic single producer thread
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "ed".to_string());
+        ov.insert("num_workers".to_string(), "0".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert!(matches!(
+            cfg.loader_mode(),
+            LoaderMode::Parallel { num_workers: 0, .. }
+        ));
+        // auto resolves to ≥ 1
+        let mut ov = BTreeMap::new();
+        ov.insert("num_workers".to_string(), "auto".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.num_workers, None);
+        assert!(cfg.resolved_num_workers() >= 1);
+        // junk rejected
+        let mut ov = BTreeMap::new();
+        ov.insert("num_workers".to_string(), "many".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).is_err());
     }
 
     #[test]

@@ -60,6 +60,33 @@ pub fn markdown_summary(report: &TrainReport) -> String {
         report.loader_produce_secs,
         report.loader_blocked_secs
     ));
+    s.push_str(&loader_summary(report));
+    s
+}
+
+/// One-line producer-pool summary: per-worker overlap accounting plus the
+/// buffer-pool counters (how to read them: `produce` is time the worker
+/// spent materializing+encoding, `blocked` is backpressure wait; pool
+/// `allocs` flat across epochs ⇒ the hot path ran allocation-free).
+pub fn loader_summary(report: &TrainReport) -> String {
+    let mut s = String::new();
+    if !report.loader_workers.is_empty() {
+        s.push_str("loader workers: ");
+        for (i, w) in report.loader_workers.iter().enumerate() {
+            if i > 0 {
+                s.push_str(" · ");
+            }
+            s.push_str(&format!(
+                "w{i} {:.1}s+{:.1}s/{}b",
+                w.produce_secs, w.blocked_secs, w.batches
+            ));
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "buffer pool: {} allocs, {} reuses\n",
+        report.pool_allocs, report.pool_reuses
+    ));
     s
 }
 
@@ -91,6 +118,20 @@ mod tests {
             total_wall_secs: 2.0,
             loader_produce_secs: 0.4,
             loader_blocked_secs: 0.1,
+            loader_workers: vec![
+                crate::data::loader::WorkerSummary {
+                    produce_secs: 0.3,
+                    blocked_secs: 0.05,
+                    batches: 12,
+                },
+                crate::data::loader::WorkerSummary {
+                    produce_secs: 0.1,
+                    blocked_secs: 0.05,
+                    batches: 8,
+                },
+            ],
+            pool_allocs: 9,
+            pool_reuses: 151,
         }
     }
 
@@ -125,5 +166,23 @@ mod tests {
         let md = markdown_summary(&fake_report());
         assert!(md.contains("**0.350**"));
         assert!(md.contains("| 0 |"));
+    }
+
+    #[test]
+    fn markdown_includes_worker_and_pool_stats() {
+        let md = markdown_summary(&fake_report());
+        assert!(md.contains("loader workers:"), "{md}");
+        assert!(md.contains("w0 0.3s+0.1s/12b"), "{md}");
+        assert!(md.contains("w1"), "{md}");
+        assert!(md.contains("buffer pool: 9 allocs, 151 reuses"), "{md}");
+    }
+
+    #[test]
+    fn loader_summary_omits_worker_line_for_sync_runs() {
+        let mut rep = fake_report();
+        rep.loader_workers.clear();
+        let s = loader_summary(&rep);
+        assert!(!s.contains("loader workers"));
+        assert!(s.contains("buffer pool"));
     }
 }

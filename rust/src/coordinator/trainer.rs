@@ -5,7 +5,8 @@ use crate::data::augment::AugPolicy;
 use crate::data::dataset::Dataset;
 use crate::data::encode::encode_batch_grouped;
 use crate::data::image::ImageBatch;
-use crate::data::loader::{BatchPayload, EdLoader, LoaderStats};
+use crate::data::loader::{BatchPayload, EdLoader, LoaderStats, WorkerSummary};
+use crate::data::pool::BufferPool;
 use crate::data::sampler::SbsSampler;
 use crate::data::synth::{Split, SynthCifar};
 use crate::metrics::{EpochRecord, History, Mean, Timer};
@@ -23,9 +24,17 @@ pub struct TrainReport {
     pub final_eval_accuracy: f64,
     pub final_eval_loss: f64,
     pub total_wall_secs: f64,
-    /// Producer-side seconds (encode+augment) — Fig 1 overlap accounting.
+    /// Producer-side seconds (encode+augment) — Fig 1 overlap accounting,
+    /// summed over all producer workers and epochs.
     pub loader_produce_secs: f64,
     pub loader_blocked_secs: f64,
+    /// Per-worker produce/blocked/batch totals (empty for synchronous
+    /// loaders; one entry for the legacy single-producer mode).
+    pub loader_workers: Vec<WorkerSummary>,
+    /// Buffer-pool counters over the whole run: hot-path allocations and
+    /// recycled-buffer hits. At steady state `pool_allocs` stops growing.
+    pub pool_allocs: u64,
+    pub pool_reuses: u64,
 }
 
 /// Orchestrates one training run.
@@ -38,6 +47,11 @@ pub struct Trainer {
     history: History,
     produce_secs: f64,
     blocked_secs: f64,
+    /// Per-worker accumulators across epochs (the loader is epoch-scoped).
+    worker_acc: Vec<WorkerSummary>,
+    /// Payload buffers recycle through this pool across all epochs
+    /// (§Perf iteration 3) — see [`crate::data::pool`].
+    pool: Arc<BufferPool>,
     /// Eval batches are deterministic — built once, reused every epoch
     /// (§Perf iteration 2).
     eval_cache: Option<Vec<BatchPayload>>,
@@ -97,6 +111,8 @@ impl Trainer {
             history: History::default(),
             produce_secs: 0.0,
             blocked_secs: 0.0,
+            worker_acc: Vec::new(),
+            pool: Arc::new(BufferPool::default()),
             eval_cache: None,
         })
     }
@@ -114,12 +130,13 @@ impl Trainer {
         if self.cfg.max_batches_per_epoch > 0 {
             batches = batches.min(self.cfg.max_batches_per_epoch);
         }
-        Ok(EdLoader::new(
+        Ok(EdLoader::with_pool(
             self.train_data.clone(),
             sampler,
             self.cfg.encode_spec(),
             batches,
             self.cfg.loader_mode(),
+            self.pool.clone(),
         ))
     }
 
@@ -178,6 +195,9 @@ impl Trainer {
         let mut step = 0usize;
         while let Some(payload) = loader.next() {
             let out = self.model.train_step_lr(&mut self.state, &payload, lr)?;
+            // Spent payload buffers go back to the pool for the producers;
+            // this is what makes steady-state epochs allocation-free.
+            loader.recycle(payload);
             loss.add_weighted(out.loss as f64, out.batch_size as u64);
             acc.add_weighted(out.accuracy(), out.batch_size as u64);
             images += out.batch_size as u64;
@@ -191,8 +211,18 @@ impl Trainer {
             }
         }
         let stats: Arc<LoaderStats> = loader.stats();
+        drop(loader); // joins producer threads → counters are final
         self.produce_secs += stats.produce_secs();
         self.blocked_secs += stats.blocked_secs();
+        let per_worker = stats.worker_summaries();
+        if self.worker_acc.len() < per_worker.len() {
+            self.worker_acc.resize(per_worker.len(), WorkerSummary::default());
+        }
+        for (acc_w, w) in self.worker_acc.iter_mut().zip(&per_worker) {
+            acc_w.produce_secs += w.produce_secs;
+            acc_w.blocked_secs += w.blocked_secs;
+            acc_w.batches += w.batches;
+        }
         let wall = timer.secs();
         let (eval_loss, eval_acc) = if self.cfg.eval_every > 0
             && (epoch + 1) % self.cfg.eval_every == 0
@@ -246,6 +276,9 @@ impl Trainer {
             total_wall_secs: self.history.total_wall_secs(),
             loader_produce_secs: self.produce_secs,
             loader_blocked_secs: self.blocked_secs,
+            loader_workers: self.worker_acc.clone(),
+            pool_allocs: self.pool.allocs(),
+            pool_reuses: self.pool.reuses(),
             history: std::mem::take(&mut self.history),
         })
     }

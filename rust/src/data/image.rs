@@ -66,6 +66,21 @@ impl ImageBatch {
         }
     }
 
+    /// Re-shape in place for reuse as a staging buffer (hot path): existing
+    /// allocations are kept when large enough. Contents are **unspecified**
+    /// (only newly grown regions are zero-filled) — callers such as
+    /// [`crate::data::sampler::materialize_plan_into`] overwrite every slot,
+    /// so re-zeroing the whole buffer per batch would be pure memset waste.
+    pub fn reset(&mut self, n: usize, h: usize, w: usize, c: usize, num_classes: usize) {
+        self.n = n;
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.num_classes = num_classes;
+        self.data.resize(n * h * w * c, 0);
+        self.labels.resize(n * num_classes, 0.0);
+    }
+
     pub fn image_len(&self) -> usize {
         self.h * self.w * self.c
     }
@@ -116,6 +131,13 @@ impl ImageBatch {
     /// Widen the batch to f32 in `[0,1)` (the baseline pipelines' payload).
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&b| b as f32 / 255.0).collect()
+    }
+
+    /// [`ImageBatch::to_f32`] into a caller-provided (pooled) buffer; `out`
+    /// is cleared first, so with warm capacity this never allocates.
+    pub fn to_f32_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.data.iter().map(|&b| b as f32 / 255.0));
     }
 
     /// Bytes of the raw uint8 payload.
@@ -173,6 +195,32 @@ mod tests {
         assert_eq!(b.payload_bytes_u8(), 16 * 32 * 32 * 3);
         assert_eq!(b.payload_bytes_f32(), 4 * 16 * 32 * 32 * 3);
         assert_eq!(b.payload_bytes_f64(), 8 * 16 * 32 * 32 * 3);
+    }
+
+    #[test]
+    fn reset_reshapes_and_keeps_allocation() {
+        let mut b = ImageBatch::zeros(2, 4, 4, 1, 3);
+        b.data.fill(9);
+        b.labels.fill(0.5);
+        let cap = b.data.capacity();
+        b.reset(1, 4, 4, 1, 3);
+        assert_eq!(b.n, 1);
+        assert_eq!(b.data.len(), 16);
+        assert_eq!(b.labels.len(), 3);
+        assert_eq!(b.data.capacity(), cap, "reset must keep the allocation");
+        // growing re-extends with zeroed tails
+        b.reset(4, 4, 4, 1, 3);
+        assert_eq!(b.data.len(), 64);
+        assert!(b.data[32..].iter().all(|&v| v == 0), "grown region is zeroed");
+    }
+
+    #[test]
+    fn to_f32_into_matches_to_f32() {
+        let mut b = ImageBatch::zeros(1, 2, 2, 1, 2);
+        b.data.copy_from_slice(&[0, 64, 128, 255]);
+        let mut out = vec![9.0f32; 1]; // stale contents must be discarded
+        b.to_f32_into(&mut out);
+        assert_eq!(out, b.to_f32());
     }
 
     #[test]

@@ -1,22 +1,69 @@
-//! Parallel encode–decode (E-D) loader — the paper's Figure 1 pipeline.
+//! Parallel encode–decode (E-D) loader — the paper's Figure 1 pipeline,
+//! rebuilt as a multi-worker producer pool.
 //!
-//! A producer thread samples, augments and **encodes** batches for the next
-//! steps while the trainer consumes the current one; a bounded channel
-//! provides backpressure so the producer never runs more than
-//! `prefetch_depth` batches ahead. The baseline (synchronous) mode performs
-//! the same work inline on the consumer thread, which is exactly the
-//! pipeline difference Figure 1 illustrates.
+//! # Architecture
+//!
+//! ```text
+//!             plans (ordered)        payloads (any order)      (re-ordered)
+//! ┌─────────┐  step,BatchPlan  ┌──────────┐  step,payload  ┌───────────┐
+//! │ planner ├───────┬─────────▶│ worker 0 ├───────┬───────▶│ sequencer ├──▶ trainer
+//! │ thread  │       ├─────────▶│ worker 1 ├───────┤        │ (reorder  │
+//! │ (SBS    │       └─────────▶│   ...    ├───────┘        │  buffer)  │
+//! │ sampler)│                  │ worker N │                └───────────┘
+//! └─────────┘                  └──────────┘      bounded channel = prefetch_depth
+//! ```
+//!
+//! * The **planner** runs the sequential, cheap half of sampling
+//!   ([`SbsSampler::plan_batch`]): it owns the RNG/pool state and emits one
+//!   [`BatchPlan`] per step, in step order, into a bounded queue.
+//! * **Workers** (`num_workers` threads) pull plans, materialize them
+//!   (fetch + augment, [`materialize_plan_into`]) into a thread-local
+//!   staging batch, and encode/widen into payload buffers drawn from the
+//!   shared [`BufferPool`]. Materialization is a pure function of the plan,
+//!   so any thread may produce any step.
+//! * The **sequencer** restores step order with a reorder buffer and feeds
+//!   the bounded output channel (depth `prefetch_depth`). A permit gate
+//!   ([`Gate`]) provides the Figure-1 backpressure with a hard bound: at
+//!   most `prefetch_depth + num_workers` materialized payloads exist at any
+//!   moment (each worker may hold one while a full prefetch window is
+//!   parked), released as the consumer takes batches.
+//!
+//! `num_workers = 0` keeps the classic single-producer thread (plan +
+//! materialize + encode inline on one background thread), and
+//! [`LoaderMode::Synchronous`] performs the same work inline on the
+//! consumer thread — exactly the pipeline difference Figure 1 illustrates.
+//! All modes and worker counts produce **byte-identical batch sequences**
+//! for the same seed, because all stochastic state lives in the
+//! sequentially-generated plans.
+//!
+//! # Buffers
+//!
+//! Payload buffers (f32 pixels, packed words, parity bitplanes, label rows,
+//! group shells) cycle through the shared [`BufferPool`]: the trainer
+//! returns spent payloads via [`EdLoader::recycle`], workers take them for
+//! the next batch. After a two-batch warmup (the second batch settles LIFO
+//! size mismatches from a short tail group), steady-state epochs perform no
+//! pool-managed allocation — observable via [`BufferPool::allocs`] /
+//! [`BufferPool::reuses`], which the trainer surfaces in its report.
+//!
+//! # Stats
+//!
+//! [`LoaderStats`] keeps the Figure-1 overlap accounting (aggregate
+//! produce/blocked time) plus per-worker counters and sequencer
+//! reorder-depth gauges; see [`LoaderStats::worker_summaries`].
 //!
 //! The paper also "dumps" encoded batches for reuse across epochs; the
 //! [`dump`] submodule provides that binary cache.
 
 use crate::data::dataset::Dataset;
-use crate::data::encode::{encode_batch_grouped, EncodeSpec, EncodedBatch};
+use crate::data::encode::{encode_batch_grouped_into, EncodeError, EncodeSpec, EncodedBatch};
 use crate::data::image::ImageBatch;
-use crate::data::sampler::SbsSampler;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::data::pool::BufferPool;
+use crate::data::sampler::{materialize_plan_into, BatchPlan, ClassSpec, SbsSampler};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// What the loader hands the trainer per step.
@@ -55,45 +102,192 @@ impl BatchPayload {
 pub enum LoaderMode {
     /// Produce batches inline on `next()` (standard pipeline).
     Synchronous,
-    /// Produce on a background thread with a bounded prefetch queue
-    /// (the paper's parallel E-D pipeline).
-    Parallel { prefetch_depth: usize },
+    /// Produce on background threads with a bounded prefetch queue (the
+    /// paper's parallel E-D pipeline). `num_workers = 0` keeps the classic
+    /// single producer thread; `n ≥ 1` runs the planner/worker/sequencer
+    /// pool with `n` encode workers.
+    Parallel { prefetch_depth: usize, num_workers: usize },
 }
 
-/// Producer-side counters for the Fig-1 overlap analysis.
-#[derive(Default, Debug)]
-pub struct LoaderStats {
-    /// ns the producer spent generating+encoding batches.
+/// Default worker count for the producer pool: one core is left for the
+/// consuming trainer thread.
+pub fn default_num_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1))
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// One worker's counters (all thread-shared atomics).
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    /// ns this worker spent materializing + encoding batches.
     pub produce_ns: AtomicU64,
-    /// ns the producer spent blocked on the full queue (backpressure).
+    /// ns this worker spent blocked handing batches downstream.
     pub blocked_ns: AtomicU64,
     pub batches: AtomicU64,
 }
 
+/// Plain-data snapshot of one worker's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerSummary {
+    pub produce_secs: f64,
+    pub blocked_secs: f64,
+    pub batches: u64,
+}
+
+/// Producer-side counters for the Fig-1 overlap analysis.
+#[derive(Debug, Default)]
+pub struct LoaderStats {
+    /// ns producers spent generating+encoding batches (sum over workers).
+    pub produce_ns: AtomicU64,
+    /// ns producers spent blocked on full queues (backpressure).
+    pub blocked_ns: AtomicU64,
+    pub batches: AtomicU64,
+    /// Per-worker counters (empty for the synchronous mode; one entry for
+    /// the legacy single-producer mode).
+    pub workers: Vec<WorkerStats>,
+    /// High-water mark of the sequencer's reorder buffer.
+    pub seq_max_depth: AtomicU64,
+    /// Batches that arrived at the sequencer ahead of their turn.
+    pub seq_out_of_order: AtomicU64,
+}
+
 impl LoaderStats {
+    fn with_workers(n: usize) -> LoaderStats {
+        LoaderStats {
+            workers: (0..n).map(|_| WorkerStats::default()).collect(),
+            ..LoaderStats::default()
+        }
+    }
+
     pub fn produce_secs(&self) -> f64 {
         self.produce_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
+
     pub fn blocked_secs(&self) -> f64 {
         self.blocked_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
+
+    /// Per-worker snapshots (empty when the loader ran synchronously).
+    pub fn worker_summaries(&self) -> Vec<WorkerSummary> {
+        self.workers
+            .iter()
+            .map(|w| WorkerSummary {
+                produce_secs: w.produce_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                blocked_secs: w.blocked_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                batches: w.batches.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
 }
 
+/// Build one payload from a staged batch, drawing every buffer from `pool`.
 fn make_payload(
     batch: &ImageBatch,
     spec: Option<EncodeSpec>,
-) -> Result<BatchPayload, crate::data::encode::EncodeError> {
+    pool: &BufferPool,
+) -> Result<BatchPayload, EncodeError> {
     Ok(match spec {
-        None => BatchPayload::Raw {
-            data: batch.to_f32(),
-            labels: batch.labels.clone(),
-            n: batch.n,
-        },
-        Some(s) => BatchPayload::Encoded(encode_batch_grouped(batch, s)?),
+        None => {
+            let mut data = pool.take_f32(batch.data.len());
+            batch.to_f32_into(&mut data);
+            let mut labels = pool.take_f32(batch.labels.len());
+            labels.extend_from_slice(&batch.labels);
+            BatchPayload::Raw { data, labels, n: batch.n }
+        }
+        Some(s) => {
+            let mut groups = pool.take_shells();
+            encode_batch_grouped_into(batch, s, pool, &mut groups)?;
+            BatchPayload::Encoded(groups)
+        }
     })
 }
 
-/// Epoch-scoped batch source with both modes behind one interface.
+/// Counting semaphore bounding materialized payloads in flight. A worker
+/// acquires a permit **before** dequeuing a plan (so the holder of the
+/// lowest outstanding step always owns a permit and the sequencer can
+/// always make progress — acquiring after the dequeue could strand the
+/// next-in-order step behind parked future ones); the consumer releases it
+/// when a payload leaves the output channel. Hard bound:
+/// `prefetch_depth + num_workers` payloads exist at any moment.
+struct Gate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(permits: usize) -> Gate {
+        Gate { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    /// Take a permit; returns `false` if `cancel` was raised while waiting.
+    fn acquire(&self, cancel: &AtomicBool) -> bool {
+        let mut p = self.permits.lock().unwrap();
+        loop {
+            if cancel.load(Ordering::Relaxed) {
+                return false;
+            }
+            if *p > 0 {
+                *p -= 1;
+                return true;
+            }
+            p = self.cv.wait(p).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+
+    /// Wake every waiter (used with the cancel flag on shutdown; taking the
+    /// mutex first makes the wakeup race-free against a check-then-wait).
+    fn wake_all(&self) {
+        let _guard = self.permits.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+/// Shared context for every producer thread.
+struct ProducerCtx {
+    dataset: Arc<dyn Dataset>,
+    specs: Arc<Vec<ClassSpec>>,
+    spec: Option<EncodeSpec>,
+    pool: Arc<BufferPool>,
+    stats: Arc<LoaderStats>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl ProducerCtx {
+    /// Materialize + encode one plan, accounting to worker `wid`.
+    fn produce(&self, wid: usize, plan: &BatchPlan, stage: &mut ImageBatch) -> BatchPayload {
+        let t0 = Instant::now();
+        let (h, w, c) = self.dataset.shape();
+        stage.reset(plan.len(), h, w, c, self.dataset.num_classes());
+        materialize_plan_into(&self.specs, self.dataset.as_ref(), plan, stage);
+        let payload = match make_payload(stage, self.spec, &self.pool) {
+            Ok(p) => p,
+            // capacity violations are programming errors upstream; surface loudly.
+            Err(e) => panic!("E-D producer encode failed: {e}"),
+        };
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.stats.workers[wid].produce_ns.fetch_add(dt, Ordering::Relaxed);
+        self.stats.produce_ns.fetch_add(dt, Ordering::Relaxed);
+        payload
+    }
+
+    /// Account a completed (sent) batch to worker `wid`.
+    fn sent(&self, wid: usize, blocked: Instant) {
+        let dt = blocked.elapsed().as_nanos() as u64;
+        self.stats.workers[wid].blocked_ns.fetch_add(dt, Ordering::Relaxed);
+        self.stats.blocked_ns.fetch_add(dt, Ordering::Relaxed);
+        self.stats.workers[wid].batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Epoch-scoped batch source with all modes behind one interface.
 pub enum EdLoader {
     Sync {
         dataset: Arc<dyn Dataset>,
@@ -101,16 +295,26 @@ pub enum EdLoader {
         spec: Option<EncodeSpec>,
         remaining: usize,
         stats: Arc<LoaderStats>,
+        pool: Arc<BufferPool>,
+        /// Reused staging batch (allocated once per loader).
+        stage: ImageBatch,
     },
     Par {
         rx: Receiver<BatchPayload>,
-        handle: Option<std::thread::JoinHandle<()>>,
+        handles: Vec<std::thread::JoinHandle<()>>,
         stats: Arc<LoaderStats>,
+        pool: Arc<BufferPool>,
+        cancel: Arc<AtomicBool>,
+        /// In-flight payload bound for the worker pool (`None` for the
+        /// single-producer mode, where the output channel already bounds it).
+        gate: Option<Arc<Gate>>,
     },
 }
 
 impl EdLoader {
-    /// Build a loader producing `num_batches` batches.
+    /// Build a loader producing `num_batches` batches with a private
+    /// buffer pool. Prefer [`EdLoader::with_pool`] when a pool outlives the
+    /// epoch (the trainer shares one across all epochs).
     ///
     /// `spec = None` ships raw f32 batches (B / M-P / S-C pipelines);
     /// `spec = Some(_)` ships packed batches (E-D pipelines).
@@ -121,70 +325,256 @@ impl EdLoader {
         num_batches: usize,
         mode: LoaderMode,
     ) -> EdLoader {
-        let stats = Arc::new(LoaderStats::default());
+        Self::with_pool(dataset, sampler, spec, num_batches, mode, Arc::new(BufferPool::default()))
+    }
+
+    /// [`EdLoader::new`] with a caller-owned [`BufferPool`] so payload
+    /// buffers recycle across epochs.
+    pub fn with_pool(
+        dataset: Arc<dyn Dataset>,
+        sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        num_batches: usize,
+        mode: LoaderMode,
+        pool: Arc<BufferPool>,
+    ) -> EdLoader {
         match mode {
-            LoaderMode::Synchronous => EdLoader::Sync {
+            LoaderMode::Synchronous => {
+                let (h, w, c) = dataset.shape();
+                let stage = ImageBatch::zeros(sampler.batch_size, h, w, c, dataset.num_classes());
+                EdLoader::Sync {
+                    dataset,
+                    sampler,
+                    spec,
+                    remaining: num_batches,
+                    stats: Arc::new(LoaderStats::with_workers(0)),
+                    pool,
+                    stage,
+                }
+            }
+            LoaderMode::Parallel { prefetch_depth, num_workers: 0 } => {
+                Self::spawn_single_producer(dataset, sampler, spec, num_batches, prefetch_depth, pool)
+            }
+            LoaderMode::Parallel { prefetch_depth, num_workers } => Self::spawn_worker_pool(
                 dataset,
                 sampler,
                 spec,
-                remaining: num_batches,
-                stats,
-            },
-            LoaderMode::Parallel { prefetch_depth } => {
-                let (tx, rx) = sync_channel(prefetch_depth.max(1));
-                let pstats = stats.clone();
-                let mut sampler = sampler;
-                let handle = std::thread::Builder::new()
-                    .name("optorch-ed-producer".into())
+                num_batches,
+                prefetch_depth,
+                num_workers,
+                pool,
+            ),
+        }
+    }
+
+    /// The classic Figure-1 shape: one background thread does plan +
+    /// materialize + encode sequentially (`num_workers = 0`).
+    fn spawn_single_producer(
+        dataset: Arc<dyn Dataset>,
+        mut sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        num_batches: usize,
+        prefetch_depth: usize,
+        pool: Arc<BufferPool>,
+    ) -> EdLoader {
+        let stats = Arc::new(LoaderStats::with_workers(1));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel(prefetch_depth.max(1));
+        let ctx = ProducerCtx {
+            dataset: dataset.clone(),
+            specs: Arc::new(sampler.specs().to_vec()),
+            spec,
+            pool: pool.clone(),
+            stats: stats.clone(),
+            cancel: cancel.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("optorch-ed-producer".into())
+            .spawn(move || {
+                let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
+                for _ in 0..num_batches {
+                    if ctx.cancel.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let plan = sampler.plan_batch(ctx.dataset.as_ref());
+                    let payload = ctx.produce(0, &plan, &mut stage);
+                    let t1 = Instant::now();
+                    if tx.send(payload).is_err() {
+                        return; // consumer dropped; stop quietly
+                    }
+                    ctx.sent(0, t1);
+                }
+            })
+            .expect("spawn E-D producer");
+        EdLoader::Par { rx, handles: vec![handle], stats, pool, cancel, gate: None }
+    }
+
+    /// The producer pool: planner → N workers → sequencer (see module docs).
+    fn spawn_worker_pool(
+        dataset: Arc<dyn Dataset>,
+        mut sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        num_batches: usize,
+        prefetch_depth: usize,
+        num_workers: usize,
+        pool: Arc<BufferPool>,
+    ) -> EdLoader {
+        let depth = prefetch_depth.max(1);
+        let stats = Arc::new(LoaderStats::with_workers(num_workers));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let specs = Arc::new(sampler.specs().to_vec());
+        let gate = Arc::new(Gate::new(depth + num_workers));
+        let mut handles = Vec::with_capacity(num_workers + 2);
+
+        // Plans flow through a bounded queue so the planner (and its RNG
+        // state) never runs more than depth + num_workers steps ahead.
+        let (plan_tx, plan_rx) = sync_channel::<(usize, BatchPlan)>(depth + num_workers);
+        let plan_rx = Arc::new(Mutex::new(plan_rx));
+        // Workers hand finished payloads (tagged with their step) to the
+        // sequencer. The gate (not this capacity) is what bounds payload
+        // memory; the sequencer drains this queue eagerly into its reorder
+        // buffer, so a small capacity cannot deadlock.
+        let (seq_tx, seq_rx) = sync_channel::<(usize, BatchPayload)>(depth);
+        // The sequencer feeds the consumer in step order; this channel's
+        // depth is the Figure-1 prefetch bound.
+        let (out_tx, out_rx) = sync_channel::<BatchPayload>(depth);
+
+        {
+            let dataset = dataset.clone();
+            let cancel = cancel.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("optorch-ed-planner".into())
                     .spawn(move || {
-                        for _ in 0..num_batches {
-                            let t0 = Instant::now();
-                            let batch = sampler.next_batch(dataset.as_ref());
-                            let payload = match make_payload(&batch, spec) {
-                                Ok(p) => p,
-                                Err(e) => {
-                                    // capacity violations are programming errors
-                                    // upstream; surface loudly.
-                                    panic!("E-D producer encode failed: {e}");
-                                }
-                            };
-                            pstats
-                                .produce_ns
-                                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                            let t1 = Instant::now();
-                            if tx.send(payload).is_err() {
-                                return; // consumer dropped; stop quietly
+                        for step in 0..num_batches {
+                            if cancel.load(Ordering::Relaxed) {
+                                return;
                             }
-                            pstats
-                                .blocked_ns
-                                .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                            pstats.batches.fetch_add(1, Ordering::Relaxed);
+                            let plan = sampler.plan_batch(dataset.as_ref());
+                            if plan_tx.send((step, plan)).is_err() {
+                                return; // workers gone
+                            }
                         }
                     })
-                    .expect("spawn E-D producer");
-                EdLoader::Par { rx, handle: Some(handle), stats }
-            }
+                    .expect("spawn E-D planner"),
+            );
         }
+
+        for wid in 0..num_workers {
+            let ctx = ProducerCtx {
+                dataset: dataset.clone(),
+                specs: specs.clone(),
+                spec,
+                pool: pool.clone(),
+                stats: stats.clone(),
+                cancel: cancel.clone(),
+            };
+            let plan_rx = plan_rx.clone();
+            let seq_tx = seq_tx.clone();
+            let gate = gate.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("optorch-ed-worker-{wid}"))
+                    .spawn(move || {
+                        let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
+                        loop {
+                            // A permit caps in-flight payloads; taking it
+                            // before the dequeue keeps step order live (see
+                            // Gate docs). False = canceled.
+                            if !gate.acquire(&ctx.cancel) {
+                                return;
+                            }
+                            // Lock scope: held only across the blocking
+                            // recv (plans are cheap and arrive fast).
+                            let msg = plan_rx.lock().unwrap().recv();
+                            let Ok((step, plan)) = msg else {
+                                gate.release(); // permit unused: no more plans
+                                return;
+                            };
+                            let payload = ctx.produce(wid, &plan, &mut stage);
+                            let t1 = Instant::now();
+                            if seq_tx.send((step, payload)).is_err() {
+                                return; // sequencer gone
+                            }
+                            ctx.sent(wid, t1);
+                        }
+                    })
+                    .expect("spawn E-D worker"),
+            );
+        }
+        drop(seq_tx); // sequencer sees disconnect once all workers exit
+
+        {
+            let stats = stats.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("optorch-ed-sequencer".into())
+                    .spawn(move || {
+                        let mut next = 0usize;
+                        let mut parked: BTreeMap<usize, BatchPayload> = BTreeMap::new();
+                        while next < num_batches {
+                            let Ok((step, payload)) = seq_rx.recv() else { return };
+                            if step != next {
+                                stats.seq_out_of_order.fetch_add(1, Ordering::Relaxed);
+                            }
+                            parked.insert(step, payload);
+                            stats
+                                .seq_max_depth
+                                .fetch_max(parked.len() as u64, Ordering::Relaxed);
+                            while let Some(ready) = parked.remove(&next) {
+                                if out_tx.send(ready).is_err() {
+                                    return; // consumer dropped
+                                }
+                                next += 1;
+                            }
+                        }
+                    })
+                    .expect("spawn E-D sequencer"),
+            );
+        }
+
+        EdLoader::Par { rx: out_rx, handles, stats, pool, cancel, gate: Some(gate) }
     }
 
     /// Next batch, or `None` at end of the configured run.
     pub fn next(&mut self) -> Option<BatchPayload> {
         match self {
-            EdLoader::Sync { dataset, sampler, spec, remaining, stats } => {
+            EdLoader::Sync { dataset, sampler, spec, remaining, stats, pool, stage } => {
                 if *remaining == 0 {
                     return None;
                 }
                 *remaining -= 1;
                 let t0 = Instant::now();
-                let batch = sampler.next_batch(dataset.as_ref());
-                let payload = make_payload(&batch, *spec).expect("encode failed");
+                sampler.next_batch_into(dataset.as_ref(), stage);
+                let payload = make_payload(stage, *spec, pool).expect("encode failed");
                 stats
                     .produce_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 stats.batches.fetch_add(1, Ordering::Relaxed);
                 Some(payload)
             }
-            EdLoader::Par { rx, .. } => rx.recv().ok(),
+            EdLoader::Par { rx, gate, .. } => {
+                let payload = rx.recv().ok();
+                if let (Some(_), Some(g)) = (payload.as_ref(), gate.as_ref()) {
+                    g.release(); // one payload left the pipeline
+                }
+                payload
+            }
+        }
+    }
+
+    /// Return a spent payload's buffers to the loader's pool. Optional but
+    /// strongly recommended on the training path: it is what makes
+    /// steady-state epochs allocation-free.
+    pub fn recycle(&self, payload: BatchPayload) {
+        self.pool().recycle_payload(payload);
+    }
+
+    /// The loader's buffer pool (shared with its producer threads).
+    pub fn pool(&self) -> &Arc<BufferPool> {
+        match self {
+            EdLoader::Sync { pool, .. } => pool,
+            EdLoader::Par { pool, .. } => pool,
         }
     }
 
@@ -198,18 +588,18 @@ impl EdLoader {
 
 impl Drop for EdLoader {
     fn drop(&mut self) {
-        if let EdLoader::Par { rx, handle, .. } = self {
-            // Drain so the producer unblocks, then join.
-            while rx.try_recv().is_ok() {}
-            // Dropping the receiver ends the producer's send loop.
-            if let Some(h) = handle.take() {
-                // Receiver is still alive here; drain until the channel closes.
-                loop {
-                    match rx.recv_timeout(std::time::Duration::from_millis(50)) {
-                        Ok(_) => continue,
-                        Err(_) => break,
-                    }
-                }
+        if let EdLoader::Par { rx, handles, cancel, gate, .. } = self {
+            // Ask producers to stop, then drain so nothing stays blocked on
+            // a full queue. Producers exit on: cancel flag (workers parked
+            // on the gate are woken to observe it), plan-channel disconnect,
+            // or send failure; the drain ends when the last sender (the
+            // sequencer / single producer) has exited.
+            cancel.store(true, Ordering::Relaxed);
+            if let Some(g) = gate {
+                g.wake_all();
+            }
+            while rx.recv().is_ok() {}
+            for h in handles.drain(..) {
                 let _ = h.join();
             }
         }
@@ -373,6 +763,10 @@ mod tests {
         EdLoader::new(d, sampler, spec, batches, mode)
     }
 
+    fn par(depth: usize, workers: usize) -> LoaderMode {
+        LoaderMode::Parallel { prefetch_depth: depth, num_workers: workers }
+    }
+
     #[test]
     fn sync_loader_yields_exact_count() {
         let mut l = setup(5, None, LoaderMode::Synchronous);
@@ -385,33 +779,60 @@ mod tests {
     }
 
     #[test]
-    fn parallel_loader_yields_exact_count() {
-        let mut l = setup(7, None, LoaderMode::Parallel { prefetch_depth: 2 });
-        let mut n = 0;
-        while let Some(b) = l.next() {
-            assert_eq!(b.len(), 16);
-            n += 1;
+    fn parallel_loader_yields_exact_count_for_any_worker_count() {
+        for workers in [0, 1, 2, 4] {
+            let mut l = setup(7, None, par(2, workers));
+            let mut n = 0;
+            while let Some(b) = l.next() {
+                assert_eq!(b.len(), 16, "workers={workers}");
+                n += 1;
+            }
+            assert_eq!(n, 7, "workers={workers}");
         }
-        assert_eq!(n, 7);
     }
 
     #[test]
     fn parallel_and_sync_agree_given_same_seed() {
         let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
-        let mut a = setup(3, spec, LoaderMode::Synchronous);
-        let mut b = setup(3, spec, LoaderMode::Parallel { prefetch_depth: 4 });
+        for workers in [0, 1, 3] {
+            let mut a = setup(3, spec, LoaderMode::Synchronous);
+            let mut b = setup(3, spec, par(4, workers));
+            loop {
+                match (a.next(), b.next()) {
+                    (None, None) => break,
+                    (Some(BatchPayload::Encoded(x)), Some(BatchPayload::Encoded(y))) => {
+                        assert_eq!(x.len(), y.len(), "workers={workers}");
+                        for (gx, gy) in x.iter().zip(&y) {
+                            assert_eq!(gx.words_u64, gy.words_u64, "workers={workers}");
+                            assert_eq!(gx.labels, gy.labels, "workers={workers}");
+                        }
+                    }
+                    other => panic!("mismatch (workers={workers}): {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_pool_preserves_step_order() {
+        // With more workers than prefetch depth, out-of-order completion is
+        // likely; the sequencer must still emit the sync sequence.
+        let spec = Some(EncodeSpec::new(Encoding::Lossless128, WordType::U64));
+        let mut reference = setup(12, spec, par(1, 0));
+        let mut pooled = setup(12, spec, par(1, 4));
+        let mut step = 0;
         loop {
-            match (a.next(), b.next()) {
+            match (reference.next(), pooled.next()) {
                 (None, None) => break,
                 (Some(BatchPayload::Encoded(x)), Some(BatchPayload::Encoded(y))) => {
-                    assert_eq!(x.len(), y.len());
                     for (gx, gy) in x.iter().zip(&y) {
-                        assert_eq!(gx.words_u64, gy.words_u64);
-                        assert_eq!(gx.labels, gy.labels);
+                        assert_eq!(gx.words_u64, gy.words_u64, "step {step}");
+                        assert_eq!(gx.offsets, gy.offsets, "step {step}");
                     }
                 }
-                other => panic!("mismatch: {other:?}"),
+                other => panic!("step {step}: {other:?}"),
             }
+            step += 1;
         }
     }
 
@@ -447,19 +868,58 @@ mod tests {
     }
 
     #[test]
-    fn stats_accumulate() {
-        let mut l = setup(4, None, LoaderMode::Parallel { prefetch_depth: 1 });
-        while l.next().is_some() {}
+    fn stats_accumulate_per_worker() {
+        let mut l = setup(8, None, par(1, 2));
         let stats = l.stats();
-        assert_eq!(stats.batches.load(Ordering::Relaxed), 4);
+        while l.next().is_some() {}
+        drop(l); // join producers so the post-send counter updates land
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 8);
         assert!(stats.produce_ns.load(Ordering::Relaxed) > 0);
+        let per_worker = stats.worker_summaries();
+        assert_eq!(per_worker.len(), 2);
+        assert_eq!(per_worker.iter().map(|w| w.batches).sum::<u64>(), 8);
+        assert!(stats.seq_max_depth.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn legacy_single_producer_reports_one_worker() {
+        let mut l = setup(4, None, par(1, 0));
+        let stats = l.stats();
+        while l.next().is_some() {}
+        drop(l);
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 4);
+        let per_worker = stats.worker_summaries();
+        assert_eq!(per_worker.len(), 1);
+        assert_eq!(per_worker[0].batches, 4);
+    }
+
+    #[test]
+    fn recycling_makes_steady_state_allocation_free() {
+        // Sync mode is deterministic: the first batch warms the pool and the
+        // second settles LIFO size mismatches (a short group's label buffer
+        // can be popped for a full group and regrown once); from then on
+        // every batch must be served entirely from recycled buffers.
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::F64));
+        let mut l = setup(6, spec, LoaderMode::Synchronous);
+        for _ in 0..2 {
+            let p = l.next().unwrap();
+            l.recycle(p);
+        }
+        let warm_allocs = l.pool().allocs();
+        while let Some(p) = l.next() {
+            l.recycle(p);
+        }
+        assert_eq!(l.pool().allocs(), warm_allocs, "steady state allocated");
+        assert!(l.pool().reuses() > 0);
     }
 
     #[test]
     fn dropping_parallel_loader_midway_is_clean() {
-        let mut l = setup(100, None, LoaderMode::Parallel { prefetch_depth: 2 });
-        let _ = l.next();
-        drop(l); // must not hang or panic
+        for workers in [0, 3] {
+            let mut l = setup(100, None, par(2, workers));
+            let _ = l.next();
+            drop(l); // must not hang or panic
+        }
     }
 
     #[test]

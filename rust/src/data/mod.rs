@@ -1,5 +1,6 @@
 //! Data-flow layer: datasets, augmentation, SBS sampling, batch encoding,
-//! and the parallel encode–decode loader (the paper's §II-A).
+//! buffer recycling, and the multi-worker parallel encode–decode loader
+//! (the paper's §II-A).
 
 pub mod augment;
 pub mod cifar;
@@ -7,5 +8,6 @@ pub mod dataset;
 pub mod encode;
 pub mod image;
 pub mod loader;
+pub mod pool;
 pub mod sampler;
 pub mod synth;

@@ -1,0 +1,221 @@
+//! Buffer recycling for the E-D hot path.
+//!
+//! Every batch the loader ships needs several heap buffers: the f32 pixel
+//! payload (raw pipelines) or packed-word vectors + parity bitplanes +
+//! label rows (encoded pipelines), plus the `Vec<EncodedBatch>` shell that
+//! groups them. Allocating those per step is pure churn: sizes are
+//! identical every batch. [`BufferPool`] keeps returned buffers and hands
+//! them back out, so after a two-batch warmup (LIFO size mismatches from a
+//! short tail group settle on the second batch) the sampler → augment →
+//! encode chain performs **no pool-managed heap allocation** — verified by
+//! the [`allocs`](BufferPool::allocs)/[`reuses`](BufferPool::reuses)
+//! counters, which the trainer surfaces in [`TrainReport`] and the
+//! `encode_throughput` bench records in `BENCH_encode.json`.
+//!
+//! The pool is shared by every producer (sync loader, the worker pool's N
+//! encode workers, and the consumer returning spent payloads via
+//! [`EdLoader::recycle`]), so buffers cycle: consumer → pool → worker →
+//! consumer. All methods take `&self`; buckets are mutex-guarded (the lock
+//! is held only for a `Vec::pop`/`push`, never across real work).
+//!
+//! [`TrainReport`]: crate::coordinator::TrainReport
+//! [`EdLoader::recycle`]: crate::data::loader::EdLoader::recycle
+//!
+//! `take_*` returns an **empty** vector (len 0) whose capacity is warm when
+//! a recycled buffer fits `capacity_hint`; callers size it themselves
+//! (`resize`/`extend`), which keeps zeroing to exactly the buffers that
+//! need it (packed words, parity planes) and off the ones that are fully
+//! overwritten (pixels, labels).
+
+use crate::data::encode::EncodedBatch;
+use crate::data::loader::BatchPayload;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-bucket cap so a pathological consumer cannot grow the pool without
+/// bound; beyond this, returned buffers are simply dropped.
+const MAX_POOLED_PER_BUCKET: usize = 64;
+
+/// Recycles the data-path buffers (see module docs).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    u8s: Mutex<Vec<Vec<u8>>>,
+    f32s: Mutex<Vec<Vec<f32>>>,
+    u64s: Mutex<Vec<Vec<u64>>>,
+    f64s: Mutex<Vec<Vec<f64>>>,
+    shells: Mutex<Vec<Vec<EncodedBatch>>>,
+    allocs: AtomicU64,
+    reuses: AtomicU64,
+}
+
+macro_rules! pool_accessors {
+    ($take:ident, $put:ident, $bucket:ident, $t:ty) => {
+        /// Take an empty buffer; capacity is warm when a recycled buffer of
+        /// at least `capacity_hint` was available (counted as a reuse),
+        /// otherwise the (re)allocation is counted against the pool.
+        pub fn $take(&self, capacity_hint: usize) -> Vec<$t> {
+            let popped = self.$bucket.lock().unwrap().pop();
+            match popped {
+                Some(mut v) => {
+                    if v.capacity() >= capacity_hint {
+                        self.reuses.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.allocs.fetch_add(1, Ordering::Relaxed);
+                        v.reserve(capacity_hint);
+                    }
+                    v.clear();
+                    v
+                }
+                None => {
+                    self.allocs.fetch_add(1, Ordering::Relaxed);
+                    Vec::with_capacity(capacity_hint)
+                }
+            }
+        }
+
+        /// Return a buffer. Zero-capacity vectors are dropped (pooling them
+        /// would hand out useless buffers); so are buffers beyond the
+        /// per-bucket cap.
+        pub fn $put(&self, v: Vec<$t>) {
+            if v.capacity() == 0 {
+                return;
+            }
+            let mut bucket = self.$bucket.lock().unwrap();
+            if bucket.len() < MAX_POOLED_PER_BUCKET {
+                bucket.push(v);
+            }
+        }
+    };
+}
+
+impl BufferPool {
+    pool_accessors!(take_u8, put_u8, u8s, u8);
+    pool_accessors!(take_f32, put_f32, f32s, f32);
+    pool_accessors!(take_u64, put_u64, u64s, u64);
+    pool_accessors!(take_f64, put_f64, f64s, f64);
+
+    /// Take an empty `Vec<EncodedBatch>` shell (groups of one payload).
+    pub fn take_shells(&self) -> Vec<EncodedBatch> {
+        let popped = self.shells.lock().unwrap().pop();
+        match popped {
+            Some(v) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                debug_assert!(v.is_empty());
+                v
+            }
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    fn put_shells(&self, mut v: Vec<EncodedBatch>) {
+        debug_assert!(v.is_empty());
+        v.clear();
+        let mut bucket = self.shells.lock().unwrap();
+        if bucket.len() < MAX_POOLED_PER_BUCKET {
+            bucket.push(v);
+        }
+    }
+
+    /// Dismantle one encoded group back into the buckets.
+    pub fn recycle_encoded(&self, e: EncodedBatch) {
+        self.put_u64(e.words_u64);
+        self.put_f64(e.words_f64);
+        self.put_u8(e.offsets);
+        self.put_f32(e.labels);
+    }
+
+    /// Dismantle a spent loader payload back into the buckets. The trainer
+    /// calls this (via [`EdLoader::recycle`]) after each step; skipping it
+    /// is safe but reintroduces per-batch allocation.
+    ///
+    /// [`EdLoader::recycle`]: crate::data::loader::EdLoader::recycle
+    pub fn recycle_payload(&self, payload: BatchPayload) {
+        match payload {
+            BatchPayload::Raw { data, labels, .. } => {
+                self.put_f32(data);
+                self.put_f32(labels);
+            }
+            BatchPayload::Encoded(mut groups) => {
+                for e in groups.drain(..) {
+                    self.recycle_encoded(e);
+                }
+                self.put_shells(groups);
+            }
+        }
+    }
+
+    /// Buffers created (or regrown) because the pool could not serve the
+    /// request — the hot path's allocation count.
+    pub fn allocs(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Requests served from recycled buffers without allocating.
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::image::ImageBatch;
+
+    #[test]
+    fn take_put_cycles_without_new_allocs() {
+        let pool = BufferPool::default();
+        let v = pool.take_u64(1024);
+        assert_eq!(pool.allocs(), 1);
+        assert!(v.capacity() >= 1024);
+        pool.put_u64(v);
+        let v2 = pool.take_u64(1024);
+        assert_eq!(pool.allocs(), 1, "second take must reuse");
+        assert_eq!(pool.reuses(), 1);
+        assert!(v2.is_empty() && v2.capacity() >= 1024);
+    }
+
+    #[test]
+    fn undersized_recycled_buffer_counts_as_alloc() {
+        let pool = BufferPool::default();
+        let v = pool.take_f32(8);
+        pool.put_f32(v);
+        let v = pool.take_f32(1 << 20); // forces a regrow
+        assert!(v.capacity() >= 1 << 20);
+        assert_eq!(pool.allocs(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_pooled() {
+        let pool = BufferPool::default();
+        pool.put_u8(Vec::new());
+        let v = pool.take_u8(4);
+        assert_eq!(pool.allocs(), 1, "empty vec must not have been pooled");
+        assert!(v.capacity() >= 4);
+    }
+
+    #[test]
+    fn bucket_cap_bounds_memory() {
+        let pool = BufferPool::default();
+        for _ in 0..(MAX_POOLED_PER_BUCKET + 10) {
+            pool.put_u8(vec![0u8; 16]);
+        }
+        assert_eq!(pool.u8s.lock().unwrap().len(), MAX_POOLED_PER_BUCKET);
+    }
+
+    #[test]
+    fn payload_recycling_dismantles_groups() {
+        use crate::data::encode::{encode_batch, EncodeSpec, Encoding, WordType};
+        let pool = BufferPool::default();
+        let mut b = ImageBatch::zeros(4, 4, 4, 3, 10);
+        b.data.iter_mut().enumerate().for_each(|(i, v)| *v = i as u8);
+        let e = encode_batch(&b, EncodeSpec::new(Encoding::Lossless128, WordType::U64)).unwrap();
+        pool.recycle_payload(BatchPayload::Encoded(vec![e]));
+        // words, offsets and labels all came back
+        assert!(!pool.u64s.lock().unwrap().is_empty());
+        assert!(!pool.u8s.lock().unwrap().is_empty());
+        assert!(!pool.f32s.lock().unwrap().is_empty());
+    }
+}

@@ -5,6 +5,24 @@
 //! augmentation policy to exactly those slots. A uniform-weight SBS with
 //! the same policy everywhere degrades to a standard shuffled sampler,
 //! which is the paper's baseline.
+//!
+//! ## Plan / materialize split (§Perf iteration 3)
+//!
+//! Batch production is factored into two phases so the loader's worker
+//! pool can parallelize the heavy part without giving up determinism:
+//!
+//! * [`SbsSampler::plan_batch`] — *sequential, cheap*: advances the RNG
+//!   and per-class pools exactly as the classic `next_batch` did and
+//!   captures everything stochastic (drawn indices, partner indices, one
+//!   pre-split RNG per slot) in a [`BatchPlan`].
+//! * [`materialize_plan_into`] — *pure, heavy*: fetch + augment + write
+//!   each slot, a function of only `(specs, dataset, plan)`. It can run on
+//!   any thread, for any subset of outstanding plans, in any order, and
+//!   always produces byte-identical batches.
+//!
+//! `next_batch` is now just `plan_batch` + `materialize_plan_into`, so
+//! every worker count (including the synchronous path) yields the same
+//! batch sequence for the same seed.
 
 use crate::data::augment::AugPolicy;
 use crate::data::dataset::Dataset;
@@ -30,6 +48,73 @@ impl ClassSpec {
     pub fn with_cross_class_partner(mut self) -> ClassSpec {
         self.partner_from_any_class = true;
         self
+    }
+}
+
+/// Everything stochastic about one batch, captured by
+/// [`SbsSampler::plan_batch`]: materialization is a pure function of
+/// `(specs, dataset, plan)` and may run on any thread.
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    /// slot → destination index in the batch (the shuffle permutation).
+    perm: Vec<usize>,
+    /// One entry per slot, in class-block order.
+    items: Vec<PlanItem>,
+}
+
+impl BatchPlan {
+    /// Number of images this plan produces.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[derive(Clone, Debug)]
+struct PlanItem {
+    class: usize,
+    index: usize,
+    partner: Option<usize>,
+    /// Pre-split augmentation stream for this slot.
+    rng: Rng,
+}
+
+/// Phase 2 (pure, heavy, thread-safe): fetch + augment + place every slot
+/// of `plan` into `out`. `out` must already be sized `plan.len()` ×
+/// dataset shape (use [`ImageBatch::reset`] on a pooled batch). Callable
+/// concurrently from the loader's encode workers; identical inputs give
+/// byte-identical batches regardless of thread or call order.
+pub fn materialize_plan_into(
+    specs: &[ClassSpec],
+    dataset: &dyn Dataset,
+    plan: &BatchPlan,
+    out: &mut ImageBatch,
+) {
+    assert_eq!(out.n, plan.len(), "output batch not sized for the plan");
+    let k = out.num_classes;
+    let mut label_row = vec![0.0f32; k];
+    let mut prow = vec![0.0f32; k];
+    for (slot, item) in plan.items.iter().enumerate() {
+        let partner = item.partner.map(|p| dataset.get(p));
+        let (mut img, label) = dataset.get(item.index);
+        debug_assert_eq!(label, item.class);
+        label_row.fill(0.0);
+        label_row[label] = 1.0;
+        let mut rng = item.rng.clone();
+        let policy = &specs[item.class].policy;
+        if let Some((pimg, plabel)) = &partner {
+            prow.fill(0.0);
+            prow[*plabel] = 1.0;
+            policy.apply(&mut img, &mut label_row, Some((pimg, &prow)), &mut rng);
+        } else {
+            policy.apply(&mut img, &mut label_row, None, &mut rng);
+        }
+        let dst = plan.perm[slot];
+        out.image_mut(dst).copy_from_slice(&img.data);
+        out.label_mut(dst).copy_from_slice(&label_row);
     }
 }
 
@@ -170,64 +255,69 @@ impl SbsSampler {
         idx
     }
 
-    /// Produce the next batch: select per-class counts, fetch, pre-process
-    /// each class with its own policy (Algorithm 2's "pre-process & dump").
-    ///
-    /// Hot path (runs on the E-D producer thread): images are written
-    /// straight into their shuffled slot — no second batch copy — and the
-    /// per-slot policy is borrowed, not cloned (§Perf iteration 1).
-    pub fn next_batch(&mut self, dataset: &dyn Dataset) -> ImageBatch {
-        let (h, w, c) = dataset.shape();
-        let k = dataset.num_classes();
-        let mut batch = ImageBatch::zeros(self.batch_size, h, w, c, k);
+    /// Phase 1 (sequential, cheap): decide everything stochastic about the
+    /// next batch — per-class counts, drawn indices, partner indices, the
+    /// slot permutation and one pre-split RNG per slot — advancing this
+    /// sampler's state exactly as `next_batch` does. The returned plan can
+    /// be materialized on any thread (see [`materialize_plan_into`]).
+    pub fn plan_batch(&mut self, dataset: &dyn Dataset) -> BatchPlan {
         let counts = self.class_counts();
         // Slot permutation up front so class blocks don't create ordered
         // batches; images land in their final position directly.
         let mut perm: Vec<usize> = (0..self.batch_size).collect();
         self.rng.shuffle(&mut perm);
-        let mut label_row = vec![0.0f32; k];
-        let mut prow = vec![0.0f32; k];
-        let mut slot = 0;
+        let mut items = Vec::with_capacity(self.batch_size);
+        let mut slot = 0usize;
         for (class, &count) in counts.iter().enumerate() {
             for _ in 0..count {
-                let idx = self.draw_index(class);
-                let needs_partner = self.specs[class].policy.needs_partner();
-                let partner = if needs_partner {
+                let index = self.draw_index(class);
+                let partner = if self.specs[class].policy.needs_partner() {
                     // partner from the same class pool by default (keeps the
                     // SBS class ratio exact); cross-class when requested.
-                    let pidx = if self.specs[class].partner_from_any_class {
+                    Some(if self.specs[class].partner_from_any_class {
                         let mut r = Rng::new(self.rng.next_u64());
                         r.gen_range(dataset.len())
                     } else {
                         self.draw_index(class)
-                    };
-                    Some(dataset.get(pidx))
+                    })
                 } else {
                     None
                 };
-                let (mut img, label) = dataset.get(idx);
-                debug_assert_eq!(label, class);
-                label_row.fill(0.0);
-                label_row[label] = 1.0;
-                let mut rng = self.rng.split(slot as u64 ^ 0xA06);
+                let rng = self.rng.split(slot as u64 ^ 0xA06);
                 // advance parent stream so consecutive batches differ
                 let _ = self.rng.next_u64();
-                let policy = &self.specs[class].policy;
-                if let Some((pimg, plabel)) = &partner {
-                    prow.fill(0.0);
-                    prow[*plabel] = 1.0;
-                    policy.apply(&mut img, &mut label_row, Some((pimg, &prow)), &mut rng);
-                } else {
-                    policy.apply(&mut img, &mut label_row, None, &mut rng);
-                }
-                let dst = perm[slot];
-                batch.image_mut(dst).copy_from_slice(&img.data);
-                batch.label_mut(dst).copy_from_slice(&label_row);
+                items.push(PlanItem { class, index, partner, rng });
                 slot += 1;
             }
         }
         debug_assert_eq!(slot, self.batch_size);
+        BatchPlan { perm, items }
+    }
+
+    /// Produce the next batch: select per-class counts, fetch, pre-process
+    /// each class with its own policy (Algorithm 2's "pre-process & dump").
+    pub fn next_batch(&mut self, dataset: &dyn Dataset) -> ImageBatch {
+        let (h, w, c) = dataset.shape();
+        let k = dataset.num_classes();
+        let mut batch = ImageBatch::zeros(self.batch_size, h, w, c, k);
+        let plan = self.plan_batch(dataset);
+        materialize_plan_into(&self.specs, dataset, &plan, &mut batch);
         batch
+    }
+
+    /// `next_batch` into a caller-provided (pooled) batch — the hot-path
+    /// form; `out` is [`ImageBatch::reset`] to the right geometry.
+    pub fn next_batch_into(&mut self, dataset: &dyn Dataset, out: &mut ImageBatch) {
+        let (h, w, c) = dataset.shape();
+        out.reset(self.batch_size, h, w, c, dataset.num_classes());
+        let plan = self.plan_batch(dataset);
+        materialize_plan_into(&self.specs, dataset, &plan, out);
+    }
+
+    /// The per-class specs (what [`materialize_plan_into`] needs); the
+    /// loader clones these once per epoch for its workers.
+    pub fn specs(&self) -> &[ClassSpec] {
+        &self.specs
     }
 
     /// Number of batches in one nominal epoch over `dataset`.
@@ -405,6 +495,51 @@ mod tests {
             let bb = b.next_batch(&d);
             assert_eq!(ba.data, bb.data);
             assert_eq!(ba.labels, bb.labels);
+        }
+    }
+
+    #[test]
+    fn plan_then_materialize_equals_next_batch() {
+        let d = dataset(16, 4);
+        let mut a = SbsSampler::uniform(&d, 8, AugPolicy::standard(), 11).unwrap();
+        let mut b = SbsSampler::uniform(&d, 8, AugPolicy::standard(), 11).unwrap();
+        for _ in 0..3 {
+            let direct = a.next_batch(&d);
+            let plan = b.plan_batch(&d);
+            let mut via_plan = ImageBatch::zeros(8, 4, 4, 3, 4);
+            materialize_plan_into(b.specs(), &d, &plan, &mut via_plan);
+            assert_eq!(direct.data, via_plan.data);
+            assert_eq!(direct.labels, via_plan.labels);
+        }
+    }
+
+    #[test]
+    fn materialize_is_repeatable_from_the_same_plan() {
+        // The property the worker pool relies on: a plan can be realized
+        // any number of times, on any thread, with identical bytes.
+        let d = dataset(16, 4);
+        let mut s = SbsSampler::uniform(&d, 8, AugPolicy::parse("hflip,crop4,cutout4").unwrap(), 5)
+            .unwrap();
+        let plan = s.plan_batch(&d);
+        let mut x = ImageBatch::zeros(8, 4, 4, 3, 4);
+        let mut y = ImageBatch::zeros(8, 4, 4, 3, 4);
+        materialize_plan_into(s.specs(), &d, &plan, &mut x);
+        materialize_plan_into(s.specs(), &d, &plan, &mut y);
+        assert_eq!(x.data, y.data);
+        assert_eq!(x.labels, y.labels);
+    }
+
+    #[test]
+    fn next_batch_into_reuses_buffer() {
+        let d = dataset(16, 4);
+        let mut a = SbsSampler::uniform(&d, 8, AugPolicy::standard(), 13).unwrap();
+        let mut b = SbsSampler::uniform(&d, 8, AugPolicy::standard(), 13).unwrap();
+        let mut reused = ImageBatch::zeros(0, 0, 0, 0, 1);
+        for _ in 0..3 {
+            let fresh = a.next_batch(&d);
+            b.next_batch_into(&d, &mut reused);
+            assert_eq!(fresh.data, reused.data);
+            assert_eq!(fresh.labels, reused.labels);
         }
     }
 

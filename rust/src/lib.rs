@@ -19,6 +19,24 @@
 //!   planner, PJRT runtime and the training coordinator. Python never runs
 //!   on the training path.
 //!
+//! ## Feature flags
+//!
+//! * `pjrt` (default **off**) — compiles the real PJRT runtime against the
+//!   `xla` crate. Without it the crate builds a stub runtime
+//!   ([`runtime`]): everything except artifact execution — the E-D
+//!   producer pool, encoder, SBS sampler, memory simulator, planner and
+//!   their tests — works in environments with no PJRT toolchain.
+//!
+//! ## The E-D producer pool
+//!
+//! The parallel encode–decode loader ([`data::loader`]) is a multi-worker
+//! pipeline: a planner thread runs the sequential half of SBS sampling, N
+//! workers materialize + encode batches concurrently, and a sequencer
+//! restores step order. Buffers recycle through [`data::pool::BufferPool`]
+//! so steady-state epochs allocate nothing on the hot path, and any worker
+//! count reproduces the single-threaded batch stream bit-for-bit. Knobs:
+//! `num_workers` / `prefetch_depth` on [`config::TrainConfig`].
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -45,7 +63,8 @@ pub mod prelude {
     pub use crate::config::{Pipeline, TrainConfig};
     pub use crate::coordinator::{Trainer, TrainReport};
     pub use crate::data::encode::{EncodeSpec, Encoding};
-    pub use crate::data::loader::EdLoader;
+    pub use crate::data::loader::{EdLoader, LoaderMode};
+    pub use crate::data::pool::BufferPool;
     pub use crate::data::sampler::SbsSampler;
     pub use crate::data::synth::SynthCifar;
     pub use crate::memory::planner::{plan_checkpoints, PlannerKind};

@@ -3,16 +3,35 @@
 //! hot path. Python never runs here.
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` (tensor specs, file
-//!   names, hyper-parameters) with the in-crate JSON parser.
-//! * [`exec`] — compiles HLO text on the PJRT CPU client and drives the
+//!   names, hyper-parameters) with the in-crate JSON parser. Always
+//!   compiled (pure Rust).
+//! * `exec` — compiles HLO text on the PJRT CPU client and drives the
 //!   train/eval/init executables; training state lives as XLA `Literal`s
 //!   between steps (the 0.1.6 `xla` crate returns tuple outputs as a
 //!   single buffer, so state crosses the host boundary per step — see
-//!   DESIGN.md §Perf for the measured cost).
+//!   DESIGN.md §Perf for the measured cost). **Feature-gated**: only
+//!   compiled with `--features pjrt`, which pulls in the `xla` dependency.
+//! * `stub` — the default (no `pjrt` feature) stand-in exposing the same
+//!   `Runtime`/`LoadedModel`/`TrainState`/`state_io` API; construction
+//!   fails with a clear "built without the `pjrt` feature" error, so the
+//!   data pipeline, simulator, planner and all their tests build and run
+//!   in environments without a PJRT toolchain.
 
-pub mod exec;
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(feature = "pjrt")]
 pub mod state_io;
 
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::state_io;
+
+#[cfg(feature = "pjrt")]
 pub use exec::{LoadedModel, Runtime, StepOutput, TrainState};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedModel, Runtime, StepOutput, TrainState};
+
 pub use manifest::{BatchKind, Dtype, Manifest, ManifestEntry, TensorSpec};

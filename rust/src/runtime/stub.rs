@@ -1,0 +1,146 @@
+//! Runtime stand-in for builds without the `pjrt` feature.
+//!
+//! Mirrors the public API of [`exec`]/[`state_io`] so the trainer, CLI,
+//! benches and examples compile unchanged; every entry point that would
+//! need a real PJRT backend fails with [`NO_PJRT`]. The rest of the crate
+//! (data pipeline, producer pool, memory simulator, checkpoint planner) is
+//! fully functional without the feature — which is exactly what the tier-1
+//! test environment exercises.
+//!
+//! [`exec`]: crate::runtime
+//! [`state_io`]: crate::runtime::state_io
+
+use crate::data::loader::BatchPayload;
+use crate::runtime::manifest::{Manifest, ManifestEntry};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// The error every backend-requiring path reports.
+pub const NO_PJRT: &str = "optorch was built without the `pjrt` feature; \
+    rebuild with `cargo build --features pjrt` (and point \
+    rust/vendor/xla-stub at the real `xla` crate) to execute AOT artifacts";
+
+/// Stub of the PJRT client + executable cache. Never constructible.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+/// Training state: host-side f32 tensors in manifest order. The stub keeps
+/// the same shape of API (`len`/`bytes`/public `tensors`) as the real
+/// `Literal`-backed state.
+pub struct TrainState {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl TrainState {
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total bytes held.
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.len() * 4).sum()
+    }
+}
+
+/// Output of one train/eval step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Correct predictions in the batch.
+    pub correct: u32,
+    pub batch_size: u32,
+}
+
+impl StepOutput {
+    pub fn accuracy(&self) -> f64 {
+        if self.batch_size == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.batch_size as f64
+        }
+    }
+}
+
+/// Stub of a (model, pipeline)'s compiled executables.
+pub struct LoadedModel {
+    pub entry: ManifestEntry,
+}
+
+impl Runtime {
+    /// Always fails: executing artifacts needs the `pjrt` feature.
+    pub fn new(_artifacts_dir: &Path) -> Result<Runtime> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn load(&mut self, _model: &str, _pipeline: &str) -> Result<LoadedModel> {
+        bail!(NO_PJRT);
+    }
+}
+
+impl LoadedModel {
+    pub fn init_state(&self, _seed: u64) -> Result<TrainState> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn train_step(&self, _state: &mut TrainState, _payload: &BatchPayload) -> Result<StepOutput> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn train_step_lr(
+        &self,
+        _state: &mut TrainState,
+        _payload: &BatchPayload,
+        _lr: f32,
+    ) -> Result<StepOutput> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn eval_step(&self, _state: &TrainState, _payload: &BatchPayload) -> Result<StepOutput> {
+        bail!(NO_PJRT);
+    }
+}
+
+/// Checkpoint save/load stand-ins (same signatures as the real module).
+pub mod state_io {
+    use super::{ManifestEntry, TrainState, NO_PJRT};
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    pub fn save(_path: &Path, _entry: &ManifestEntry, _state: &TrainState) -> Result<()> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn load(_path: &Path, _entry: &ManifestEntry) -> Result<TrainState> {
+        bail!(NO_PJRT);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_construction_reports_missing_feature() {
+        let err = Runtime::new(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn state_shape_helpers() {
+        let s = TrainState { tensors: vec![vec![0.0; 4], vec![0.0; 2]] };
+        assert_eq!(s.len(), 2);
+        assert!(!s.is_empty());
+        assert_eq!(s.bytes(), 24);
+        let out = StepOutput { loss: 1.0, correct: 3, batch_size: 4 };
+        assert!((out.accuracy() - 0.75).abs() < 1e-9);
+    }
+}

@@ -34,7 +34,8 @@ fn cli_parse_mirrors_train_config_keys() {
     let cli = Cli::parse(
         "train --model tiny_cnn --pipeline ed+sc --epochs 2 --batch_size 16 \
          --train_size 320 --test_size 64 --seed 9 --prefetch_depth 2 \
-         --augment hflip --eval_every 1 --max_batches_per_epoch 3 --dataset synth10"
+         --num_workers 3 --augment hflip --eval_every 1 \
+         --max_batches_per_epoch 3 --dataset synth10"
             .split_whitespace()
             .map(String::from),
     )
@@ -43,6 +44,7 @@ fn cli_parse_mirrors_train_config_keys() {
     assert_eq!(cfg.model, "tiny_cnn");
     assert_eq!(cfg.seed, 9);
     assert_eq!(cfg.max_batches_per_epoch, 3);
+    assert_eq!(cfg.num_workers, Some(3));
 }
 
 #[test]
@@ -73,20 +75,28 @@ fn corrupted_dump_bytes_never_panic() {
 
 #[test]
 fn loader_drop_under_backpressure_terminates() {
-    // producer blocked on a full queue + consumer drops: must not deadlock
+    // producers blocked on a full queue + consumer drops: must not deadlock,
+    // for the legacy single producer and for the worker pool alike
     use optorch::data::augment::AugPolicy;
     use optorch::data::dataset::Dataset;
     use optorch::data::loader::{EdLoader, LoaderMode};
     use optorch::data::sampler::SbsSampler;
     use optorch::data::synth::{Split, SynthCifar};
     use std::sync::Arc;
-    for _ in 0..5 {
-        let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 400, 3));
-        let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), 1).unwrap();
-        let mut loader =
-            EdLoader::new(d, sampler, None, 50, LoaderMode::Parallel { prefetch_depth: 1 });
-        let _ = loader.next();
-        drop(loader);
+    for num_workers in [0, 1, 4] {
+        for _ in 0..3 {
+            let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 400, 3));
+            let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), 1).unwrap();
+            let mut loader = EdLoader::new(
+                d,
+                sampler,
+                None,
+                50,
+                LoaderMode::Parallel { prefetch_depth: 1, num_workers },
+            );
+            let _ = loader.next();
+            drop(loader);
+        }
     }
 }
 

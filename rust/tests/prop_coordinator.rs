@@ -150,8 +150,8 @@ fn prop_sbs_batch_composition_matches_weights() {
 #[test]
 fn prop_parallel_loader_equals_sync() {
     check_with("parallel == sync loader", 16, 0x10AD, |rng| {
-        (rng.next_u64(), 1 + rng.gen_range(6))
-    }, |(seed, batches)| {
+        (rng.next_u64(), 1 + rng.gen_range(6), rng.gen_range(5))
+    }, |(seed, batches, num_workers)| {
         let make = |mode| {
             let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 200, 3));
             let sampler =
@@ -160,14 +160,17 @@ fn prop_parallel_loader_equals_sync() {
             EdLoader::new(d, sampler, spec, *batches, mode)
         };
         let mut a = make(LoaderMode::Synchronous);
-        let mut b = make(LoaderMode::Parallel { prefetch_depth: 2 });
+        let mut b = make(LoaderMode::Parallel {
+            prefetch_depth: 2,
+            num_workers: *num_workers,
+        });
         loop {
             match (a.next(), b.next()) {
                 (None, None) => return Ok(()),
                 (Some(BatchPayload::Encoded(x)), Some(BatchPayload::Encoded(y))) => {
                     for (gx, gy) in x.iter().zip(&y) {
                         if gx.words_u64 != gy.words_u64 || gx.labels != gy.labels {
-                            return Err("payload mismatch".into());
+                            return Err(format!("payload mismatch ({num_workers} workers)"));
                         }
                     }
                 }

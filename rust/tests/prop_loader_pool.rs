@@ -1,0 +1,233 @@
+//! Property tests for the multi-worker E-D data path:
+//!
+//! * encode→decode is bit-exact for every `(encoding, word type, n)` with
+//!   `n = 1..=capacity` — including the `*_into` buffer-reusing variants;
+//! * the worker-pool loader is deterministic: for the same seed, every
+//!   worker count yields the byte-identical payload sequence of the
+//!   classic single-producer path (`num_workers = 0`);
+//! * steady-state epochs are allocation-free as measured by the
+//!   [`BufferPool`] counters.
+
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{
+    decode_batch, encode_batch, encode_batch_into, EncodeSpec, EncodedBatch, Encoding, WordType,
+};
+use optorch::data::image::ImageBatch;
+use optorch::data::loader::{dump, BatchPayload, EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::util::propcheck::check_with;
+use optorch::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_batch(rng: &mut Rng, n: usize, h: usize, w: usize, c: usize) -> ImageBatch {
+    let mut b = ImageBatch::zeros(n, h, w, c, 10);
+    for v in b.data.iter_mut() {
+        *v = (rng.next_u32() & 0xff) as u8;
+    }
+    for i in 0..n {
+        let cls = rng.gen_range(10);
+        b.label_mut(i)[cls] = 1.0;
+    }
+    b
+}
+
+/// Exhaustive over the whole (encoding, word, n) grid, randomized over
+/// image contents/shapes: the roundtrip must be bit-exact at every fill
+/// level, and the buffer-reusing encoder must agree with the allocating
+/// one even when its shell carries stale state from a previous batch.
+#[test]
+fn prop_roundtrip_bit_exact_across_fill_levels() {
+    check_with("roundtrip n=1..=capacity", 24, 0xE0C0DE, |rng| {
+        (rng.next_u64(), 1 + rng.gen_range(12), 1 + rng.gen_range(12), 1 + rng.gen_range(3))
+    }, |(seed, h, w, c)| {
+        let mut rng = Rng::new(*seed);
+        let mut shell: Option<EncodedBatch> = None;
+        for encoding in [Encoding::Base256, Encoding::Lossless128] {
+            for word in [WordType::U64, WordType::F64] {
+                let spec = EncodeSpec::new(encoding, word);
+                for n in 1..=spec.capacity() {
+                    let b = random_batch(&mut rng, n, *h, *w, *c);
+                    let enc = encode_batch(&b, spec).map_err(|e| e.to_string())?;
+                    if decode_batch(&enc) != b {
+                        return Err(format!("{spec:?} n={n}: roundtrip mismatch"));
+                    }
+                    // reuse one shell across every spec/n — worst case for
+                    // stale-buffer bugs
+                    let mut sh = shell.take().unwrap_or_else(|| EncodedBatch::empty(spec));
+                    encode_batch_into(&b, spec, &mut sh).map_err(|e| e.to_string())?;
+                    if sh.words_u64 != enc.words_u64
+                        || sh.words_f64 != enc.words_f64
+                        || sh.offsets != enc.offsets
+                        || sh.labels != enc.labels
+                    {
+                        return Err(format!("{spec:?} n={n}: into-variant diverged"));
+                    }
+                    shell = Some(sh);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn loader_with(
+    seed: u64,
+    batches: usize,
+    spec: Option<EncodeSpec>,
+    mode: LoaderMode,
+    pool: Arc<BufferPool>,
+) -> EdLoader {
+    let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 240, 9));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4,cutout4").unwrap(),
+        seed,
+    )
+    .unwrap();
+    EdLoader::with_pool(d, sampler, spec, batches, mode, pool)
+}
+
+/// Serialize a payload to comparable bytes (dump covers words, offsets,
+/// labels and geometry — the full shipped content).
+fn payload_bytes(p: &BatchPayload) -> Vec<u8> {
+    match p {
+        BatchPayload::Raw { data, labels, n } => {
+            let mut out = (*n as u64).to_le_bytes().to_vec();
+            for v in data.iter().chain(labels) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        BatchPayload::Encoded(groups) => {
+            let mut out = Vec::new();
+            for g in groups {
+                out.extend_from_slice(&dump::to_bytes(g));
+            }
+            out
+        }
+    }
+}
+
+/// The determinism contract the trainer relies on: same seed ⇒ same batch
+/// order and payload bytes, no matter how many workers race to produce.
+#[test]
+fn prop_worker_pool_is_deterministic_vs_single_producer() {
+    check_with("pool == single producer", 8, 0xD17E, |rng| {
+        (rng.next_u64(), 2 + rng.gen_range(8), rng.bool(0.5))
+    }, |(seed, batches, encoded)| {
+        let spec = encoded.then(|| EncodeSpec::new(Encoding::Base256, WordType::F64));
+        let reference: Vec<Vec<u8>> = {
+            let mut l = loader_with(
+                *seed,
+                *batches,
+                spec,
+                LoaderMode::Parallel { prefetch_depth: 2, num_workers: 0 },
+                Arc::new(BufferPool::default()),
+            );
+            let mut out = Vec::new();
+            while let Some(p) = l.next() {
+                out.push(payload_bytes(&p));
+                l.recycle(p);
+            }
+            out
+        };
+        if reference.len() != *batches {
+            return Err(format!("reference yielded {} of {batches}", reference.len()));
+        }
+        for workers in [1, 2, 4, 8] {
+            let mut l = loader_with(
+                *seed,
+                *batches,
+                spec,
+                LoaderMode::Parallel { prefetch_depth: 2, num_workers: workers },
+                Arc::new(BufferPool::default()),
+            );
+            let mut step = 0;
+            while let Some(p) = l.next() {
+                if payload_bytes(&p) != reference[step] {
+                    return Err(format!("workers={workers}: step {step} diverged"));
+                }
+                l.recycle(p);
+                step += 1;
+            }
+            if step != *batches {
+                return Err(format!("workers={workers}: yielded {step} of {batches}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Zero-allocation steady state, synchronous mode (deterministic): after a
+/// two-batch warmup the pool must serve every request from recycled
+/// buffers — across epoch boundaries too, because the trainer shares one
+/// pool across all its epoch-scoped loaders.
+#[test]
+fn sync_epochs_are_allocation_free_at_steady_state() {
+    let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::F64));
+    let pool = Arc::new(BufferPool::default());
+    // epoch 0: warmup
+    let mut warm = loader_with(5, 4, spec, LoaderMode::Synchronous, pool.clone());
+    while let Some(p) = warm.next() {
+        warm.recycle(p);
+    }
+    drop(warm);
+    let warm_allocs = pool.allocs();
+    assert!(warm_allocs > 0, "warmup must have populated the pool");
+    // epochs 1..3: must not allocate at all
+    for epoch in 1..4 {
+        let mut l = loader_with(5 + epoch, 6, spec, LoaderMode::Synchronous, pool.clone());
+        while let Some(p) = l.next() {
+            l.recycle(p);
+        }
+        assert_eq!(
+            pool.allocs(),
+            warm_allocs,
+            "epoch {epoch} allocated on the hot path"
+        );
+    }
+    assert!(pool.reuses() > warm_allocs, "steady state must run on reuses");
+}
+
+/// The same property for the worker pool. Thread timing decides how many
+/// payloads are in flight at once, so the bound is the worst-case
+/// in-flight count rather than exactly zero: the loader's permit gate caps
+/// payloads at `prefetch_depth + num_workers`, plus one in the consumer's
+/// hand — once that many buffer sets exist, further epochs must stop
+/// allocating.
+#[test]
+fn worker_pool_allocation_is_bounded_by_in_flight_slots() {
+    let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::F64));
+    let (depth, workers, batches) = (2usize, 3usize, 20usize);
+    let mode = LoaderMode::Parallel { prefetch_depth: depth, num_workers: workers };
+    let pool = Arc::new(BufferPool::default());
+    // warm epoch
+    let mut l = loader_with(11, batches, spec, mode, pool.clone());
+    while let Some(p) = l.next() {
+        l.recycle(p);
+    }
+    drop(l);
+    let warm_allocs = pool.allocs();
+    // a payload is a shell + 3 groups × (words_u64 scratch, words_f64, labels)
+    let bufs_per_payload = 1 + 3 * 3;
+    // the gate's hard bound + the consumer's hand + one slot of slack
+    let max_in_flight = depth + workers + 2;
+    for epoch in 0..3 {
+        let mut l = loader_with(13 + epoch, batches, spec, mode, pool.clone());
+        while let Some(p) = l.next() {
+            l.recycle(p);
+        }
+        drop(l);
+        let bound = (max_in_flight * bufs_per_payload) as u64;
+        assert!(
+            pool.allocs() <= warm_allocs + bound,
+            "epoch {epoch}: allocs {} exceed warm {warm_allocs} + bound {bound}",
+            pool.allocs()
+        );
+    }
+    assert!(pool.reuses() > 0);
+}

@@ -1,0 +1,229 @@
+//! Stub of the `xla` crate (0.1.x API surface used by `optorch`).
+//!
+//! Host-side [`Literal`] construction/inspection works (enough for payload
+//! marshaling code and its unit tests); everything touching a real PJRT
+//! backend — [`PjRtClient::cpu`], compilation, execution — returns
+//! [`Error`] with a pointer at the swap instructions. Replace this path
+//! dependency with the upstream `xla` crate to run real training.
+
+const STUB_MSG: &str = "xla stub: PJRT backend not available in this build — \
+    replace rust/vendor/xla-stub with the real `xla` crate (see rust/README.md)";
+
+/// Stub error (implements `std::error::Error`, unlike optorch's anyhow shim
+/// error, so it flows through `?` and `.context(...)`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+/// XLA element types (the real crate splits `PrimitiveType`/`ElementType`;
+/// the stub aliases them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F16,
+    F32,
+    F64,
+    U32,
+    U64,
+}
+
+pub type ElementType = PrimitiveType;
+
+impl PrimitiveType {
+    fn byte_size(self) -> usize {
+        match self {
+            PrimitiveType::F16 => 2,
+            PrimitiveType::F32 | PrimitiveType::U32 => 4,
+            PrimitiveType::F64 | PrimitiveType::U64 => 8,
+        }
+    }
+}
+
+/// Rust scalar types a [`Literal`] can be built from / read back as.
+pub trait NativeType: Copy {
+    const TY: PrimitiveType;
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: PrimitiveType = $ty;
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            fn from_f64(v: f64) -> Self {
+                v as Self
+            }
+        }
+    };
+}
+
+native!(f32, PrimitiveType::F32);
+native!(f64, PrimitiveType::F64);
+native!(u32, PrimitiveType::U32);
+native!(u64, PrimitiveType::U64);
+
+/// Host tensor: values are held widened to f64; the tag tracks the logical
+/// element type (adequate for marshaling-shape tests, not for bit-exact
+/// numerics — which only matter beyond the stub boundary anyway).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+    values: Vec<f64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            dims: vec![v.len() as i64],
+            values: v.iter().map(|x| x.to_f64()).collect(),
+        }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { ty: PrimitiveType::F32, dims: vec![], values: vec![v as f64] }
+    }
+
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.values.len() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elems) from {} elems",
+                self.values.len()
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        let mut out = self.clone();
+        out.ty = ty;
+        Ok(out)
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.values.len() * self.ty.byte_size()
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        match self.values.first() {
+            Some(&v) => Ok(T::from_f64(v)),
+            None => Err(Error("get_first_element on empty literal".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.values.iter().map(|&v| T::from_f64(v)).collect())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+}
+
+/// Parsed HLO module (stub: never constructible — parsing needs the backend).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.size_bytes(), 16);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        assert!(Literal::vec1(&[1.0f32; 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn convert_retags() {
+        let l = Literal::vec1(&[1.0f32; 4]).convert(PrimitiveType::F16).unwrap();
+        assert_eq!(l.size_bytes(), 8);
+    }
+
+    #[test]
+    fn backend_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
