@@ -8,7 +8,8 @@
 //! ```
 
 use optorch::config::Pipeline;
-use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::coordinator::report;
+use optorch::memory::planner::{pareto_frontier, plan_checkpoints, PlannerKind};
 use optorch::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
 use optorch::util::bench::{fmt_bytes, Table};
 
@@ -70,4 +71,14 @@ fn main() {
         ]);
     }
     t.print();
+
+    println!("\n=== resnet50 time/memory Pareto frontier (batch 16 @ 224²) ===\n");
+    let arch = arch_by_name("resnet50", (224, 224, 3), 1000).unwrap();
+    let frontier = pareto_frontier(&arch, Pipeline::BASELINE, batch, 16);
+    report::frontier_table(&frontier).print();
+    println!(
+        "\n→ every row is a non-dominated (memory, recompute-time) trade; train under one\n\
+         with `optorch train --pipeline ed+sc --memory_budget <peak>` and the trainer\n\
+         auto-selects the cheapest-time plan that fits."
+    );
 }

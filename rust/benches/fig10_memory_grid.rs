@@ -2,12 +2,37 @@
 //! 6 pipelines for one batch iteration (16 images @ 512×512×3), from the
 //! analytic simulator. The paper's shape: M-P ≈ ½ B; S-C < ½ B on deep
 //! nets; S-C+M-P ≈ ¼ B; E-D trims the input term.
+//!
+//! Emits `BENCH_memory.json` (model × pipeline peak bytes) alongside the
+//! table, matching the `BENCH_encode.json` convention, so future memory
+//! regressions are machine-checkable.
 
 use optorch::config::Pipeline;
 use optorch::memory::planner::{plan_checkpoints, PlannerKind};
 use optorch::memory::simulator::simulate;
 use optorch::models::{arch_by_name, paper_fig10_models};
 use optorch::util::bench::Table;
+
+fn write_json(
+    batch: usize,
+    pipes: &[Pipeline],
+    grid: &[(String, Vec<u64>)],
+) -> std::io::Result<()> {
+    let mut j = format!("{{\n  \"batch\": {batch},\n  \"resolution\": 512,\n  \"grid\": [\n");
+    for (i, (model, peaks)) in grid.iter().enumerate() {
+        j.push_str(&format!("    {{\"model\": \"{model}\", \"peak_bytes\": {{"));
+        for (k, (pipe, peak)) in pipes.iter().zip(peaks).enumerate() {
+            j.push_str(&format!(
+                "\"{}\": {peak}{}",
+                pipe.name(),
+                if k + 1 < peaks.len() { ", " } else { "" }
+            ));
+        }
+        j.push_str(&format!("}}}}{}\n", if i + 1 < grid.len() { "," } else { "" }));
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write("BENCH_memory.json", j)
+}
 
 fn main() {
     let batch = 16;
@@ -19,22 +44,32 @@ fn main() {
     let mut table = Table::new(&hdr_refs);
     let gib = |b: u64| format!("{:.2}", b as f64 / (1024.0 * 1024.0 * 1024.0));
 
+    let mut grid: Vec<(String, Vec<u64>)> = Vec::new();
     for model in paper_fig10_models() {
         // EfficientNets at their native resolutions would OOM a P100 at 512²
         // too; the paper plots them all at the same workload, so we do.
         let arch = arch_by_name(&model, (512, 512, 3), 1000).unwrap();
         let mut row = vec![model.clone()];
+        let mut peaks = Vec::new();
         for &pipe in &pipes {
             let ckpts = if pipe.sc {
                 plan_checkpoints(&arch, PlannerKind::Optimal, pipe, batch).checkpoints
             } else {
                 vec![]
             };
-            row.push(gib(simulate(&arch, pipe, batch, &ckpts).peak_bytes));
+            let peak = simulate(&arch, pipe, batch, &ckpts).peak_bytes;
+            row.push(gib(peak));
+            peaks.push(peak);
         }
         table.row(&row);
+        grid.push((model, peaks));
     }
     table.print();
+
+    match write_json(batch, &pipes, &grid) {
+        Ok(()) => println!("\nwrote BENCH_memory.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_memory.json: {e}"),
+    }
 
     // The paper's quoted ResNet-50 row: B 2 GB, M-P 1 GB, S-C 0.8, S-C+M-P 0.4.
     let arch = arch_by_name("resnet50", (512, 512, 3), 1000).unwrap();

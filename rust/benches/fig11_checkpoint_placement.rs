@@ -32,6 +32,10 @@ fn dense_net(name: &str, widths: &[usize]) -> ArchProfile {
 }
 
 fn main() {
+    // OPTORCH_BENCH_CHECK=1: fail the process when a reproduced claim or a
+    // planner invariant breaks (the CI bench-smoke gate).
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let mut failures = 0u32;
     let batch = 16;
     // Same total activation volume, different shapes.
     let auto = dense_net("autoencoder7", &[512, 256, 64, 16, 64, 256, 512]);
@@ -71,6 +75,9 @@ fn main() {
         fmt_bytes(wide.peak_bytes),
         if narrow.peak_bytes < wide.peak_bytes { "HOLDS" } else { "VIOLATED" }
     );
+    if narrow.peak_bytes >= wide.peak_bytes {
+        failures += 1;
+    }
 
     println!("\n=== checkpoint-count sweep (resnet50 @ 512², batch 16) ===\n");
     let arch = arch_by_name("resnet50", (512, 512, 3), 1000).unwrap();
@@ -93,4 +100,22 @@ fn main() {
         format!("{:.0}%", opt.recompute_overhead * 100.0),
     ]);
     t.print();
+
+    // The exact DP must never lose to the uniform sweep it is printed under.
+    for k in [1, 2, 4, 6, 8, 12] {
+        let u = plan_checkpoints(&arch, PlannerKind::Uniform(k), Pipeline::BASELINE, batch);
+        if opt.peak_bytes > u.peak_bytes {
+            eprintln!("FAIL: optimal {} worse than uniform{k} {}", opt.peak_bytes, u.peak_bytes);
+            failures += 1;
+        }
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        if check {
+            std::process::exit(1);
+        }
+    } else if check {
+        println!("\ncheck mode: all Fig-11 invariants hold");
+    }
 }

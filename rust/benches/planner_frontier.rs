@@ -1,0 +1,282 @@
+//! Checkpoint-planner benchmark: the exact DP (PR 2) vs the pre-PR-2
+//! budget search that called the timeline-materializing simulator per
+//! candidate. Reports plan time, plan quality (peak bytes), the per-call
+//! cost of the zero-allocation peak evaluator vs `simulate`, and the
+//! time/memory Pareto frontier per architecture.
+//!
+//! Emits `BENCH_planner.json` (per arch: old/new plan ns + speedup, old/new
+//! peak bytes, evaluator vs simulate ns, frontier points).
+//!
+//! `OPTORCH_BENCH_CHECK=1` runs a fast smoke pass that *fails the process*
+//! when an invariant breaks: DP peak worse than the old search, a
+//! non-Pareto frontier, or any heap allocation inside `PeakEvaluator::peak`
+//! (counted by a global allocator shim).
+
+use optorch::config::Pipeline;
+use optorch::memory::peak::PeakEvaluator;
+use optorch::memory::planner::{
+    pareto_frontier, plan_checkpoints, CheckpointPlan, PlannerKind, DEFAULT_FRONTIER_LEVELS,
+};
+use optorch::memory::simulator::simulate;
+use optorch::models::{arch_by_name, ArchProfile};
+use optorch::util::bench::{bench, fmt_bytes, fmt_ns, Table};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; only adds a counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// The pre-PR-2 `PlannerKind::Optimal` — O(n²) candidate interior budgets,
+/// greedy packing, one full `simulate` call per candidate — kept verbatim
+/// as the speed/quality reference the DP is measured against.
+fn old_budget_search(arch: &ArchProfile, pipeline: Pipeline, batch: usize) -> Vec<usize> {
+    let n = arch.layers.len();
+    let acts: Vec<u64> = arch.layers.iter().map(|l| l.act_elems).collect();
+    let mut candidates: Vec<u64> = Vec::new();
+    for i in 0..n {
+        let mut s = 0u64;
+        for a in acts.iter().skip(i) {
+            s += a;
+            candidates.push(s);
+        }
+    }
+    candidates.sort_unstable();
+    candidates.dedup();
+    let mut best: Option<(u64, Vec<usize>)> = None;
+    for &budget in &candidates {
+        let mut cps = Vec::new();
+        let mut interior = 0u64;
+        let mut feasible = true;
+        for (i, &a) in acts.iter().enumerate() {
+            if a > budget {
+                feasible = false;
+                break;
+            }
+            if interior + a > budget {
+                cps.push(i.saturating_sub(1));
+                interior = 0;
+            }
+            interior += a;
+        }
+        if !feasible {
+            continue;
+        }
+        cps.dedup();
+        let peak = simulate(arch, pipeline, batch, &cps).peak_bytes;
+        match &best {
+            Some((bp, _)) if *bp <= peak => {}
+            _ => best = Some((peak, cps)),
+        }
+        if best.as_ref().map(|(_, c)| c.is_empty()).unwrap_or(false) {
+            break;
+        }
+    }
+    best.map(|(_, c)| c).unwrap_or_default()
+}
+
+struct ArchRow {
+    name: String,
+    depth: usize,
+    old_ns: f64,
+    new_ns: f64,
+    old_peak: u64,
+    new_peak: u64,
+    eval_ns: f64,
+    simulate_ns: f64,
+    frontier: Vec<CheckpointPlan>,
+}
+
+fn write_json(batch: usize, rows: &[ArchRow]) -> std::io::Result<()> {
+    let mut j = format!("{{\n  \"batch\": {batch},\n  \"archs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"arch\": \"{}\", \"depth\": {}, \"old_plan_ns\": {:.0}, \
+             \"new_plan_ns\": {:.0}, \"speedup\": {:.1}, \"old_peak_bytes\": {}, \
+             \"new_peak_bytes\": {}, \"peak_eval_ns\": {:.0}, \"simulate_ns\": {:.0}, \
+             \"frontier\": [",
+            r.name,
+            r.depth,
+            r.old_ns,
+            r.new_ns,
+            r.old_ns / r.new_ns,
+            r.old_peak,
+            r.new_peak,
+            r.eval_ns,
+            r.simulate_ns,
+        ));
+        for (k, p) in r.frontier.iter().enumerate() {
+            j.push_str(&format!(
+                "{{\"peak_bytes\": {}, \"n_checkpoints\": {}, \"recompute_overhead\": {:.4}}}{}",
+                p.peak_bytes,
+                p.checkpoints.len(),
+                p.recompute_overhead,
+                if k + 1 < r.frontier.len() { ", " } else { "" }
+            ));
+        }
+        j.push_str(&format!("]}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write("BENCH_planner.json", j)
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let iters = if check { 3 } else { 20 };
+    let batch = 16;
+    let mut sc = Pipeline::BASELINE;
+    sc.sc = true;
+    let mut failures = 0u32;
+    let mut rows: Vec<ArchRow> = Vec::new();
+
+    println!("=== checkpoint planner: exact DP vs pre-PR-2 budget search (batch {batch}) ===\n");
+    let mut t = Table::new(&[
+        "arch",
+        "depth",
+        "old plan",
+        "new plan",
+        "speedup",
+        "old peak",
+        "new peak",
+        "frontier pts",
+    ]);
+    for name in ["resnet18", "resnet50", "resnet101", "efficientnet_b0", "inception_v3"] {
+        let hw = if name == "inception_v3" { 299 } else { 224 };
+        let arch = arch_by_name(name, (hw, hw, 3), 1000).unwrap();
+
+        let old_stats = bench(1, iters, || {
+            let _ = old_budget_search(&arch, sc, batch);
+        });
+        let old_plan = old_budget_search(&arch, sc, batch);
+        let old_peak = simulate(&arch, sc, batch, &old_plan).peak_bytes;
+
+        let new_stats = bench(1, iters, || {
+            let _ = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+        });
+        let new_plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+
+        if new_plan.peak_bytes > old_peak {
+            eprintln!(
+                "FAIL {name}: DP peak {} worse than old search {}",
+                new_plan.peak_bytes, old_peak
+            );
+            failures += 1;
+        }
+
+        // per-call cost: zero-alloc evaluator vs timeline simulator
+        let probe = plan_checkpoints(&arch, PlannerKind::Sqrt, Pipeline::BASELINE, batch);
+        let mut ev = PeakEvaluator::new(&arch, sc, batch);
+        let eval_stats = bench(2, iters * 5, || {
+            let _ = ev.peak(&probe.checkpoints);
+        });
+        let sim_stats = bench(2, iters, || {
+            let _ = simulate(&arch, sc, batch, &probe.checkpoints);
+        });
+
+        // allocation audit: N evaluator calls must not touch the heap
+        let before = ALLOC_COUNT.load(Ordering::Relaxed);
+        let mut sink = 0u64;
+        for _ in 0..256 {
+            sink = sink.wrapping_add(ev.peak(&probe.checkpoints));
+        }
+        std::hint::black_box(sink);
+        let allocs = ALLOC_COUNT.load(Ordering::Relaxed) - before;
+        if allocs != 0 {
+            eprintln!("FAIL {name}: {allocs} allocations across 256 peak() calls");
+            failures += 1;
+        }
+
+        let frontier = pareto_frontier(&arch, Pipeline::BASELINE, batch, DEFAULT_FRONTIER_LEVELS);
+        for w in frontier.windows(2) {
+            if w[0].peak_bytes >= w[1].peak_bytes
+                || w[0].recompute_overhead <= w[1].recompute_overhead
+            {
+                eprintln!("FAIL {name}: frontier not strictly Pareto");
+                failures += 1;
+                break;
+            }
+        }
+
+        t.row(&[
+            name.to_string(),
+            format!("{}", arch.depth()),
+            fmt_ns(old_stats.median_ns),
+            fmt_ns(new_stats.median_ns),
+            format!("{:.1}x", old_stats.median_ns / new_stats.median_ns),
+            fmt_bytes(old_peak),
+            fmt_bytes(new_plan.peak_bytes),
+            format!("{}", frontier.len()),
+        ]);
+        rows.push(ArchRow {
+            name: name.to_string(),
+            depth: arch.depth(),
+            old_ns: old_stats.median_ns,
+            new_ns: new_stats.median_ns,
+            old_peak,
+            new_peak: new_plan.peak_bytes,
+            eval_ns: eval_stats.median_ns,
+            simulate_ns: sim_stats.median_ns,
+            frontier,
+        });
+    }
+    t.print();
+
+    println!("\n=== peak evaluation: zero-alloc closed form vs timeline simulator ===\n");
+    let mut t = Table::new(&["arch", "evaluator", "simulate", "speedup"]);
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            fmt_ns(r.eval_ns),
+            fmt_ns(r.simulate_ns),
+            format!("{:.0}x", r.simulate_ns / r.eval_ns),
+        ]);
+    }
+    t.print();
+
+    if let Some(r50) = rows.iter().find(|r| r.name == "resnet50") {
+        println!(
+            "\nresnet50 frontier: {} non-dominated plans from {} (min peak, +{:.0}% FLOPs) \
+             to {} (zero recompute); planning {:.1}x faster than the old budget search",
+            r50.frontier.len(),
+            fmt_bytes(r50.frontier.first().unwrap().peak_bytes),
+            r50.frontier.first().unwrap().recompute_overhead * 100.0,
+            fmt_bytes(r50.frontier.last().unwrap().peak_bytes),
+            r50.old_ns / r50.new_ns
+        );
+    }
+
+    match write_json(batch, &rows) {
+        Ok(()) => println!("\nwrote BENCH_planner.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_planner.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: all planner invariants hold");
+    }
+}

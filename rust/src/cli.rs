@@ -83,13 +83,19 @@ COMMANDS:
   train     Train a model.            --model NAME --pipeline b|ed|mp|sc|ed+sc|...
             [--epochs N] [--batch_size N] [--dataset synth10|synth100|cifar10]
             [--config FILE] [--train_size N] [--seed N]
-            [--num_workers N|auto] [--prefetch_depth N] ...
+            [--num_workers N|auto] [--prefetch_depth N]
+            [--memory_budget BYTES] ...
             E-D producer pool: num_workers sizes the encode-worker pool
             (0 = single producer thread, auto = cores-1, default auto);
             prefetch_depth bounds how far producers run ahead.
+            memory_budget (S-C pipelines; accepts 786432 / 512MiB / 1.5GB)
+            trains under the cheapest-time checkpoint plan that fits.
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
-  plan      Plan checkpoint placement. --model NAME [--budget BYTES] [--kind dp|sqrt|uniform]
+  plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
+            [--kind dp|sqrt|uniformK|bottleneckK] [--frontier]
+            [--budget BYTES]  (prints the DP time/memory Pareto frontier
+            and, with --budget, the cheapest-time plan that fits)
   models    List architecture profiles and parameter counts.
   figures   Regenerate all paper figures (shortcut for the benches).
   help      Show this message.

@@ -7,4 +7,4 @@ mod train;
 
 pub use kv::{parse_kv, KvError, KvGet};
 pub use pipeline::Pipeline;
-pub use train::{DatasetChoice, TrainConfig};
+pub use train::{parse_bytes, DatasetChoice, TrainConfig};

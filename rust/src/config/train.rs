@@ -37,6 +37,35 @@ impl DatasetChoice {
     }
 }
 
+/// Parse a byte count: a plain integer, or a number with a `B`/`KB`/`MB`/
+/// `GB` (decimal) or `KiB`/`MiB`/`GiB` (binary) suffix, case-insensitive
+/// (`512MiB`, `1.5GB`, `786432`).
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let split = t
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(t.len());
+    let (num, suffix) = t.split_at(split);
+    let num: f64 = num
+        .parse()
+        .map_err(|_| format!("bad byte count '{s}' (expected e.g. 786432, 512MiB, 1.5GB)"))?;
+    let mult: f64 = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "kb" => 1e3,
+        "mb" => 1e6,
+        "gb" => 1e9,
+        "kib" => 1024.0,
+        "mib" => 1024.0 * 1024.0,
+        "gib" => 1024.0 * 1024.0 * 1024.0,
+        other => return Err(format!("unknown byte suffix '{other}' in '{s}'")),
+    };
+    let v = num * mult;
+    if !v.is_finite() || v < 1.0 {
+        return Err(format!("byte count '{s}' must be ≥ 1 B"));
+    }
+    Ok(v.round() as u64)
+}
+
 /// Full configuration for one training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -56,6 +85,11 @@ pub struct TrainConfig {
     /// `available_parallelism - 1`. Any worker count yields byte-identical
     /// batches for the same seed.
     pub num_workers: Option<usize>,
+    /// Peak-training-memory budget in bytes (S-C pipelines only). When set,
+    /// the trainer picks the cheapest-time checkpoint plan from the DP
+    /// Pareto frontier whose simulated peak fits; errors when even the
+    /// minimum-peak plan exceeds it. `None` = minimize peak outright.
+    pub memory_budget: Option<u64>,
     /// Augmentation policy applied to every class (SBS per-class policies
     /// are configured programmatically via [`crate::data::sampler`]).
     pub augment: String,
@@ -83,6 +117,7 @@ impl TrainConfig {
             seed: 42,
             prefetch_depth: 4,
             num_workers: None,
+            memory_budget: None,
             augment: "hflip,crop4".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             eval_every: 1,
@@ -140,6 +175,9 @@ impl TrainConfig {
                 ),
             };
         }
+        if let Some(v) = kv.get_str("memory_budget") {
+            cfg.memory_budget = Some(parse_bytes(v).map_err(|e| format!("memory_budget: {e}"))?);
+        }
         if let Some(a) = kv.get_str("augment") {
             cfg.augment = a.to_string();
         }
@@ -168,6 +206,13 @@ impl TrainConfig {
         }
         if self.model.is_empty() {
             return Err("model must be set".into());
+        }
+        if self.memory_budget.is_some() && !self.pipeline.sc {
+            return Err(
+                "memory_budget only constrains checkpoint planning — add S-C to the \
+                 pipeline (e.g. `--pipeline sc` or `ed+sc`)"
+                    .into(),
+            );
         }
         crate::data::augment::AugPolicy::parse(&self.augment)?;
         Ok(())
@@ -288,6 +333,41 @@ mod tests {
         let mut ov = BTreeMap::new();
         ov.insert("num_workers".to_string(), "many".to_string());
         assert!(TrainConfig::from_sources(None, &ov).is_err());
+    }
+
+    #[test]
+    fn parse_bytes_forms() {
+        assert_eq!(parse_bytes("786432").unwrap(), 786_432);
+        assert_eq!(parse_bytes("2KB").unwrap(), 2_000);
+        assert_eq!(parse_bytes("512MiB").unwrap(), 512 * 1024 * 1024);
+        assert_eq!(parse_bytes("1.5GB").unwrap(), 1_500_000_000);
+        assert_eq!(parse_bytes(" 4 GiB ").unwrap(), 4 * 1024 * 1024 * 1024);
+        assert_eq!(parse_bytes("100b").unwrap(), 100);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("MiB").is_err());
+        assert!(parse_bytes("12parsecs").is_err());
+        assert!(parse_bytes("0").is_err());
+    }
+
+    #[test]
+    fn memory_budget_parses_and_requires_sc() {
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "ed+sc".to_string());
+        ov.insert("memory_budget".to_string(), "512MiB".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.memory_budget, Some(512 * 1024 * 1024));
+        // budget without S-C is a config error
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "ed".to_string());
+        ov.insert("memory_budget".to_string(), "512MiB".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("S-C"), "{err}");
+        // junk rejected with the key named
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "sc".to_string());
+        ov.insert("memory_budget".to_string(), "lots".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("memory_budget"), "{err}");
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! benches (`reports/` directory by default).
 
 use crate::coordinator::TrainReport;
+use crate::memory::planner::CheckpointPlan;
 use crate::memory::simulator::MemoryReport;
+use crate::util::bench::fmt_bytes;
 use std::io::Write;
 use std::path::Path;
 
@@ -61,6 +63,68 @@ pub fn markdown_summary(report: &TrainReport) -> String {
         report.loader_blocked_secs
     ));
     s.push_str(&loader_summary(report));
+    if let Some(plan) = &report.plan {
+        s.push_str(&plan_summary(plan));
+    }
+    s
+}
+
+/// One-line description of the checkpoint plan an S-C run trained under.
+pub fn plan_summary(plan: &CheckpointPlan) -> String {
+    format!(
+        "checkpoint plan: {} checkpoints {:?}, simulated peak {}, recompute +{:.1}% fwd FLOPs\n",
+        plan.checkpoints.len(),
+        plan.checkpoints,
+        fmt_bytes(plan.peak_bytes),
+        plan.recompute_overhead * 100.0
+    )
+}
+
+/// Time/memory Pareto frontier as CSV:
+/// `peak_mb,n_checkpoints,recompute_overhead,checkpoints`.
+pub fn frontier_csv(plans: &[CheckpointPlan]) -> String {
+    let mut s = String::from("peak_mb,n_checkpoints,recompute_overhead,checkpoints\n");
+    for p in plans {
+        s.push_str(&format!(
+            "{:.1},{},{:.4},{}\n",
+            p.peak_bytes as f64 / (1024.0 * 1024.0),
+            p.checkpoints.len(),
+            p.recompute_overhead,
+            p.checkpoints
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(" ")
+        ));
+    }
+    s
+}
+
+/// Console table of the Pareto frontier (the `plan --frontier` CLI output
+/// and the plan_checkpoints example share this shape).
+pub fn frontier_table(plans: &[CheckpointPlan]) -> crate::util::bench::Table {
+    let mut t = crate::util::bench::Table::new(&["peak", "checkpoints", "recompute overhead"]);
+    for p in plans {
+        t.row(&[
+            fmt_bytes(p.peak_bytes),
+            format!("{}", p.checkpoints.len()),
+            format!("{:.1}%", p.recompute_overhead * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Markdown table of the Pareto frontier (EXPERIMENTS.md fragments).
+pub fn frontier_markdown(plans: &[CheckpointPlan]) -> String {
+    let mut s = String::from("| peak | checkpoints | recompute overhead |\n|---|---|---|\n");
+    for p in plans {
+        s.push_str(&format!(
+            "| {} | {} | {:.1}% |\n",
+            fmt_bytes(p.peak_bytes),
+            p.checkpoints.len(),
+            p.recompute_overhead * 100.0
+        ));
+    }
     s
 }
 
@@ -132,6 +196,12 @@ mod tests {
             ],
             pool_allocs: 9,
             pool_reuses: 151,
+            plan: Some(CheckpointPlan {
+                kind: crate::memory::planner::PlannerKind::Optimal,
+                checkpoints: vec![2, 5],
+                peak_bytes: 3 * 1024 * 1024,
+                recompute_overhead: 0.42,
+            }),
         }
     }
 
@@ -184,5 +254,27 @@ mod tests {
         let s = loader_summary(&rep);
         assert!(!s.contains("loader workers"));
         assert!(s.contains("buffer pool"));
+    }
+
+    #[test]
+    fn markdown_includes_checkpoint_plan_line() {
+        let md = markdown_summary(&fake_report());
+        assert!(md.contains("checkpoint plan: 2 checkpoints [2, 5]"), "{md}");
+        assert!(md.contains("+42.0% fwd FLOPs"), "{md}");
+        let mut rep = fake_report();
+        rep.plan = None;
+        assert!(!markdown_summary(&rep).contains("checkpoint plan"));
+    }
+
+    #[test]
+    fn frontier_outputs_cover_every_plan() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let frontier =
+            crate::memory::planner::pareto_frontier(&arch, Pipeline::BASELINE, 8, 12);
+        let csv = frontier_csv(&frontier);
+        assert_eq!(csv.lines().count(), frontier.len() + 1);
+        assert!(csv.starts_with("peak_mb,"));
+        let md = frontier_markdown(&frontier);
+        assert_eq!(md.lines().count(), frontier.len() + 2);
     }
 }

@@ -9,6 +9,7 @@ use crate::data::loader::{BatchPayload, EdLoader, LoaderStats, WorkerSummary};
 use crate::data::pool::BufferPool;
 use crate::data::sampler::SbsSampler;
 use crate::data::synth::{Split, SynthCifar};
+use crate::memory::planner::{plan_checkpoints, plan_for_budget, CheckpointPlan, PlannerKind};
 use crate::metrics::{EpochRecord, History, Mean, Timer};
 use crate::runtime::{LoadedModel, Runtime, TrainState};
 use crate::{debug, info};
@@ -35,6 +36,11 @@ pub struct TrainReport {
     /// recycled-buffer hits. At steady state `pool_allocs` stops growing.
     pub pool_allocs: u64,
     pub pool_reuses: u64,
+    /// The checkpoint plan the run trained under (S-C pipelines with a
+    /// known architecture profile): simulated peak, placement, recompute
+    /// overhead — and, with `memory_budget` set, the cheapest-time
+    /// frontier point that fit the budget.
+    pub plan: Option<CheckpointPlan>,
 }
 
 /// Orchestrates one training run.
@@ -55,6 +61,52 @@ pub struct Trainer {
     /// Eval batches are deterministic — built once, reused every epoch
     /// (§Perf iteration 2).
     eval_cache: Option<Vec<BatchPayload>>,
+    /// Checkpoint plan selected for S-C pipelines (see [`TrainReport::plan`]).
+    plan: Option<CheckpointPlan>,
+}
+
+/// Choose the run's checkpoint plan for an S-C pipeline: under a budget,
+/// the cheapest-time Pareto-frontier plan that fits (an error names the
+/// minimum achievable peak if none does); otherwise the exact minimum-peak
+/// plan. `None` when the model has no analytic profile to plan over.
+fn select_plan(
+    cfg: &TrainConfig,
+    input: (usize, usize, usize),
+    classes: usize,
+) -> Result<Option<CheckpointPlan>> {
+    if !cfg.pipeline.sc {
+        return Ok(None);
+    }
+    let arch = match crate::models::arch_by_name(&cfg.model, input, classes) {
+        Some(a) => a,
+        None if cfg.memory_budget.is_some() => {
+            // An explicit budget that cannot be honored must not be
+            // silently dropped.
+            bail!(
+                "memory_budget is set but '{}' has no architecture profile to plan over \
+                 (see `optorch models`)",
+                cfg.model
+            );
+        }
+        None => {
+            debug!("no architecture profile for '{}': skipping checkpoint planning", cfg.model);
+            return Ok(None);
+        }
+    };
+    let plan = match cfg.memory_budget {
+        Some(budget) => {
+            plan_for_budget(&arch, cfg.pipeline, cfg.batch_size, budget).map_err(|e| anyhow!(e))?
+        }
+        None => plan_checkpoints(&arch, PlannerKind::Optimal, cfg.pipeline, cfg.batch_size),
+    };
+    info!(
+        "checkpoint plan for {}: {} checkpoints, simulated peak {} KiB, recompute +{:.1}% fwd FLOPs",
+        cfg.model,
+        plan.checkpoints.len(),
+        plan.peak_bytes / 1024,
+        plan.recompute_overhead * 100.0
+    );
+    Ok(Some(plan))
 }
 
 fn make_dataset(choice: DatasetChoice, split: Split, len: usize, seed: u64) -> Result<Arc<dyn Dataset>> {
@@ -94,6 +146,8 @@ impl Trainer {
                 train_data.num_classes()
             );
         }
+        let (h, w, c) = train_data.shape();
+        let plan = select_plan(cfg, (h, w, c), num_classes)?;
         let state = model.init_state(cfg.seed)?;
         info!(
             "initialized {}/{}: {} state tensors, {} KiB",
@@ -114,7 +168,13 @@ impl Trainer {
             worker_acc: Vec::new(),
             pool: Arc::new(BufferPool::default()),
             eval_cache: None,
+            plan,
         })
+    }
+
+    /// The checkpoint plan this run trains under (S-C pipelines only).
+    pub fn plan(&self) -> Option<&CheckpointPlan> {
+        self.plan.as_ref()
     }
 
     fn train_loader(&self, epoch: usize) -> Result<EdLoader> {
@@ -279,6 +339,7 @@ impl Trainer {
             loader_workers: self.worker_acc.clone(),
             pool_allocs: self.pool.allocs(),
             pool_reuses: self.pool.reuses(),
+            plan: self.plan.clone(),
             history: std::mem::take(&mut self.history),
         })
     }
@@ -301,5 +362,44 @@ impl Trainer {
 
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pipeline;
+
+    #[test]
+    fn select_plan_skips_non_sc_pipelines() {
+        let cfg = TrainConfig::default_for("tiny_cnn", Pipeline::BASELINE);
+        assert!(select_plan(&cfg, (32, 32, 3), 10).unwrap().is_none());
+    }
+
+    #[test]
+    fn select_plan_picks_optimal_without_budget() {
+        let cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("sc").unwrap());
+        let plan = select_plan(&cfg, (32, 32, 3), 10).unwrap().unwrap();
+        assert!(plan.peak_bytes > 0);
+        assert!(plan.checkpoints.iter().all(|&c| c < 4)); // tiny_cnn has 5 layers
+    }
+
+    #[test]
+    fn select_plan_budget_without_profile_is_an_error() {
+        let mut cfg = TrainConfig::default_for("mystery_net", Pipeline::parse("sc").unwrap());
+        cfg.memory_budget = Some(1 << 30);
+        let err = select_plan(&cfg, (32, 32, 3), 10).unwrap_err();
+        assert!(err.to_string().contains("architecture profile"), "{err}");
+        // without a budget the missing profile is tolerated quietly
+        cfg.memory_budget = None;
+        assert!(select_plan(&cfg, (32, 32, 3), 10).unwrap().is_none());
+    }
+
+    #[test]
+    fn select_plan_impossible_budget_is_an_error() {
+        let mut cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("sc").unwrap());
+        cfg.memory_budget = Some(1);
+        let err = select_plan(&cfg, (32, 32, 3), 10).unwrap_err();
+        assert!(err.to_string().contains("minimum achievable peak"), "{err}");
     }
 }

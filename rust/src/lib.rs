@@ -67,7 +67,10 @@ pub mod prelude {
     pub use crate::data::pool::BufferPool;
     pub use crate::data::sampler::SbsSampler;
     pub use crate::data::synth::SynthCifar;
-    pub use crate::memory::planner::{plan_checkpoints, PlannerKind};
+    pub use crate::memory::peak::PeakEvaluator;
+    pub use crate::memory::planner::{
+        pareto_frontier, plan_checkpoints, plan_for_budget, CheckpointPlan, PlannerKind,
+    };
     pub use crate::memory::simulator::{simulate, MemoryReport};
     pub use crate::models::{arch_by_name, ArchProfile};
     pub use crate::runtime::Runtime;

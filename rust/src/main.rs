@@ -4,9 +4,11 @@
 
 use anyhow::{anyhow, Result};
 use optorch::cli::{Cli, USAGE};
-use optorch::config::{Pipeline, TrainConfig};
+use optorch::config::{parse_bytes, Pipeline, TrainConfig};
 use optorch::coordinator::{report, Trainer};
-use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::memory::planner::{
+    pareto_frontier, plan_checkpoints, PlannerKind, DEFAULT_FRONTIER_LEVELS,
+};
 use optorch::memory::simulator::simulate;
 use optorch::models::{all_arch_names, arch_by_name};
 use optorch::util::bench::{fmt_bytes, Table};
@@ -86,7 +88,7 @@ fn cmd_memsim(cli: &Cli) -> Result<()> {
     let arch = arch_by_name(model, (h, w, 3), classes)
         .ok_or_else(|| anyhow!("unknown model '{model}' (try `optorch models`)"))?;
     let ckpts = if pipeline.sc {
-        plan_checkpoints(&arch, PlannerKind::Sqrt, pipeline, batch).checkpoints
+        plan_checkpoints(&arch, PlannerKind::Optimal, pipeline, batch).checkpoints
     } else {
         vec![]
     };
@@ -131,6 +133,41 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         ]);
     }
     table.print();
+
+    let budget = match cli.get("budget") {
+        Some(b) => Some(parse_bytes(b).map_err(|e| anyhow!("--budget: {e}"))?),
+        None => None,
+    };
+    if budget.is_some() || cli.has_flag("frontier") {
+        let frontier = pareto_frontier(&arch, Pipeline::BASELINE, batch, DEFAULT_FRONTIER_LEVELS);
+        println!("\ntime/memory Pareto frontier ({} points):\n", frontier.len());
+        report::frontier_table(&frontier).print();
+        if let Some(b) = budget {
+            // select from the frontier just printed, so table and choice
+            // can never diverge
+            let min_peak = frontier.first().map(|p| p.peak_bytes).unwrap_or(0);
+            let plan = frontier
+                .iter()
+                .rev()
+                .find(|p| p.peak_bytes <= b)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "budget {} is below the minimum achievable peak {}",
+                        fmt_bytes(b),
+                        fmt_bytes(min_peak)
+                    )
+                })?;
+            println!(
+                "\nbudget {}: cheapest-time plan fits at {} with {} checkpoints {:?} \
+                 (+{:.1}% fwd FLOPs)",
+                fmt_bytes(b),
+                fmt_bytes(plan.peak_bytes),
+                plan.checkpoints.len(),
+                plan.checkpoints,
+                plan.recompute_overhead * 100.0
+            );
+        }
+    }
     Ok(())
 }
 

@@ -6,5 +6,6 @@
 //! cross-validated against XLA's `compiled.memory_analysis()` on the
 //! trainable minis (`python/tests/test_remat_memory.py`).
 
+pub mod peak;
 pub mod planner;
 pub mod simulator;

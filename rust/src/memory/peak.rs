@@ -1,0 +1,274 @@
+//! Zero-allocation peak-memory evaluation — the planner's hot path.
+//!
+//! [`simulate`](crate::memory::simulator::simulate) materializes a labeled
+//! timeline (one heap `String` per event) so Figure 8 can be plotted; a
+//! schedule *search* only needs the peak. [`PeakEvaluator`] precomputes the
+//! per-layer byte quantities and prefix/suffix sums once per
+//! (arch, pipeline, batch) and then replays the exact same schedule
+//! arithmetic per plan: O(depth) time, **zero allocations per call**
+//! (`peak` takes `&mut self` only to reuse its `stored` scratch buffer).
+//!
+//! ## Segment decomposition
+//!
+//! For the S-C schedule the peak also admits a closed form the exact DP
+//! planner builds on. Write `out[i]`/`act[i]` for the boundary-output and
+//! stored-activation bytes of layer `i`, `AP[i]` for the prefix sum of
+//! `act`, `G[i]` for the suffix sum of parameter-gradient bytes, and
+//! `base` for the resident state+input bytes. Processing segment
+//! `(lo..hi]` during the backward pass, the live-byte candidate recorded
+//! at layer `i`'s backward step telescopes to
+//!
+//! ```text
+//! C(i) = W + base + (AP[i+1] − AP[lo]) + out[i−1] + 2·out[i] + G[i]
+//!      = W + D(i) − AP[lo],     D(i) = base + AP[i+1] + out[i−1] + 2·out[i] + G[i]
+//! ```
+//!
+//! where `W` is the byte total of checkpoints resident to the segment's
+//! *left* — the only cross-segment coupling. Every other event (forward,
+//! loss-grad, recompute ramp, optimizer step) is dominated by some `C(i)`,
+//! so a plan's peak is `max` over its segments of
+//! `W + max(D[lo..hi)) − AP[lo]`. [`PeakEvaluator::seg_coeff`] exposes
+//! `D`; the planner's DPs evaluate segment peaks incrementally from it.
+//!
+//! The decomposition (not the replay) assumes `act_elems ≥ out_elems` for
+//! every layer — true of every profile in the registry, where the stored
+//! footprint always includes the boundary tensor — because a stored
+//! boundary with `act < out` would leave `out − act` bytes live after its
+//! segment is consumed, leaking into segments processed later.
+
+use crate::config::Pipeline;
+use crate::memory::simulator::{act_dtype_bytes, input_bytes};
+use crate::models::ArchProfile;
+
+/// Reusable peak evaluator for one (arch, pipeline, batch) triple.
+pub struct PeakEvaluator {
+    /// Resident state (params + momentum) + input-batch bytes.
+    base: u64,
+    sc: bool,
+    /// Per-layer boundary-output bytes.
+    out: Vec<u64>,
+    /// Per-layer stored-activation bytes (internal tensors included).
+    act: Vec<u64>,
+    /// Per-layer parameter-gradient bytes.
+    pb: Vec<u64>,
+    /// `grad_suffix[i]` = Σ_{j≥i} pb[j]; length n+1.
+    grad_suffix: Vec<u64>,
+    /// `act_prefix[i]` = Σ_{j<i} act[j]; length n+1.
+    act_prefix: Vec<u64>,
+    /// Segment coefficients `D(i)` (see module docs).
+    seg: Vec<u64>,
+    /// Scratch: forward-stored flags, reused across `peak` calls.
+    stored: Vec<bool>,
+}
+
+impl PeakEvaluator {
+    pub fn new(arch: &ArchProfile, pipeline: Pipeline, batch: usize) -> PeakEvaluator {
+        let n = arch.layers.len();
+        let ab = act_dtype_bytes(pipeline);
+        let b = batch as u64;
+        let peb: u64 = if pipeline.mp { 2 } else { 4 };
+        let state = arch.param_count() * peb * 2; // params + momentum
+        let base = state + input_bytes(arch, pipeline, batch);
+        let out: Vec<u64> = arch.layers.iter().map(|l| l.out_elems() * b * ab).collect();
+        let act: Vec<u64> = arch.layers.iter().map(|l| l.act_elems * b * ab).collect();
+        let pb: Vec<u64> = arch.layers.iter().map(|l| l.params * peb).collect();
+        let act_prefix: Vec<u64> =
+            arch.act_prefix_elems().iter().map(|&e| e * b * ab).collect();
+        let grad_suffix: Vec<u64> = arch.param_suffix().iter().map(|&e| e * peb).collect();
+        let seg: Vec<u64> = (0..n)
+            .map(|i| {
+                let outm1 = if i > 0 { out[i - 1] } else { 0 };
+                base + act_prefix[i + 1] + outm1 + 2 * out[i] + grad_suffix[i]
+            })
+            .collect();
+        PeakEvaluator {
+            base,
+            sc: pipeline.sc,
+            out,
+            act,
+            pb,
+            grad_suffix,
+            act_prefix,
+            seg,
+            stored: vec![false; n],
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Resident state + input bytes (the peak floor).
+    pub fn base_bytes(&self) -> u64 {
+        self.base
+    }
+
+    /// Boundary-output bytes of layer `i` — what storing checkpoint `i`
+    /// keeps resident for segments to its right.
+    pub fn out_bytes(&self, i: usize) -> u64 {
+        self.out[i]
+    }
+
+    /// Prefix sum of stored-activation bytes over layers `< i`.
+    pub fn act_prefix_bytes(&self, i: usize) -> u64 {
+        self.act_prefix[i]
+    }
+
+    /// Segment coefficient `D(i)` (module docs): a segment `(lo..hi]`
+    /// contributes peak `W + max(D[lo..hi)) − act_prefix_bytes(lo)`.
+    pub fn seg_coeff(&self, i: usize) -> u64 {
+        self.seg[i]
+    }
+
+    /// Exact peak of `simulate(arch, pipeline, batch, checkpoints)` without
+    /// materializing a timeline. O(depth), allocation-free.
+    ///
+    /// `checkpoints` follows the simulator convention: layer indices kept
+    /// live under S-C (out-of-range indices ignored, the final layer
+    /// implicitly stored); ignored entirely when the pipeline is not S-C.
+    pub fn peak(&mut self, checkpoints: &[usize]) -> u64 {
+        let n = self.out.len();
+        if n == 0 {
+            return self.base;
+        }
+        if self.sc {
+            for s in self.stored.iter_mut() {
+                *s = false;
+            }
+            for &c in checkpoints {
+                if c < n {
+                    self.stored[c] = true;
+                }
+            }
+            self.stored[n - 1] = true;
+        } else {
+            for s in self.stored.iter_mut() {
+                *s = true;
+            }
+        }
+
+        let mut live = self.base;
+        let mut peak = live;
+        // ---- forward ----
+        for i in 0..n {
+            let t = self.out[i];
+            live += t;
+            peak = peak.max(live);
+            if !self.sc {
+                live += self.act[i].saturating_sub(t);
+                peak = peak.max(live);
+            } else if !self.stored[i] {
+                live -= t;
+            }
+        }
+        // ---- backward ----
+        let mut grad: u64 = 0;
+        let mut act_grad = self.out[n - 1];
+        live += act_grad;
+        peak = peak.max(live);
+        if !self.sc {
+            for i in (0..n).rev() {
+                grad += self.pb[i];
+                let nag = if i > 0 { self.out[i - 1] } else { 0 };
+                live += nag;
+                peak = peak.max(live + grad + self.out[i]);
+                live -= self.act[i];
+                live -= act_grad;
+                act_grad = nag;
+            }
+        } else {
+            let mut hi = n;
+            while hi > 0 {
+                let lo = (0..hi.saturating_sub(1))
+                    .rev()
+                    .find(|&i| self.stored[i])
+                    .map(|i| i + 1)
+                    .unwrap_or(0);
+                for i in lo..hi {
+                    let delta = if self.stored[i] {
+                        self.act[i].saturating_sub(self.out[i])
+                    } else {
+                        self.act[i]
+                    };
+                    if delta > 0 {
+                        live += delta;
+                        peak = peak.max(live + grad);
+                    }
+                }
+                for i in (lo..hi).rev() {
+                    grad += self.pb[i];
+                    let nag = if i > 0 { self.out[i - 1] } else { 0 };
+                    live += nag;
+                    peak = peak.max(live + grad + self.out[i]);
+                    live -= self.act[i];
+                    live -= act_grad;
+                    act_grad = nag;
+                }
+                hi = lo;
+            }
+        }
+        // optimizer step: grads + state resident
+        peak.max(self.base + self.grad_suffix[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::simulator::simulate;
+    use crate::models::arch_by_name;
+
+    fn pipe(s: &str) -> Pipeline {
+        Pipeline::parse(s).unwrap()
+    }
+
+    #[test]
+    fn matches_simulator_across_zoo_and_pipelines() {
+        for name in ["resnet18", "resnet50", "efficientnet_b0", "tiny_cnn"] {
+            let arch = arch_by_name(name, (64, 64, 3), 10).unwrap();
+            let n = arch.layers.len();
+            let plans: Vec<Vec<usize>> = vec![
+                vec![],
+                (0..n).step_by(3).collect(),
+                (0..n.saturating_sub(1)).collect(),
+                vec![n / 2],
+            ];
+            for p in ["b", "sc", "mp", "ed+sc", "ed+mp+sc"] {
+                let mut ev = PeakEvaluator::new(&arch, pipe(p), 8);
+                for plan in &plans {
+                    assert_eq!(
+                        ev.peak(plan),
+                        simulate(&arch, pipe(p), 8, plan).peak_bytes,
+                        "{name} [{p}] plan {plan:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segment_decomposition_matches_replay() {
+        // Single-segment plans make `max(D[lo..n)) − AP[lo]` directly
+        // comparable with the replayed peak (W = 0 for the lone segment).
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let mut ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        let n = ev.depth();
+        let dmax = (0..n).map(|i| ev.seg_coeff(i)).max().unwrap();
+        assert_eq!(ev.peak(&[]), dmax.max(ev.base_bytes() + ev.grad_suffix[0]));
+    }
+
+    #[test]
+    fn empty_arch_peak_is_base() {
+        let arch = ArchProfile { name: "empty".into(), input: (8, 8, 3), layers: vec![] };
+        let mut ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        assert_eq!(ev.peak(&[]), ev.base_bytes());
+        assert_eq!(ev.peak(&[]), simulate(&arch, pipe("sc"), 4, &[]).peak_bytes);
+    }
+
+    #[test]
+    fn out_of_range_checkpoints_ignored() {
+        let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let mut ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        assert_eq!(ev.peak(&[1, 99]), ev.peak(&[1]));
+    }
+}

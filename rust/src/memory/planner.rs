@@ -1,4 +1,5 @@
-//! Checkpoint placement planner — Figure 11 and §IV's recommendation.
+//! Checkpoint placement planner — Figure 11, Figure 9's time/memory
+//! trade-off, and §IV's recommendation.
 //!
 //! Given an architecture profile, choose which layer outputs to keep live
 //! under S-C. Strategies:
@@ -8,14 +9,25 @@
 //! * [`PlannerKind::Bottleneck`] — put checkpoints on the *smallest*
 //!   activations (the paper's recommendation: checkpoint at narrow layers,
 //!   prefer autoencoder/UNet-shaped nets).
-//! * [`PlannerKind::Optimal`] — budget-search over segment interiors,
-//!   simulator-scored; exact for practical depths.
+//! * [`PlannerKind::Optimal`] — the exact dynamic program over the
+//!   heterogeneous layer chain (Beaumont et al. 1911.13214 / Chen et al.
+//!   1604.06174 style): provably minimum simulated peak, found by binary
+//!   searching the budget over a min-resident-checkpoint-bytes
+//!   feasibility DP built on the
+//!   [`PeakEvaluator`](crate::memory::peak::PeakEvaluator) segment
+//!   decomposition. No timeline is materialized anywhere on the search
+//!   path.
 //!
-//! Also estimates the recompute overhead (extra forward FLOPs) so the
-//! time/memory trade-off the paper discusses is visible.
+//! Beyond a single plan, [`pareto_frontier`] returns the full
+//! (peak bytes, recompute FLOPs) trade-off curve: `best[i][m]` — the
+//! minimum recompute FLOPs for layers `i..n` under `m` remaining budget
+//! bytes, over quantized budget levels — swept from the exact minimum
+//! peak up to the store-everything peak, then exactly rescored and pruned
+//! to non-dominated points. [`plan_for_budget`] picks the cheapest-time
+//! plan that fits a byte budget (the `memory_budget` training knob).
 
 use crate::config::Pipeline;
-use crate::memory::simulator::simulate;
+use crate::memory::peak::PeakEvaluator;
 use crate::models::ArchProfile;
 
 /// Planning strategy.
@@ -36,16 +48,20 @@ impl PlannerKind {
             return Ok(PlannerKind::Optimal);
         }
         if let Some(k) = s.strip_prefix("uniform") {
-            return k
-                .parse()
-                .map(PlannerKind::Uniform)
-                .map_err(|_| format!("bad uniform arg: {s}"));
+            let k: usize = k.parse().map_err(|_| format!("bad uniform arg: {s}"))?;
+            if k == 0 {
+                return Err(format!("'{s}' places no checkpoints — use uniformK with K ≥ 1"));
+            }
+            return Ok(PlannerKind::Uniform(k));
         }
         if let Some(k) = s.strip_prefix("bottleneck") {
-            return k
-                .parse()
-                .map(PlannerKind::Bottleneck)
-                .map_err(|_| format!("bad bottleneck arg: {s}"));
+            let k: usize = k.parse().map_err(|_| format!("bad bottleneck arg: {s}"))?;
+            if k == 0 {
+                return Err(format!(
+                    "'{s}' places no checkpoints — use bottleneckK with K ≥ 1"
+                ));
+            }
+            return Ok(PlannerKind::Bottleneck(k));
         }
         Err(format!("unknown planner '{s}' (sqrt|dp|uniformK|bottleneckK)"))
     }
@@ -64,6 +80,9 @@ pub struct CheckpointPlan {
     pub recompute_overhead: f64,
 }
 
+/// Default quantization for [`pareto_frontier`] budget levels.
+pub const DEFAULT_FRONTIER_LEVELS: usize = 24;
+
 /// Plan checkpoints for `arch` under `pipeline` (S-C forced on) at `batch`.
 pub fn plan_checkpoints(
     arch: &ArchProfile,
@@ -75,9 +94,9 @@ pub fn plan_checkpoints(
     p.sc = true;
     let n = arch.layers.len();
     let checkpoints = match kind {
-        PlannerKind::Uniform(k) => uniform(n, k.max(1)),
+        PlannerKind::Uniform(k) => uniform(n, k),
         PlannerKind::Sqrt => uniform(n, (n as f64).sqrt().round() as usize),
-        PlannerKind::Bottleneck(k) => bottleneck(arch, k.max(1)),
+        PlannerKind::Bottleneck(k) => bottleneck(arch, k),
         PlannerKind::Optimal => optimal(arch, p, batch),
     };
     score(arch, kind, p, batch, checkpoints)
@@ -90,18 +109,21 @@ fn score(
     batch: usize,
     checkpoints: Vec<usize>,
 ) -> CheckpointPlan {
-    let report = simulate(arch, pipeline, batch, &checkpoints);
+    let mut ev = PeakEvaluator::new(arch, pipeline, batch);
     CheckpointPlan {
         kind,
         recompute_overhead: recompute_overhead(arch, &checkpoints),
+        peak_bytes: ev.peak(&checkpoints),
         checkpoints,
-        peak_bytes: report.peak_bytes,
     }
 }
 
 /// Fraction of forward FLOPs recomputed in backward for this plan.
 pub fn recompute_overhead(arch: &ArchProfile, checkpoints: &[usize]) -> f64 {
     let n = arch.layers.len();
+    if n == 0 {
+        return 0.0;
+    }
     let mut stored = vec![false; n];
     for &c in checkpoints {
         if c < n {
@@ -147,62 +169,292 @@ fn bottleneck(arch: &ArchProfile, k: usize) -> Vec<usize> {
     out
 }
 
-/// Budget search: for every candidate interior budget (all contiguous
-/// interval sums), greedily pack segments whose interior fits, then keep
-/// the simulator-best plan. O(n²) candidates × O(n) packing.
+/// Exact minimum-peak plan: binary search on the budget over [`feasible`].
 fn optimal(arch: &ArchProfile, pipeline: Pipeline, batch: usize) -> Vec<usize> {
-    let n = arch.layers.len();
-    let acts: Vec<u64> = arch.layers.iter().map(|l| l.act_elems).collect();
-    // candidate budgets: all contiguous sums
-    let mut candidates: Vec<u64> = Vec::new();
-    for i in 0..n {
-        let mut s = 0u64;
-        for a in acts.iter().skip(i) {
-            s += a;
-            candidates.push(s);
+    let mut ev = PeakEvaluator::new(arch, pipeline, batch);
+    min_peak_plan(&mut ev)
+}
+
+/// Exact minimum-peak plan for the evaluator's (arch, pipeline, batch).
+///
+/// The optimum is the smallest budget `m` for which [`feasible`] finds a
+/// plan; integer binary search over `[0, cheapest probe peak]` lands on it
+/// exactly because plan peaks are integers and feasibility is monotone in
+/// `m`.
+fn min_peak_plan(ev: &mut PeakEvaluator) -> Vec<usize> {
+    let n = ev.depth();
+    if n == 0 {
+        return vec![];
+    }
+    // Quick probes bound the search from above (each is a concrete plan).
+    let all: Vec<usize> = (0..n - 1).collect();
+    let sq = uniform(n, (n as f64).sqrt().round() as usize);
+    let probes: [&[usize]; 3] = [&[], &all, &sq];
+    let mut ub = u64::MAX;
+    let mut best_probe: Vec<usize> = vec![];
+    for p in probes {
+        let peak = ev.peak(p);
+        if peak < ub {
+            ub = peak;
+            best_probe = p.to_vec();
         }
     }
-    candidates.sort_unstable();
-    candidates.dedup();
-    let mut best: Option<(u64, Vec<usize>)> = None;
-    for &budget in &candidates {
-        // greedy: walk forward, close a segment (place a checkpoint) when
-        // adding the next layer would exceed the interior budget
-        let mut cps = Vec::new();
-        let mut interior = 0u64;
-        let mut feasible = true;
-        for (i, &a) in acts.iter().enumerate() {
-            if a > budget {
-                feasible = false;
-                break;
+    let mut lo = 0u64;
+    let mut hi = ub;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(ev, mid).is_some() {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    // The probe peak was measured by exact replay, so the DP must accept it
+    // unless a profile violates the act ≥ out invariant (see
+    // `memory::peak` docs) — fall back to the probe in that case.
+    feasible(ev, hi).unwrap_or(best_probe)
+}
+
+/// Min-resident-checkpoint-bytes chain DP: is any plan's modeled peak
+/// ≤ `budget`? Returns a witness (interior checkpoints, sorted) if so.
+///
+/// `min_w[p]` is the smallest achievable byte total of stored boundaries
+/// over schedules of layers `0..p` whose last boundary is `p − 1` and
+/// whose segments all fit `budget`. Smaller resident-checkpoint bytes are
+/// never worse for any later segment (they enter every later peak
+/// additively), so one value per position is exact.
+fn feasible(ev: &PeakEvaluator, budget: u64) -> Option<Vec<usize>> {
+    let n = ev.depth();
+    const INF: u64 = u64::MAX;
+    let mut min_w = vec![INF; n + 1];
+    let mut parent = vec![usize::MAX; n + 1];
+    min_w[0] = 0;
+    for hi in 1..=n {
+        let mut dmax = 0u64;
+        for lo in (0..hi).rev() {
+            dmax = dmax.max(ev.seg_coeff(lo));
+            let w = min_w[lo];
+            if w == INF {
+                continue;
             }
-            if interior + a > budget {
-                cps.push(i.saturating_sub(1));
-                interior = 0;
+            // segment (lo..hi] peak = W + max(D[lo..hi)) − act_prefix[lo]
+            let peak = w.saturating_add(dmax - ev.act_prefix_bytes(lo));
+            if peak > budget {
+                continue;
             }
-            interior += a;
+            let cand = w + ev.out_bytes(hi - 1);
+            if cand < min_w[hi] {
+                min_w[hi] = cand;
+                parent[hi] = lo;
+            }
         }
-        if !feasible {
-            continue;
+    }
+    if min_w[n] == INF {
+        return None;
+    }
+    let mut cps = Vec::new();
+    let mut p = n;
+    while p > 0 {
+        let lo = parent[p];
+        if lo > 0 {
+            cps.push(lo - 1);
         }
-        cps.dedup();
-        let peak = simulate(arch, pipeline, batch, &cps).peak_bytes;
-        match &best {
-            Some((bp, _)) if *bp <= peak => {}
-            _ => best = Some((peak, cps)),
+        p = lo;
+    }
+    cps.reverse();
+    Some(cps)
+}
+
+/// `best[i][l]` DP: minimum recompute FLOPs (per image) to schedule layers
+/// `i..n` when `grid[l]` budget bytes remain unconsumed by checkpoints
+/// already resident to the left. Budget consumption rounds *down* to the
+/// nearest level, so returned plans never exceed `m`; quantization can
+/// only cost optimality, which the exact rescoring in [`pareto_frontier`]
+/// absorbs. Returns the witness plan, or None when `m` is infeasible at
+/// this quantization.
+fn min_flops_under_budget(
+    ev: &PeakEvaluator,
+    flops_prefix: &[u64],
+    m: u64,
+    levels: usize,
+) -> Option<Vec<usize>> {
+    let n = ev.depth();
+    if n == 0 {
+        return Some(vec![]);
+    }
+    let l = levels.max(2);
+    let grid: Vec<u64> = (0..l)
+        .map(|i| ((m as u128 * i as u128) / (l as u128 - 1)) as u64)
+        .collect();
+    // Largest level whose budget is ≤ v; grid[0] = 0 so this never fails.
+    let snap = |v: u64| -> usize { grid.partition_point(|&g| g <= v) - 1 };
+    const INF: u64 = u64::MAX;
+    let mut best = vec![INF; (n + 1) * l];
+    let mut choice = vec![usize::MAX; (n + 1) * l];
+    for li in 0..l {
+        best[n * l + li] = 0;
+    }
+    for i in (0..n).rev() {
+        for li in 0..l {
+            let rem = grid[li];
+            let mut dmax = 0u64;
+            let mut bcost = INF;
+            let mut bj = usize::MAX;
+            for j in i..n {
+                dmax = dmax.max(ev.seg_coeff(j));
+                let seg = dmax - ev.act_prefix_bytes(i);
+                if seg > rem {
+                    break; // segment peaks only grow with j
+                }
+                let rest = if j + 1 == n {
+                    0
+                } else {
+                    let ob = ev.out_bytes(j);
+                    if ob > rem {
+                        continue;
+                    }
+                    best[(j + 1) * l + snap(rem - ob)]
+                };
+                if rest == INF {
+                    continue;
+                }
+                let total = (flops_prefix[j] - flops_prefix[i]) + rest;
+                if total < bcost {
+                    bcost = total;
+                    bj = j;
+                }
+            }
+            best[i * l + li] = bcost;
+            choice[i * l + li] = bj;
         }
-        // budgets only grow from here; once segments collapse to one,
-        // larger budgets change nothing
-        if best.as_ref().map(|(_, c)| c.is_empty()).unwrap_or(false) {
+    }
+    if best[l - 1] == INF {
+        return None;
+    }
+    let mut cps = Vec::new();
+    let mut i = 0usize;
+    let mut li = l - 1;
+    while i < n {
+        let j = choice[i * l + li];
+        if j == usize::MAX {
+            return None; // unreachable if best[0][l-1] was finite
+        }
+        if j + 1 == n {
             break;
         }
+        cps.push(j);
+        li = snap(grid[li] - ev.out_bytes(j));
+        i = j + 1;
     }
-    best.map(|(_, c)| c).unwrap_or_default()
+    Some(cps)
+}
+
+/// The (peak bytes, recompute overhead) Pareto frontier for `arch` under
+/// `pipeline` (S-C forced on) at `batch`.
+///
+/// Sweeps `levels` quantized budget levels from the exact minimum
+/// achievable peak to the store-everything peak, runs the
+/// min-recompute-FLOPs DP at each, rescores every candidate with the
+/// exact peak evaluator, and prunes to non-dominated points. The result
+/// is sorted by strictly increasing `peak_bytes` with strictly decreasing
+/// `recompute_overhead`; the first entry is the exact minimum-peak plan
+/// and the last stores every layer (zero recompute).
+pub fn pareto_frontier(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    levels: usize,
+) -> Vec<CheckpointPlan> {
+    let mut p = pipeline;
+    p.sc = true;
+    let n = arch.layers.len();
+    let mut ev = PeakEvaluator::new(arch, p, batch);
+    if n == 0 {
+        return vec![CheckpointPlan {
+            kind: PlannerKind::Optimal,
+            peak_bytes: ev.peak(&[]),
+            recompute_overhead: 0.0,
+            checkpoints: vec![],
+        }];
+    }
+    let best = min_peak_plan(&mut ev);
+    let m_min = ev.peak(&best);
+    let all: Vec<usize> = (0..n - 1).collect();
+    let m_max = ev.peak(&all);
+    let mut raw: Vec<Vec<usize>> = vec![best, all];
+    let levels = levels.max(2);
+    if m_max > m_min {
+        let flops_prefix = arch.flops_prefix();
+        for li in 0..levels {
+            let m = m_min
+                + ((u128::from(m_max - m_min) * li as u128) / (levels as u128 - 1)) as u64;
+            if let Some(plan) = min_flops_under_budget(&ev, &flops_prefix, m, levels) {
+                raw.push(plan);
+            }
+        }
+    }
+    let mut pts: Vec<CheckpointPlan> = raw
+        .into_iter()
+        .map(|cps| CheckpointPlan {
+            kind: PlannerKind::Optimal,
+            peak_bytes: ev.peak(&cps),
+            recompute_overhead: recompute_overhead(arch, &cps),
+            checkpoints: cps,
+        })
+        .collect();
+    pts.sort_by(|a, b| {
+        a.peak_bytes.cmp(&b.peak_bytes).then(
+            a.recompute_overhead
+                .partial_cmp(&b.recompute_overhead)
+                .unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    let mut out: Vec<CheckpointPlan> = Vec::new();
+    for pl in pts {
+        // Sorted by (peak asc, overhead asc): keep a point only when it
+        // spends strictly more memory for strictly less recompute.
+        let keep = match out.last() {
+            Some(last) => {
+                pl.peak_bytes > last.peak_bytes
+                    && pl.recompute_overhead < last.recompute_overhead
+            }
+            None => true,
+        };
+        if keep {
+            out.push(pl);
+        }
+    }
+    out
+}
+
+/// The cheapest-time plan whose simulated peak fits `budget` bytes, from
+/// the Pareto frontier. Errors (with the minimum achievable peak in the
+/// message) when no plan fits.
+pub fn plan_for_budget(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    budget: u64,
+) -> Result<CheckpointPlan, String> {
+    let frontier = pareto_frontier(arch, pipeline, batch, DEFAULT_FRONTIER_LEVELS);
+    let min_peak = frontier.first().map(|p| p.peak_bytes).unwrap_or(0);
+    frontier
+        .into_iter()
+        .rev()
+        .find(|p| p.peak_bytes <= budget)
+        .ok_or_else(|| {
+            format!(
+                "memory budget {budget} B is below the minimum achievable peak \
+                 {min_peak} B for {} (batch {batch})",
+                arch.name
+            )
+        })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::simulator::simulate;
     use crate::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
 
     fn pipe_sc() -> Pipeline {
@@ -242,6 +494,15 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_zero_checkpoint_counts() {
+        for s in ["uniform0", "bottleneck0"] {
+            let err = PlannerKind::parse(s).unwrap_err();
+            assert!(err.contains("places no checkpoints"), "{s}: {err}");
+        }
+        assert!(PlannerKind::parse("uniformx").is_err());
+    }
+
+    #[test]
     fn uniform_spacing() {
         assert_eq!(uniform(12, 3), vec![3, 6, 9]);
         assert_eq!(uniform(12, 1), vec![6]);
@@ -254,6 +515,25 @@ mod tests {
         let cps = bottleneck(&arch, 1);
         // layer 3 (width 16) is the narrowest
         assert_eq!(cps, vec![3]);
+    }
+
+    #[test]
+    fn empty_arch_yields_zero_plan() {
+        let arch = ArchProfile { name: "empty".into(), input: (4, 4, 3), layers: vec![] };
+        for kind in [
+            PlannerKind::Uniform(2),
+            PlannerKind::Sqrt,
+            PlannerKind::Bottleneck(2),
+            PlannerKind::Optimal,
+        ] {
+            let plan = plan_checkpoints(&arch, kind, Pipeline::BASELINE, 4);
+            assert!(plan.checkpoints.is_empty(), "{kind:?}");
+            assert_eq!(plan.recompute_overhead, 0.0, "{kind:?}");
+        }
+        assert_eq!(recompute_overhead(&arch, &[]), 0.0);
+        let frontier = pareto_frontier(&arch, Pipeline::BASELINE, 4, 8);
+        assert_eq!(frontier.len(), 1);
+        assert!(frontier[0].checkpoints.is_empty());
     }
 
     #[test]
@@ -300,8 +580,8 @@ mod tests {
 
     #[test]
     fn optimal_matches_exhaustive_on_small_net() {
-        // Brute-force all checkpoint subsets of a 10-layer net and confirm
-        // the budget search finds the same peak.
+        // Brute-force all checkpoint subsets of the 7-layer net and confirm
+        // the DP finds the same peak.
         let arch = autoencoder7();
         let n = arch.layers.len();
         let mut best = u64::MAX;
@@ -343,5 +623,50 @@ mod tests {
             assert_eq!(sorted, plan.checkpoints, "{kind:?} not sorted/deduped");
             assert!(plan.checkpoints.iter().all(|&c| c < arch.layers.len()));
         }
+    }
+
+    #[test]
+    fn frontier_is_strictly_pareto_and_anchored() {
+        for name in ["resnet18", "resnet50", "efficientnet_b0"] {
+            let arch = arch_by_name(name, (64, 64, 3), 10).unwrap();
+            let frontier = pareto_frontier(&arch, Pipeline::BASELINE, 8, 16);
+            assert!(!frontier.is_empty(), "{name}");
+            for w in frontier.windows(2) {
+                assert!(w[0].peak_bytes < w[1].peak_bytes, "{name}: peaks not strict");
+                assert!(
+                    w[0].recompute_overhead > w[1].recompute_overhead,
+                    "{name}: overheads not strictly decreasing"
+                );
+            }
+            // first point = exact minimum peak
+            let opt = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, 8);
+            assert_eq!(frontier[0].peak_bytes, opt.peak_bytes, "{name}");
+            // last point = store everything, zero recompute
+            assert_eq!(frontier.last().unwrap().recompute_overhead, 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn budget_selection_fits_and_errors_below_minimum() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let frontier = pareto_frontier(&arch, Pipeline::BASELINE, 8, 16);
+        let lo = frontier.first().unwrap().peak_bytes;
+        let hi = frontier.last().unwrap().peak_bytes;
+        // generous budget → the zero-recompute plan
+        let plan = plan_for_budget(&arch, Pipeline::BASELINE, 8, hi).unwrap();
+        assert_eq!(plan.recompute_overhead, 0.0);
+        assert!(plan.peak_bytes <= hi);
+        // mid budget → fits, cheapest time among fitting points
+        let mid = lo + (hi - lo) / 2;
+        let plan = plan_for_budget(&arch, Pipeline::BASELINE, 8, mid).unwrap();
+        assert!(plan.peak_bytes <= mid);
+        for p in &frontier {
+            if p.peak_bytes <= mid {
+                assert!(plan.recompute_overhead <= p.recompute_overhead);
+            }
+        }
+        // impossible budget → clear error naming the minimum
+        let err = plan_for_budget(&arch, Pipeline::BASELINE, 8, lo - 1).unwrap_err();
+        assert!(err.contains("below the minimum achievable peak"), "{err}");
     }
 }

@@ -49,7 +49,7 @@ pub struct MemoryReport {
 }
 
 /// Bytes per activation/param element under the pipeline.
-fn act_dtype_bytes(p: Pipeline) -> u64 {
+pub(crate) fn act_dtype_bytes(p: Pipeline) -> u64 {
     if p.mp {
         2
     } else {
@@ -58,7 +58,7 @@ fn act_dtype_bytes(p: Pipeline) -> u64 {
 }
 
 /// Input-batch resident bytes.
-fn input_bytes(arch: &ArchProfile, p: Pipeline, batch: usize) -> u64 {
+pub(crate) fn input_bytes(arch: &ArchProfile, p: Pipeline, batch: usize) -> u64 {
     let (h, w, c) = arch.input;
     let px = (h * w * c) as u64;
     if p.ed {
@@ -70,7 +70,13 @@ fn input_bytes(arch: &ArchProfile, p: Pipeline, batch: usize) -> u64 {
     }
 }
 
-/// Simulate one training iteration.
+/// Simulate one training iteration, materializing the full labeled
+/// timeline (the Figure-8 output path).
+///
+/// This is the *reporting* simulator: every event allocates a `String`
+/// label. Schedule searches must use
+/// [`PeakEvaluator`](crate::memory::peak::PeakEvaluator), which computes
+/// the identical peak without building a timeline.
 ///
 /// `checkpoints`: layer indices kept live under S-C (the segment
 /// boundaries). Ignored unless `pipeline.sc`. The input (index 0 boundary)
@@ -88,6 +94,22 @@ pub fn simulate(
     let param_elem_bytes = if pipeline.mp { 2 } else { 4 };
     let state_bytes = arch.param_count() * param_elem_bytes * 2; // params + momentum
     let input = input_bytes(arch, pipeline, batch);
+    if n == 0 {
+        // Empty architecture: nothing to schedule — report the resident
+        // state+input and a single timeline event instead of indexing
+        // `layers[n - 1]`.
+        let live = state_bytes + input;
+        return MemoryReport {
+            model: arch.name.clone(),
+            pipeline,
+            batch,
+            peak_bytes: live,
+            state_bytes,
+            input_bytes: input,
+            peak_activation_bytes: 0,
+            timeline: vec![TimelineEvent { label: "state+input".into(), live_bytes: live }],
+        };
+    }
 
     // Which layers' activations are stored during the forward pass?
     let mut stored = vec![true; n];
@@ -375,6 +397,17 @@ mod tests {
         let base = simulate(&arch, pipe("b"), 16, &[]);
         let ratio = sc.peak_bytes as f64 / base.peak_bytes as f64;
         assert!((0.9..=1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn empty_arch_reports_resident_state_only() {
+        let arch = ArchProfile { name: "empty".into(), input: (8, 8, 3), layers: vec![] };
+        for p in ["b", "sc", "ed+mp+sc"] {
+            let r = simulate(&arch, pipe(p), 4, &[]);
+            assert_eq!(r.peak_bytes, r.state_bytes + r.input_bytes, "{p}");
+            assert_eq!(r.peak_activation_bytes, 0, "{p}");
+            assert_eq!(r.timeline.len(), 1, "{p}");
+        }
     }
 
     #[test]

@@ -55,6 +55,45 @@ impl ArchProfile {
     pub fn depth(&self) -> usize {
         self.layers.len()
     }
+
+    /// Prefix sums of per-image stored-activation elements: entry `i` is the
+    /// sum of `act_elems` over layers `< i` (length `depth() + 1`). The
+    /// planner's incremental segment-peak evaluation is built on these.
+    pub fn act_prefix_elems(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.layers.len() + 1);
+        let mut acc = 0u64;
+        out.push(0);
+        for l in &self.layers {
+            acc += l.act_elems;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Prefix sums of per-image forward FLOPs (length `depth() + 1`); the
+    /// DP planner reads segment recompute costs off these in O(1).
+    pub fn flops_prefix(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.layers.len() + 1);
+        let mut acc = 0u64;
+        out.push(0);
+        for l in &self.layers {
+            acc += l.flops_per_image;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Suffix sums of parameter counts: entry `i` is the sum of `params`
+    /// over layers `≥ i` (length `depth() + 1`, last entry 0). Gradient
+    /// residency during the backward pass follows this curve.
+    pub fn param_suffix(&self) -> Vec<u64> {
+        let n = self.layers.len();
+        let mut out = vec![0u64; n + 1];
+        for i in (0..n).rev() {
+            out[i] = out[i + 1] + self.layers[i].params;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -170,5 +209,46 @@ mod tests {
     #[test]
     fn unknown_arch_is_none() {
         assert!(arch_by_name("alexnet", (224, 224, 3), 1000).is_none());
+    }
+
+    #[test]
+    fn prefix_sums_match_direct_sums() {
+        let p = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let n = p.depth();
+        let ap = p.act_prefix_elems();
+        let fp = p.flops_prefix();
+        let ps = p.param_suffix();
+        assert_eq!(ap.len(), n + 1);
+        assert_eq!(fp.len(), n + 1);
+        assert_eq!(ps.len(), n + 1);
+        assert_eq!(ap[0], 0);
+        assert_eq!(ps[n], 0);
+        assert_eq!(ap[n], p.total_activation_elems(1));
+        assert_eq!(fp[n], p.flops(1));
+        assert_eq!(ps[0], p.param_count());
+        for i in 0..n {
+            assert_eq!(ap[i + 1] - ap[i], p.layers[i].act_elems);
+            assert_eq!(fp[i + 1] - fp[i], p.layers[i].flops_per_image);
+            assert_eq!(ps[i] - ps[i + 1], p.layers[i].params);
+        }
+    }
+
+    #[test]
+    fn stored_activations_cover_boundary_outputs() {
+        // The planner's segment decomposition relies on every layer's stored
+        // activation footprint including its boundary output tensor.
+        for name in all_arch_names() {
+            let input = if name.contains("inception") { (299, 299, 3) } else { (64, 64, 3) };
+            let p = arch_by_name(&name, input, 10).unwrap();
+            for l in &p.layers {
+                assert!(
+                    l.act_elems >= l.out_elems(),
+                    "{name}/{}: act {} < out {}",
+                    l.name,
+                    l.act_elems,
+                    l.out_elems()
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,166 @@
+//! Property tests for the checkpoint-planner stack: the zero-allocation
+//! peak evaluator must agree exactly with the timeline simulator, the DP
+//! must match brute-force enumeration on small chains, and Pareto
+//! frontiers must be strictly non-dominated and correctly anchored.
+
+use optorch::config::Pipeline;
+use optorch::memory::peak::PeakEvaluator;
+use optorch::memory::planner::{
+    pareto_frontier, plan_checkpoints, plan_for_budget, PlannerKind,
+};
+use optorch::memory::simulator::simulate;
+use optorch::models::{ArchProfile, LayerKind, LayerProfile};
+use optorch::util::propcheck::check_with;
+use optorch::util::rng::Rng;
+
+/// Random heterogeneous chain respecting the planner invariant
+/// `act_elems ≥ out_elems` (every registry profile stores at least its
+/// boundary tensor — see `memory::peak` docs).
+fn rand_chain(rng: &mut Rng, max_layers: usize) -> ArchProfile {
+    let n = 1 + rng.gen_range(max_layers);
+    let layers = (0..n)
+        .map(|i| {
+            let h = 1 + rng.gen_range(6);
+            let c = 1 + rng.gen_range(48);
+            let out = (h * h * c) as u64;
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: LayerKind::Dense,
+                out_shape: (h, h, c),
+                act_elems: out * (1 + rng.gen_range(4)) as u64,
+                params: rng.gen_range(5_000) as u64,
+                flops_per_image: (1 + rng.gen_range(900)) as u64 * 1_000,
+            }
+        })
+        .collect();
+    ArchProfile {
+        name: "rand_chain".into(),
+        input: (1 + rng.gen_range(6), 1 + rng.gen_range(6), 3),
+        layers,
+    }
+}
+
+#[test]
+fn prop_peak_evaluator_matches_simulator() {
+    check_with(
+        "evaluator peak == simulate peak",
+        96,
+        0xA11C,
+        |rng| {
+            let arch = rand_chain(rng, 14);
+            let n = arch.layers.len();
+            // random plan, deliberately including out-of-range indices
+            let plan: Vec<usize> = (0..n + 2).filter(|_| rng.gen_range(2) == 1).collect();
+            let pipes = ["b", "sc", "mp", "ed+sc", "ed+mp+sc"];
+            let pipe = pipes[rng.gen_range(pipes.len())].to_string();
+            (arch, plan, pipe, 1 + rng.gen_range(12))
+        },
+        |(arch, plan, pipe, batch)| {
+            let p = Pipeline::parse(pipe).unwrap();
+            let mut ev = PeakEvaluator::new(arch, p, *batch);
+            let got = ev.peak(plan);
+            let want = simulate(arch, p, *batch, plan).peak_bytes;
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("evaluator {got} != simulate {want} [{pipe}]"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_dp_matches_bruteforce_on_small_chains() {
+    check_with(
+        "DP optimal == exhaustive enumeration (n ≤ 14)",
+        48,
+        0xD9,
+        |rng| (rand_chain(rng, 14), 1 + rng.gen_range(8)),
+        |(arch, batch)| {
+            let n = arch.layers.len();
+            let sc = Pipeline::parse("sc").unwrap();
+            let mut ev = PeakEvaluator::new(arch, sc, *batch);
+            let mut best = u64::MAX;
+            for mask in 0u32..(1u32 << (n - 1)) {
+                let cps: Vec<usize> = (0..n - 1).filter(|i| mask >> i & 1 == 1).collect();
+                best = best.min(ev.peak(&cps));
+            }
+            let opt = plan_checkpoints(arch, PlannerKind::Optimal, Pipeline::BASELINE, *batch);
+            if opt.peak_bytes == best {
+                Ok(())
+            } else {
+                Err(format!("dp {} != brute force {best}", opt.peak_bytes))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_frontier_strictly_pareto_and_anchored() {
+    check_with(
+        "frontier sorted, non-dominated, anchored",
+        48,
+        0xF40,
+        |rng| (rand_chain(rng, 20), 1 + rng.gen_range(8)),
+        |(arch, batch)| {
+            let frontier = pareto_frontier(arch, Pipeline::BASELINE, *batch, 12);
+            if frontier.is_empty() {
+                return Err("empty frontier".into());
+            }
+            for w in frontier.windows(2) {
+                if w[0].peak_bytes >= w[1].peak_bytes {
+                    return Err(format!(
+                        "peaks not strictly increasing: {} then {}",
+                        w[0].peak_bytes, w[1].peak_bytes
+                    ));
+                }
+                if w[0].recompute_overhead <= w[1].recompute_overhead {
+                    return Err(format!(
+                        "overheads not strictly decreasing: {} then {}",
+                        w[0].recompute_overhead, w[1].recompute_overhead
+                    ));
+                }
+            }
+            let opt = plan_checkpoints(arch, PlannerKind::Optimal, Pipeline::BASELINE, *batch);
+            if frontier[0].peak_bytes != opt.peak_bytes {
+                return Err(format!(
+                    "frontier[0] {} != exact min peak {}",
+                    frontier[0].peak_bytes, opt.peak_bytes
+                ));
+            }
+            if frontier.last().unwrap().recompute_overhead != 0.0 {
+                return Err("frontier does not end at the zero-recompute plan".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_budget_selection_fits_and_is_cheapest() {
+    check_with(
+        "plan_for_budget fits and is cheapest-time",
+        48,
+        0xB4D6,
+        |rng| (rand_chain(rng, 16), 1 + rng.gen_range(8), rng.next_u64()),
+        |(arch, batch, budget_roll)| {
+            let frontier = pareto_frontier(arch, Pipeline::BASELINE, *batch, 12);
+            let lo = frontier.first().unwrap().peak_bytes;
+            let hi = frontier.last().unwrap().peak_bytes;
+            let budget = lo + budget_roll % (hi - lo + 1);
+            let plan = plan_for_budget(arch, Pipeline::BASELINE, *batch, budget)?;
+            if plan.peak_bytes > budget {
+                return Err(format!("plan peak {} exceeds budget {budget}", plan.peak_bytes));
+            }
+            for p in &frontier {
+                if p.peak_bytes <= budget && p.recompute_overhead < plan.recompute_overhead {
+                    return Err("a cheaper-time frontier point also fits the budget".into());
+                }
+            }
+            if plan_for_budget(arch, Pipeline::BASELINE, *batch, lo - 1).is_ok() {
+                return Err("accepted a budget below the minimum achievable peak".into());
+            }
+            Ok(())
+        },
+    );
+}
