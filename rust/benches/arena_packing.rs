@@ -1,0 +1,299 @@
+//! Activation-arena benchmark: interval-packing quality and speed across
+//! the model zoo (fragmentation ratio vs the exact DP peak, pack time vs
+//! layer count) plus the step-scratch hot path (heap staging vs the
+//! generation-tagged slab allocator).
+//!
+//! Emits `BENCH_arena.json`. `OPTORCH_BENCH_CHECK=1` runs a fast smoke
+//! pass that *fails the process* when an invariant breaks: overlapping or
+//! out-of-slab offsets, a layout whose slab + static bytes fall below the
+//! exact DP peak, fragmentation above 1.25 on the paper profiles, or any
+//! heap allocation inside the slab path's steady state (counted by a
+//! global allocator shim, same harness as `planner_frontier`).
+
+use optorch::config::Pipeline;
+use optorch::memory::arena::{pack, plan_arena, validate, ArenaAllocator, Lifetimes};
+use optorch::memory::peak::PeakEvaluator;
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
+use optorch::util::bench::{bench, fmt_bytes, fmt_ns, Table};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; only adds a counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+struct ArchRow {
+    name: String,
+    depth: usize,
+    tensors: usize,
+    slab: u64,
+    base: u64,
+    peak: u64,
+    frag: f64,
+    plan_pack_ns: f64,
+}
+
+/// Deterministic synthetic chain for the pack-time-vs-depth sweep.
+fn synth_chain(depth: usize) -> ArchProfile {
+    let widths = [64usize, 48, 32, 24, 16, 32, 64, 96];
+    let layers = (0..depth)
+        .map(|i| {
+            let c = widths[i % widths.len()];
+            let out = (8 * 8 * c) as u64;
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: LayerKind::Conv,
+                out_shape: (8, 8, c),
+                act_elems: out * 2,
+                params: (c * 9) as u64,
+                flops_per_image: c as u64 * 10_000,
+            }
+        })
+        .collect();
+    ArchProfile { name: format!("chain{depth}"), input: (8, 8, 3), layers }
+}
+
+fn write_json(
+    batch: usize,
+    rows: &[ArchRow],
+    sweep: &[(usize, usize, f64)],
+    heap_step_ns: f64,
+    arena_step_ns: f64,
+    steady_allocs: u64,
+) -> std::io::Result<()> {
+    let mut j = format!("{{\n  \"batch\": {batch},\n  \"archs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"arch\": \"{}\", \"depth\": {}, \"tensors\": {}, \"slab_bytes\": {}, \
+             \"base_bytes\": {}, \"peak_bytes\": {}, \"fragmentation_ratio\": {:.4}, \
+             \"plan_pack_ns\": {:.0}}}{}\n",
+            r.name,
+            r.depth,
+            r.tensors,
+            r.slab,
+            r.base,
+            r.peak,
+            r.frag,
+            r.plan_pack_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n  \"pack_time_sweep\": [\n");
+    for (i, (depth, tensors, ns)) in sweep.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"depth\": {depth}, \"tensors\": {tensors}, \"pack_ns\": {ns:.0}}}{}\n",
+            if i + 1 < sweep.len() { "," } else { "" }
+        ));
+    }
+    j.push_str(&format!(
+        "  ],\n  \"step_scratch\": {{\"heap_ns\": {heap_step_ns:.0}, \
+         \"arena_ns\": {arena_step_ns:.0}, \"arena_steady_allocs\": {steady_allocs}}}\n}}\n"
+    ));
+    std::fs::write("BENCH_arena.json", j)
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let iters = if check { 3 } else { 20 };
+    let batch = 16;
+    let mut failures = 0u32;
+    let mut rows: Vec<ArchRow> = Vec::new();
+
+    println!("=== activation arena: slab packing vs the exact DP peak (batch {batch}) ===\n");
+    let mut t = Table::new(&[
+        "arch",
+        "depth",
+        "tensors",
+        "slab",
+        "static",
+        "exact peak",
+        "fragmentation",
+        "plan+pack",
+    ]);
+    for name in ["resnet18", "resnet50", "efficientnet_b0", "inception_v3"] {
+        let hw = if name == "inception_v3" { 299 } else { 224 };
+        let arch = arch_by_name(name, (hw, hw, 3), 1000).unwrap();
+        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+        let (lt, layout) = plan_arena(&arch, Pipeline::BASELINE, batch, &plan.checkpoints);
+
+        if let Err(e) = validate(&lt, &layout) {
+            eprintln!("FAIL {name}: invalid layout: {e}");
+            failures += 1;
+        }
+        if layout.peak_bytes != plan.peak_bytes {
+            eprintln!(
+                "FAIL {name}: layout peak {} != plan peak {}",
+                layout.peak_bytes, plan.peak_bytes
+            );
+            failures += 1;
+        }
+        if layout.total_bytes() < plan.peak_bytes {
+            eprintln!(
+                "FAIL {name}: slab + static {} below the exact peak {}",
+                layout.total_bytes(),
+                plan.peak_bytes
+            );
+            failures += 1;
+        }
+        let frag = layout.fragmentation_ratio();
+        if frag > 1.25 {
+            eprintln!("FAIL {name}: fragmentation ratio {frag:.3} > 1.25");
+            failures += 1;
+        }
+
+        let stats = bench(1, iters, || {
+            let (lt, layout) = plan_arena(&arch, Pipeline::BASELINE, batch, &plan.checkpoints);
+            std::hint::black_box((lt.tensors.len(), layout.slab_bytes));
+        });
+
+        t.row(&[
+            name.to_string(),
+            format!("{}", arch.depth()),
+            format!("{}", lt.tensors.len()),
+            fmt_bytes(layout.slab_bytes),
+            fmt_bytes(layout.base_bytes),
+            fmt_bytes(layout.peak_bytes),
+            format!("{frag:.3}x"),
+            fmt_ns(stats.median_ns),
+        ]);
+        rows.push(ArchRow {
+            name: name.to_string(),
+            depth: arch.depth(),
+            tensors: lt.tensors.len(),
+            slab: layout.slab_bytes,
+            base: layout.base_bytes,
+            peak: layout.peak_bytes,
+            frag,
+            plan_pack_ns: stats.median_ns,
+        });
+    }
+    t.print();
+
+    // ---- pack time vs layer count (packing only, lifetimes precomputed) ----
+    println!("\n=== offset assignment: pack time vs layer count ===\n");
+    let mut t = Table::new(&["depth", "tensors", "pack"]);
+    let mut sweep: Vec<(usize, usize, f64)> = Vec::new();
+    for depth in [8usize, 16, 32, 64, 96] {
+        let arch = synth_chain(depth);
+        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
+        let mut sc = Pipeline::BASELINE;
+        sc.sc = true;
+        let ev = PeakEvaluator::new(&arch, sc, batch);
+        let lt = Lifetimes::extract(&ev, &plan.checkpoints);
+        let stats = bench(1, iters, || {
+            let layout = pack(&lt);
+            std::hint::black_box(layout.slab_bytes);
+        });
+        t.row(&[
+            format!("{depth}"),
+            format!("{}", lt.tensors.len()),
+            fmt_ns(stats.median_ns),
+        ]);
+        sweep.push((depth, lt.tensors.len(), stats.median_ns));
+    }
+    t.print();
+
+    // ---- step scratch: heap staging vs the slab allocator ----
+    // Emulates the runtime's encoded-batch staging pattern (3 groups of
+    // CIFAR words + one label matrix per step) with both strategies. The
+    // real `batch_literal_arena` path is pjrt-gated, so this bench gates
+    // the allocator itself; `runtime::exec` tests pin the real path to
+    // the slab via `fallback_allocs == 0`.
+    let groups = 3usize;
+    let px = 32 * 32 * 3;
+    let labels_len = 16 * 10;
+    let src: Vec<f64> = (0..px).map(|i| i as f64).collect();
+    let src_labels: Vec<f32> = vec![0.1; labels_len];
+
+    let heap_stats = bench(8, iters * 50, || {
+        let mut data: Vec<f64> = Vec::with_capacity(groups * px);
+        for _ in 0..groups {
+            data.extend_from_slice(&src);
+        }
+        let mut lab: Vec<f32> = Vec::with_capacity(labels_len);
+        lab.extend_from_slice(&src_labels);
+        std::hint::black_box((data.len(), lab.len()));
+    });
+
+    let mut arena = ArenaAllocator::new(groups * px * 8 + labels_len * 4);
+    let arena_step = |arena: &mut ArenaAllocator| {
+        arena.begin_step();
+        let hw = arena.alloc_f64(groups * px).expect("slab sized for the step");
+        let buf = arena.f64_mut(&hw);
+        for dst in buf.chunks_exact_mut(px) {
+            dst.copy_from_slice(&src);
+        }
+        let hl = arena.alloc_f32(labels_len).expect("slab sized for the step");
+        arena.f32_mut(&hl).copy_from_slice(&src_labels);
+        std::hint::black_box(arena.high_water_bytes());
+    };
+    let arena_stats = bench(8, iters * 50, || arena_step(&mut arena));
+
+    // steady-state allocation audit: N arena steps must not touch the heap
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    for _ in 0..256 {
+        arena_step(&mut arena);
+    }
+    let steady_allocs = ALLOC_COUNT.load(Ordering::Relaxed) - before;
+    if steady_allocs != 0 {
+        eprintln!("FAIL: {steady_allocs} heap allocations across 256 arena steps");
+        failures += 1;
+    }
+    if arena.fallback_allocs() != 0 {
+        eprintln!("FAIL: {} slab fallbacks in the arena step path", arena.fallback_allocs());
+        failures += 1;
+    }
+
+    println!("\n=== step scratch staging: heap vs slab ===\n");
+    let mut t = Table::new(&["path", "per step", "steady-state heap allocs"]);
+    t.row(&["heap (old)".into(), fmt_ns(heap_stats.median_ns), "2 per step".into()]);
+    t.row(&[
+        "arena slab".into(),
+        fmt_ns(arena_stats.median_ns),
+        format!("{steady_allocs} per 256 steps"),
+    ]);
+    t.print();
+
+    match write_json(
+        batch,
+        &rows,
+        &sweep,
+        heap_stats.median_ns,
+        arena_stats.median_ns,
+        steady_allocs,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_arena.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_arena.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: all arena invariants hold");
+    }
+}

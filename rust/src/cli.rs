@@ -93,9 +93,11 @@ COMMANDS:
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
-            [--kind dp|sqrt|uniformK|bottleneckK] [--frontier]
-            [--budget BYTES]  (prints the DP time/memory Pareto frontier
-            and, with --budget, the cheapest-time plan that fits)
+            [--kind dp|sqrt|uniformK|bottleneckK] [--frontier] [--arena]
+            [--budget BYTES]  (--frontier prints the DP time/memory Pareto
+            frontier; --budget picks the cheapest-time plan that fits;
+            --arena packs the plan into a memory slab and prints its size,
+            fragmentation ratio and per-class offsets)
   models    List architecture profiles and parameter counts.
   figures   Regenerate all paper figures (shortcut for the benches).
   help      Show this message.

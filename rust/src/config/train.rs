@@ -42,6 +42,9 @@ impl DatasetChoice {
 /// (`512MiB`, `1.5GB`, `786432`).
 pub fn parse_bytes(s: &str) -> Result<u64, String> {
     let t = s.trim();
+    if t.starts_with('-') {
+        return Err(format!("byte count '{s}' is negative — sizes must be ≥ 1 B"));
+    }
     let split = t
         .find(|c: char| !(c.is_ascii_digit() || c == '.'))
         .unwrap_or(t.len());
@@ -347,6 +350,22 @@ mod tests {
         assert!(parse_bytes("MiB").is_err());
         assert!(parse_bytes("12parsecs").is_err());
         assert!(parse_bytes("0").is_err());
+    }
+
+    #[test]
+    fn parse_bytes_fractional_suffixes() {
+        assert_eq!(parse_bytes("1.5GiB").unwrap(), 3 * 512 * 1024 * 1024);
+        assert_eq!(parse_bytes("0.5MiB").unwrap(), 512 * 1024);
+        assert_eq!(parse_bytes("2.5KB").unwrap(), 2_500);
+        assert_eq!(parse_bytes("0.25KiB").unwrap(), 256);
+    }
+
+    #[test]
+    fn parse_bytes_rejects_negatives_with_clear_error() {
+        for s in ["-1MiB", "-786432", "-0.5GiB", " -2KB "] {
+            let err = parse_bytes(s).unwrap_err();
+            assert!(err.contains("negative"), "{s}: {err}");
+        }
     }
 
     #[test]

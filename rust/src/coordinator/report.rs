@@ -2,6 +2,7 @@
 //! benches (`reports/` directory by default).
 
 use crate::coordinator::TrainReport;
+use crate::memory::arena::ArenaReport;
 use crate::memory::planner::CheckpointPlan;
 use crate::memory::simulator::MemoryReport;
 use crate::util::bench::fmt_bytes;
@@ -66,6 +67,9 @@ pub fn markdown_summary(report: &TrainReport) -> String {
     if let Some(plan) = &report.plan {
         s.push_str(&plan_summary(plan));
     }
+    if let Some(arena) = &report.arena {
+        s.push_str(&arena_summary(arena));
+    }
     s
 }
 
@@ -77,6 +81,26 @@ pub fn plan_summary(plan: &CheckpointPlan) -> String {
         plan.checkpoints,
         fmt_bytes(plan.peak_bytes),
         plan.recompute_overhead * 100.0
+    )
+}
+
+/// One-line description of the packed activation arena for the run's
+/// plan: slab vs exact peak (fragmentation) and the per-class mix.
+pub fn arena_summary(a: &ArenaReport) -> String {
+    let classes = a
+        .by_class
+        .iter()
+        .map(|c| format!("{} {}", c.count, c.class.name()))
+        .collect::<Vec<_>>()
+        .join(" · ");
+    format!(
+        "activation arena: slab {} (+ static {}) vs simulated peak {} — \
+         fragmentation {:.2}x, {} tensors ({classes})\n",
+        fmt_bytes(a.slab_bytes),
+        fmt_bytes(a.base_bytes),
+        fmt_bytes(a.peak_bytes),
+        a.fragmentation,
+        a.tensor_count
     )
 }
 
@@ -202,6 +226,25 @@ mod tests {
                 peak_bytes: 3 * 1024 * 1024,
                 recompute_overhead: 0.42,
             }),
+            arena: Some(ArenaReport {
+                slab_bytes: 2 * 1024 * 1024,
+                base_bytes: 1024 * 1024,
+                peak_bytes: 2_900_000,
+                tensor_count: 17,
+                fragmentation: 1.08,
+                by_class: vec![
+                    crate::memory::arena::ClassStat {
+                        class: crate::memory::arena::TensorClass::Checkpoint,
+                        count: 3,
+                        bytes: 512 * 1024,
+                    },
+                    crate::memory::arena::ClassStat {
+                        class: crate::memory::arena::TensorClass::ParamGrad,
+                        count: 8,
+                        bytes: 256 * 1024,
+                    },
+                ],
+            }),
         }
     }
 
@@ -264,6 +307,17 @@ mod tests {
         let mut rep = fake_report();
         rep.plan = None;
         assert!(!markdown_summary(&rep).contains("checkpoint plan"));
+    }
+
+    #[test]
+    fn markdown_includes_arena_line() {
+        let md = markdown_summary(&fake_report());
+        assert!(md.contains("activation arena: slab 2.0 MiB"), "{md}");
+        assert!(md.contains("fragmentation 1.08x"), "{md}");
+        assert!(md.contains("3 checkpoint · 8 param-grad"), "{md}");
+        let mut rep = fake_report();
+        rep.arena = None;
+        assert!(!markdown_summary(&rep).contains("activation arena"));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::data::loader::{BatchPayload, EdLoader, LoaderStats, WorkerSummary};
 use crate::data::pool::BufferPool;
 use crate::data::sampler::SbsSampler;
 use crate::data::synth::{Split, SynthCifar};
+use crate::memory::arena::{plan_arena, summarize, ArenaReport};
 use crate::memory::planner::{plan_checkpoints, plan_for_budget, CheckpointPlan, PlannerKind};
 use crate::metrics::{EpochRecord, History, Mean, Timer};
 use crate::runtime::{LoadedModel, Runtime, TrainState};
@@ -41,6 +42,9 @@ pub struct TrainReport {
     /// overhead — and, with `memory_budget` set, the cheapest-time
     /// frontier point that fit the budget.
     pub plan: Option<CheckpointPlan>,
+    /// The packed activation-arena layout for that plan: slab size vs the
+    /// exact simulated peak (fragmentation) and per-class tensor totals.
+    pub arena: Option<ArenaReport>,
 }
 
 /// Orchestrates one training run.
@@ -63,17 +67,21 @@ pub struct Trainer {
     eval_cache: Option<Vec<BatchPayload>>,
     /// Checkpoint plan selected for S-C pipelines (see [`TrainReport::plan`]).
     plan: Option<CheckpointPlan>,
+    /// Packed arena layout for that plan (see [`TrainReport::arena`]).
+    arena: Option<ArenaReport>,
 }
 
 /// Choose the run's checkpoint plan for an S-C pipeline: under a budget,
 /// the cheapest-time Pareto-frontier plan that fits (an error names the
 /// minimum achievable peak if none does); otherwise the exact minimum-peak
-/// plan. `None` when the model has no analytic profile to plan over.
+/// plan. The selected plan is then packed into an activation-arena layout
+/// (lifetime extraction + offset assignment) and both are returned.
+/// `None` when the model has no analytic profile to plan over.
 fn select_plan(
     cfg: &TrainConfig,
     input: (usize, usize, usize),
     classes: usize,
-) -> Result<Option<CheckpointPlan>> {
+) -> Result<Option<(CheckpointPlan, ArenaReport)>> {
     if !cfg.pipeline.sc {
         return Ok(None);
     }
@@ -106,7 +114,16 @@ fn select_plan(
         plan.peak_bytes / 1024,
         plan.recompute_overhead * 100.0
     );
-    Ok(Some(plan))
+    let (lifetimes, layout) = plan_arena(&arch, cfg.pipeline, cfg.batch_size, &plan.checkpoints);
+    let arena = summarize(&lifetimes, &layout);
+    info!(
+        "activation arena for {}: slab {} KiB over {} tensors, fragmentation {:.2}x",
+        cfg.model,
+        arena.slab_bytes / 1024,
+        arena.tensor_count,
+        arena.fragmentation
+    );
+    Ok(Some((plan, arena)))
 }
 
 fn make_dataset(choice: DatasetChoice, split: Split, len: usize, seed: u64) -> Result<Arc<dyn Dataset>> {
@@ -147,7 +164,10 @@ impl Trainer {
             );
         }
         let (h, w, c) = train_data.shape();
-        let plan = select_plan(cfg, (h, w, c), num_classes)?;
+        let (plan, arena) = match select_plan(cfg, (h, w, c), num_classes)? {
+            Some((p, a)) => (Some(p), Some(a)),
+            None => (None, None),
+        };
         let state = model.init_state(cfg.seed)?;
         info!(
             "initialized {}/{}: {} state tensors, {} KiB",
@@ -169,12 +189,18 @@ impl Trainer {
             pool: Arc::new(BufferPool::default()),
             eval_cache: None,
             plan,
+            arena,
         })
     }
 
     /// The checkpoint plan this run trains under (S-C pipelines only).
     pub fn plan(&self) -> Option<&CheckpointPlan> {
         self.plan.as_ref()
+    }
+
+    /// The packed activation-arena summary for this run's plan.
+    pub fn arena(&self) -> Option<&ArenaReport> {
+        self.arena.as_ref()
     }
 
     fn train_loader(&self, epoch: usize) -> Result<EdLoader> {
@@ -340,6 +366,7 @@ impl Trainer {
             pool_allocs: self.pool.allocs(),
             pool_reuses: self.pool.reuses(),
             plan: self.plan.clone(),
+            arena: self.arena.clone(),
             history: std::mem::take(&mut self.history),
         })
     }
@@ -377,11 +404,15 @@ mod tests {
     }
 
     #[test]
-    fn select_plan_picks_optimal_without_budget() {
+    fn select_plan_picks_optimal_without_budget_and_packs_an_arena() {
         let cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("sc").unwrap());
-        let plan = select_plan(&cfg, (32, 32, 3), 10).unwrap().unwrap();
+        let (plan, arena) = select_plan(&cfg, (32, 32, 3), 10).unwrap().unwrap();
         assert!(plan.peak_bytes > 0);
         assert!(plan.checkpoints.iter().all(|&c| c < 4)); // tiny_cnn has 5 layers
+        assert!(arena.slab_bytes > 0);
+        assert_eq!(arena.peak_bytes, plan.peak_bytes);
+        assert!(arena.base_bytes + arena.slab_bytes >= plan.peak_bytes);
+        assert!((1.0..=1.25).contains(&arena.fragmentation), "{}", arena.fragmentation);
     }
 
     #[test]

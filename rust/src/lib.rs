@@ -67,6 +67,7 @@ pub mod prelude {
     pub use crate::data::pool::BufferPool;
     pub use crate::data::sampler::SbsSampler;
     pub use crate::data::synth::SynthCifar;
+    pub use crate::memory::arena::{plan_arena, ArenaAllocator, ArenaLayout, ArenaReport};
     pub use crate::memory::peak::PeakEvaluator;
     pub use crate::memory::planner::{
         pareto_frontier, plan_checkpoints, plan_for_budget, CheckpointPlan, PlannerKind,

@@ -6,6 +6,7 @@ use anyhow::{anyhow, Result};
 use optorch::cli::{Cli, USAGE};
 use optorch::config::{parse_bytes, Pipeline, TrainConfig};
 use optorch::coordinator::{report, Trainer};
+use optorch::memory::arena::{plan_arena, summarize};
 use optorch::memory::planner::{
     pareto_frontier, plan_checkpoints, PlannerKind, DEFAULT_FRONTIER_LEVELS,
 };
@@ -123,6 +124,9 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         ],
     };
     let mut table = Table::new(&["planner", "checkpoints", "peak", "recompute overhead"]);
+    // The last kind in the table (the explicit --kind, or Optimal in the
+    // default set) is the one --arena packs — no second planning pass.
+    let mut arena_plan = None;
     for kind in kinds {
         let plan = plan_checkpoints(&arch, kind, Pipeline::BASELINE, batch);
         table.row(&[
@@ -131,8 +135,51 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
             fmt_bytes(plan.peak_bytes),
             format!("{:.1}% of fwd FLOPs", plan.recompute_overhead * 100.0),
         ]);
+        arena_plan = Some((kind, plan));
     }
     table.print();
+
+    if cli.has_flag("arena") {
+        let (kind, plan) = arena_plan.expect("at least one planner kind is always run");
+        let (lifetimes, layout) = plan_arena(&arch, Pipeline::BASELINE, batch, &plan.checkpoints);
+        let rep = summarize(&lifetimes, &layout);
+        println!(
+            "\nactivation arena ({model}, batch {batch}, {kind:?} plan): \
+             slab {} + static {} = {} vs simulated peak {} — fragmentation {:.3}x, {} tensors",
+            fmt_bytes(rep.slab_bytes),
+            fmt_bytes(rep.base_bytes),
+            fmt_bytes(layout.total_bytes()),
+            fmt_bytes(rep.peak_bytes),
+            rep.fragmentation,
+            rep.tensor_count,
+        );
+        let mut t = Table::new(&["class", "tensors", "bytes", "first offsets"]);
+        for c in &rep.by_class {
+            let mut offs: Vec<u64> = lifetimes
+                .tensors
+                .iter()
+                .enumerate()
+                .filter(|(_, tl)| tl.class == c.class)
+                .map(|(i, _)| layout.offsets[i])
+                .collect();
+            offs.sort_unstable();
+            offs.dedup();
+            let shown = offs
+                .iter()
+                .take(4)
+                .map(|o| o.to_string())
+                .collect::<Vec<_>>()
+                .join(", ");
+            let suffix = if offs.len() > 4 { ", …" } else { "" };
+            t.row(&[
+                c.class.name().to_string(),
+                format!("{}", c.count),
+                fmt_bytes(c.bytes),
+                format!("{shown}{suffix}"),
+            ]);
+        }
+        t.print();
+    }
 
     let budget = match cli.get("budget") {
         Some(b) => Some(parse_bytes(b).map_err(|e| anyhow!("--budget: {e}"))?),

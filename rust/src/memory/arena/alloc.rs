@@ -1,0 +1,244 @@
+//! `ArenaAllocator`: one preallocated slab with generation-tagged handles.
+//!
+//! The planning half of the arena ([`pack`](crate::memory::arena::pack))
+//! decides how big a slab a schedule needs; this module is the runtime
+//! half: a bump allocator over a single preallocated, 8-byte-aligned slab
+//! that the training hot path recycles every step. Steady-state steps
+//! therefore perform **zero heap allocations** for staging buffers
+//! (audited by the counting global allocator in `benches/arena_packing.rs`).
+//!
+//! * [`ArenaAllocator::begin_step`] recycles the whole slab and bumps the
+//!   generation; every [`ArenaHandle`] minted before it becomes stale and
+//!   panics on use — the use-after-recycle analogue of a use-after-free.
+//! * Debug builds poison the recycled slab with `0xA5` so stale data is
+//!   never silently mistaken for a freshly written buffer.
+//! * A request that outgrows the slab returns `None` (callers fall back
+//!   to the heap); [`ArenaAllocator::fallback_allocs`] counts them, so a
+//!   mis-sized slab is visible instead of fatal.
+
+/// Bump allocator over one preallocated slab (see module docs).
+#[derive(Debug)]
+pub struct ArenaAllocator {
+    /// Backing store in 8-byte words — guarantees every handed-out offset
+    /// is aligned for f64 views.
+    slab: Vec<u64>,
+    /// Bump pointer, in bytes.
+    top: usize,
+    generation: u64,
+    high_water: usize,
+    fallbacks: u64,
+}
+
+/// A generation-tagged range of the slab. Copyable and cheap; resolves to
+/// a slice only through the allocator, which checks the generation.
+#[derive(Clone, Copy, Debug)]
+pub struct ArenaHandle {
+    offset: usize,
+    bytes: usize,
+    generation: u64,
+}
+
+impl ArenaHandle {
+    pub fn len_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+const POISON: u64 = 0xA5A5_A5A5_A5A5_A5A5;
+
+impl ArenaAllocator {
+    /// Preallocate a slab of at least `slab_bytes` (rounded up to whole
+    /// 8-byte words). This is the only heap allocation the arena makes.
+    pub fn new(slab_bytes: usize) -> ArenaAllocator {
+        let words = slab_bytes.div_ceil(8);
+        ArenaAllocator {
+            slab: vec![0u64; words],
+            top: 0,
+            generation: 0,
+            high_water: 0,
+            fallbacks: 0,
+        }
+    }
+
+    pub fn slab_bytes(&self) -> usize {
+        self.slab.len() * 8
+    }
+
+    /// Recycle the slab for a new step: resets the bump pointer and bumps
+    /// the generation so every outstanding handle goes stale. Debug builds
+    /// poison the slab so recycled bytes are recognizable.
+    pub fn begin_step(&mut self) {
+        self.generation += 1;
+        self.top = 0;
+        if cfg!(debug_assertions) {
+            self.slab.fill(POISON);
+        }
+    }
+
+    /// Claim `bytes` from the slab (offset and advance rounded up to the
+    /// 8-byte alignment). `None` when the slab cannot fit the request —
+    /// counted in [`fallback_allocs`](ArenaAllocator::fallback_allocs).
+    pub fn alloc(&mut self, bytes: usize) -> Option<ArenaHandle> {
+        let need = bytes.div_ceil(8) * 8;
+        if self.top + need > self.slab_bytes() {
+            self.fallbacks += 1;
+            return None;
+        }
+        let h = ArenaHandle { offset: self.top, bytes, generation: self.generation };
+        self.top += need;
+        self.high_water = self.high_water.max(self.top);
+        Some(h)
+    }
+
+    /// [`alloc`](ArenaAllocator::alloc) sized for `n` f32 elements.
+    pub fn alloc_f32(&mut self, n: usize) -> Option<ArenaHandle> {
+        self.alloc(n * 4)
+    }
+
+    /// [`alloc`](ArenaAllocator::alloc) sized for `n` f64 elements.
+    pub fn alloc_f64(&mut self, n: usize) -> Option<ArenaHandle> {
+        self.alloc(n * 8)
+    }
+
+    fn check(&self, h: &ArenaHandle) {
+        assert!(
+            h.generation == self.generation,
+            "stale arena handle: minted in step generation {} but the arena is at {} — \
+             the slab has been recycled under it",
+            h.generation,
+            self.generation
+        );
+        debug_assert!(h.offset % 8 == 0 && h.offset + h.bytes <= self.slab_bytes());
+    }
+
+    /// The handle's range as bytes. Panics on a stale handle.
+    pub fn bytes_mut(&mut self, h: &ArenaHandle) -> &mut [u8] {
+        self.check(h);
+        let base = self.slab.as_mut_ptr() as *mut u8;
+        // SAFETY: offset + bytes lie inside the live `slab` allocation
+        // (checked above), u8 has alignment 1, and the returned slice
+        // borrows `self` mutably so no aliasing view can coexist.
+        unsafe { std::slice::from_raw_parts_mut(base.add(h.offset), h.bytes) }
+    }
+
+    /// The handle's range as f32s (its byte length must be a multiple
+    /// of 4). Panics on a stale handle.
+    pub fn f32_mut(&mut self, h: &ArenaHandle) -> &mut [f32] {
+        self.check(h);
+        assert!(h.bytes % 4 == 0, "arena handle of {} B viewed as f32", h.bytes);
+        let base = self.slab.as_mut_ptr() as *mut u8;
+        // SAFETY: the range is in-bounds (checked), the offset is 8-byte
+        // aligned (alloc only hands out multiples of 8, exceeding f32's
+        // alignment), and the mutable borrow of `self` is exclusive.
+        unsafe { std::slice::from_raw_parts_mut(base.add(h.offset) as *mut f32, h.bytes / 4) }
+    }
+
+    /// The handle's range as f64s (its byte length must be a multiple
+    /// of 8). Panics on a stale handle.
+    pub fn f64_mut(&mut self, h: &ArenaHandle) -> &mut [f64] {
+        self.check(h);
+        assert!(h.bytes % 8 == 0, "arena handle of {} B viewed as f64", h.bytes);
+        let base = self.slab.as_mut_ptr() as *mut u8;
+        // SAFETY: in-bounds (checked), 8-byte aligned offsets match f64's
+        // alignment, and the mutable borrow of `self` is exclusive.
+        unsafe { std::slice::from_raw_parts_mut(base.add(h.offset) as *mut f64, h.bytes / 8) }
+    }
+
+    /// Current step generation (bumped by every `begin_step`).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Largest bump-pointer position ever reached — how much of the slab
+    /// a workload actually uses.
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water
+    }
+
+    /// Requests the slab could not serve (callers fell back to the heap).
+    /// Flat across steps ⇒ the hot path runs entirely inside the slab.
+    pub fn fallback_allocs(&self) -> u64 {
+        self.fallbacks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_rounds_up_and_bump_aligns() {
+        let mut a = ArenaAllocator::new(10);
+        assert_eq!(a.slab_bytes(), 16);
+        a.begin_step();
+        let h1 = a.alloc(3).unwrap();
+        let h2 = a.alloc(8).unwrap();
+        assert_eq!(h1.len_bytes(), 3);
+        assert_eq!(a.bytes_mut(&h1).len(), 3);
+        assert_eq!(a.bytes_mut(&h2).len(), 8);
+        assert_eq!(a.high_water_bytes(), 16); // 3 rounds to 8, + 8
+    }
+
+    #[test]
+    fn typed_views_roundtrip() {
+        let mut a = ArenaAllocator::new(64);
+        a.begin_step();
+        let hf = a.alloc_f32(4).unwrap();
+        a.f32_mut(&hf).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let hd = a.alloc_f64(3).unwrap();
+        a.f64_mut(&hd).copy_from_slice(&[5.0, 6.0, 7.0]);
+        let floats: Vec<f32> = a.f32_mut(&hf).to_vec();
+        let doubles: Vec<f64> = a.f64_mut(&hd).to_vec();
+        // each view sees its own writes; neither clobbers the other
+        assert_eq!(floats, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(doubles, vec![5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn oversize_requests_fall_back_and_are_counted() {
+        let mut a = ArenaAllocator::new(16);
+        a.begin_step();
+        assert!(a.alloc(24).is_none());
+        assert_eq!(a.fallback_allocs(), 1);
+        assert!(a.alloc(16).is_some());
+        assert!(a.alloc(1).is_none(), "slab exhausted");
+        assert_eq!(a.fallback_allocs(), 2);
+        a.begin_step();
+        assert!(a.alloc(16).is_some(), "recycling frees the slab");
+    }
+
+    #[test]
+    #[should_panic(expected = "stale arena handle")]
+    fn stale_handle_panics() {
+        let mut a = ArenaAllocator::new(32);
+        a.begin_step();
+        let h = a.alloc(8).unwrap();
+        a.begin_step(); // recycles the slab under the handle
+        let _ = a.bytes_mut(&h);
+    }
+
+    #[test]
+    fn begin_step_poisons_in_debug() {
+        if !cfg!(debug_assertions) {
+            return; // release builds skip the poison fill
+        }
+        let mut a = ArenaAllocator::new(16);
+        a.begin_step();
+        let h = a.alloc(16).unwrap();
+        a.bytes_mut(&h).fill(0);
+        a.begin_step();
+        let h2 = a.alloc(16).unwrap();
+        assert!(a.bytes_mut(&h2).iter().all(|&b| b == 0xA5));
+    }
+
+    #[test]
+    fn zero_sized_slab_and_allocs_are_fine() {
+        let mut a = ArenaAllocator::new(0);
+        assert_eq!(a.slab_bytes(), 0);
+        a.begin_step();
+        let h = a.alloc(0).unwrap();
+        assert!(a.bytes_mut(&h).is_empty());
+        assert!(a.f64_mut(&h).is_empty());
+        assert!(a.alloc(1).is_none());
+    }
+}

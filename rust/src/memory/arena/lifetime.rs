@@ -1,0 +1,330 @@
+//! Lifetime extraction: replay a checkpoint plan's schedule into
+//! per-tensor live intervals.
+//!
+//! [`PeakEvaluator`](crate::memory::peak::PeakEvaluator) answers "how many
+//! bytes peak"; the arena needs to know *which tensors* are live *when* so
+//! it can assign each one a concrete slab offset. [`Lifetimes::extract`]
+//! replays the exact event order of
+//! [`simulate`](crate::memory::simulator::simulate) — forward, loss
+//! gradient, (per-segment recompute under S-C,) backward, optimizer — and
+//! records every dynamic tensor as an interval `[start, end)` in schedule
+//! steps together with its byte size and [`TensorClass`].
+//!
+//! The extraction is *exact*: at every step the sum of live interval
+//! sizes equals the simulator's live bytes minus the static base, so
+//!
+//! ```text
+//! base_bytes + max_live_bytes() == PeakEvaluator::peak(checkpoints)
+//! ```
+//!
+//! (property-tested in `tests/prop_arena.rs`). Like the planner's segment
+//! decomposition, this assumes `act_elems ≥ out_elems` per layer — every
+//! registry profile stores at least its boundary tensor (see the
+//! `memory::peak` module docs); the non-S-C path sizes activations as
+//! `max(act, out)` to stay safe on degenerate profiles.
+
+use crate::memory::peak::PeakEvaluator;
+
+/// What a dynamic tensor is — drives reporting and packing diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorClass {
+    /// Boundary output kept live from the forward pass for a later
+    /// backward segment (S-C).
+    Checkpoint,
+    /// Stored or recomputed activation footprint, consumed by its layer's
+    /// backward step.
+    Activation,
+    /// Activation gradient flowing between adjacent backward steps.
+    ActGrad,
+    /// Parameter gradient, resident from its layer's backward step through
+    /// the optimizer step.
+    ParamGrad,
+    /// Transient: a discarded forward output (S-C, unstored layer) or the
+    /// weight-gradient workspace of one backward step.
+    Workspace,
+}
+
+impl TensorClass {
+    pub const ALL: [TensorClass; 5] = [
+        TensorClass::Checkpoint,
+        TensorClass::Activation,
+        TensorClass::ActGrad,
+        TensorClass::ParamGrad,
+        TensorClass::Workspace,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TensorClass::Checkpoint => "checkpoint",
+            TensorClass::Activation => "activation",
+            TensorClass::ActGrad => "act-grad",
+            TensorClass::ParamGrad => "param-grad",
+            TensorClass::Workspace => "workspace",
+        }
+    }
+}
+
+/// One tensor's live interval: `[start, end)` in schedule steps.
+#[derive(Clone, Debug)]
+pub struct TensorLife {
+    pub class: TensorClass,
+    /// Layer that defines the tensor.
+    pub layer: usize,
+    pub bytes: u64,
+    /// First step the tensor is live at.
+    pub start: usize,
+    /// Exclusive end step.
+    pub end: usize,
+}
+
+impl TensorLife {
+    /// Whether two live intervals intersect in time (tensors that do must
+    /// occupy disjoint slab ranges).
+    pub fn overlaps(&self, other: &TensorLife) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+}
+
+/// All dynamic-tensor lifetimes of one (arch, pipeline, batch, plan).
+#[derive(Clone, Debug)]
+pub struct Lifetimes {
+    /// Every dynamic tensor with a non-zero size.
+    pub tensors: Vec<TensorLife>,
+    /// Number of schedule steps (every interval ends at or before this).
+    pub steps: usize,
+    /// Static (params + momentum + input) bytes outside the arena.
+    pub base_bytes: u64,
+}
+
+impl Lifetimes {
+    /// Replay the evaluator's schedule for `checkpoints` into live
+    /// intervals. `checkpoints` follows the simulator convention
+    /// (out-of-range indices ignored, final layer implicitly stored;
+    /// ignored entirely when the pipeline is not S-C).
+    pub fn extract(ev: &PeakEvaluator, checkpoints: &[usize]) -> Lifetimes {
+        let n = ev.depth();
+        let base_bytes = ev.base_bytes();
+        if n == 0 {
+            return Lifetimes { tensors: Vec::new(), steps: 1, base_bytes };
+        }
+        let sc = ev.is_sc();
+        let mut stored = vec![!sc; n];
+        if sc {
+            for &c in checkpoints {
+                if c < n {
+                    stored[c] = true;
+                }
+            }
+            stored[n - 1] = true;
+        }
+        let out = |i: usize| ev.out_bytes(i);
+        let act = |i: usize| ev.act_bytes(i);
+
+        // ---- pass 1: event times, mirroring the simulator's order ----
+        let mut t = 0usize;
+        let t_fwd: Vec<usize> = (0..n)
+            .map(|_| {
+                let s = t;
+                t += 1;
+                s
+            })
+            .collect();
+        let t_loss = t;
+        t += 1;
+        let mut t_rec: Vec<Option<usize>> = vec![None; n];
+        let mut t_bwd = vec![0usize; n];
+        if sc {
+            let mut hi = n;
+            while hi > 0 {
+                let lo = (0..hi.saturating_sub(1))
+                    .rev()
+                    .find(|&i| stored[i])
+                    .map(|i| i + 1)
+                    .unwrap_or(0);
+                for i in lo..hi {
+                    let delta = if stored[i] {
+                        act(i).saturating_sub(out(i))
+                    } else {
+                        act(i)
+                    };
+                    if delta > 0 {
+                        t_rec[i] = Some(t);
+                        t += 1;
+                    }
+                }
+                for i in (lo..hi).rev() {
+                    t_bwd[i] = t;
+                    t += 1;
+                }
+                hi = lo;
+            }
+        } else {
+            for i in (0..n).rev() {
+                t_bwd[i] = t;
+                t += 1;
+            }
+        }
+        let t_opt = t;
+        let steps = t_opt + 1;
+
+        // ---- pass 2: tensors ----
+        let mut tensors: Vec<TensorLife> = Vec::with_capacity(4 * n);
+        let mut push = |class: TensorClass, layer: usize, bytes: u64, start: usize, end: usize| {
+            if bytes > 0 {
+                tensors.push(TensorLife { class, layer, bytes, start, end });
+            }
+        };
+        for i in 0..n {
+            if !sc {
+                // Standard training holds the full stored footprint from
+                // the layer's forward step to its backward step.
+                push(TensorClass::Activation, i, act(i).max(out(i)), t_fwd[i], t_bwd[i] + 1);
+            } else if stored[i] {
+                push(TensorClass::Checkpoint, i, out(i), t_fwd[i], t_bwd[i] + 1);
+                if let Some(tr) = t_rec[i] {
+                    // internals recomputed next to the resident boundary
+                    push(
+                        TensorClass::Activation,
+                        i,
+                        act(i).saturating_sub(out(i)),
+                        tr,
+                        t_bwd[i] + 1,
+                    );
+                }
+            } else {
+                // discarded forward output: live only while the layer runs
+                push(TensorClass::Workspace, i, out(i), t_fwd[i], t_fwd[i] + 1);
+                if let Some(tr) = t_rec[i] {
+                    push(TensorClass::Activation, i, act(i), tr, t_bwd[i] + 1);
+                }
+            }
+            // activation gradient d/d(out i): born at the downstream
+            // backward step (the loss gradient for the final layer),
+            // consumed by layer i's backward
+            let g_start = if i + 1 == n { t_loss } else { t_bwd[i + 1] };
+            push(TensorClass::ActGrad, i, out(i), g_start, t_bwd[i] + 1);
+            // parameter gradient: backward of i through the optimizer step
+            push(TensorClass::ParamGrad, i, ev.param_grad_bytes(i), t_bwd[i], t_opt + 1);
+            // weight-gradient workspace during layer i's backward
+            push(TensorClass::Workspace, i, out(i), t_bwd[i], t_bwd[i] + 1);
+        }
+        Lifetimes { tensors, steps, base_bytes }
+    }
+
+    /// Maximum concurrent live bytes over the schedule — the exact
+    /// activation-peak lower bound any slab must cover.
+    pub fn max_live_bytes(&self) -> u64 {
+        let mut delta = vec![0i128; self.steps + 1];
+        for t in &self.tensors {
+            delta[t.start] += t.bytes as i128;
+            delta[t.end] -= t.bytes as i128;
+        }
+        let mut live = 0i128;
+        let mut max = 0i128;
+        for d in &delta {
+            live += *d;
+            max = max.max(live);
+        }
+        max as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pipeline;
+    use crate::models::{arch_by_name, ArchProfile};
+
+    fn pipe(s: &str) -> Pipeline {
+        Pipeline::parse(s).unwrap()
+    }
+
+    #[test]
+    fn replay_matches_evaluator_peak_across_zoo() {
+        for name in ["resnet18", "efficientnet_b0", "tiny_cnn"] {
+            let arch = arch_by_name(name, (64, 64, 3), 10).unwrap();
+            let n = arch.layers.len();
+            let plans: Vec<Vec<usize>> =
+                vec![vec![], (0..n).step_by(3).collect(), vec![n / 2], (0..n).collect()];
+            for p in ["b", "sc", "mp", "ed+sc", "ed+mp+sc"] {
+                let mut ev = PeakEvaluator::new(&arch, pipe(p), 8);
+                for plan in &plans {
+                    let lt = Lifetimes::extract(&ev, plan);
+                    assert_eq!(
+                        lt.base_bytes + lt.max_live_bytes(),
+                        ev.peak(plan),
+                        "{name} [{p}] plan {plan:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intervals_are_well_formed() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        let n = arch.layers.len();
+        let lt = Lifetimes::extract(&ev, &[n / 3, 2 * n / 3]);
+        assert!(!lt.tensors.is_empty());
+        for t in &lt.tensors {
+            assert!(t.start < t.end, "{t:?}");
+            assert!(t.end <= lt.steps, "{t:?} beyond {} steps", lt.steps);
+            assert!(t.bytes > 0, "{t:?}");
+            assert!(t.layer < n, "{t:?}");
+        }
+        // the implicitly stored final layer yields a checkpoint tensor
+        assert!(lt
+            .tensors
+            .iter()
+            .any(|t| t.class == TensorClass::Checkpoint && t.layer == n - 1));
+        // parameter gradients all persist to the final (optimizer) step
+        assert!(lt
+            .tensors
+            .iter()
+            .filter(|t| t.class == TensorClass::ParamGrad)
+            .all(|t| t.end == lt.steps));
+    }
+
+    #[test]
+    fn class_mix_follows_the_schedule() {
+        let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let n = arch.layers.len();
+        let ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        let lt = Lifetimes::extract(&ev, &[1]);
+        let count = |c: TensorClass| lt.tensors.iter().filter(|t| t.class == c).count();
+        // checkpoints: layer 1 + implicit final layer
+        assert_eq!(count(TensorClass::Checkpoint), 2);
+        // workspaces: one per backward step + one per unstored forward
+        assert_eq!(count(TensorClass::Workspace), n + (n - 2));
+        assert_eq!(count(TensorClass::ActGrad), n);
+        // baseline pipeline has no checkpoints and no forward transients
+        let evb = PeakEvaluator::new(&arch, pipe("b"), 4);
+        let ltb = Lifetimes::extract(&evb, &[]);
+        let countb = |c: TensorClass| ltb.tensors.iter().filter(|t| t.class == c).count();
+        assert_eq!(countb(TensorClass::Checkpoint), 0);
+        assert_eq!(countb(TensorClass::Activation), n);
+        assert_eq!(countb(TensorClass::Workspace), n);
+    }
+
+    #[test]
+    fn empty_arch_has_no_tensors() {
+        let arch = ArchProfile { name: "empty".into(), input: (8, 8, 3), layers: vec![] };
+        let ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        let lt = Lifetimes::extract(&ev, &[]);
+        assert!(lt.tensors.is_empty());
+        assert_eq!(lt.steps, 1);
+        assert_eq!(lt.max_live_bytes(), 0);
+        assert_eq!(lt.base_bytes, ev.base_bytes());
+    }
+
+    #[test]
+    fn out_of_range_checkpoints_ignored() {
+        let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        let a = Lifetimes::extract(&ev, &[1, 99]);
+        let b = Lifetimes::extract(&ev, &[1]);
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        assert_eq!(a.max_live_bytes(), b.max_live_bytes());
+    }
+}

@@ -1,0 +1,136 @@
+//! Lifetime-aware activation arena: static slab planning, offset
+//! assignment, and a pooled runtime allocator.
+//!
+//! The checkpoint planner (`memory::planner`) proves how many bytes a
+//! schedule peaks at; this subsystem is the bridge from that *simulated*
+//! peak to bytes a runtime actually touches, in the spirit of OLLA
+//! (Steiner et al., 2022) planning tensor *locations* on top of Chen et
+//! al.'s (2016) sublinear-memory schedules:
+//!
+//! 1. [`lifetime`] replays a plan's exact schedule into per-tensor live
+//!    intervals `[def_step, last_use_step) × bytes`, classed as
+//!    checkpoint / activation / act-grad / param-grad / workspace.
+//! 2. [`pack`](crate::memory::arena::pack) assigns each tensor a concrete
+//!    slab offset by greedy best-fit interval packing over a coalescing
+//!    free-list, yielding an [`ArenaLayout`] whose slab is compared
+//!    against the exact DP peak (the fragmentation ratio).
+//! 3. [`alloc`] is the runtime half: [`ArenaAllocator`], one preallocated
+//!    slab with generation-tagged handles that backs the train-step
+//!    staging buffers so steady state allocates nothing.
+//!
+//! Entry points: [`plan_arena`] (plan → lifetimes + layout) and
+//! [`summarize`] (layout → the [`ArenaReport`] surfaced by
+//! `TrainReport` and `optorch plan --arena`).
+
+pub mod alloc;
+pub mod lifetime;
+pub mod pack;
+
+pub use alloc::{ArenaAllocator, ArenaHandle};
+pub use lifetime::{Lifetimes, TensorClass, TensorLife};
+pub use pack::{aligned, pack, validate, ArenaLayout, ARENA_ALIGN};
+
+use crate::config::Pipeline;
+use crate::memory::peak::PeakEvaluator;
+use crate::models::ArchProfile;
+
+/// Per-class rollup of an arena layout.
+#[derive(Clone, Debug)]
+pub struct ClassStat {
+    pub class: TensorClass,
+    pub count: usize,
+    /// Total (unaligned) bytes of the class's tensors.
+    pub bytes: u64,
+}
+
+/// Arena summary surfaced in `TrainReport` and `plan --arena`.
+#[derive(Clone, Debug)]
+pub struct ArenaReport {
+    /// Dynamic slab bytes the layout needs.
+    pub slab_bytes: u64,
+    /// Static (params + momentum + input) bytes outside the slab.
+    pub base_bytes: u64,
+    /// Exact replayed peak of the plan (`PeakEvaluator::peak`).
+    pub peak_bytes: u64,
+    pub tensor_count: usize,
+    /// `(base + slab) / peak` — 1.0 is a perfect packing.
+    pub fragmentation: f64,
+    /// Non-empty classes only, in [`TensorClass::ALL`] order.
+    pub by_class: Vec<ClassStat>,
+}
+
+/// Plan the arena for a checkpoint plan: extract lifetimes under the S-C
+/// schedule (S-C is forced on, mirroring `plan_checkpoints` scoring, so
+/// the layout's peak matches the plan's `peak_bytes`) and pack them.
+pub fn plan_arena(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    checkpoints: &[usize],
+) -> (Lifetimes, ArenaLayout) {
+    let mut p = pipeline;
+    p.sc = true;
+    let ev = PeakEvaluator::new(arch, p, batch);
+    let lt = Lifetimes::extract(&ev, checkpoints);
+    let layout = pack(&lt);
+    (lt, layout)
+}
+
+/// Roll a layout up into the per-class report.
+pub fn summarize(lt: &Lifetimes, layout: &ArenaLayout) -> ArenaReport {
+    let mut by_class: Vec<ClassStat> = TensorClass::ALL
+        .iter()
+        .map(|&class| ClassStat { class, count: 0, bytes: 0 })
+        .collect();
+    for t in &lt.tensors {
+        let s = by_class.iter_mut().find(|s| s.class == t.class).unwrap();
+        s.count += 1;
+        s.bytes += t.bytes;
+    }
+    by_class.retain(|s| s.count > 0);
+    ArenaReport {
+        slab_bytes: layout.slab_bytes,
+        base_bytes: layout.base_bytes,
+        peak_bytes: layout.peak_bytes,
+        tensor_count: lt.tensors.len(),
+        fragmentation: layout.fragmentation_ratio(),
+        by_class,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::planner::{plan_checkpoints, PlannerKind};
+    use crate::models::arch_by_name;
+
+    #[test]
+    fn arena_covers_the_exact_plan_peak() {
+        for name in ["resnet18", "efficientnet_b0", "tiny_cnn"] {
+            let arch = arch_by_name(name, (64, 64, 3), 10).unwrap();
+            let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, 8);
+            let (lt, layout) = plan_arena(&arch, Pipeline::BASELINE, 8, &plan.checkpoints);
+            validate(&lt, &layout).unwrap();
+            assert_eq!(layout.peak_bytes, plan.peak_bytes, "{name}");
+            assert!(layout.total_bytes() >= plan.peak_bytes, "{name}");
+            let frag = layout.fragmentation_ratio();
+            assert!((1.0..=1.25).contains(&frag), "{name}: fragmentation {frag}");
+        }
+    }
+
+    #[test]
+    fn summary_accounts_for_every_tensor() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let plan = plan_checkpoints(&arch, PlannerKind::Sqrt, Pipeline::BASELINE, 4);
+        let (lt, layout) = plan_arena(&arch, Pipeline::BASELINE, 4, &plan.checkpoints);
+        let rep = summarize(&lt, &layout);
+        assert_eq!(rep.tensor_count, lt.tensors.len());
+        let counted: usize = rep.by_class.iter().map(|c| c.count).sum();
+        assert_eq!(counted, rep.tensor_count);
+        let bytes: u64 = rep.by_class.iter().map(|c| c.bytes).sum();
+        assert_eq!(bytes, lt.tensors.iter().map(|t| t.bytes).sum::<u64>());
+        assert!(rep.by_class.iter().any(|c| c.class == TensorClass::Checkpoint));
+        assert!(rep.fragmentation >= 1.0);
+        assert_eq!(rep.slab_bytes, layout.slab_bytes);
+    }
+}

@@ -5,7 +5,13 @@
 //! exact schedules the pipelines induce (DESIGN.md §5). The simulator is
 //! cross-validated against XLA's `compiled.memory_analysis()` on the
 //! trainable minis (`python/tests/test_remat_memory.py`).
+//!
+//! On top of the byte accounting, [`arena`] turns a checkpoint plan into a
+//! concrete memory layout: per-tensor lifetimes, slab offset assignment,
+//! and the generation-tagged runtime allocator the train step stages
+//! buffers through.
 
+pub mod arena;
 pub mod peak;
 pub mod planner;
 pub mod simulator;

@@ -120,6 +120,23 @@ impl PeakEvaluator {
         self.seg[i]
     }
 
+    /// Whether this evaluator models the S-C (checkpointed) schedule.
+    pub fn is_sc(&self) -> bool {
+        self.sc
+    }
+
+    /// Stored-activation bytes of layer `i` (boundary output + internals) —
+    /// what the arena's lifetime extraction replays.
+    pub fn act_bytes(&self, i: usize) -> u64 {
+        self.act[i]
+    }
+
+    /// Parameter-gradient bytes of layer `i` (resident from its backward
+    /// step to the optimizer step).
+    pub fn param_grad_bytes(&self, i: usize) -> u64 {
+        self.pb[i]
+    }
+
     /// Exact peak of `simulate(arch, pipeline, batch, checkpoints)` without
     /// materializing a timeline. O(depth), allocation-free.
     ///

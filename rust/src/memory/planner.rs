@@ -63,7 +63,11 @@ impl PlannerKind {
             }
             return Ok(PlannerKind::Bottleneck(k));
         }
-        Err(format!("unknown planner '{s}' (sqrt|dp|uniformK|bottleneckK)"))
+        Err(format!(
+            "unknown planner '{s}' — valid kinds: sqrt (√n segments), dp (exact DP, \
+             alias: optimal), uniformK (every ⌈n/K⌉-th layer, K ≥ 1, e.g. uniform4), \
+             bottleneckK (K narrowest layers, K ≥ 1, e.g. bottleneck4)"
+        ))
     }
 }
 
@@ -491,6 +495,14 @@ mod tests {
             PlannerKind::Bottleneck(2)
         );
         assert!(PlannerKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn parse_error_enumerates_valid_kinds() {
+        let err = PlannerKind::parse("magic").unwrap_err();
+        for kind in ["sqrt", "dp", "optimal", "uniformK", "bottleneckK"] {
+            assert!(err.contains(kind), "error does not mention '{kind}': {err}");
+        }
     }
 
     #[test]

@@ -2,8 +2,10 @@
 
 use crate::data::encode::EncodedBatch;
 use crate::data::loader::BatchPayload;
+use crate::memory::arena::ArenaAllocator;
 use crate::runtime::manifest::{BatchKind, Manifest, ManifestEntry};
 use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -57,6 +59,10 @@ impl StepOutput {
 /// A (model, pipeline)'s compiled executables.
 pub struct LoadedModel {
     pub entry: ManifestEntry,
+    /// Per-step marshaling arena: one slab sized by
+    /// [`ManifestEntry::step_scratch_bytes`], recycled every step, so
+    /// steady-state steps stage batch/label buffers without heap allocation.
+    scratch: RefCell<ArenaAllocator>,
     train: std::rc::Rc<xla::PjRtLoadedExecutable>,
     eval: std::rc::Rc<xla::PjRtLoadedExecutable>,
     init: std::rc::Rc<xla::PjRtLoadedExecutable>,
@@ -110,14 +116,27 @@ impl Runtime {
             train: self.compile(&entry.train_hlo)?,
             eval: self.compile(&entry.eval_hlo)?,
             init: self.compile(&entry.init_hlo)?,
+            scratch: RefCell::new(ArenaAllocator::new(entry.step_scratch_bytes())),
             entry,
         })
     }
 }
 
 /// Build the batch literal from a loader payload, validating against the
-/// manifest spec.
+/// manifest spec. Heap-staging convenience wrapper; the step hot path goes
+/// through [`batch_literal_arena`].
 pub fn batch_literal(entry: &ManifestEntry, payload: &BatchPayload) -> Result<xla::Literal> {
+    batch_literal_arena(entry, payload, None)
+}
+
+/// [`batch_literal`] with encoded staging placed in `arena` when it fits
+/// (falls back to the heap — counted by the arena — when it does not).
+/// Raw payloads borrow the pixel slice directly and need no staging.
+pub fn batch_literal_arena(
+    entry: &ManifestEntry,
+    payload: &BatchPayload,
+    arena: Option<&mut ArenaAllocator>,
+) -> Result<xla::Literal> {
     match (entry.batch_kind, payload) {
         (BatchKind::Raw, BatchPayload::Raw { data, n, .. }) => {
             if *n != entry.batch_size {
@@ -127,7 +146,7 @@ pub fn batch_literal(entry: &ManifestEntry, payload: &BatchPayload) -> Result<xl
             Ok(xla::Literal::vec1(data).reshape(&dims)?)
         }
         (BatchKind::Encoded, BatchPayload::Encoded(groups)) => {
-            encoded_literal(entry, groups)
+            encoded_literal(entry, groups, arena)
         }
         (kind, payload) => bail!(
             "payload kind mismatch: artifact wants {kind:?}, loader produced {}",
@@ -139,7 +158,11 @@ pub fn batch_literal(entry: &ManifestEntry, payload: &BatchPayload) -> Result<xl
     }
 }
 
-fn encoded_literal(entry: &ManifestEntry, groups: &[EncodedBatch]) -> Result<xla::Literal> {
+fn encoded_literal(
+    entry: &ManifestEntry,
+    groups: &[EncodedBatch],
+    arena: Option<&mut ArenaAllocator>,
+) -> Result<xla::Literal> {
     if groups.len() != entry.groups {
         bail!(
             "encoded payload has {} groups, artifact expects {}",
@@ -149,43 +172,88 @@ fn encoded_literal(entry: &ManifestEntry, groups: &[EncodedBatch]) -> Result<xla
     }
     let (h, w, c) = entry.input;
     let px = h * w * c;
-    let mut data = Vec::with_capacity(entry.groups * px);
     for g in groups {
         if g.words_f64.len() != px {
             bail!("group word count {} != {px}", g.words_f64.len());
         }
-        data.extend_from_slice(&g.words_f64);
     }
     let dims: Vec<i64> = entry.batch_spec.shape.iter().map(|&d| d as i64).collect();
+    let total = entry.groups * px;
+    if px > 0 {
+        if let Some(arena) = arena {
+            if let Some(handle) = arena.alloc_f64(total) {
+                let buf = arena.f64_mut(&handle);
+                for (g, dst) in groups.iter().zip(buf.chunks_exact_mut(px)) {
+                    dst.copy_from_slice(&g.words_f64);
+                }
+                return Ok(xla::Literal::vec1(buf).reshape(&dims)?);
+            }
+        }
+    }
+    let mut data = Vec::with_capacity(total);
+    for g in groups {
+        data.extend_from_slice(&g.words_f64);
+    }
     Ok(xla::Literal::vec1(&data).reshape(&dims)?)
 }
 
 /// Labels literal `[B, K]` from the payload's soft labels.
 /// Raw payloads borrow the label slice directly (§Perf: no per-step clone).
 pub fn labels_literal(entry: &ManifestEntry, payload: &BatchPayload) -> Result<xla::Literal> {
+    labels_literal_arena(entry, payload, None)
+}
+
+/// [`labels_literal`] with the encoded-payload gather staged in `arena`
+/// when it fits (heap fallback otherwise, counted by the arena).
+pub fn labels_literal_arena(
+    entry: &ManifestEntry,
+    payload: &BatchPayload,
+    arena: Option<&mut ArenaAllocator>,
+) -> Result<xla::Literal> {
     let want = entry.batch_size * entry.num_classes;
-    let lit = match payload {
+    let dims = [entry.batch_size as i64, entry.num_classes as i64];
+    match payload {
         BatchPayload::Raw { labels, .. } => {
             if labels.len() != want {
                 bail!("labels length {} != {want}", labels.len());
             }
-            xla::Literal::vec1(labels)
+            Ok(xla::Literal::vec1(labels).reshape(&dims)?)
         }
         BatchPayload::Encoded(groups) => {
+            let have: usize = groups.iter().map(|g| g.labels.len()).sum();
+            if have != want {
+                bail!("labels length {have} != {want}");
+            }
+            if want > 0 {
+                if let Some(arena) = arena {
+                    if let Some(handle) = arena.alloc_f32(want) {
+                        let buf = arena.f32_mut(&handle);
+                        let mut off = 0;
+                        for g in groups {
+                            buf[off..off + g.labels.len()].copy_from_slice(&g.labels);
+                            off += g.labels.len();
+                        }
+                        return Ok(xla::Literal::vec1(buf).reshape(&dims)?);
+                    }
+                }
+            }
             let mut v = Vec::with_capacity(want);
             for g in groups {
                 v.extend_from_slice(&g.labels);
             }
-            if v.len() != want {
-                bail!("labels length {} != {want}", v.len());
-            }
-            xla::Literal::vec1(&v)
+            Ok(xla::Literal::vec1(&v).reshape(&dims)?)
         }
-    };
-    Ok(lit.reshape(&[entry.batch_size as i64, entry.num_classes as i64])?)
+    }
 }
 
 impl LoadedModel {
+    /// The per-step marshaling arena (generation-tagged slab; see
+    /// [`crate::memory::arena::alloc`]). Exposed for instrumentation —
+    /// `fallback_allocs` flat across steps ⇒ staging ran inside the slab.
+    pub fn scratch_arena(&self) -> &RefCell<ArenaAllocator> {
+        &self.scratch
+    }
+
     /// Initialize training state from a seed (runs the init artifact).
     pub fn init_state(&self, seed: u64) -> Result<TrainState> {
         let seed_lit = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]).reshape(&[2])?;
@@ -209,8 +277,15 @@ impl LoadedModel {
         payload: &BatchPayload,
         lr: Option<f32>,
     ) -> Result<Vec<xla::Literal>> {
-        let batch = batch_literal(&self.entry, payload)?;
-        let labels = labels_literal(&self.entry, payload)?;
+        // Stage batch/label marshaling through the step arena: one slab,
+        // recycled here, zero steady-state heap allocation.
+        let (batch, labels) = {
+            let mut scratch = self.scratch.borrow_mut();
+            scratch.begin_step();
+            let batch = batch_literal_arena(&self.entry, payload, Some(&mut *scratch))?;
+            let labels = labels_literal_arena(&self.entry, payload, Some(&mut *scratch))?;
+            (batch, labels)
+        };
         let lr_lit = lr.map(xla::Literal::scalar);
         let mut args: Vec<&xla::Literal> = state_tensors.iter().collect();
         args.push(&batch);
@@ -330,6 +405,88 @@ mod tests {
         let e = raw_entry();
         let payload = BatchPayload::Encoded(vec![]);
         assert!(batch_literal(&e, &payload).is_err());
+    }
+
+    fn encoded_entry() -> ManifestEntry {
+        ManifestEntry {
+            model: "m".into(),
+            pipeline: "ed".into(),
+            input: (2, 2, 3),
+            num_classes: 3,
+            batch_size: 2,
+            groups: 2,
+            group_capacity: 6,
+            batch_kind: BatchKind::Encoded,
+            batch_spec: TensorSpec {
+                name: "batch".into(),
+                shape: vec![2, 2, 2, 3],
+                dtype: Dtype::F64,
+            },
+            labels_spec: TensorSpec {
+                name: "labels".into(),
+                shape: vec![2, 3],
+                dtype: Dtype::F32,
+            },
+            state: vec![TensorSpec { name: "w".into(), shape: vec![3], dtype: Dtype::F32 }],
+            train_hlo: "x".into(),
+            eval_hlo: "x".into(),
+            init_hlo: "x".into(),
+            lr: 0.1,
+            momentum: 0.9,
+            loss_scale: 1.0,
+        }
+    }
+
+    fn encoded_group(px: usize, val: f64) -> EncodedBatch {
+        use crate::data::encode::{Encoding, WordType};
+        EncodedBatch {
+            spec_encoding: Encoding::Base256,
+            spec_word: WordType::F64,
+            n: 1,
+            h: 2,
+            w: 2,
+            c: 3,
+            words_u64: vec![],
+            words_f64: vec![val; px],
+            offsets: vec![],
+            labels: vec![0.5, 0.25, 0.25],
+            num_classes: 3,
+        }
+    }
+
+    #[test]
+    fn encoded_staging_through_arena_matches_heap_path() {
+        let e = encoded_entry();
+        let px = 2 * 2 * 3;
+        let payload =
+            BatchPayload::Encoded(vec![encoded_group(px, 1.0), encoded_group(px, 2.0)]);
+        let mut arena = ArenaAllocator::new(e.step_scratch_bytes());
+        arena.begin_step();
+        let batch = batch_literal_arena(&e, &payload, Some(&mut arena)).unwrap();
+        let labels = labels_literal_arena(&e, &payload, Some(&mut arena)).unwrap();
+        assert_eq!(arena.fallback_allocs(), 0, "staging must fit the sized slab");
+        let batch_heap = batch_literal(&e, &payload).unwrap();
+        let labels_heap = labels_literal(&e, &payload).unwrap();
+        assert_eq!(batch.to_vec::<f64>().unwrap(), batch_heap.to_vec::<f64>().unwrap());
+        assert_eq!(labels.to_vec::<f32>().unwrap(), labels_heap.to_vec::<f32>().unwrap());
+        // recycling the slab keeps serving without growth
+        arena.begin_step();
+        let _ = batch_literal_arena(&e, &payload, Some(&mut arena)).unwrap();
+        assert_eq!(arena.fallback_allocs(), 0);
+        assert!(arena.high_water_bytes() <= arena.slab_bytes());
+    }
+
+    #[test]
+    fn undersized_arena_falls_back_to_heap() {
+        let e = encoded_entry();
+        let px = 2 * 2 * 3;
+        let payload =
+            BatchPayload::Encoded(vec![encoded_group(px, 1.0), encoded_group(px, 2.0)]);
+        let mut arena = ArenaAllocator::new(8); // far too small
+        arena.begin_step();
+        let batch = batch_literal_arena(&e, &payload, Some(&mut arena)).unwrap();
+        assert!(arena.fallback_allocs() >= 1, "fallback must be counted");
+        assert_eq!(batch.element_count(), 2 * px);
     }
 
     #[test]

@@ -107,6 +107,24 @@ impl ManifestEntry {
         self.state.iter().map(TensorSpec::bytes).sum()
     }
 
+    /// Per-step marshaling scratch (bytes) the runtime stages through the
+    /// activation arena ([`crate::memory::arena`]): encoded batches rebuild
+    /// the packed word tensor (`[G, H, W, C]` f64) and the label matrix
+    /// (`[B, K]` f32) every step, raw batches borrow the loader payload
+    /// directly and need no staging. Each buffer is rounded to the arena
+    /// alignment so both fit one slab.
+    pub fn step_scratch_bytes(&self) -> usize {
+        match self.batch_kind {
+            BatchKind::Raw => 0,
+            BatchKind::Encoded => {
+                let (h, w, c) = self.input;
+                let px = h * w * c;
+                let align8 = |b: usize| b.div_ceil(8) * 8;
+                align8(self.groups * px * 8) + align8(self.batch_size * self.num_classes * 4)
+            }
+        }
+    }
+
     fn from_json(j: &Json) -> Result<ManifestEntry, String> {
         let get_str = |k: &str| -> Result<String, String> {
             j.get(k)
@@ -292,6 +310,17 @@ mod tests {
             r#""state": []"#,
         );
         assert!(Manifest::from_text(Path::new("a"), &text).is_err());
+    }
+
+    #[test]
+    fn step_scratch_bytes_by_kind() {
+        let m = Manifest::from_text(Path::new("a"), &sample()).unwrap();
+        let mut e = m.entries[0].clone();
+        assert_eq!(e.step_scratch_bytes(), 0, "raw batches borrow the payload");
+        e.batch_kind = BatchKind::Encoded;
+        e.groups = 3;
+        // 3 groups × 32·32·3 words × 8 B + 16×10 f32 labels (8-aligned)
+        assert_eq!(e.step_scratch_bytes(), 3 * 32 * 32 * 3 * 8 + 16 * 10 * 4);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //! [`state_io`]: crate::runtime::state_io
 
 use crate::data::loader::BatchPayload;
+use crate::memory::arena::ArenaAllocator;
 use crate::runtime::manifest::{Manifest, ManifestEntry};
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::path::Path;
 
 /// The error every backend-requiring path reports.
@@ -69,6 +71,11 @@ impl StepOutput {
 /// Stub of a (model, pipeline)'s compiled executables.
 pub struct LoadedModel {
     pub entry: ManifestEntry,
+    /// Mirror of the real runtime's per-step marshaling arena
+    /// ([`crate::memory::arena::ArenaAllocator`]), so stub and PJRT builds
+    /// expose the same surface (sized by
+    /// [`ManifestEntry::step_scratch_bytes`]).
+    scratch: RefCell<ArenaAllocator>,
 }
 
 impl Runtime {
@@ -87,6 +94,11 @@ impl Runtime {
 }
 
 impl LoadedModel {
+    /// The per-step marshaling arena (same accessor as the PJRT runtime).
+    pub fn scratch_arena(&self) -> &RefCell<ArenaAllocator> {
+        &self.scratch
+    }
+
     pub fn init_state(&self, _seed: u64) -> Result<TrainState> {
         bail!(NO_PJRT);
     }
@@ -132,6 +144,51 @@ mod tests {
     fn runtime_construction_reports_missing_feature() {
         let err = Runtime::new(Path::new("artifacts")).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn stub_model_exposes_the_step_arena() {
+        use crate::runtime::manifest::{BatchKind, Dtype, TensorSpec};
+        let entry = ManifestEntry {
+            model: "m".into(),
+            pipeline: "ed".into(),
+            input: (2, 2, 3),
+            num_classes: 3,
+            batch_size: 2,
+            groups: 2,
+            group_capacity: 6,
+            batch_kind: BatchKind::Encoded,
+            batch_spec: TensorSpec {
+                name: "batch".into(),
+                shape: vec![2, 2, 2, 3],
+                dtype: Dtype::F64,
+            },
+            labels_spec: TensorSpec {
+                name: "labels".into(),
+                shape: vec![2, 3],
+                dtype: Dtype::F32,
+            },
+            state: vec![TensorSpec { name: "w".into(), shape: vec![3], dtype: Dtype::F32 }],
+            train_hlo: "x".into(),
+            eval_hlo: "x".into(),
+            init_hlo: "x".into(),
+            lr: 0.1,
+            momentum: 0.9,
+            loss_scale: 1.0,
+        };
+        let model = LoadedModel {
+            scratch: RefCell::new(ArenaAllocator::new(entry.step_scratch_bytes())),
+            entry,
+        };
+        let mut arena = model.scratch_arena().borrow_mut();
+        // 2 groups × 12 px × 8 B words + 2×3 f32 labels (both 8-aligned)
+        assert_eq!(arena.slab_bytes(), 2 * 12 * 8 + 2 * 3 * 4);
+        arena.begin_step();
+        let h = arena.alloc_f64(2 * 12).unwrap();
+        assert_eq!(arena.f64_mut(&h).len(), 24);
+        assert_eq!(arena.fallback_allocs(), 0);
+        assert!(arena.alloc(1 << 20).is_none(), "oversize falls back");
+        assert_eq!(arena.fallback_allocs(), 1);
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Property tests for the activation arena: lifetime extraction must
+//! replay the exact evaluator peak, packed offsets must never overlap in
+//! (time × address), layouts must be deterministic, and greedy packing
+//! must stay within 25% of the exact DP peak on random chains.
+
+use optorch::config::Pipeline;
+use optorch::memory::arena::{pack, plan_arena, validate, Lifetimes};
+use optorch::memory::peak::PeakEvaluator;
+use optorch::memory::planner::{plan_checkpoints, PlannerKind};
+use optorch::models::{ArchProfile, LayerKind, LayerProfile};
+use optorch::util::propcheck::check_with;
+use optorch::util::rng::Rng;
+
+/// Random heterogeneous chain respecting the arena invariant
+/// `act_elems ≥ out_elems` (every registry profile stores at least its
+/// boundary tensor — see the `memory::peak` module docs).
+fn rand_chain(rng: &mut Rng, max_layers: usize) -> ArchProfile {
+    let n = 1 + rng.gen_range(max_layers);
+    let layers = (0..n)
+        .map(|i| {
+            let h = 1 + rng.gen_range(6);
+            let c = 1 + rng.gen_range(48);
+            let out = (h * h * c) as u64;
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: LayerKind::Dense,
+                out_shape: (h, h, c),
+                act_elems: out * (1 + rng.gen_range(4)) as u64,
+                params: rng.gen_range(5_000) as u64,
+                flops_per_image: (1 + rng.gen_range(900)) as u64 * 1_000,
+            }
+        })
+        .collect();
+    ArchProfile {
+        name: "rand_chain".into(),
+        input: (1 + rng.gen_range(6), 1 + rng.gen_range(6), 3),
+        layers,
+    }
+}
+
+#[test]
+fn prop_lifetimes_replay_the_exact_peak() {
+    check_with(
+        "base + max concurrent live == evaluator peak",
+        96,
+        0xA2E4A,
+        |rng| {
+            let arch = rand_chain(rng, 14);
+            let n = arch.layers.len();
+            // random plan, deliberately including out-of-range indices
+            let plan: Vec<usize> = (0..n + 2).filter(|_| rng.gen_range(2) == 1).collect();
+            let pipes = ["b", "sc", "mp", "ed+sc", "ed+mp+sc"];
+            let pipe = pipes[rng.gen_range(pipes.len())].to_string();
+            (arch, plan, pipe, 1 + rng.gen_range(8))
+        },
+        |(arch, plan, pipe, batch)| {
+            let p = Pipeline::parse(pipe).unwrap();
+            let mut ev = PeakEvaluator::new(arch, p, *batch);
+            let lt = Lifetimes::extract(&ev, plan);
+            let got = lt.base_bytes + lt.max_live_bytes();
+            let want = ev.peak(plan);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("lifetimes replay {got} != evaluator peak {want} [{pipe}]"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_packed_layout_sound_and_covers_the_dp_peak() {
+    check_with(
+        "offsets overlap-free; slab + static ≥ exact DP peak; ratio ≤ 1.25",
+        64,
+        0x5AB1,
+        |rng| (rand_chain(rng, 14), 1 + rng.gen_range(8)),
+        |(arch, batch)| {
+            let plan = plan_checkpoints(arch, PlannerKind::Optimal, Pipeline::BASELINE, *batch);
+            let (lt, layout) = plan_arena(arch, Pipeline::BASELINE, *batch, &plan.checkpoints);
+            validate(&lt, &layout)?;
+            if layout.peak_bytes != plan.peak_bytes {
+                return Err(format!(
+                    "layout peak {} != plan peak {}",
+                    layout.peak_bytes, plan.peak_bytes
+                ));
+            }
+            if layout.total_bytes() < plan.peak_bytes {
+                return Err(format!(
+                    "slab + static {} below the exact peak {}",
+                    layout.total_bytes(),
+                    plan.peak_bytes
+                ));
+            }
+            let ratio = layout.fragmentation_ratio();
+            if !(1.0..=1.25).contains(&ratio) {
+                return Err(format!("fragmentation ratio {ratio:.3} outside [1.0, 1.25]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layout_is_deterministic() {
+    check_with(
+        "same inputs → byte-identical layout",
+        48,
+        0xDE7,
+        |rng| (rand_chain(rng, 14), 1 + rng.gen_range(8)),
+        |(arch, batch)| {
+            let plan = plan_checkpoints(arch, PlannerKind::Optimal, Pipeline::BASELINE, *batch);
+            let (lt_a, a) = plan_arena(arch, Pipeline::BASELINE, *batch, &plan.checkpoints);
+            let (lt_b, b) = plan_arena(arch, Pipeline::BASELINE, *batch, &plan.checkpoints);
+            if a.slab_bytes != b.slab_bytes || a.offsets != b.offsets {
+                return Err("layout differs across identical runs".into());
+            }
+            if lt_a.tensors.len() != lt_b.tensors.len() {
+                return Err("lifetimes differ across identical runs".into());
+            }
+            let c = pack(&lt_a);
+            if c.slab_bytes != a.slab_bytes || c.offsets != a.offsets {
+                return Err("re-packing the same lifetimes diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_heuristic_plans_also_pack_soundly() {
+    // The arena must lay out whatever plan the trainer selects, not just
+    // the DP optimum: sqrt and uniform plans (and the empty plan) must
+    // still produce sound, peak-covering layouts.
+    check_with(
+        "non-optimal plans pack without overlap and cover their peak",
+        48,
+        0x9A7C,
+        |rng| {
+            let arch = rand_chain(rng, 14);
+            let kind = match rng.gen_range(3) {
+                0 => PlannerKind::Sqrt,
+                1 => PlannerKind::Uniform(1 + rng.gen_range(4)),
+                _ => PlannerKind::Bottleneck(1 + rng.gen_range(4)),
+            };
+            (arch, kind, 1 + rng.gen_range(8))
+        },
+        |(arch, kind, batch)| {
+            let plan = plan_checkpoints(arch, *kind, Pipeline::BASELINE, *batch);
+            let (lt, layout) = plan_arena(arch, Pipeline::BASELINE, *batch, &plan.checkpoints);
+            validate(&lt, &layout)?;
+            if layout.peak_bytes != plan.peak_bytes {
+                return Err(format!(
+                    "layout peak {} != plan peak {} [{kind:?}]",
+                    layout.peak_bytes, plan.peak_bytes
+                ));
+            }
+            if layout.total_bytes() < plan.peak_bytes {
+                return Err("slab + static below the plan peak".into());
+            }
+            Ok(())
+        },
+    );
+}
