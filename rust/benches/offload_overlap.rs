@@ -1,0 +1,376 @@
+//! Host-spill offload benchmark: predicted stall vs device budget at
+//! several host-bandwidth settings, plus the runtime engine's host-pool
+//! recycle behavior and the per-worker staging-scratch audit.
+//!
+//! Emits `BENCH_offload.json`. `OPTORCH_BENCH_CHECK=1` runs a fast smoke
+//! pass that *fails the process* when an invariant breaks: a "fitting"
+//! spill plan whose resident total exceeds its budget, a prefetch issued
+//! at or after its need step, a 60%-of-cheapest-point budget that the
+//! planner cannot satisfy on the checkpoint-heavy chain profile, host-pool
+//! steady-state allocations, or worker staging scratch falling back to the
+//! heap (counted by the same global-allocator shim as `arena_packing`).
+
+use optorch::config::Pipeline;
+use optorch::memory::arena::{plan_arena, validate, ArenaAllocator};
+use optorch::memory::offload::{
+    plan_spill, simulate_overlap, OffloadEngine, OverlapModel, SpillPlan,
+    DEFAULT_DEVICE_FLOPS_PER_SEC,
+};
+use optorch::memory::planner::{pareto_frontier, DEFAULT_FRONTIER_LEVELS};
+use optorch::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
+use optorch::util::bench::{bench, fmt_bytes, fmt_ns, Table};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; only adds a counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Checkpoint-heavy uniform chain (same family as `arena_packing`'s
+/// synthetic sweep): Σ boundary outputs dominates any single backward
+/// working set, the regime where host spilling has real headroom.
+fn spill_chain(depth: usize) -> ArchProfile {
+    let widths = [64usize, 72, 80, 88];
+    let layers = (0..depth)
+        .map(|i| {
+            let c = widths[i % widths.len()];
+            let out = (8 * 8 * c) as u64;
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: LayerKind::Conv,
+                out_shape: (8, 8, c),
+                act_elems: out * 2,
+                params: (c * 9) as u64,
+                flops_per_image: c as u64 * 50_000,
+            }
+        })
+        .collect();
+    ArchProfile { name: format!("spill_chain{depth}"), input: (8, 8, 3), layers }
+}
+
+struct SweepRow {
+    arch: String,
+    budget_pct: u64,
+    host_bw: u64,
+    feasible: bool,
+    spilled_tensors: usize,
+    spilled_bytes: u64,
+    device_total: u64,
+    stall_ms: f64,
+    step_ms: f64,
+}
+
+fn write_json(rows: &[SweepRow], pool: &PoolRow) -> std::io::Result<()> {
+    let mut j = String::from("{\n  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"arch\": \"{}\", \"budget_pct\": {}, \"host_bw\": {}, \
+             \"feasible\": {}, \"spilled_tensors\": {}, \"spilled_bytes\": {}, \
+             \"device_total\": {}, \"stall_ms\": {:.4}, \"step_ms\": {:.4}}}{}\n",
+            r.arch,
+            r.budget_pct,
+            r.host_bw,
+            r.feasible,
+            r.spilled_tensors,
+            r.spilled_bytes,
+            r.device_total,
+            r.stall_ms,
+            r.step_ms,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    j.push_str(&format!(
+        "  ],\n  \"host_pool\": {{\"steps\": {}, \"hit_rate\": {:.4}, \
+         \"steady_allocs\": {}, \"step_ns\": {:.0}}},\n",
+        pool.steps, pool.hit_rate, pool.steady_allocs, pool.step_ns
+    ));
+    j.push_str(&format!(
+        "  \"worker_scratch\": {{\"steady_allocs\": {}, \"fallbacks\": {}}}\n}}\n",
+        pool.scratch_steady_allocs, pool.scratch_fallbacks
+    ));
+    std::fs::write("BENCH_offload.json", j)
+}
+
+struct PoolRow {
+    steps: u64,
+    hit_rate: f64,
+    steady_allocs: u64,
+    step_ns: f64,
+    scratch_steady_allocs: u64,
+    scratch_fallbacks: u64,
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let mut failures = 0u32;
+    let batch = 16usize;
+    let sc = Pipeline::parse("sc").unwrap();
+    let lookahead = 2usize;
+
+    // ---- stall vs budget sweep at several host bandwidths ----
+    println!("=== host-spill: predicted stall vs device budget (batch {batch}) ===\n");
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let mut t = Table::new(&[
+        "arch",
+        "budget",
+        "host bw",
+        "spilled",
+        "device total",
+        "stall / step",
+    ]);
+    let archs: Vec<ArchProfile> =
+        vec![spill_chain(48), arch_by_name("resnet18", (64, 64, 3), 10).unwrap()];
+    for arch in &archs {
+        // "cheapest point" = the smallest packed total on the frontier —
+        // budgets below it are unreachable by pure recompute
+        let frontier = pareto_frontier(arch, sc, batch, DEFAULT_FRONTIER_LEVELS);
+        let cheapest_total = frontier
+            .iter()
+            .map(|p| plan_arena(arch, sc, batch, &p.checkpoints).1.total_bytes())
+            .min()
+            .unwrap();
+        // the most checkpoint-rich plan is the spill planner's raw input
+        let full = &frontier.last().unwrap().checkpoints;
+        for pct in [90u64, 75, 60, 45] {
+            let budget = cheapest_total * pct / 100;
+            for bw_gib in [4u64, 12, 32] {
+                let host_bw = bw_gib * (1 << 30);
+                let model = OverlapModel {
+                    host_bw_bytes_per_sec: host_bw as f64,
+                    device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
+                };
+                match plan_spill(arch, sc, batch, full, budget, lookahead) {
+                    Ok(spill) => {
+                        if spill.device_total() > budget {
+                            eprintln!(
+                                "FAIL {}: 'fitting' plan at {} exceeds its budget {}",
+                                arch.name,
+                                spill.device_total(),
+                                budget
+                            );
+                            failures += 1;
+                        }
+                        if let Err(e) = validate(&spill.lifetimes, &spill.layout) {
+                            eprintln!("FAIL {}: resident layout invalid: {e}", arch.name);
+                            failures += 1;
+                        }
+                        for s in &spill.steps {
+                            if s.prefetch_step >= s.need_step {
+                                eprintln!("FAIL {}: prefetch at/after need: {s:?}", arch.name);
+                                failures += 1;
+                            }
+                        }
+                        let rep = simulate_overlap(arch, batch, &spill, &model);
+                        t.row(&[
+                            arch.name.clone(),
+                            format!("{pct}% = {}", fmt_bytes(budget)),
+                            format!("{bw_gib} GiB/s"),
+                            format!(
+                                "{} ({})",
+                                spill.steps.len(),
+                                fmt_bytes(spill.spilled_bytes)
+                            ),
+                            fmt_bytes(spill.device_total()),
+                            format!(
+                                "{:.3} / {:.3} ms",
+                                rep.stall_secs * 1e3,
+                                rep.predicted_step_secs * 1e3
+                            ),
+                        ]);
+                        rows.push(SweepRow {
+                            arch: arch.name.clone(),
+                            budget_pct: pct,
+                            host_bw,
+                            feasible: true,
+                            spilled_tensors: spill.steps.len(),
+                            spilled_bytes: spill.spilled_bytes,
+                            device_total: spill.device_total(),
+                            stall_ms: rep.stall_secs * 1e3,
+                            step_ms: rep.predicted_step_secs * 1e3,
+                        });
+                    }
+                    Err(e) => {
+                        if e.min_device_bytes <= budget {
+                            eprintln!(
+                                "FAIL {}: infeasibility floor {} not above budget {}",
+                                arch.name, e.min_device_bytes, budget
+                            );
+                            failures += 1;
+                        }
+                        if arch.name.starts_with("spill_chain") && pct >= 60 {
+                            // the checkpoint-heavy chain must satisfy the
+                            // acceptance scenario: 60% of the cheapest
+                            // pure point is reachable by spilling
+                            eprintln!(
+                                "FAIL {}: {pct}% of the cheapest point must be spillable",
+                                arch.name
+                            );
+                            failures += 1;
+                        }
+                        t.row(&[
+                            arch.name.clone(),
+                            format!("{pct}% = {}", fmt_bytes(budget)),
+                            format!("{bw_gib} GiB/s"),
+                            "-".into(),
+                            format!("infeasible (min {})", fmt_bytes(e.min_device_bytes)),
+                            "-".into(),
+                        ]);
+                        rows.push(SweepRow {
+                            arch: arch.name.clone(),
+                            budget_pct: pct,
+                            host_bw,
+                            feasible: false,
+                            spilled_tensors: 0,
+                            spilled_bytes: 0,
+                            device_total: e.min_device_bytes,
+                            stall_ms: 0.0,
+                            step_ms: 0.0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    t.print();
+
+    // monotonicity sanity on the chain rows: slower links never stall less
+    for pct in [90u64, 75, 60, 45] {
+        let mut stalls: Vec<(u64, f64)> = rows
+            .iter()
+            .filter(|r| r.arch.starts_with("spill_chain") && r.budget_pct == pct && r.feasible)
+            .map(|r| (r.host_bw, r.stall_ms))
+            .collect();
+        stalls.sort_unstable_by_key(|&(bw, _)| bw);
+        for w in stalls.windows(2) {
+            if w[1].1 > w[0].1 + 1e-9 {
+                eprintln!(
+                    "FAIL spill_chain: stall grew with bandwidth at {pct}% \
+                     ({} → {} ms)",
+                    w[0].1, w[1].1
+                );
+                failures += 1;
+            }
+        }
+    }
+
+    // ---- runtime engine: host-pool recycle + steady-state allocs ----
+    println!("\n=== host-spill engine: pool recycle at steady state ===\n");
+    let chain = spill_chain(48);
+    let frontier = pareto_frontier(&chain, sc, batch, DEFAULT_FRONTIER_LEVELS);
+    let full = &frontier.last().unwrap().checkpoints;
+    let (_, layout) = plan_arena(&chain, sc, batch, full);
+    let budget = layout.total_bytes() * 3 / 5;
+    let spill: SpillPlan =
+        plan_spill(&chain, sc, batch, full, budget, lookahead).expect("60% chain budget");
+    let mut engine = OffloadEngine::new(&spill);
+    engine.run_step(); // warmup: populates the pool
+    let warm_allocs = engine.stats().pool_allocs;
+    let iters = if check { 64 } else { 512 };
+    let stats = bench(1, iters, || engine.run_step());
+    // the allocation audit runs outside `bench` (its sample buffer would
+    // otherwise count against the engine)
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    for _ in 0..256 {
+        engine.run_step();
+    }
+    let steady_allocs = ALLOC_COUNT.load(Ordering::Relaxed) - before;
+    if steady_allocs != 0 {
+        eprintln!("FAIL: {steady_allocs} heap allocations across 256 engine steps");
+        failures += 1;
+    }
+    let es = engine.stats();
+    if es.pool_allocs != warm_allocs {
+        eprintln!(
+            "FAIL: host pool allocated {} fresh buffers after warmup",
+            es.pool_allocs - warm_allocs
+        );
+        failures += 1;
+    }
+    if es.evictions != es.prefetches {
+        eprintln!("FAIL: {} evictions vs {} prefetches", es.evictions, es.prefetches);
+        failures += 1;
+    }
+    let mut t = Table::new(&["steps", "evictions/step", "pool hit rate", "per step"]);
+    t.row(&[
+        format!("{}", es.steps),
+        format!("{}", spill.steps.len()),
+        format!("{:.1}%", es.hit_rate() * 100.0),
+        fmt_ns(stats.median_ns),
+    ]);
+    t.print();
+
+    // ---- worker staging scratch: the zero-alloc audit, extended ----
+    // Emulates the producer hot loop's scratch pattern (two k-wide label
+    // rows per batch) against the per-worker slab.
+    let classes = 10usize;
+    let mut scratch = ArenaAllocator::new(2 * classes * 4);
+    let scratch_before = ALLOC_COUNT.load(Ordering::Relaxed);
+    for _ in 0..256 {
+        scratch.begin_step();
+        let h = scratch.alloc_f32(2 * classes).expect("slab sized for the rows");
+        let rows = scratch.f32_mut(&h);
+        let (a, b) = rows.split_at_mut(classes);
+        a.fill(0.0);
+        b.fill(0.0);
+        a[3] = 1.0;
+        b[7] = 1.0;
+        std::hint::black_box((a[3], b[7]));
+    }
+    let scratch_steady = ALLOC_COUNT.load(Ordering::Relaxed) - scratch_before;
+    if scratch_steady != 0 {
+        eprintln!("FAIL: {scratch_steady} heap allocations across 256 scratch steps");
+        failures += 1;
+    }
+    if scratch.fallback_allocs() != 0 {
+        eprintln!("FAIL: {} scratch slab fallbacks", scratch.fallback_allocs());
+        failures += 1;
+    }
+    println!(
+        "\nworker scratch: 256 steps, {} heap allocs, {} slab fallbacks",
+        scratch_steady,
+        scratch.fallback_allocs()
+    );
+
+    let pool_row = PoolRow {
+        steps: es.steps,
+        hit_rate: es.hit_rate(),
+        steady_allocs,
+        step_ns: stats.median_ns,
+        scratch_steady_allocs: scratch_steady,
+        scratch_fallbacks: scratch.fallback_allocs(),
+    };
+    match write_json(&rows, &pool_row) {
+        Ok(()) => println!("\nwrote BENCH_offload.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_offload.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: all offload invariants hold");
+    }
+}

@@ -84,20 +84,27 @@ COMMANDS:
             [--epochs N] [--batch_size N] [--dataset synth10|synth100|cifar10]
             [--config FILE] [--train_size N] [--seed N]
             [--num_workers N|auto] [--prefetch_depth N]
-            [--memory_budget BYTES] ...
+            [--memory_budget BYTES] [--host_bw BYTES/s] [--spill_lookahead N] ...
             E-D producer pool: num_workers sizes the encode-worker pool
             (0 = single producer thread, auto = cores-1, default auto);
             prefetch_depth bounds how far producers run ahead.
             memory_budget (S-C pipelines; accepts 786432 / 512MiB / 1.5GB)
-            trains under the cheapest-time checkpoint plan that fits.
+            trains under the cheapest-predicted-time plan whose *packed*
+            bytes fit — composing a host-spill offload plan (budget-driven
+            checkpoint eviction + double-buffered prefetch, modeled at
+            host_bw with spill_lookahead steps of lookahead) when no pure
+            recompute plan fits.
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
             [--kind dp|sqrt|uniformK|bottleneckK] [--frontier] [--arena]
-            [--budget BYTES]  (--frontier prints the DP time/memory Pareto
-            frontier; --budget picks the cheapest-time plan that fits;
-            --arena packs the plan into a memory slab and prints its size,
-            fragmentation ratio and per-class offsets)
+            [--budget BYTES] [--spill BYTES [--host_bw B/s] [--lookahead N]]
+            (--frontier prints the DP time/memory Pareto frontier; --budget
+            picks the cheapest-time plan whose packed total fits; --arena
+            packs the plan into a memory slab and prints its size,
+            fragmentation ratio and per-class offsets; --spill composes a
+            host-spill plan for the budget and prints the per-tensor
+            evict/prefetch table + predicted stall)
   models    List architecture profiles and parameter counts.
   figures   Regenerate all paper figures (shortcut for the benches).
   help      Show this message.

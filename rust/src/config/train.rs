@@ -88,11 +88,20 @@ pub struct TrainConfig {
     /// `available_parallelism - 1`. Any worker count yields byte-identical
     /// batches for the same seed.
     pub num_workers: Option<usize>,
-    /// Peak-training-memory budget in bytes (S-C pipelines only). When set,
-    /// the trainer picks the cheapest-time checkpoint plan from the DP
-    /// Pareto frontier whose simulated peak fits; errors when even the
-    /// minimum-peak plan exceeds it. `None` = minimize peak outright.
+    /// Peak-training-memory budget in bytes (S-C pipelines only). When
+    /// set, the trainer ranks the DP Pareto frontier by *packed* bytes
+    /// (`base + slab`), composes host-spill plans for points that do not
+    /// fit, and trains under the minimum-predicted-step-time choice;
+    /// errors when even full spilling cannot reach the budget. `None` =
+    /// minimize peak outright.
     pub memory_budget: Option<u64>,
+    /// Modeled host↔device bandwidth (bytes/s) for the offload engine's
+    /// overlap simulation (accepts `12GiB` etc.). Only consulted when
+    /// `memory_budget` forces host spilling.
+    pub host_bw: u64,
+    /// How many schedule steps before its first backward use a spilled
+    /// checkpoint's prefetch is issued (the double-buffer window, ≥ 1).
+    pub spill_lookahead: usize,
     /// Augmentation policy applied to every class (SBS per-class policies
     /// are configured programmatically via [`crate::data::sampler`]).
     pub augment: String,
@@ -121,6 +130,8 @@ impl TrainConfig {
             prefetch_depth: 4,
             num_workers: None,
             memory_budget: None,
+            host_bw: crate::memory::offload::DEFAULT_HOST_BW_BYTES_PER_SEC,
+            spill_lookahead: 2,
             augment: "hflip,crop4".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             eval_every: 1,
@@ -181,6 +192,12 @@ impl TrainConfig {
         if let Some(v) = kv.get_str("memory_budget") {
             cfg.memory_budget = Some(parse_bytes(v).map_err(|e| format!("memory_budget: {e}"))?);
         }
+        if let Some(v) = kv.get_str("host_bw") {
+            cfg.host_bw = parse_bytes(v).map_err(|e| format!("host_bw: {e}"))?;
+        }
+        if let Some(v) = kv.get_usize("spill_lookahead")? {
+            cfg.spill_lookahead = v;
+        }
         if let Some(a) = kv.get_str("augment") {
             cfg.augment = a.to_string();
         }
@@ -214,6 +231,13 @@ impl TrainConfig {
             return Err(
                 "memory_budget only constrains checkpoint planning — add S-C to the \
                  pipeline (e.g. `--pipeline sc` or `ed+sc`)"
+                    .into(),
+            );
+        }
+        if self.spill_lookahead == 0 {
+            return Err(
+                "spill_lookahead must be ≥ 1 — a prefetch issued at its need step \
+                 cannot overlap anything"
                     .into(),
             );
         }
@@ -387,6 +411,31 @@ mod tests {
         ov.insert("memory_budget".to_string(), "lots".to_string());
         let err = TrainConfig::from_sources(None, &ov).unwrap_err();
         assert!(err.contains("memory_budget"), "{err}");
+    }
+
+    #[test]
+    fn offload_knobs_parse_and_validate() {
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "sc".to_string());
+        ov.insert("host_bw".to_string(), "4GiB".to_string());
+        ov.insert("spill_lookahead".to_string(), "3".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.host_bw, 4 * 1024 * 1024 * 1024);
+        assert_eq!(cfg.spill_lookahead, 3);
+        // defaults
+        let d = TrainConfig::default_for("m", Pipeline::BASELINE);
+        assert_eq!(d.host_bw, crate::memory::offload::DEFAULT_HOST_BW_BYTES_PER_SEC);
+        assert_eq!(d.spill_lookahead, 2);
+        // zero lookahead rejected
+        let mut ov = BTreeMap::new();
+        ov.insert("spill_lookahead".to_string(), "0".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("spill_lookahead"), "{err}");
+        // junk bandwidth rejected with the key named
+        let mut ov = BTreeMap::new();
+        ov.insert("host_bw".to_string(), "fast".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("host_bw"), "{err}");
     }
 
     #[test]

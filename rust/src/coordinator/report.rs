@@ -3,6 +3,7 @@
 
 use crate::coordinator::TrainReport;
 use crate::memory::arena::ArenaReport;
+use crate::memory::offload::OffloadReport;
 use crate::memory::planner::CheckpointPlan;
 use crate::memory::simulator::MemoryReport;
 use crate::util::bench::fmt_bytes;
@@ -70,6 +71,9 @@ pub fn markdown_summary(report: &TrainReport) -> String {
     if let Some(arena) = &report.arena {
         s.push_str(&arena_summary(arena));
     }
+    if let Some(offload) = &report.offload {
+        s.push_str(&offload_summary(offload));
+    }
     s
 }
 
@@ -102,6 +106,36 @@ pub fn arena_summary(a: &ArenaReport) -> String {
         a.fragmentation,
         a.tensor_count
     )
+}
+
+/// One-line description of a host-spill composition: what left the
+/// device, what it costs in predicted stall, and — after a run — the
+/// engine's transfer/pool counters.
+pub fn offload_summary(o: &OffloadReport) -> String {
+    let mut s = format!(
+        "host-spill offload: device {} ≤ budget {} — {} checkpoints to host \
+         ({} out, host peak {}), predicted stall {:.2} ms/step ({:.1}% of {:.2} ms), \
+         bw {}/s, lookahead {}\n",
+        fmt_bytes(o.device_total),
+        fmt_bytes(o.budget),
+        o.spilled_tensors,
+        fmt_bytes(o.spilled_bytes),
+        fmt_bytes(o.host_peak_bytes),
+        o.predicted_stall_secs * 1e3,
+        o.stall_frac() * 100.0,
+        o.predicted_step_secs * 1e3,
+        fmt_bytes(o.host_bw_bytes_per_sec),
+        o.lookahead,
+    );
+    if o.evictions > 0 {
+        s.push_str(&format!(
+            "host-spill engine: {} evictions, {} prefetches, pool hit rate {:.1}%\n",
+            o.evictions,
+            o.prefetches,
+            o.pool_hit_rate * 100.0
+        ));
+    }
+    s
 }
 
 /// Time/memory Pareto frontier as CSV:
@@ -211,11 +245,13 @@ mod tests {
                     produce_secs: 0.3,
                     blocked_secs: 0.05,
                     batches: 12,
+                    scratch_fallbacks: 0,
                 },
                 crate::data::loader::WorkerSummary {
                     produce_secs: 0.1,
                     blocked_secs: 0.05,
                     batches: 8,
+                    scratch_fallbacks: 0,
                 },
             ],
             pool_allocs: 9,
@@ -245,6 +281,24 @@ mod tests {
                     },
                 ],
             }),
+            offload: None,
+        }
+    }
+
+    fn fake_offload() -> OffloadReport {
+        OffloadReport {
+            budget: 3 * 1024 * 1024,
+            device_total: 2_900_000,
+            spilled_tensors: 4,
+            spilled_bytes: 512 * 1024,
+            host_peak_bytes: 384 * 1024,
+            predicted_stall_secs: 0.0012,
+            predicted_step_secs: 0.016,
+            host_bw_bytes_per_sec: 12 * (1 << 30),
+            lookahead: 2,
+            evictions: 0,
+            prefetches: 0,
+            pool_hit_rate: 0.0,
         }
     }
 
@@ -318,6 +372,27 @@ mod tests {
         let mut rep = fake_report();
         rep.arena = None;
         assert!(!markdown_summary(&rep).contains("activation arena"));
+    }
+
+    #[test]
+    fn markdown_includes_offload_line_when_spilling() {
+        let mut rep = fake_report();
+        assert!(!markdown_summary(&rep).contains("host-spill"));
+        rep.offload = Some(fake_offload());
+        let md = markdown_summary(&rep);
+        assert!(md.contains("host-spill offload:"), "{md}");
+        assert!(md.contains("4 checkpoints to host"), "{md}");
+        assert!(md.contains("predicted stall 1.20 ms/step"), "{md}");
+        // engine counters only appear once a run has filled them in
+        assert!(!md.contains("host-spill engine:"), "{md}");
+        let mut with_counters = fake_offload();
+        with_counters.evictions = 400;
+        with_counters.prefetches = 400;
+        with_counters.pool_hit_rate = 0.99;
+        rep.offload = Some(with_counters);
+        let md = markdown_summary(&rep);
+        assert!(md.contains("host-spill engine: 400 evictions"), "{md}");
+        assert!(md.contains("pool hit rate 99.0%"), "{md}");
     }
 
     #[test]

@@ -17,10 +17,11 @@
 //!   ([`SbsSampler::plan_batch`]): it owns the RNG/pool state and emits one
 //!   [`BatchPlan`] per step, in step order, into a bounded queue.
 //! * **Workers** (`num_workers` threads) pull plans, materialize them
-//!   (fetch + augment, [`materialize_plan_into`]) into a thread-local
-//!   staging batch, and encode/widen into payload buffers drawn from the
-//!   shared [`BufferPool`]. Materialization is a pure function of the plan,
-//!   so any thread may produce any step.
+//!   (fetch + augment, [`materialize_plan_arena`]) into a thread-local
+//!   staging batch — label rows staged in a small per-worker
+//!   [`ArenaAllocator`] slab — and encode/widen into payload buffers drawn
+//!   from the shared [`BufferPool`]. Materialization is a pure function of
+//!   the plan, so any thread may produce any step.
 //! * The **sequencer** restores step order with a reorder buffer and feeds
 //!   the bounded output channel (depth `prefetch_depth`). A permit gate
 //!   ([`Gate`]) provides the Figure-1 backpressure with a hard bound: at
@@ -59,7 +60,8 @@ use crate::data::dataset::Dataset;
 use crate::data::encode::{encode_batch_grouped_into, EncodeError, EncodeSpec, EncodedBatch};
 use crate::data::image::ImageBatch;
 use crate::data::pool::BufferPool;
-use crate::data::sampler::{materialize_plan_into, BatchPlan, ClassSpec, SbsSampler};
+use crate::data::sampler::{materialize_plan_arena, BatchPlan, ClassSpec, SbsSampler};
+use crate::memory::arena::ArenaAllocator;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
@@ -126,6 +128,10 @@ pub struct WorkerStats {
     /// ns this worker spent blocked handing batches downstream.
     pub blocked_ns: AtomicU64,
     pub batches: AtomicU64,
+    /// Heap fallbacks of the worker's staging-scratch arena (see
+    /// [`materialize_plan_arena`]); 0 ⇒ the scratch path ran entirely in
+    /// the per-worker slab.
+    pub scratch_fallbacks: AtomicU64,
 }
 
 /// Plain-data snapshot of one worker's counters.
@@ -134,6 +140,8 @@ pub struct WorkerSummary {
     pub produce_secs: f64,
     pub blocked_secs: f64,
     pub batches: u64,
+    /// Staging-scratch requests the worker's arena could not serve.
+    pub scratch_fallbacks: u64,
 }
 
 /// Producer-side counters for the Fig-1 overlap analysis.
@@ -177,6 +185,7 @@ impl LoaderStats {
                 produce_secs: w.produce_ns.load(Ordering::Relaxed) as f64 / 1e9,
                 blocked_secs: w.blocked_ns.load(Ordering::Relaxed) as f64 / 1e9,
                 batches: w.batches.load(Ordering::Relaxed),
+                scratch_fallbacks: w.scratch_fallbacks.load(Ordering::Relaxed),
             })
             .collect()
     }
@@ -260,12 +269,27 @@ struct ProducerCtx {
 }
 
 impl ProducerCtx {
+    /// Per-worker staging-scratch arena sized for the two label rows
+    /// [`materialize_plan_arena`] stages per slot.
+    fn worker_scratch(&self) -> ArenaAllocator {
+        ArenaAllocator::new(2 * self.dataset.num_classes() * 4)
+    }
+
     /// Materialize + encode one plan, accounting to worker `wid`.
-    fn produce(&self, wid: usize, plan: &BatchPlan, stage: &mut ImageBatch) -> BatchPayload {
+    fn produce(
+        &self,
+        wid: usize,
+        plan: &BatchPlan,
+        stage: &mut ImageBatch,
+        scratch: &mut ArenaAllocator,
+    ) -> BatchPayload {
         let t0 = Instant::now();
         let (h, w, c) = self.dataset.shape();
         stage.reset(plan.len(), h, w, c, self.dataset.num_classes());
-        materialize_plan_into(&self.specs, self.dataset.as_ref(), plan, stage);
+        materialize_plan_arena(&self.specs, self.dataset.as_ref(), plan, stage, scratch);
+        self.stats.workers[wid]
+            .scratch_fallbacks
+            .store(scratch.fallback_allocs(), Ordering::Relaxed);
         let payload = match make_payload(stage, self.spec, &self.pool) {
             Ok(p) => p,
             // capacity violations are programming errors upstream; surface loudly.
@@ -298,6 +322,8 @@ pub enum EdLoader {
         pool: Arc<BufferPool>,
         /// Reused staging batch (allocated once per loader).
         stage: ImageBatch,
+        /// Label-row staging scratch (one slab, recycled per batch).
+        scratch: ArenaAllocator,
     },
     Par {
         rx: Receiver<BatchPayload>,
@@ -342,6 +368,7 @@ impl EdLoader {
             LoaderMode::Synchronous => {
                 let (h, w, c) = dataset.shape();
                 let stage = ImageBatch::zeros(sampler.batch_size, h, w, c, dataset.num_classes());
+                let scratch = ArenaAllocator::new(2 * dataset.num_classes() * 4);
                 EdLoader::Sync {
                     dataset,
                     sampler,
@@ -350,6 +377,7 @@ impl EdLoader {
                     stats: Arc::new(LoaderStats::with_workers(0)),
                     pool,
                     stage,
+                    scratch,
                 }
             }
             LoaderMode::Parallel { prefetch_depth, num_workers: 0 } => {
@@ -392,12 +420,13 @@ impl EdLoader {
             .name("optorch-ed-producer".into())
             .spawn(move || {
                 let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
+                let mut scratch = ctx.worker_scratch();
                 for _ in 0..num_batches {
                     if ctx.cancel.load(Ordering::Relaxed) {
                         return;
                     }
                     let plan = sampler.plan_batch(ctx.dataset.as_ref());
-                    let payload = ctx.produce(0, &plan, &mut stage);
+                    let payload = ctx.produce(0, &plan, &mut stage, &mut scratch);
                     let t1 = Instant::now();
                     if tx.send(payload).is_err() {
                         return; // consumer dropped; stop quietly
@@ -477,6 +506,7 @@ impl EdLoader {
                     .name(format!("optorch-ed-worker-{wid}"))
                     .spawn(move || {
                         let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
+                        let mut scratch = ctx.worker_scratch();
                         loop {
                             // A permit caps in-flight payloads; taking it
                             // before the dequeue keeps step order live (see
@@ -491,7 +521,7 @@ impl EdLoader {
                                 gate.release(); // permit unused: no more plans
                                 return;
                             };
-                            let payload = ctx.produce(wid, &plan, &mut stage);
+                            let payload = ctx.produce(wid, &plan, &mut stage, &mut scratch);
                             let t1 = Instant::now();
                             if seq_tx.send((step, payload)).is_err() {
                                 return; // sequencer gone
@@ -539,13 +569,13 @@ impl EdLoader {
     /// Next batch, or `None` at end of the configured run.
     pub fn next(&mut self) -> Option<BatchPayload> {
         match self {
-            EdLoader::Sync { dataset, sampler, spec, remaining, stats, pool, stage } => {
+            EdLoader::Sync { dataset, sampler, spec, remaining, stats, pool, stage, scratch } => {
                 if *remaining == 0 {
                     return None;
                 }
                 *remaining -= 1;
                 let t0 = Instant::now();
-                sampler.next_batch_into(dataset.as_ref(), stage);
+                sampler.next_batch_arena(dataset.as_ref(), stage, scratch);
                 let payload = make_payload(stage, *spec, pool).expect("encode failed");
                 stats
                     .produce_ns
@@ -879,6 +909,22 @@ mod tests {
         assert_eq!(per_worker.len(), 2);
         assert_eq!(per_worker.iter().map(|w| w.batches).sum::<u64>(), 8);
         assert!(stats.seq_max_depth.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn worker_scratch_stays_inside_the_per_worker_slab() {
+        // Every producer stages its label rows in a per-worker arena; the
+        // slab is sized exactly for them, so no worker may ever fall back
+        // to the heap for scratch.
+        let mut l = setup(8, None, par(2, 3));
+        let stats = l.stats();
+        while l.next().is_some() {}
+        drop(l);
+        let per_worker = stats.worker_summaries();
+        assert_eq!(per_worker.len(), 3);
+        for (i, w) in per_worker.iter().enumerate() {
+            assert_eq!(w.scratch_fallbacks, 0, "worker {i} fell back to the heap");
+        }
     }
 
     #[test]

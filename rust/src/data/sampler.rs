@@ -27,6 +27,7 @@
 use crate::data::augment::AugPolicy;
 use crate::data::dataset::Dataset;
 use crate::data::image::ImageBatch;
+use crate::memory::arena::ArenaAllocator;
 use crate::util::rng::Rng;
 
 /// Per-class sampling weight + augmentation policy.
@@ -93,10 +94,46 @@ pub fn materialize_plan_into(
     plan: &BatchPlan,
     out: &mut ImageBatch,
 ) {
-    assert_eq!(out.n, plan.len(), "output batch not sized for the plan");
     let k = out.num_classes;
     let mut label_row = vec![0.0f32; k];
     let mut prow = vec![0.0f32; k];
+    materialize_core(specs, dataset, plan, out, &mut label_row, &mut prow);
+}
+
+/// [`materialize_plan_into`] with the per-slot label staging rows placed
+/// in `scratch` (one recycled slab per worker) instead of fresh heap
+/// vectors, so the worker hot loop's scratch path allocates nothing at
+/// steady state. An undersized slab falls back to the heap — counted by
+/// [`ArenaAllocator::fallback_allocs`], surfaced per worker in
+/// `LoaderStats`.
+pub fn materialize_plan_arena(
+    specs: &[ClassSpec],
+    dataset: &dyn Dataset,
+    plan: &BatchPlan,
+    out: &mut ImageBatch,
+    scratch: &mut ArenaAllocator,
+) {
+    let k = out.num_classes;
+    scratch.begin_step();
+    match scratch.alloc_f32(2 * k) {
+        Some(handle) => {
+            let rows = scratch.f32_mut(&handle);
+            let (label_row, prow) = rows.split_at_mut(k);
+            materialize_core(specs, dataset, plan, out, label_row, prow);
+        }
+        None => materialize_plan_into(specs, dataset, plan, out),
+    }
+}
+
+fn materialize_core(
+    specs: &[ClassSpec],
+    dataset: &dyn Dataset,
+    plan: &BatchPlan,
+    out: &mut ImageBatch,
+    label_row: &mut [f32],
+    prow: &mut [f32],
+) {
+    assert_eq!(out.n, plan.len(), "output batch not sized for the plan");
     for (slot, item) in plan.items.iter().enumerate() {
         let partner = item.partner.map(|p| dataset.get(p));
         let (mut img, label) = dataset.get(item.index);
@@ -108,13 +145,13 @@ pub fn materialize_plan_into(
         if let Some((pimg, plabel)) = &partner {
             prow.fill(0.0);
             prow[*plabel] = 1.0;
-            policy.apply(&mut img, &mut label_row, Some((pimg, &prow)), &mut rng);
+            policy.apply(&mut img, label_row, Some((pimg, &*prow)), &mut rng);
         } else {
-            policy.apply(&mut img, &mut label_row, None, &mut rng);
+            policy.apply(&mut img, label_row, None, &mut rng);
         }
         let dst = plan.perm[slot];
         out.image_mut(dst).copy_from_slice(&img.data);
-        out.label_mut(dst).copy_from_slice(&label_row);
+        out.label_mut(dst).copy_from_slice(label_row);
     }
 }
 
@@ -314,6 +351,20 @@ impl SbsSampler {
         materialize_plan_into(&self.specs, dataset, &plan, out);
     }
 
+    /// [`SbsSampler::next_batch_into`] with label staging scratch drawn
+    /// from `scratch` (see [`materialize_plan_arena`]).
+    pub fn next_batch_arena(
+        &mut self,
+        dataset: &dyn Dataset,
+        out: &mut ImageBatch,
+        scratch: &mut ArenaAllocator,
+    ) {
+        let (h, w, c) = dataset.shape();
+        out.reset(self.batch_size, h, w, c, dataset.num_classes());
+        let plan = self.plan_batch(dataset);
+        materialize_plan_arena(&self.specs, dataset, &plan, out, scratch);
+    }
+
     /// The per-class specs (what [`materialize_plan_into`] needs); the
     /// loader clones these once per epoch for its workers.
     pub fn specs(&self) -> &[ClassSpec] {
@@ -384,6 +435,33 @@ mod tests {
                 assert_ne!(b.hard_label(i), 2);
             }
         }
+    }
+
+    #[test]
+    fn arena_materialization_matches_heap_and_counts_fallbacks() {
+        let d = dataset(30, 5);
+        let policy = AugPolicy::parse("hflip,crop4").unwrap();
+        let mut heap = SbsSampler::uniform(&d, 10, policy.clone(), 9).unwrap();
+        let mut arena = SbsSampler::uniform(&d, 10, policy, 9).unwrap();
+        // slab sized for the two k-wide label rows → zero fallbacks
+        let mut scratch = ArenaAllocator::new(2 * 5 * 4);
+        let (h, w, c) = d.shape();
+        let mut a = ImageBatch::zeros(10, h, w, c, 5);
+        let mut b = ImageBatch::zeros(10, h, w, c, 5);
+        for _ in 0..4 {
+            heap.next_batch_into(&d, &mut a);
+            arena.next_batch_arena(&d, &mut b, &mut scratch);
+            assert_eq!(a.data, b.data, "pixel bytes must be identical");
+            assert_eq!(a.labels, b.labels, "labels must be identical");
+        }
+        assert_eq!(scratch.fallback_allocs(), 0, "sized slab must serve every step");
+        // an undersized slab falls back to the heap path, byte-identically
+        let mut tiny = ArenaAllocator::new(0);
+        heap.next_batch_into(&d, &mut a);
+        arena.next_batch_arena(&d, &mut b, &mut tiny);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(tiny.fallback_allocs(), 1);
     }
 
     #[test]

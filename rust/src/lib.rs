@@ -37,6 +37,16 @@
 //! count reproduces the single-threaded batch stream bit-for-bit. Knobs:
 //! `num_workers` / `prefetch_depth` on [`config::TrainConfig`].
 //!
+//! ## Memory hierarchy
+//!
+//! [`memory`] is a planning stack: the simulator/`PeakEvaluator` prove a
+//! schedule's exact peak, the DP planner picks checkpoint placements (and
+//! the full time/memory Pareto frontier), the arena packs a plan into a
+//! concrete slab, and [`memory::offload`] spills the coldest checkpoints
+//! to host memory — with a double-buffered prefetch schedule and a
+//! predicted-stall model — when `memory_budget` sits below even the
+//! packed slab.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -68,9 +78,14 @@ pub mod prelude {
     pub use crate::data::sampler::SbsSampler;
     pub use crate::data::synth::SynthCifar;
     pub use crate::memory::arena::{plan_arena, ArenaAllocator, ArenaLayout, ArenaReport};
+    pub use crate::memory::offload::{
+        plan_spill, select_for_budget, simulate_overlap, OffloadEngine, OffloadReport,
+        OverlapModel, SpillPlan,
+    };
     pub use crate::memory::peak::PeakEvaluator;
     pub use crate::memory::planner::{
-        pareto_frontier, plan_checkpoints, plan_for_budget, CheckpointPlan, PlannerKind,
+        pareto_frontier, plan_checkpoints, plan_for_budget, plan_for_budget_packed,
+        CheckpointPlan, PlannerKind,
     };
     pub use crate::memory::simulator::{simulate, MemoryReport};
     pub use crate::models::{arch_by_name, ArchProfile};

@@ -7,8 +7,12 @@ use optorch::cli::{Cli, USAGE};
 use optorch::config::{parse_bytes, Pipeline, TrainConfig};
 use optorch::coordinator::{report, Trainer};
 use optorch::memory::arena::{plan_arena, summarize};
+use optorch::memory::offload::{
+    select_for_budget, OverlapModel, DEFAULT_DEVICE_FLOPS_PER_SEC, DEFAULT_HOST_BW_BYTES_PER_SEC,
+};
 use optorch::memory::planner::{
-    pareto_frontier, plan_checkpoints, PlannerKind, DEFAULT_FRONTIER_LEVELS,
+    pareto_frontier, plan_checkpoints, plan_for_budget_packed, PlannerKind,
+    DEFAULT_FRONTIER_LEVELS,
 };
 use optorch::memory::simulator::simulate;
 use optorch::models::{all_arch_names, arch_by_name};
@@ -190,30 +194,92 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         println!("\ntime/memory Pareto frontier ({} points):\n", frontier.len());
         report::frontier_table(&frontier).print();
         if let Some(b) = budget {
-            // select from the frontier just printed, so table and choice
-            // can never diverge
-            let min_peak = frontier.first().map(|p| p.peak_bytes).unwrap_or(0);
-            let plan = frontier
-                .iter()
-                .rev()
-                .find(|p| p.peak_bytes <= b)
-                .ok_or_else(|| {
-                    anyhow!(
-                        "budget {} is below the minimum achievable peak {}",
-                        fmt_bytes(b),
-                        fmt_bytes(min_peak)
-                    )
-                })?;
+            // fit decision on *packed* totals (base + slab), so packing
+            // fragmentation participates
+            let (plan, _, layout) = plan_for_budget_packed(&arch, Pipeline::BASELINE, batch, b)
+                .map_err(|e| anyhow!("{e} — try `plan --spill <budget>` for a host-spill plan"))?;
             println!(
-                "\nbudget {}: cheapest-time plan fits at {} with {} checkpoints {:?} \
-                 (+{:.1}% fwd FLOPs)",
+                "\nbudget {}: cheapest-time plan fits at packed total {} (simulated peak {}) \
+                 with {} checkpoints {:?} (+{:.1}% fwd FLOPs)",
                 fmt_bytes(b),
+                fmt_bytes(layout.total_bytes()),
                 fmt_bytes(plan.peak_bytes),
                 plan.checkpoints.len(),
                 plan.checkpoints,
                 plan.recompute_overhead * 100.0
             );
         }
+    }
+
+    if let Some(s) = cli.get("spill") {
+        let budget = parse_bytes(s).map_err(|e| anyhow!("--spill: {e}"))?;
+        cmd_plan_spill(cli, &arch, batch, budget)?;
+    }
+    Ok(())
+}
+
+/// `plan --spill <budget>`: compose the best host-spill plan for the
+/// budget and print its per-tensor evict/prefetch table + predicted stall.
+fn cmd_plan_spill(
+    cli: &Cli,
+    arch: &optorch::models::ArchProfile,
+    batch: usize,
+    budget: u64,
+) -> Result<()> {
+    let lookahead = cli.get_usize("lookahead").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1);
+    let host_bw = match cli.get("host_bw") {
+        Some(v) => parse_bytes(v).map_err(|e| anyhow!("--host_bw: {e}"))?,
+        None => DEFAULT_HOST_BW_BYTES_PER_SEC,
+    };
+    let model = OverlapModel {
+        host_bw_bytes_per_sec: host_bw as f64,
+        device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
+    };
+    let decision = select_for_budget(arch, Pipeline::BASELINE, batch, budget, lookahead, &model)
+        .map_err(|e| anyhow!(e.to_string()))?;
+    println!(
+        "\nhost-spill plan for budget {} (bw {}/s, lookahead {lookahead}):",
+        fmt_bytes(budget),
+        fmt_bytes(host_bw)
+    );
+    println!(
+        "  plan: {} checkpoints {:?} (+{:.1}% fwd FLOPs), device total {} = static {} + \
+         resident slab {}",
+        decision.plan.checkpoints.len(),
+        decision.plan.checkpoints,
+        decision.plan.recompute_overhead * 100.0,
+        fmt_bytes(decision.spill.device_total()),
+        fmt_bytes(decision.spill.layout.base_bytes),
+        fmt_bytes(decision.spill.layout.slab_bytes),
+    );
+    if decision.is_spill() {
+        let mut t = Table::new(&["layer", "bytes", "evict@", "prefetch@", "need@", "idle steps"]);
+        for s in &decision.spill.steps {
+            t.row(&[
+                format!("{}", s.layer),
+                fmt_bytes(s.bytes),
+                format!("{}", s.evict_step),
+                format!("{}", s.prefetch_step),
+                format!("{}", s.need_step),
+                format!("{}", s.gap_steps),
+            ]);
+        }
+        t.print();
+        println!(
+            "  {} tensors spilled ({} out, host peak {}) — predicted stall {:.3} ms/step \
+             ({:.1}% of {:.3} ms predicted step)",
+            decision.spill.steps.len(),
+            fmt_bytes(decision.spill.spilled_bytes),
+            fmt_bytes(decision.spill.host_peak_bytes),
+            decision.overlap.stall_secs * 1e3,
+            decision.overlap.stall_frac() * 100.0,
+            decision.overlap.predicted_step_secs * 1e3,
+        );
+    } else {
+        println!(
+            "  fits without spilling — predicted step {:.3} ms (no stall)",
+            decision.overlap.predicted_step_secs * 1e3
+        );
     }
     Ok(())
 }

@@ -85,6 +85,102 @@ impl TensorLife {
     }
 }
 
+/// Event times of one (arch, pipeline, batch, plan) schedule — the exact
+/// step indices [`Lifetimes::extract`] assigns and the host-spill planner
+/// (`memory::offload`) reasons about.
+#[derive(Clone, Debug)]
+pub struct ScheduleTimes {
+    /// Forward step of layer `i`.
+    pub t_fwd: Vec<usize>,
+    /// Loss-gradient step (right after the last forward).
+    pub t_loss: usize,
+    /// Recompute step of layer `i` under S-C (`None` when the layer adds
+    /// no bytes at recompute time).
+    pub t_rec: Vec<Option<usize>>,
+    /// Backward step of layer `i`.
+    pub t_bwd: Vec<usize>,
+    /// Optimizer step (the final step).
+    pub t_opt: usize,
+    /// Total schedule steps (`t_opt + 1`).
+    pub steps: usize,
+    /// Forward-stored flag per layer (S-C plan applied; all-true otherwise).
+    pub stored: Vec<bool>,
+}
+
+impl ScheduleTimes {
+    /// Replay the evaluator's event order for `checkpoints` into step
+    /// indices (same conventions as [`Lifetimes::extract`]).
+    pub fn compute(ev: &PeakEvaluator, checkpoints: &[usize]) -> ScheduleTimes {
+        let n = ev.depth();
+        if n == 0 {
+            return ScheduleTimes {
+                t_fwd: Vec::new(),
+                t_loss: 0,
+                t_rec: Vec::new(),
+                t_bwd: Vec::new(),
+                t_opt: 0,
+                steps: 1,
+                stored: Vec::new(),
+            };
+        }
+        let sc = ev.is_sc();
+        let mut stored = vec![!sc; n];
+        if sc {
+            for &c in checkpoints {
+                if c < n {
+                    stored[c] = true;
+                }
+            }
+            stored[n - 1] = true;
+        }
+        let mut t = 0usize;
+        let t_fwd: Vec<usize> = (0..n)
+            .map(|_| {
+                let s = t;
+                t += 1;
+                s
+            })
+            .collect();
+        let t_loss = t;
+        t += 1;
+        let mut t_rec: Vec<Option<usize>> = vec![None; n];
+        let mut t_bwd = vec![0usize; n];
+        if sc {
+            let mut hi = n;
+            while hi > 0 {
+                let lo = (0..hi.saturating_sub(1))
+                    .rev()
+                    .find(|&i| stored[i])
+                    .map(|i| i + 1)
+                    .unwrap_or(0);
+                for i in lo..hi {
+                    let delta = if stored[i] {
+                        ev.act_bytes(i).saturating_sub(ev.out_bytes(i))
+                    } else {
+                        ev.act_bytes(i)
+                    };
+                    if delta > 0 {
+                        t_rec[i] = Some(t);
+                        t += 1;
+                    }
+                }
+                for i in (lo..hi).rev() {
+                    t_bwd[i] = t;
+                    t += 1;
+                }
+                hi = lo;
+            }
+        } else {
+            for i in (0..n).rev() {
+                t_bwd[i] = t;
+                t += 1;
+            }
+        }
+        let t_opt = t;
+        ScheduleTimes { t_fwd, t_loss, t_rec, t_bwd, t_opt, steps: t_opt + 1, stored }
+    }
+}
+
 /// All dynamic-tensor lifetimes of one (arch, pipeline, batch, plan).
 #[derive(Clone, Debug)]
 pub struct Lifetimes {
@@ -108,64 +204,12 @@ impl Lifetimes {
             return Lifetimes { tensors: Vec::new(), steps: 1, base_bytes };
         }
         let sc = ev.is_sc();
-        let mut stored = vec![!sc; n];
-        if sc {
-            for &c in checkpoints {
-                if c < n {
-                    stored[c] = true;
-                }
-            }
-            stored[n - 1] = true;
-        }
         let out = |i: usize| ev.out_bytes(i);
         let act = |i: usize| ev.act_bytes(i);
 
         // ---- pass 1: event times, mirroring the simulator's order ----
-        let mut t = 0usize;
-        let t_fwd: Vec<usize> = (0..n)
-            .map(|_| {
-                let s = t;
-                t += 1;
-                s
-            })
-            .collect();
-        let t_loss = t;
-        t += 1;
-        let mut t_rec: Vec<Option<usize>> = vec![None; n];
-        let mut t_bwd = vec![0usize; n];
-        if sc {
-            let mut hi = n;
-            while hi > 0 {
-                let lo = (0..hi.saturating_sub(1))
-                    .rev()
-                    .find(|&i| stored[i])
-                    .map(|i| i + 1)
-                    .unwrap_or(0);
-                for i in lo..hi {
-                    let delta = if stored[i] {
-                        act(i).saturating_sub(out(i))
-                    } else {
-                        act(i)
-                    };
-                    if delta > 0 {
-                        t_rec[i] = Some(t);
-                        t += 1;
-                    }
-                }
-                for i in (lo..hi).rev() {
-                    t_bwd[i] = t;
-                    t += 1;
-                }
-                hi = lo;
-            }
-        } else {
-            for i in (0..n).rev() {
-                t_bwd[i] = t;
-                t += 1;
-            }
-        }
-        let t_opt = t;
-        let steps = t_opt + 1;
+        let times = ScheduleTimes::compute(ev, checkpoints);
+        let ScheduleTimes { t_fwd, t_loss, t_rec, t_bwd, t_opt, steps, stored } = times;
 
         // ---- pass 2: tensors ----
         let mut tensors: Vec<TensorLife> = Vec::with_capacity(4 * n);
@@ -316,6 +360,32 @@ mod tests {
         assert_eq!(lt.steps, 1);
         assert_eq!(lt.max_live_bytes(), 0);
         assert_eq!(lt.base_bytes, ev.base_bytes());
+    }
+
+    #[test]
+    fn schedule_times_match_extracted_intervals() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let ev = PeakEvaluator::new(&arch, pipe("sc"), 4);
+        let n = arch.layers.len();
+        let cps = vec![n / 3, 2 * n / 3];
+        let times = ScheduleTimes::compute(&ev, &cps);
+        let lt = Lifetimes::extract(&ev, &cps);
+        assert_eq!(times.steps, lt.steps);
+        assert_eq!(times.t_opt + 1, lt.steps);
+        assert!(times.stored[n - 1], "final layer implicitly stored");
+        for t in &lt.tensors {
+            match t.class {
+                TensorClass::Checkpoint => {
+                    assert_eq!(t.start, times.t_fwd[t.layer], "{t:?}");
+                    assert_eq!(t.end, times.t_bwd[t.layer] + 1, "{t:?}");
+                }
+                TensorClass::ParamGrad => {
+                    assert_eq!(t.start, times.t_bwd[t.layer], "{t:?}");
+                    assert_eq!(t.end, times.t_opt + 1, "{t:?}");
+                }
+                _ => {}
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod lifetime;
 pub mod pack;
 
 pub use alloc::{ArenaAllocator, ArenaHandle};
-pub use lifetime::{Lifetimes, TensorClass, TensorLife};
+pub use lifetime::{Lifetimes, ScheduleTimes, TensorClass, TensorLife};
 pub use pack::{aligned, pack, validate, ArenaLayout, ARENA_ALIGN};
 
 use crate::config::Pipeline;

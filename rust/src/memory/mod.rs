@@ -9,9 +9,13 @@
 //! On top of the byte accounting, [`arena`] turns a checkpoint plan into a
 //! concrete memory layout: per-tensor lifetimes, slab offset assignment,
 //! and the generation-tagged runtime allocator the train step stages
-//! buffers through.
+//! buffers through. [`offload`] goes one step further down the hierarchy:
+//! when the device budget sits below even the packed slab, it evicts the
+//! coldest checkpoints to host memory with a double-buffered prefetch
+//! schedule and an honest stall prediction.
 
 pub mod arena;
+pub mod offload;
 pub mod peak;
 pub mod planner;
 pub mod simulator;

@@ -1,0 +1,313 @@
+//! Runtime half of the offload engine: a recycled host-buffer pool and
+//! the per-train-step evict/prefetch replay.
+//!
+//! The planning half ([`plan`](crate::memory::offload::plan)) decides
+//! which checkpoint ranges leave the device and when; this module owns
+//! the host side of those transfers. [`HostSpillPool`] recycles
+//! capacity-retaining byte buffers (the stand-in for pinned allocations —
+//! pinning is a PJRT-backend property this build cannot reach), so after
+//! the first training step every eviction lands in a reused buffer and
+//! the hot loop performs no host allocation. [`OffloadEngine`] replays a
+//! [`SpillPlan`]'s transfer schedule once per training step from the
+//! `LoadedModel` step flow, keeping eviction/prefetch/byte counters the
+//! trainer surfaces in `TrainReport::offload`.
+
+use crate::memory::offload::plan::SpillPlan;
+use crate::memory::offload::schedule::TransferKind;
+
+/// Recycled host staging buffers, bucketed by capacity best-fit.
+#[derive(Debug, Default)]
+pub struct HostSpillPool {
+    free: Vec<Vec<u8>>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl HostSpillPool {
+    pub fn new() -> HostSpillPool {
+        HostSpillPool::default()
+    }
+
+    /// A buffer with at least `bytes` capacity: the smallest recycled one
+    /// that fits, or a fresh allocation (counted).
+    pub fn acquire(&mut self, bytes: usize) -> Vec<u8> {
+        let mut pick: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() < bytes {
+                continue;
+            }
+            let better = match pick {
+                Some(p) => b.capacity() < self.free[p].capacity(),
+                None => true,
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        match pick {
+            Some(i) => {
+                self.reuses += 1;
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b
+            }
+            None => {
+                self.allocs += 1;
+                Vec::with_capacity(bytes)
+            }
+        }
+    }
+
+    /// Return a spent buffer for reuse (capacity is kept).
+    pub fn release(&mut self, buf: Vec<u8>) {
+        self.free.push(buf);
+    }
+
+    /// Fresh allocations performed so far. Flat across steps ⇒ every
+    /// eviction reused a recycled buffer.
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Requests served from the free list.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// Idle recycled buffers currently held.
+    pub fn free_buffers(&self) -> usize {
+        self.free.len()
+    }
+
+    /// `reuses / (allocs + reuses)`; 0.0 before any request.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.allocs + self.reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.reuses as f64 / total as f64
+        }
+    }
+}
+
+/// Counter snapshot of one engine (surfaced via `TrainReport::offload`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OffloadStats {
+    /// Training steps the engine has replayed.
+    pub steps: u64,
+    pub evictions: u64,
+    pub prefetches: u64,
+    pub bytes_evicted: u64,
+    pub bytes_prefetched: u64,
+    pub pool_allocs: u64,
+    pub pool_reuses: u64,
+}
+
+impl OffloadStats {
+    /// Host-pool recycle hit rate over the whole run.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.pool_allocs + self.pool_reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.pool_reuses as f64 / total as f64
+        }
+    }
+}
+
+/// One transfer of the engine's per-step replay, in schedule-step order.
+#[derive(Clone, Copy, Debug)]
+struct EngineOp {
+    kind: TransferKind,
+    /// Index into the plan's spill steps (the host-buffer slot).
+    slot: usize,
+    bytes: usize,
+}
+
+/// Replays a spill plan's transfer schedule against the host pool once
+/// per training step.
+#[derive(Debug)]
+pub struct OffloadEngine {
+    ops: Vec<EngineOp>,
+    /// Host buffer currently holding each spilled tensor (between its
+    /// eviction and its prefetch within one step).
+    held: Vec<Option<Vec<u8>>>,
+    pool: HostSpillPool,
+    steps: u64,
+    evictions: u64,
+    prefetches: u64,
+    bytes_evicted: u64,
+    bytes_prefetched: u64,
+}
+
+impl OffloadEngine {
+    pub fn new(plan: &SpillPlan) -> OffloadEngine {
+        // Order transfers by schedule step; a prefetch (release) that
+        // shares a step with an eviction (acquire) runs first so the
+        // freed buffer is immediately reusable.
+        let mut keyed: Vec<(usize, bool, EngineOp)> = Vec::with_capacity(2 * plan.steps.len());
+        for (slot, s) in plan.steps.iter().enumerate() {
+            let bytes = s.bytes as usize;
+            keyed.push((s.evict_step, true, EngineOp { kind: TransferKind::Evict, slot, bytes }));
+            keyed.push((
+                s.need_step,
+                false,
+                EngineOp { kind: TransferKind::Prefetch, slot, bytes },
+            ));
+        }
+        keyed.sort_unstable_by_key(|&(step, acquire, op)| (step, acquire, op.slot));
+        OffloadEngine {
+            ops: keyed.into_iter().map(|(_, _, op)| op).collect(),
+            held: vec![None; plan.steps.len()],
+            pool: HostSpillPool::new(),
+            steps: 0,
+            evictions: 0,
+            prefetches: 0,
+            bytes_evicted: 0,
+            bytes_prefetched: 0,
+        }
+    }
+
+    /// Replay one training step's evictions and prefetches.
+    pub fn run_step(&mut self) {
+        let ops = &self.ops;
+        let pool = &mut self.pool;
+        let held = &mut self.held;
+        let mut evictions = 0u64;
+        let mut prefetches = 0u64;
+        let mut bytes_evicted = 0u64;
+        let mut bytes_prefetched = 0u64;
+        for op in ops {
+            match op.kind {
+                TransferKind::Evict => {
+                    held[op.slot] = Some(pool.acquire(op.bytes));
+                    evictions += 1;
+                    bytes_evicted += op.bytes as u64;
+                }
+                TransferKind::Prefetch => {
+                    if let Some(buf) = held[op.slot].take() {
+                        pool.release(buf);
+                        prefetches += 1;
+                        bytes_prefetched += op.bytes as u64;
+                    }
+                }
+            }
+        }
+        self.evictions += evictions;
+        self.prefetches += prefetches;
+        self.bytes_evicted += bytes_evicted;
+        self.bytes_prefetched += bytes_prefetched;
+        self.steps += 1;
+    }
+
+    pub fn stats(&self) -> OffloadStats {
+        OffloadStats {
+            steps: self.steps,
+            evictions: self.evictions,
+            prefetches: self.prefetches,
+            bytes_evicted: self.bytes_evicted,
+            bytes_prefetched: self.bytes_prefetched,
+            pool_allocs: self.pool.allocs(),
+            pool_reuses: self.pool.reuses(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pipeline;
+    use crate::memory::arena::plan_arena;
+    use crate::memory::offload::plan::plan_spill;
+    use crate::models::{ArchProfile, LayerKind, LayerProfile};
+
+    fn chain(depth: usize) -> ArchProfile {
+        let layers = (0..depth)
+            .map(|i| {
+                let out = (8 * 8 * 64) as u64;
+                LayerProfile {
+                    name: format!("l{i}"),
+                    kind: LayerKind::Conv,
+                    out_shape: (8, 8, 64),
+                    act_elems: out * 2,
+                    params: 512,
+                    flops_per_image: 1_000_000,
+                }
+            })
+            .collect();
+        ArchProfile { name: format!("chain{depth}"), input: (8, 8, 3), layers }
+    }
+
+    fn spilled_plan() -> SpillPlan {
+        let sc = Pipeline::parse("sc").unwrap();
+        let arch = chain(24);
+        let cps: Vec<usize> = (0..23).collect();
+        let (_, layout) = plan_arena(&arch, sc, 16, &cps);
+        let budget = (layout.total_bytes() * 3) / 5;
+        plan_spill(&arch, sc, 16, &cps, budget, 2).unwrap()
+    }
+
+    #[test]
+    fn pool_reuses_buffers_best_fit() {
+        let mut pool = HostSpillPool::new();
+        let a = pool.acquire(100);
+        let b = pool.acquire(50);
+        assert_eq!(pool.allocs(), 2);
+        pool.release(a);
+        pool.release(b);
+        // 60 B fits only the 100-cap buffer; 10 B best-fits the 50-cap one
+        let c = pool.acquire(60);
+        assert!(c.capacity() >= 100);
+        let d = pool.acquire(10);
+        assert!(d.capacity() >= 50 && d.capacity() < 100);
+        assert_eq!(pool.reuses(), 2);
+        assert_eq!(pool.allocs(), 2);
+        assert!((pool.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_pairs_every_evict_with_a_prefetch() {
+        let plan = spilled_plan();
+        let n = plan.steps.len() as u64;
+        assert!(n > 0);
+        let mut engine = OffloadEngine::new(&plan);
+        engine.run_step();
+        let s = engine.stats();
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.evictions, n);
+        assert_eq!(s.prefetches, n);
+        assert_eq!(s.bytes_evicted, plan.spilled_bytes);
+        assert_eq!(s.bytes_prefetched, plan.spilled_bytes);
+        // every host buffer returned to the pool at step end
+        assert!(engine.held.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn steady_state_runs_entirely_from_recycled_buffers() {
+        let plan = spilled_plan();
+        let mut engine = OffloadEngine::new(&plan);
+        engine.run_step();
+        let warm_allocs = engine.stats().pool_allocs;
+        for _ in 0..64 {
+            engine.run_step();
+        }
+        let s = engine.stats();
+        assert_eq!(s.pool_allocs, warm_allocs, "steady state allocated");
+        assert!(s.pool_reuses > 0);
+        assert!(s.hit_rate() > 0.9, "{}", s.hit_rate());
+    }
+
+    #[test]
+    fn empty_plan_engine_is_a_noop() {
+        let sc = Pipeline::parse("sc").unwrap();
+        let arch = chain(8);
+        let cps: Vec<usize> = (0..7).collect();
+        let plan = plan_spill(&arch, sc, 4, &cps, u64::MAX, 2).unwrap();
+        let mut engine = OffloadEngine::new(&plan);
+        engine.run_step();
+        let s = engine.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.pool_allocs, 0);
+        assert_eq!(s.steps, 1);
+    }
+}

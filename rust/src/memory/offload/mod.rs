@@ -1,0 +1,244 @@
+//! Host-spill offload: close the gap between the planner's peak and a
+//! sub-slab device budget.
+//!
+//! PR 2's DP planner proves the minimum *simulated* peak of any pure
+//! recompute schedule, and PR 3's arena packs it into concrete bytes.
+//! When `memory_budget` sits below what recompute alone can reach, the
+//! remaining lever is tensor *location* (Beaumont et al. 2019; Shah et
+//! al. 2020, MONeT): cold checkpoints sit idle from just after their
+//! forward use until the backward pass returns to their segment, and can
+//! live in host memory across that window. Three layers:
+//!
+//! 1. [`plan`] — the spill planner: greedy coldest-first eviction over a
+//!    plan's checkpoint lifetimes until the re-packed *resident* layout
+//!    fits the budget ([`SpillPlan`]), or a typed [`InfeasibleBudget`].
+//! 2. [`schedule`] — the prefetch scheduler: a double-buffered transfer
+//!    timeline over one serial host link, predicting stall seconds so
+//!    spill plans and recompute plans are compared in the same unit
+//!    ([`OverlapReport`]).
+//! 3. [`host_pool`] — the runtime half: a recycled host-buffer pool and
+//!    the per-train-step evict/prefetch replay hooked into
+//!    `LoadedModel` ([`OffloadEngine`]).
+//!
+//! [`select_for_budget`] is the composition the trainer and the
+//! `plan --spill` CLI share: rank every Pareto-frontier point by its
+//! *packed* total, compose the cheapest spill plan for each, and pick
+//! the minimum predicted step time among everything that fits.
+
+pub mod host_pool;
+pub mod plan;
+pub mod schedule;
+
+pub use host_pool::{HostSpillPool, OffloadEngine, OffloadStats};
+pub use plan::{plan_spill, InfeasibleBudget, SpillPlan, SpillStep};
+pub use schedule::{
+    simulate_overlap, step_flops, OverlapModel, OverlapReport, Transfer, TransferKind,
+    DEFAULT_DEVICE_FLOPS_PER_SEC, DEFAULT_HOST_BW_BYTES_PER_SEC,
+};
+
+use crate::config::Pipeline;
+use crate::memory::planner::{pareto_frontier, CheckpointPlan, DEFAULT_FRONTIER_LEVELS};
+use crate::models::ArchProfile;
+
+/// The budget-constrained choice: a frontier point plus the (possibly
+/// empty) spill composition that makes it fit.
+#[derive(Clone, Debug)]
+pub struct BudgetDecision {
+    /// The chosen checkpoint plan.
+    pub plan: CheckpointPlan,
+    /// Its spill plan; `steps` is empty when the packed layout fit the
+    /// budget without host spilling.
+    pub spill: SpillPlan,
+    /// The simulated transfer/stall timeline for the choice.
+    pub overlap: OverlapReport,
+}
+
+impl BudgetDecision {
+    /// Whether the decision actually moves bytes to the host.
+    pub fn is_spill(&self) -> bool {
+        !self.spill.steps.is_empty()
+    }
+}
+
+/// Summary of a spill decision for `TrainReport::offload` and the
+/// markdown report. The three runtime counters are zero until a run
+/// finishes and the trainer folds the engine's stats in.
+#[derive(Clone, Debug)]
+pub struct OffloadReport {
+    pub budget: u64,
+    /// Device bytes actually reserved: static base + resident slab.
+    pub device_total: u64,
+    pub spilled_tensors: usize,
+    pub spilled_bytes: u64,
+    pub host_peak_bytes: u64,
+    pub predicted_stall_secs: f64,
+    pub predicted_step_secs: f64,
+    pub host_bw_bytes_per_sec: u64,
+    pub lookahead: usize,
+    /// Runtime engine counters (filled in after the run).
+    pub evictions: u64,
+    pub prefetches: u64,
+    pub pool_hit_rate: f64,
+}
+
+impl OffloadReport {
+    /// Build the plan-side half of the report from a decision.
+    pub fn from_decision(
+        decision: &BudgetDecision,
+        host_bw_bytes_per_sec: u64,
+        lookahead: usize,
+    ) -> OffloadReport {
+        OffloadReport {
+            budget: decision.spill.budget,
+            device_total: decision.spill.device_total(),
+            spilled_tensors: decision.spill.steps.len(),
+            spilled_bytes: decision.spill.spilled_bytes,
+            host_peak_bytes: decision.spill.host_peak_bytes,
+            predicted_stall_secs: decision.overlap.stall_secs,
+            predicted_step_secs: decision.overlap.predicted_step_secs,
+            host_bw_bytes_per_sec,
+            lookahead,
+            evictions: 0,
+            prefetches: 0,
+            pool_hit_rate: 0.0,
+        }
+    }
+
+    /// Stall share of the predicted step time.
+    pub fn stall_frac(&self) -> f64 {
+        schedule::stall_fraction(self.predicted_stall_secs, self.predicted_step_secs)
+    }
+}
+
+/// Choose the best plan for a device budget: every Pareto-frontier point
+/// is packed (so fragmentation participates in the fit decision), the
+/// cheapest spill composition is planned for each, and the candidate
+/// with the minimum predicted step time wins — ties broken by lower
+/// recompute FLOPs, then smaller device total, then frontier order.
+/// Errors with the smallest achievable device total when no composition
+/// fits.
+pub fn select_for_budget(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    budget: u64,
+    lookahead: usize,
+    model: &OverlapModel,
+) -> Result<BudgetDecision, InfeasibleBudget> {
+    let frontier = pareto_frontier(arch, pipeline, batch, DEFAULT_FRONTIER_LEVELS);
+    let mut best: Option<BudgetDecision> = None;
+    let mut min_bytes = u64::MAX;
+    for point in frontier {
+        match plan_spill(arch, pipeline, batch, &point.checkpoints, budget, lookahead) {
+            Ok(spill) => {
+                let overlap = simulate_overlap(arch, batch, &spill, model);
+                let replace = match &best {
+                    None => true,
+                    Some(b) => {
+                        let cand = (
+                            overlap.predicted_step_secs,
+                            point.recompute_overhead,
+                            spill.device_total(),
+                        );
+                        let cur = (
+                            b.overlap.predicted_step_secs,
+                            b.plan.recompute_overhead,
+                            b.spill.device_total(),
+                        );
+                        cand.partial_cmp(&cur) == Some(std::cmp::Ordering::Less)
+                    }
+                };
+                if replace {
+                    best = Some(BudgetDecision { plan: point, spill, overlap });
+                }
+            }
+            Err(e) => min_bytes = min_bytes.min(e.min_device_bytes),
+        }
+    }
+    best.ok_or(InfeasibleBudget { budget, min_device_bytes: min_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::arena::{plan_arena, validate};
+    use crate::models::{arch_by_name, LayerKind, LayerProfile};
+
+    fn sc() -> Pipeline {
+        Pipeline::parse("sc").unwrap()
+    }
+
+    fn chain(depth: usize) -> ArchProfile {
+        let layers = (0..depth)
+            .map(|i| {
+                let out = (8 * 8 * 64) as u64;
+                LayerProfile {
+                    name: format!("l{i}"),
+                    kind: LayerKind::Conv,
+                    out_shape: (8, 8, 64),
+                    act_elems: out * 2,
+                    params: 512,
+                    flops_per_image: 1_000_000,
+                }
+            })
+            .collect();
+        ArchProfile { name: format!("chain{depth}"), input: (8, 8, 3), layers }
+    }
+
+    #[test]
+    fn generous_budget_picks_a_pure_plan() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let d = select_for_budget(&arch, sc(), 8, u64::MAX, 2, &OverlapModel::default())
+            .unwrap();
+        assert!(!d.is_spill());
+        assert_eq!(d.overlap.stall_secs, 0.0);
+        assert!(d.spill.fits());
+        // unconstrained, the winner is the cheapest-time frontier point
+        assert_eq!(d.plan.recompute_overhead, 0.0);
+    }
+
+    #[test]
+    fn sub_slab_budget_composes_a_fitting_spill() {
+        let arch = chain(32);
+        // cheapest-memory pure point: its packed total is the floor any
+        // recompute-only plan can reach
+        let frontier =
+            crate::memory::planner::pareto_frontier(&arch, sc(), 16, DEFAULT_FRONTIER_LEVELS);
+        let min_total = frontier
+            .iter()
+            .map(|p| plan_arena(&arch, sc(), 16, &p.checkpoints).1.total_bytes())
+            .min()
+            .unwrap();
+        let budget = (min_total * 3) / 5; // 60% — below every pure point
+        let d = select_for_budget(&arch, sc(), 16, budget, 2, &OverlapModel::default()).unwrap();
+        assert!(d.is_spill(), "no pure point fits 60% of the pure minimum");
+        assert!(d.spill.device_total() <= budget);
+        validate(&d.spill.lifetimes, &d.spill.layout).unwrap();
+        assert!(d.overlap.predicted_step_secs >= d.overlap.compute_secs);
+        let rep = OffloadReport::from_decision(&d, DEFAULT_HOST_BW_BYTES_PER_SEC, 2);
+        assert_eq!(rep.device_total, d.spill.device_total());
+        assert_eq!(rep.spilled_tensors, d.spill.steps.len());
+        assert!(rep.stall_frac() >= 0.0 && rep.stall_frac() < 1.0);
+    }
+
+    #[test]
+    fn impossible_budget_reports_the_spilled_floor() {
+        let arch = chain(16);
+        let err = select_for_budget(&arch, sc(), 16, 1, 2, &OverlapModel::default()).unwrap_err();
+        assert_eq!(err.budget, 1);
+        assert!(err.min_device_bytes > 1);
+        assert!(err.to_string().contains("spilled to host"), "{err}");
+    }
+
+    #[test]
+    fn decision_is_deterministic() {
+        let arch = chain(32);
+        let (_, layout) = plan_arena(&arch, sc(), 16, &(0..31).collect::<Vec<_>>());
+        let budget = (layout.total_bytes() * 3) / 5;
+        let a = select_for_budget(&arch, sc(), 16, budget, 2, &OverlapModel::default()).unwrap();
+        let b = select_for_budget(&arch, sc(), 16, budget, 2, &OverlapModel::default()).unwrap();
+        assert_eq!(a.plan.checkpoints, b.plan.checkpoints);
+        assert_eq!(a.spill.steps, b.spill.steps);
+        assert_eq!(a.spill.layout.offsets, b.spill.layout.offsets);
+    }
+}

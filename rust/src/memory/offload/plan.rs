@@ -1,0 +1,376 @@
+//! Spill planning: which checkpoints leave the device, and when.
+//!
+//! The activation arena proves a plan needs `base + slab` device bytes;
+//! when the budget sits below that, the only remaining lever (short of a
+//! different checkpoint plan) is *where* cold tensors live. A checkpoint
+//! is written once in the forward pass, read once by the next layer's
+//! forward, and then sits idle until the backward pass reaches its
+//! segment — often the longest-lived, least-touched bytes in the whole
+//! schedule (Beaumont et al. 2019). [`plan_spill`] evicts the coldest of
+//! those intervals to host memory and re-packs the *resident* lifetimes:
+//! each spilled checkpoint occupies the slab only during
+//! `[forward, evict)` and `[prefetch, backward-use)`, so the packer can
+//! hand its range to other tensors across the idle window.
+//!
+//! Eviction order is greedy-coldest: longest idle gap between the last
+//! forward use and the first backward use, ties broken by
+//! bytes-per-FLOP of the covering backward segment (cheaper-to-hide
+//! transfers first), then by layer index — fully deterministic. The
+//! planner evicts until `base + slab' ≤ budget` or every candidate is
+//! spilled, in which case it returns the typed [`InfeasibleBudget`] error
+//! carrying the smallest achievable device total.
+
+use crate::config::Pipeline;
+use crate::memory::arena::{pack, ArenaLayout, Lifetimes, ScheduleTimes, TensorClass, TensorLife};
+use crate::memory::peak::PeakEvaluator;
+use crate::models::ArchProfile;
+
+/// One evicted checkpoint: the transfer endpoints in schedule steps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpillStep {
+    /// Layer whose boundary output is spilled.
+    pub layer: usize,
+    /// Bytes moved each way.
+    pub bytes: u64,
+    /// Step at which the device copy is released (the copy-out is issued
+    /// here; the overlap model treats it as write-behind).
+    pub evict_step: usize,
+    /// Step at which the prefetch is issued and the device range is
+    /// reserved again (`lookahead` steps before the first backward use,
+    /// clamped to the eviction).
+    pub prefetch_step: usize,
+    /// First backward-side step that reads the tensor (the segment's
+    /// first recompute step, or its topmost backward step).
+    pub need_step: usize,
+    /// Idle steps between release and first backward use.
+    pub gap_steps: usize,
+}
+
+/// A budget-fitting spill plan: resident lifetimes/layout plus the
+/// evict/prefetch schedule that makes them valid.
+#[derive(Clone, Debug)]
+pub struct SpillPlan {
+    /// Evicted checkpoints, sorted by layer. Empty when the plan already
+    /// fit the budget without spilling.
+    pub steps: Vec<SpillStep>,
+    /// Device-resident lifetimes: spilled checkpoints split into their
+    /// pre-evict and post-prefetch windows.
+    pub lifetimes: Lifetimes,
+    /// Packed layout of the resident lifetimes (`total_bytes() ≤ budget`
+    /// whenever [`plan_spill`] returns `Ok`).
+    pub layout: ArenaLayout,
+    /// Event times of the underlying checkpoint schedule.
+    pub times: ScheduleTimes,
+    /// The device budget the plan was fit against.
+    pub budget: u64,
+    /// Total bytes spilled (one way).
+    pub spilled_bytes: u64,
+    /// Peak concurrent host bytes across the schedule.
+    pub host_peak_bytes: u64,
+}
+
+impl SpillPlan {
+    /// Device bytes the runtime reserves: static state + resident slab.
+    pub fn device_total(&self) -> u64 {
+        self.layout.total_bytes()
+    }
+
+    /// Whether the resident layout fits the budget.
+    pub fn fits(&self) -> bool {
+        self.device_total() <= self.budget
+    }
+}
+
+/// Typed error: the budget cannot be met even with every cold checkpoint
+/// on the host.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InfeasibleBudget {
+    pub budget: u64,
+    /// Smallest device total any spill composition of this plan reaches.
+    pub min_device_bytes: u64,
+}
+
+impl std::fmt::Display for InfeasibleBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "memory budget {} B is below the minimum achievable peak {} B even with \
+             every cold checkpoint spilled to host",
+            self.budget, self.min_device_bytes
+        )
+    }
+}
+
+impl std::error::Error for InfeasibleBudget {}
+
+/// Spill candidate with its greedy sort key.
+struct Candidate {
+    step: SpillStep,
+    /// Bytes transferred per FLOP of the covering backward segment —
+    /// smaller is easier to hide behind compute.
+    bytes_per_flop: f64,
+}
+
+/// Enumerate evictable checkpoints under `times` with their idle windows.
+/// The final layer's checkpoint is never a candidate (the loss gradient
+/// consumes it immediately), nor is any checkpoint whose idle window
+/// collapses once `lookahead` is subtracted.
+fn candidates(
+    arch: &ArchProfile,
+    ev: &PeakEvaluator,
+    times: &ScheduleTimes,
+    lookahead: usize,
+) -> Vec<Candidate> {
+    let n = ev.depth();
+    let flops_prefix = arch.flops_prefix();
+    let mut out: Vec<Candidate> = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        if !times.stored[i] || ev.out_bytes(i) == 0 {
+            continue;
+        }
+        // The checkpoint feeds the backward segment (i..s]: its first
+        // read is that segment's first recompute step, or the topmost
+        // backward step when nothing is recomputed.
+        let s = (i + 1..n).find(|&j| times.stored[j]).unwrap_or(n - 1);
+        let need = (i + 1..=s).find_map(|j| times.t_rec[j]).unwrap_or(times.t_bwd[s]);
+        // Device copy is last read by layer i+1's forward step.
+        let evict = times.t_fwd[i + 1] + 1;
+        if need <= evict {
+            continue;
+        }
+        let prefetch = need.saturating_sub(lookahead).max(evict);
+        if prefetch <= evict {
+            continue; // window too short to free any slab bytes
+        }
+        let seg_flops = (flops_prefix[s + 1] - flops_prefix[i + 1]).max(1);
+        out.push(Candidate {
+            step: SpillStep {
+                layer: i,
+                bytes: ev.out_bytes(i),
+                evict_step: evict,
+                prefetch_step: prefetch,
+                need_step: need,
+                gap_steps: need - evict,
+            },
+            bytes_per_flop: ev.out_bytes(i) as f64 / seg_flops as f64,
+        });
+    }
+    out.sort_by(|a, b| {
+        b.step
+            .gap_steps
+            .cmp(&a.step.gap_steps)
+            .then(
+                a.bytes_per_flop
+                    .partial_cmp(&b.bytes_per_flop)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.step.layer.cmp(&b.step.layer))
+    });
+    out
+}
+
+/// Split the spilled checkpoints' intervals into their device-resident
+/// windows; everything else is untouched.
+fn resident_lifetimes(lt: &Lifetimes, spilled: &[SpillStep]) -> Lifetimes {
+    let mut out = lt.clone();
+    for s in spilled {
+        let idx = out
+            .tensors
+            .iter()
+            .position(|t| t.class == TensorClass::Checkpoint && t.layer == s.layer)
+            .expect("spilled checkpoint has a lifetime");
+        let end = out.tensors[idx].end;
+        out.tensors[idx].end = s.evict_step;
+        out.tensors.push(TensorLife {
+            class: TensorClass::Checkpoint,
+            layer: s.layer,
+            bytes: s.bytes,
+            start: s.prefetch_step,
+            end,
+        });
+    }
+    out
+}
+
+/// Peak concurrent host bytes: each spilled tensor occupies host memory
+/// from its eviction until its prefetch lands (conservatively, until its
+/// first backward use).
+fn host_peak(steps: &[SpillStep], total_steps: usize) -> u64 {
+    let mut delta = vec![0i128; total_steps + 1];
+    for s in steps {
+        delta[s.evict_step] += s.bytes as i128;
+        delta[s.need_step.min(total_steps)] -= s.bytes as i128;
+    }
+    let mut live = 0i128;
+    let mut max = 0i128;
+    for d in &delta {
+        live += *d;
+        max = max.max(live);
+    }
+    max as u64
+}
+
+/// Fit `checkpoints`' arena under `budget` device bytes by evicting the
+/// coldest checkpoints to host (S-C forced on, mirroring `plan_arena`).
+/// Returns a [`SpillPlan`] whose resident layout fits — possibly with no
+/// evictions at all when the packed plan already fit — or the typed
+/// [`InfeasibleBudget`] error when even full eviction cannot reach the
+/// budget.
+pub fn plan_spill(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    checkpoints: &[usize],
+    budget: u64,
+    lookahead: usize,
+) -> Result<SpillPlan, InfeasibleBudget> {
+    let mut p = pipeline;
+    p.sc = true;
+    let ev = PeakEvaluator::new(arch, p, batch);
+    let times = ScheduleTimes::compute(&ev, checkpoints);
+    let lt = Lifetimes::extract(&ev, checkpoints);
+    let layout = pack(&lt);
+    if layout.total_bytes() <= budget {
+        return Ok(SpillPlan {
+            steps: Vec::new(),
+            lifetimes: lt,
+            layout,
+            times,
+            budget,
+            spilled_bytes: 0,
+            host_peak_bytes: 0,
+        });
+    }
+    let lookahead = lookahead.max(1);
+    let cands = candidates(arch, &ev, &times, lookahead);
+    // `chosen` is kept sorted by layer so every iteration's packed layout
+    // is exactly the layout the returned plan would carry.
+    let mut chosen: Vec<SpillStep> = Vec::new();
+    let mut min_total = layout.total_bytes();
+    for c in cands {
+        let pos = chosen.partition_point(|s| s.layer < c.step.layer);
+        chosen.insert(pos, c.step);
+        let rl = resident_lifetimes(&lt, &chosen);
+        let rlay = pack(&rl);
+        min_total = min_total.min(rlay.total_bytes());
+        if rlay.total_bytes() <= budget {
+            let spilled_bytes = chosen.iter().map(|s| s.bytes).sum();
+            let host_peak_bytes = host_peak(&chosen, times.steps);
+            return Ok(SpillPlan {
+                steps: chosen,
+                lifetimes: rl,
+                layout: rlay,
+                times,
+                budget,
+                spilled_bytes,
+                host_peak_bytes,
+            });
+        }
+    }
+    Err(InfeasibleBudget { budget, min_device_bytes: min_total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::arena::{plan_arena, validate};
+    use crate::memory::planner::{plan_checkpoints, PlannerKind};
+    use crate::models::{arch_by_name, LayerKind, LayerProfile};
+
+    fn sc() -> Pipeline {
+        Pipeline::parse("sc").unwrap()
+    }
+
+    /// Uniform checkpoint-heavy chain: Σ boundary outputs dominates any
+    /// single backward working set, so host-spill has real headroom (the
+    /// regime the offload engine exists for; conv stems like resnet's pin
+    /// their peak on one layer's working set instead).
+    fn uniform_chain(depth: usize) -> ArchProfile {
+        let layers = (0..depth)
+            .map(|i| {
+                let c = 64 + 8 * (i % 4);
+                let out = (8 * 8 * c) as u64;
+                LayerProfile {
+                    name: format!("l{i}"),
+                    kind: LayerKind::Conv,
+                    out_shape: (8, 8, c),
+                    act_elems: out * 2,
+                    params: (c * 9) as u64,
+                    flops_per_image: c as u64 * 10_000,
+                }
+            })
+            .collect();
+        ArchProfile { name: format!("chain{depth}"), input: (8, 8, 3), layers }
+    }
+
+    /// Store-everything plan: every interior layer checkpointed.
+    fn all_stored(depth: usize) -> Vec<usize> {
+        (0..depth - 1).collect()
+    }
+
+    #[test]
+    fn generous_budget_needs_no_spill() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, sc(), 8);
+        let spill = plan_spill(&arch, sc(), 8, &plan.checkpoints, u64::MAX, 2).unwrap();
+        assert!(spill.steps.is_empty());
+        assert!(spill.fits());
+        assert_eq!(spill.spilled_bytes, 0);
+    }
+
+    #[test]
+    fn tight_budget_spills_and_still_packs_soundly() {
+        let arch = uniform_chain(24);
+        let cps = all_stored(24);
+        let (_, layout) = plan_arena(&arch, sc(), 16, &cps);
+        // 60% of the packed zero-recompute total: well below the resident
+        // checkpoints, well above one segment's working set
+        let budget = (layout.total_bytes() * 3) / 5;
+        let spill = plan_spill(&arch, sc(), 16, &cps, budget, 2).unwrap();
+        assert!(!spill.steps.is_empty(), "a 60% budget must force evictions");
+        assert!(spill.fits(), "{} > {}", spill.device_total(), budget);
+        validate(&spill.lifetimes, &spill.layout).unwrap();
+        for s in &spill.steps {
+            assert!(s.evict_step < s.prefetch_step, "{s:?}");
+            assert!(s.prefetch_step < s.need_step, "{s:?}");
+            assert_eq!(s.gap_steps, s.need_step - s.evict_step, "{s:?}");
+        }
+        assert!(spill.host_peak_bytes > 0);
+        assert!(spill.spilled_bytes >= spill.steps.iter().map(|s| s.bytes).max().unwrap());
+        // every spilled checkpoint appears exactly twice in the resident
+        // lifetimes (pre-evict + post-prefetch windows)
+        for s in &spill.steps {
+            let windows = spill
+                .lifetimes
+                .tensors
+                .iter()
+                .filter(|t| t.class == TensorClass::Checkpoint && t.layer == s.layer)
+                .count();
+            assert_eq!(windows, 2, "layer {}", s.layer);
+        }
+    }
+
+    #[test]
+    fn impossible_budget_is_a_typed_error() {
+        let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, sc(), 4);
+        let err = plan_spill(&arch, sc(), 4, &plan.checkpoints, 1, 2).unwrap_err();
+        assert_eq!(err.budget, 1);
+        assert!(err.min_device_bytes > 1);
+        let msg = err.to_string();
+        assert!(msg.contains("minimum achievable peak"), "{msg}");
+    }
+
+    #[test]
+    fn spill_plan_is_deterministic() {
+        let arch = uniform_chain(24);
+        let cps = all_stored(24);
+        let (_, layout) = plan_arena(&arch, sc(), 16, &cps);
+        let budget = (layout.total_bytes() * 3) / 5;
+        let a = plan_spill(&arch, sc(), 16, &cps, budget, 2).unwrap();
+        let b = plan_spill(&arch, sc(), 16, &cps, budget, 2).unwrap();
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.layout.offsets, b.layout.offsets);
+        assert_eq!(a.layout.slab_bytes, b.layout.slab_bytes);
+    }
+}

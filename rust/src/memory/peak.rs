@@ -126,7 +126,10 @@ impl PeakEvaluator {
     }
 
     /// Stored-activation bytes of layer `i` (boundary output + internals) —
-    /// what the arena's lifetime extraction replays.
+    /// what the arena's lifetime extraction
+    /// ([`Lifetimes`](crate::memory::arena::Lifetimes) /
+    /// [`ScheduleTimes`](crate::memory::arena::ScheduleTimes)) replays and
+    /// the host-spill planner (`memory::offload`) sizes idle windows from.
     pub fn act_bytes(&self, i: usize) -> u64 {
         self.act[i]
     }

@@ -27,6 +27,7 @@
 //! plan that fits a byte budget (the `memory_budget` training knob).
 
 use crate::config::Pipeline;
+use crate::memory::arena::{plan_arena, ArenaLayout, Lifetimes};
 use crate::memory::peak::PeakEvaluator;
 use crate::models::ArchProfile;
 
@@ -431,9 +432,55 @@ pub fn pareto_frontier(
     out
 }
 
+/// The cheapest-time plan whose *packed* total (`base + slab` from a real
+/// arena pack of each frontier point) fits `budget` bytes, so packing
+/// fragmentation participates in the fit decision. Among fitting points
+/// the minimum recompute FLOPs wins, ties broken by the smaller packed
+/// total. Returns the plan together with its lifetimes and layout (the
+/// caller has already paid for the pack). Errors with the minimum packed
+/// total when nothing fits — the budget then needs host spilling
+/// ([`crate::memory::offload::select_for_budget`]).
+pub fn plan_for_budget_packed(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    budget: u64,
+) -> Result<(CheckpointPlan, Lifetimes, ArenaLayout), String> {
+    let frontier = pareto_frontier(arch, pipeline, batch, DEFAULT_FRONTIER_LEVELS);
+    let mut min_total = u64::MAX;
+    let mut best: Option<(CheckpointPlan, Lifetimes, ArenaLayout)> = None;
+    for point in frontier {
+        let (lt, layout) = plan_arena(arch, pipeline, batch, &point.checkpoints);
+        let total = layout.total_bytes();
+        min_total = min_total.min(total);
+        if total > budget {
+            continue;
+        }
+        let replace = match &best {
+            None => true,
+            Some((b, _, bl)) => {
+                point.recompute_overhead < b.recompute_overhead
+                    || (point.recompute_overhead == b.recompute_overhead
+                        && total < bl.total_bytes())
+            }
+        };
+        if replace {
+            best = Some((point, lt, layout));
+        }
+    }
+    best.ok_or_else(|| {
+        format!(
+            "memory budget {budget} B is below the minimum packed total {min_total} B \
+             (base + slab) for {} (batch {batch})",
+            arch.name
+        )
+    })
+}
+
 /// The cheapest-time plan whose simulated peak fits `budget` bytes, from
 /// the Pareto frontier. Errors (with the minimum achievable peak in the
-/// message) when no plan fits.
+/// message) when no plan fits. Prefer [`plan_for_budget_packed`], which
+/// ranks by packed bytes instead of the simulated peak.
 pub fn plan_for_budget(
     arch: &ArchProfile,
     pipeline: Pipeline,
@@ -656,6 +703,26 @@ mod tests {
             // last point = store everything, zero recompute
             assert_eq!(frontier.last().unwrap().recompute_overhead, 0.0, "{name}");
         }
+    }
+
+    #[test]
+    fn packed_budget_selection_accounts_for_fragmentation() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let frontier = pareto_frontier(&arch, Pipeline::BASELINE, 8, 16);
+        let full = frontier.last().unwrap();
+        let hi_total = plan_arena(&arch, Pipeline::BASELINE, 8, &full.checkpoints)
+            .1
+            .total_bytes();
+        let (plan, lt, layout) =
+            plan_for_budget_packed(&arch, Pipeline::BASELINE, 8, hi_total).unwrap();
+        assert!(layout.total_bytes() <= hi_total);
+        assert_eq!(plan.recompute_overhead, 0.0, "generous budget → cheapest time");
+        assert_eq!(layout.offsets.len(), lt.tensors.len());
+        // the fit criterion is the packed total, not the simulated peak
+        assert!(layout.total_bytes() >= plan.peak_bytes);
+        // below the minimum packed total → error naming it
+        let err = plan_for_budget_packed(&arch, Pipeline::BASELINE, 8, 1).unwrap_err();
+        assert!(err.contains("minimum packed total"), "{err}");
     }
 
     #[test]

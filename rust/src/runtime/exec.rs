@@ -3,6 +3,7 @@
 use crate::data::encode::EncodedBatch;
 use crate::data::loader::BatchPayload;
 use crate::memory::arena::ArenaAllocator;
+use crate::memory::offload::{OffloadEngine, OffloadStats, SpillPlan};
 use crate::runtime::manifest::{BatchKind, Manifest, ManifestEntry};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
@@ -63,6 +64,10 @@ pub struct LoadedModel {
     /// [`ManifestEntry::step_scratch_bytes`], recycled every step, so
     /// steady-state steps stage batch/label buffers without heap allocation.
     scratch: RefCell<ArenaAllocator>,
+    /// Host-spill engine: replays the trainer's [`SpillPlan`] transfer
+    /// schedule (recycled host buffers + counters) once per train step.
+    /// `None` until [`LoadedModel::configure_offload`] installs a plan.
+    offload: RefCell<Option<OffloadEngine>>,
     train: std::rc::Rc<xla::PjRtLoadedExecutable>,
     eval: std::rc::Rc<xla::PjRtLoadedExecutable>,
     init: std::rc::Rc<xla::PjRtLoadedExecutable>,
@@ -117,6 +122,7 @@ impl Runtime {
             eval: self.compile(&entry.eval_hlo)?,
             init: self.compile(&entry.init_hlo)?,
             scratch: RefCell::new(ArenaAllocator::new(entry.step_scratch_bytes())),
+            offload: RefCell::new(None),
             entry,
         })
     }
@@ -254,6 +260,17 @@ impl LoadedModel {
         &self.scratch
     }
 
+    /// Install a host-spill plan: every subsequent train step replays its
+    /// evict/prefetch schedule through the recycled host-buffer pool.
+    pub fn configure_offload(&self, plan: &SpillPlan) {
+        *self.offload.borrow_mut() = Some(OffloadEngine::new(plan));
+    }
+
+    /// Engine counters (`None` when no spill plan is installed).
+    pub fn offload_stats(&self) -> Option<OffloadStats> {
+        self.offload.borrow().as_ref().map(OffloadEngine::stats)
+    }
+
     /// Initialize training state from a seed (runs the init artifact).
     pub fn init_state(&self, seed: u64) -> Result<TrainState> {
         let seed_lit = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]).reshape(&[2])?;
@@ -310,6 +327,11 @@ impl LoadedModel {
         payload: &BatchPayload,
         lr: f32,
     ) -> Result<StepOutput> {
+        // Host-spill replay: evictions into recycled host buffers,
+        // prefetch releases — the step's transfer schedule.
+        if let Some(engine) = self.offload.borrow_mut().as_mut() {
+            engine.run_step();
+        }
         let mut out = self.run(&self.train, &state.tensors, payload, Some(lr))?;
         let s = self.entry.state.len();
         if out.len() != s + 2 {
@@ -376,6 +398,7 @@ mod tests {
             lr: 0.1,
             momentum: 0.9,
             loss_scale: 1.0,
+            device_budget: None,
         }
     }
 
@@ -434,6 +457,7 @@ mod tests {
             lr: 0.1,
             momentum: 0.9,
             loss_scale: 1.0,
+            device_budget: None,
         }
     }
 

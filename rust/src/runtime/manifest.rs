@@ -100,6 +100,10 @@ pub struct ManifestEntry {
     pub lr: f64,
     pub momentum: f64,
     pub loss_scale: f64,
+    /// Optional device-memory budget (bytes) the artifact was compiled
+    /// for. When present and the training config sets no explicit
+    /// `memory_budget`, the trainer plans against it (S-C pipelines).
+    pub device_budget: Option<u64>,
 }
 
 impl ManifestEntry {
@@ -185,6 +189,14 @@ impl ManifestEntry {
             lr: get_f64("lr")?,
             momentum: get_f64("momentum")?,
             loss_scale: get_f64("loss_scale").unwrap_or(1.0),
+            device_budget: match j.get("device_budget") {
+                None => None,
+                // present ⇒ must parse: a silently dropped budget would
+                // un-cap exactly the artifact that asked for one
+                Some(v) => Some(
+                    v.as_usize().map(|b| b as u64).ok_or("bad 'device_budget' (want bytes)")?,
+                ),
+            },
         })
     }
 }
@@ -279,6 +291,7 @@ mod tests {
         assert_eq!(e.state[0].elems(), 3 * 3 * 3 * 16);
         assert_eq!(e.state_bytes(), (432 + 16) * 4);
         assert_eq!(e.loss_scale, 1.0); // default
+        assert_eq!(e.device_budget, None); // absent in older manifests
         assert!(m.find("tiny_cnn", "ed").is_none());
         assert_eq!(m.models(), vec!["tiny_cnn"]);
         assert_eq!(
@@ -321,6 +334,17 @@ mod tests {
         e.groups = 3;
         // 3 groups × 32·32·3 words × 8 B + 16×10 f32 labels (8-aligned)
         assert_eq!(e.step_scratch_bytes(), 3 * 32 * 32 * 3 * 8 + 16 * 10 * 4);
+    }
+
+    #[test]
+    fn device_budget_parses_when_present() {
+        let text = sample().replace("\"lr\": 0.05", "\"device_budget\": 786432, \"lr\": 0.05");
+        let m = Manifest::from_text(Path::new("a"), &text).unwrap();
+        assert_eq!(m.entries[0].device_budget, Some(786_432));
+        // present but malformed must error, not silently un-cap the artifact
+        let bad = sample().replace("\"lr\": 0.05", "\"device_budget\": \"512MiB\", \"lr\": 0.05");
+        let err = Manifest::from_text(Path::new("a"), &bad).unwrap_err();
+        assert!(err.contains("device_budget"), "{err}");
     }
 
     #[test]

@@ -23,6 +23,28 @@ pub fn save(path: &Path, entry: &ManifestEntry, state: &TrainState) -> Result<()
             entry.state.len()
         );
     }
+    // The format stores every length in a u32 field; a spec that cannot
+    // be represented must be rejected up front (before any widening), or
+    // the file would be silently unreadable.
+    if state.tensors.len() > u32::MAX as usize {
+        bail!("state has {} tensors, more than the u32 count field can hold", state.tensors.len());
+    }
+    for spec in &entry.state {
+        if spec.name.len() > u32::MAX as usize {
+            bail!(
+                "tensor name of {} bytes overflows the u32 name-length field",
+                spec.name.len()
+            );
+        }
+        if spec.elems() > u32::MAX as usize {
+            bail!(
+                "{}: {} elems overflows the u32 element-count field \
+                 (payload would be unreadable on load)",
+                spec.name,
+                spec.elems()
+            );
+        }
+    }
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
@@ -139,6 +161,7 @@ mod tests {
             lr: 0.1,
             momentum: 0.9,
             loss_scale: 1.0,
+            device_budget: None,
         }
     }
 
@@ -151,6 +174,93 @@ mod tests {
         assert!(load(&p, &entry()).is_err());
         std::fs::write(&p, b"OPT").unwrap();
         assert!(load(&p, &entry()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_elem_counts_that_overflow_the_u32_field() {
+        // A spec whose element count cannot be stored in the u32 length
+        // field must be rejected before the data-length comparison (the
+        // tiny tensor would otherwise report a confusing mismatch).
+        let dir = std::env::temp_dir().join(format!("optorch_sio3_{}", std::process::id()));
+        let mut e = entry();
+        e.state[0].shape = vec![1 << 17, 1 << 17]; // 2^34 elems > u32::MAX
+        let state = TrainState { tensors: vec![xla::Literal::vec1(&[0.0f32; 3])] };
+        let err = match save(&dir.join("of.state"), &e, &state) {
+            Err(err) => err,
+            Ok(()) => panic!("expected overflow rejection"),
+        };
+        assert!(err.to_string().contains("overflows the u32"), "{err}");
+        assert!(!dir.join("of.state").exists(), "nothing must be written");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_roundtrip_property_covers_f16_widened_state() {
+        use crate::runtime::manifest::TensorSpec;
+        use crate::util::propcheck::check_with;
+        let dir = std::env::temp_dir().join(format!("optorch_sio4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.state");
+        check_with(
+            "state_io save→load roundtrips f32 and f16-widened tensors",
+            24,
+            0x510,
+            |rng| {
+                let count = 1 + rng.gen_range(3);
+                let tensors: Vec<(Vec<usize>, Dtype, Vec<f32>)> = (0..count)
+                    .map(|_| {
+                        let shape = vec![1 + rng.gen_range(4), 1 + rng.gen_range(5)];
+                        let dtype = if rng.gen_range(2) == 0 { Dtype::F32 } else { Dtype::F16 };
+                        let elems = shape.iter().product::<usize>();
+                        // f16-representable values so the widen/narrow
+                        // cycle is exact under the real xla crate too
+                        let data: Vec<f32> = (0..elems)
+                            .map(|_| (rng.gen_range(512) as f32 - 256.0) / 8.0)
+                            .collect();
+                        (shape, dtype, data)
+                    })
+                    .collect();
+                tensors
+            },
+            |tensors| {
+                let mut e = entry();
+                e.state = tensors
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (shape, dtype, _))| TensorSpec {
+                        name: format!("t{i}"),
+                        shape: shape.clone(),
+                        dtype: *dtype,
+                    })
+                    .collect();
+                let state = TrainState {
+                    tensors: tensors
+                        .iter()
+                        .map(|(shape, dtype, data)| {
+                            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                            let mut lit = xla::Literal::vec1(data).reshape(&dims).unwrap();
+                            if *dtype == Dtype::F16 {
+                                lit = lit.convert(xla::PrimitiveType::F16).unwrap();
+                            }
+                            lit
+                        })
+                        .collect(),
+                };
+                save(&path, &e, &state).map_err(|err| err.to_string())?;
+                let restored = load(&path, &e).map_err(|err| err.to_string())?;
+                for (i, (orig, back)) in state.tensors.iter().zip(&restored.tensors).enumerate() {
+                    let a: Vec<f32> =
+                        orig.convert(xla::PrimitiveType::F32).unwrap().to_vec().unwrap();
+                    let b: Vec<f32> =
+                        back.convert(xla::PrimitiveType::F32).unwrap().to_vec().unwrap();
+                    if a != b {
+                        return Err(format!("tensor {i} differs after roundtrip"));
+                    }
+                }
+                Ok(())
+            },
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -12,6 +12,7 @@
 
 use crate::data::loader::BatchPayload;
 use crate::memory::arena::ArenaAllocator;
+use crate::memory::offload::{OffloadEngine, OffloadStats, SpillPlan};
 use crate::runtime::manifest::{Manifest, ManifestEntry};
 use anyhow::{bail, Result};
 use std::cell::RefCell;
@@ -76,6 +77,8 @@ pub struct LoadedModel {
     /// expose the same surface (sized by
     /// [`ManifestEntry::step_scratch_bytes`]).
     scratch: RefCell<ArenaAllocator>,
+    /// Mirror of the real runtime's host-spill engine slot.
+    offload: RefCell<Option<OffloadEngine>>,
 }
 
 impl Runtime {
@@ -97,6 +100,17 @@ impl LoadedModel {
     /// The per-step marshaling arena (same accessor as the PJRT runtime).
     pub fn scratch_arena(&self) -> &RefCell<ArenaAllocator> {
         &self.scratch
+    }
+
+    /// Install a host-spill plan (same surface as the PJRT runtime; the
+    /// engine is pure host-side bookkeeping, so it works in the stub too).
+    pub fn configure_offload(&self, plan: &SpillPlan) {
+        *self.offload.borrow_mut() = Some(OffloadEngine::new(plan));
+    }
+
+    /// Engine counters (`None` when no spill plan is installed).
+    pub fn offload_stats(&self) -> Option<OffloadStats> {
+        self.offload.borrow().as_ref().map(OffloadEngine::stats)
     }
 
     pub fn init_state(&self, _seed: u64) -> Result<TrainState> {
@@ -175,9 +189,11 @@ mod tests {
             lr: 0.1,
             momentum: 0.9,
             loss_scale: 1.0,
+            device_budget: None,
         };
         let model = LoadedModel {
             scratch: RefCell::new(ArenaAllocator::new(entry.step_scratch_bytes())),
+            offload: RefCell::new(None),
             entry,
         };
         let mut arena = model.scratch_arena().borrow_mut();
@@ -189,6 +205,18 @@ mod tests {
         assert_eq!(arena.fallback_allocs(), 0);
         assert!(arena.alloc(1 << 20).is_none(), "oversize falls back");
         assert_eq!(arena.fallback_allocs(), 1);
+        drop(arena);
+
+        // the host-spill engine surface matches the PJRT runtime's
+        assert!(model.offload_stats().is_none());
+        let arch = crate::models::arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let sc = crate::config::Pipeline::parse("sc").unwrap();
+        let plan =
+            crate::memory::offload::plan_spill(&arch, sc, 2, &[0, 1], u64::MAX, 2).unwrap();
+        model.configure_offload(&plan);
+        let stats = model.offload_stats().unwrap();
+        assert_eq!(stats.steps, 0);
+        assert_eq!(stats.evictions, 0);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Property tests for the host-spill offload engine: a spilled layout
+//! always fits the budget or the planner returns the typed
+//! `InfeasibleBudget` error; prefetches never land after the first
+//! backward use; evict/prefetch pairing is exact; plans are deterministic.
+
+use optorch::config::Pipeline;
+use optorch::memory::arena::{validate, TensorClass};
+use optorch::memory::offload::{
+    plan_spill, simulate_overlap, OverlapModel, SpillPlan, TransferKind,
+};
+use optorch::models::{ArchProfile, LayerKind, LayerProfile};
+use optorch::util::propcheck::check_with;
+use optorch::util::rng::Rng;
+
+fn sc() -> Pipeline {
+    Pipeline::parse("sc").unwrap()
+}
+
+/// Random checkpoint-heavy chain: uniform-ish layer widths and small
+/// parameter counts, so resident checkpoints (not one layer's backward
+/// working set) dominate the packed slab — the regime host-spill targets.
+fn rand_chain(rng: &mut Rng, min_layers: usize, max_extra: usize) -> ArchProfile {
+    let n = min_layers + rng.gen_range(max_extra + 1);
+    let layers = (0..n)
+        .map(|i| {
+            let h = 4 + rng.gen_range(5);
+            let c = 32 + rng.gen_range(64);
+            let out = (h * h * c) as u64;
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: LayerKind::Conv,
+                out_shape: (h, h, c),
+                act_elems: out * (1 + rng.gen_range(3)) as u64,
+                params: (64 + rng.gen_range(1024)) as u64,
+                flops_per_image: (1 + rng.gen_range(900)) as u64 * 10_000,
+            }
+        })
+        .collect();
+    ArchProfile {
+        name: "rand_offload_chain".into(),
+        input: (1 + rng.gen_range(6), 1 + rng.gen_range(6), 3),
+        layers,
+    }
+}
+
+/// A random plan with plenty of checkpoints (offload needs cold tensors
+/// to work with): each interior layer stored with probability 3/4.
+fn rand_plan(rng: &mut Rng, n: usize) -> Vec<usize> {
+    (0..n.saturating_sub(1)).filter(|_| rng.gen_range(4) != 0).collect()
+}
+
+fn spill_for(
+    arch: &ArchProfile,
+    batch: usize,
+    cps: &[usize],
+    budget: u64,
+    lookahead: usize,
+) -> Result<SpillPlan, optorch::memory::offload::InfeasibleBudget> {
+    plan_spill(arch, sc(), batch, cps, budget, lookahead)
+}
+
+#[test]
+fn prop_spill_fits_the_budget_or_is_typed_infeasible() {
+    check_with(
+        "plan_spill: resident total ≤ budget, or InfeasibleBudget with a floor above it",
+        80,
+        0x0FF1,
+        |rng| {
+            let arch = rand_chain(rng, 8, 16);
+            let n = arch.layers.len();
+            let cps = rand_plan(rng, n);
+            let batch = 1 + rng.gen_range(8);
+            // budget anywhere from far below the floor to above the packed
+            // total — exercised via a random fraction of the unspilled pack
+            let (_, layout) = optorch::memory::arena::plan_arena(&arch, sc(), batch, &cps);
+            let frac = 1 + rng.gen_range(120); // 1..=120 percent
+            let budget = (layout.total_bytes() as u128 * frac as u128 / 100) as u64;
+            let lookahead = 1 + rng.gen_range(4);
+            (arch, cps, batch, budget.max(1), lookahead)
+        },
+        |(arch, cps, batch, budget, lookahead)| {
+            match spill_for(arch, *batch, cps, *budget, *lookahead) {
+                Ok(spill) => {
+                    if spill.device_total() > *budget {
+                        return Err(format!(
+                            "plan claims to fit but {} > {budget}",
+                            spill.device_total()
+                        ));
+                    }
+                    validate(&spill.lifetimes, &spill.layout)
+                        .map_err(|e| format!("resident layout invalid: {e}"))?;
+                    Ok(())
+                }
+                Err(e) => {
+                    if e.min_device_bytes <= *budget {
+                        return Err(format!(
+                            "InfeasibleBudget floor {} is not above the budget {budget}",
+                            e.min_device_bytes
+                        ));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_prefetch_never_lands_after_first_backward_use() {
+    check_with(
+        "every spilled tensor: evict < prefetch < need, and the simulated \
+         prefetch completes by the (stall-adjusted) need step",
+        60,
+        0x0FF2,
+        |rng| {
+            let arch = rand_chain(rng, 10, 14);
+            let n = arch.layers.len();
+            let cps: Vec<usize> = (0..n - 1).collect(); // checkpoint-rich
+            let batch = 1 + rng.gen_range(8);
+            let (_, layout) = optorch::memory::arena::plan_arena(&arch, sc(), batch, &cps);
+            // 50–90% of the packed total: tight enough to force spilling
+            let frac = 50 + rng.gen_range(41);
+            let budget = (layout.total_bytes() as u128 * frac as u128 / 100) as u64;
+            let bw = [1e6, 1e8, 12e9][rng.gen_range(3)];
+            (arch, cps, batch, budget, 1 + rng.gen_range(3), bw)
+        },
+        |(arch, cps, batch, budget, lookahead, bw)| {
+            let spill = match spill_for(arch, *batch, cps, *budget, *lookahead) {
+                Ok(s) => s,
+                Err(_) => return Ok(()), // infeasible budgets covered elsewhere
+            };
+            for s in &spill.steps {
+                if !(s.evict_step < s.prefetch_step && s.prefetch_step < s.need_step) {
+                    return Err(format!("window not ordered: {s:?}"));
+                }
+                if s.need_step - s.prefetch_step > *lookahead {
+                    return Err(format!("prefetch issued beyond the lookahead window: {s:?}"));
+                }
+            }
+            let model = OverlapModel {
+                host_bw_bytes_per_sec: *bw,
+                device_flops_per_sec: 2e12,
+            };
+            let rep = simulate_overlap(arch, *batch, &spill, &model);
+            for s in &spill.steps {
+                let done = rep
+                    .transfers
+                    .iter()
+                    .find(|t| t.kind == TransferKind::Prefetch && t.layer == s.layer)
+                    .map(|t| t.done_sec)
+                    .ok_or_else(|| format!("no prefetch simulated for layer {}", s.layer))?;
+                // lateness is charged as stall, so the step start already
+                // accounts for the wait — data is on-device when needed
+                if done > rep.step_start_secs[s.need_step] + 1e-9 {
+                    return Err(format!(
+                        "layer {}: prefetch done {done} after need-step start {}",
+                        s.layer, rep.step_start_secs[s.need_step]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_evict_prefetch_pairing_is_exact() {
+    check_with(
+        "each spilled layer appears once; resident lifetimes carry exactly \
+         two checkpoint windows per spilled layer and one otherwise",
+        60,
+        0x0FF3,
+        |rng| {
+            let arch = rand_chain(rng, 10, 14);
+            let n = arch.layers.len();
+            let cps = rand_plan(rng, n);
+            let batch = 1 + rng.gen_range(8);
+            let (_, layout) = optorch::memory::arena::plan_arena(&arch, sc(), batch, &cps);
+            let frac = 40 + rng.gen_range(56);
+            let budget = (layout.total_bytes() as u128 * frac as u128 / 100) as u64;
+            (arch, cps, batch, budget)
+        },
+        |(arch, cps, batch, budget)| {
+            let spill = match spill_for(arch, *batch, cps, *budget, 2) {
+                Ok(s) => s,
+                Err(_) => return Ok(()),
+            };
+            let mut spilled: Vec<usize> = spill.steps.iter().map(|s| s.layer).collect();
+            let before = spilled.len();
+            spilled.sort_unstable();
+            spilled.dedup();
+            if spilled.len() != before {
+                return Err("a layer was spilled more than once".into());
+            }
+            let n = arch.layers.len();
+            for layer in 0..n {
+                let windows = spill
+                    .lifetimes
+                    .tensors
+                    .iter()
+                    .filter(|t| t.class == TensorClass::Checkpoint && t.layer == layer)
+                    .count();
+                let expect = if spilled.binary_search(&layer).is_ok() { 2 } else { 1 };
+                // non-checkpointed layers have zero checkpoint windows
+                if windows != 0 && windows != expect {
+                    return Err(format!(
+                        "layer {layer}: {windows} checkpoint windows, expected 0 or {expect}"
+                    ));
+                }
+                if spilled.binary_search(&layer).is_ok() && windows != 2 {
+                    return Err(format!("spilled layer {layer} has {windows} windows"));
+                }
+            }
+            // byte conservation: spilled bytes = Σ per-step bytes, and each
+            // step's bytes match the layer's boundary output
+            let total: u64 = spill.steps.iter().map(|s| s.bytes).sum();
+            if total != spill.spilled_bytes {
+                return Err(format!("spilled_bytes {} ≠ Σ steps {total}", spill.spilled_bytes));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spill_planning_is_deterministic() {
+    check_with(
+        "same inputs → byte-identical spill plan, layout and timeline",
+        40,
+        0x0FF4,
+        |rng| {
+            let arch = rand_chain(rng, 8, 16);
+            let n = arch.layers.len();
+            let cps = rand_plan(rng, n);
+            let batch = 1 + rng.gen_range(8);
+            let (_, layout) = optorch::memory::arena::plan_arena(&arch, sc(), batch, &cps);
+            let frac = 40 + rng.gen_range(70);
+            let budget = (layout.total_bytes() as u128 * frac as u128 / 100) as u64;
+            (arch, cps, batch, budget)
+        },
+        |(arch, cps, batch, budget)| {
+            let a = spill_for(arch, *batch, cps, *budget, 2);
+            let b = spill_for(arch, *batch, cps, *budget, 2);
+            match (a, b) {
+                (Ok(x), Ok(y)) => {
+                    if x.steps != y.steps {
+                        return Err("spill steps differ across identical runs".into());
+                    }
+                    if x.layout.offsets != y.layout.offsets
+                        || x.layout.slab_bytes != y.layout.slab_bytes
+                    {
+                        return Err("resident layouts differ across identical runs".into());
+                    }
+                    let m = OverlapModel::default();
+                    let ra = simulate_overlap(arch, *batch, &x, &m);
+                    let rb = simulate_overlap(arch, *batch, &y, &m);
+                    if ra.stall_secs != rb.stall_secs
+                        || ra.predicted_step_secs != rb.predicted_step_secs
+                    {
+                        return Err("overlap simulation diverged".into());
+                    }
+                    Ok(())
+                }
+                (Err(x), Err(y)) => {
+                    if x == y {
+                        Ok(())
+                    } else {
+                        Err("infeasibility errors differ".into())
+                    }
+                }
+                _ => Err("feasibility verdict differs across identical runs".into()),
+            }
+        },
+    );
+}
