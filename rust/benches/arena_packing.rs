@@ -9,12 +9,14 @@
 //! exact DP peak, fragmentation above 1.25 on the paper profiles, or any
 //! heap allocation inside the slab path's steady state (counted by a
 //! global allocator shim, same harness as `planner_frontier`).
+//!
+//! All planning flows through the `PlanRequest` facade (the `pack`-only
+//! sweep still times the low-level packer against facade-staged
+//! lifetimes).
 
-use optorch::config::Pipeline;
-use optorch::memory::arena::{pack, plan_arena, validate, ArenaAllocator, Lifetimes};
-use optorch::memory::peak::PeakEvaluator;
-use optorch::memory::planner::{plan_checkpoints, PlannerKind};
-use optorch::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
+use optorch::memory::arena::{pack, validate, ArenaAllocator};
+use optorch::memory::pipeline::PlanRequest;
+use optorch::models::{ArchProfile, LayerKind, LayerProfile};
 use optorch::util::bench::{bench, fmt_bytes, fmt_ns, Table};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,7 +55,7 @@ struct ArchRow {
     base: u64,
     peak: u64,
     frag: f64,
-    plan_pack_ns: f64,
+    request_ns: f64,
 }
 
 /// Deterministic synthetic chain for the pack-time-vs-depth sweep.
@@ -89,7 +91,7 @@ fn write_json(
         j.push_str(&format!(
             "    {{\"arch\": \"{}\", \"depth\": {}, \"tensors\": {}, \"slab_bytes\": {}, \
              \"base_bytes\": {}, \"peak_bytes\": {}, \"fragmentation_ratio\": {:.4}, \
-             \"plan_pack_ns\": {:.0}}}{}\n",
+             \"request_ns\": {:.0}}}{}\n",
             r.name,
             r.depth,
             r.tensors,
@@ -97,7 +99,7 @@ fn write_json(
             r.base,
             r.peak,
             r.frag,
-            r.plan_pack_ns,
+            r.request_ns,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -131,15 +133,17 @@ fn main() {
         "static",
         "exact peak",
         "fragmentation",
-        "plan+pack",
+        "request (plan+pack)",
     ]);
     for name in ["resnet18", "resnet50", "efficientnet_b0", "inception_v3"] {
         let hw = if name == "inception_v3" { 299 } else { 224 };
-        let arch = arch_by_name(name, (hw, hw, 3), 1000).unwrap();
-        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
-        let (lt, layout) = plan_arena(&arch, Pipeline::BASELINE, batch, &plan.checkpoints);
+        let request = PlanRequest::for_model(name, (hw, hw, 3), 1000).batch(batch);
+        let outcome = request.run().expect("zoo model plans");
+        let plan = &outcome.plan;
+        let lt = outcome.lifetimes().expect("arena staged by default");
+        let layout = outcome.layout().expect("arena staged by default");
 
-        if let Err(e) = validate(&lt, &layout) {
+        if let Err(e) = validate(lt, layout) {
             eprintln!("FAIL {name}: invalid layout: {e}");
             failures += 1;
         }
@@ -158,20 +162,29 @@ fn main() {
             );
             failures += 1;
         }
+        if outcome.device_peak_packed() != layout.total_bytes() {
+            eprintln!("FAIL {name}: device_peak_packed disagrees with the packed layout");
+            failures += 1;
+        }
         let frag = layout.fragmentation_ratio();
         if frag > 1.25 {
             eprintln!("FAIL {name}: fragmentation ratio {frag:.3} > 1.25");
             failures += 1;
         }
 
+        // one full facade drive per iteration: plan + lifetimes + pack
+        // (+ the staged memory report)
         let stats = bench(1, iters, || {
-            let (lt, layout) = plan_arena(&arch, Pipeline::BASELINE, batch, &plan.checkpoints);
-            std::hint::black_box((lt.tensors.len(), layout.slab_bytes));
+            let outcome = request.run().expect("zoo model plans");
+            std::hint::black_box((
+                outcome.plan.checkpoints.len(),
+                outcome.layout().map(|l| l.slab_bytes),
+            ));
         });
 
         t.row(&[
             name.to_string(),
-            format!("{}", arch.depth()),
+            format!("{}", outcome.arch.depth()),
             format!("{}", lt.tensors.len()),
             fmt_bytes(layout.slab_bytes),
             fmt_bytes(layout.base_bytes),
@@ -181,13 +194,13 @@ fn main() {
         ]);
         rows.push(ArchRow {
             name: name.to_string(),
-            depth: arch.depth(),
+            depth: outcome.arch.depth(),
             tensors: lt.tensors.len(),
             slab: layout.slab_bytes,
             base: layout.base_bytes,
             peak: layout.peak_bytes,
             frag,
-            plan_pack_ns: stats.median_ns,
+            request_ns: stats.median_ns,
         });
     }
     t.print();
@@ -197,14 +210,13 @@ fn main() {
     let mut t = Table::new(&["depth", "tensors", "pack"]);
     let mut sweep: Vec<(usize, usize, f64)> = Vec::new();
     for depth in [8usize, 16, 32, 64, 96] {
-        let arch = synth_chain(depth);
-        let plan = plan_checkpoints(&arch, PlannerKind::Optimal, Pipeline::BASELINE, batch);
-        let mut sc = Pipeline::BASELINE;
-        sc.sc = true;
-        let ev = PeakEvaluator::new(&arch, sc, batch);
-        let lt = Lifetimes::extract(&ev, &plan.checkpoints);
+        let outcome = PlanRequest::for_arch(synth_chain(depth))
+            .batch(batch)
+            .run()
+            .expect("chain plans");
+        let lt = outcome.lifetimes().expect("arena staged by default");
         let stats = bench(1, iters, || {
-            let layout = pack(&lt);
+            let layout = pack(lt);
             std::hint::black_box(layout.slab_bytes);
         });
         t.row(&[

@@ -7,16 +7,20 @@
 //! spill plan whose resident total exceeds its budget, a prefetch issued
 //! at or after its need step, a 60%-of-cheapest-point budget that the
 //! planner cannot satisfy on the checkpoint-heavy chain profile, host-pool
-//! steady-state allocations, or worker staging scratch falling back to the
-//! heap (counted by the same global-allocator shim as `arena_packing`).
+//! steady-state allocations, or worker staging scratch (label rows *and*
+//! the `Dataset::get_into` fetch path) falling back to the heap (counted
+//! by the same global-allocator shim as `arena_packing`).
+//!
+//! All planning flows through the `PlanRequest` facade: the frontier and
+//! its packed totals come from one staged run per arch, and each sweep
+//! point is a budgeted run over the explicit most-checkpoint-rich plan.
 
-use optorch::config::Pipeline;
-use optorch::memory::arena::{plan_arena, validate, ArenaAllocator};
-use optorch::memory::offload::{
-    plan_spill, simulate_overlap, OffloadEngine, OverlapModel, SpillPlan,
-    DEFAULT_DEVICE_FLOPS_PER_SEC,
-};
-use optorch::memory::planner::{pareto_frontier, DEFAULT_FRONTIER_LEVELS};
+use optorch::data::dataset::Dataset;
+use optorch::data::image::Image;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::memory::arena::{validate, ArenaAllocator};
+use optorch::memory::offload::{OffloadEngine, SpillPlan};
+use optorch::memory::pipeline::{PlanError, PlanRequest};
 use optorch::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
 use optorch::util::bench::{bench, fmt_bytes, fmt_ns, Table};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -126,7 +130,6 @@ fn main() {
     let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
     let mut failures = 0u32;
     let batch = 16usize;
-    let sc = Pipeline::parse("sc").unwrap();
     let lookahead = 2usize;
 
     // ---- stall vs budget sweep at several host bandwidths ----
@@ -140,29 +143,46 @@ fn main() {
         "device total",
         "stall / step",
     ]);
-    let archs: Vec<ArchProfile> =
-        vec![spill_chain(48), arch_by_name("resnet18", (64, 64, 3), 10).unwrap()];
-    for arch in &archs {
-        // "cheapest point" = the smallest packed total on the frontier —
-        // budgets below it are unreachable by pure recompute
-        let frontier = pareto_frontier(arch, sc, batch, DEFAULT_FRONTIER_LEVELS);
-        let cheapest_total = frontier
-            .iter()
-            .map(|p| plan_arena(arch, sc, batch, &p.checkpoints).1.total_bytes())
-            .min()
-            .unwrap();
-        // the most checkpoint-rich plan is the spill planner's raw input
-        let full = &frontier.last().unwrap().checkpoints;
+    // One facade run per arch stages the frontier *and* a packed total
+    // per point ("cheapest point" = the smallest packed total — budgets
+    // below it are unreachable by pure recompute); the most
+    // checkpoint-rich (last) point is the spill sweep's raw input.
+    let archs: Vec<(ArchProfile, Vec<usize>, u64)> =
+        [spill_chain(48), arch_by_name("resnet18", (64, 64, 3), 10).unwrap()]
+            .into_iter()
+            .map(|arch| {
+                let staged = PlanRequest::for_arch(arch.clone())
+                    .batch(batch)
+                    .frontier(true)
+                    .run()
+                    .expect("frontier stages");
+                let totals = staged.frontier_packed_totals.expect("arena on by default");
+                let cheapest_total = *totals.iter().min().unwrap();
+                let full = staged
+                    .frontier
+                    .expect("frontier requested")
+                    .last()
+                    .unwrap()
+                    .checkpoints
+                    .clone();
+                (arch, full, cheapest_total)
+            })
+            .collect();
+    for (arch, full, cheapest_total) in &archs {
         for pct in [90u64, 75, 60, 45] {
             let budget = cheapest_total * pct / 100;
             for bw_gib in [4u64, 12, 32] {
                 let host_bw = bw_gib * (1 << 30);
-                let model = OverlapModel {
-                    host_bw_bytes_per_sec: host_bw as f64,
-                    device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
-                };
-                match plan_spill(arch, sc, batch, full, budget, lookahead) {
-                    Ok(spill) => {
+                let outcome = PlanRequest::for_arch(arch.clone())
+                    .batch(batch)
+                    .with_checkpoints(full.clone())
+                    .memory_budget(budget)
+                    .host_bw(host_bw)
+                    .spill_lookahead(lookahead)
+                    .run();
+                match outcome {
+                    Ok(outcome) => {
+                        let spill = outcome.spill.as_ref().expect("budgeted outcome");
                         if spill.device_total() > budget {
                             eprintln!(
                                 "FAIL {}: 'fitting' plan at {} exceeds its budget {}",
@@ -182,7 +202,7 @@ fn main() {
                                 failures += 1;
                             }
                         }
-                        let rep = simulate_overlap(arch, batch, &spill, &model);
+                        let rep = outcome.overlap.as_ref().expect("budgeted outcome");
                         t.row(&[
                             arch.name.clone(),
                             format!("{pct}% = {}", fmt_bytes(budget)),
@@ -211,7 +231,7 @@ fn main() {
                             step_ms: rep.predicted_step_secs * 1e3,
                         });
                     }
-                    Err(e) => {
+                    Err(PlanError::BudgetBelowSpilled(e)) => {
                         if e.min_device_bytes <= budget {
                             eprintln!(
                                 "FAIL {}: infeasibility floor {} not above budget {}",
@@ -249,6 +269,10 @@ fn main() {
                             step_ms: 0.0,
                         });
                     }
+                    Err(other) => {
+                        eprintln!("FAIL {}: unexpected plan error: {other}", arch.name);
+                        failures += 1;
+                    }
                 }
             }
         }
@@ -277,13 +301,23 @@ fn main() {
 
     // ---- runtime engine: host-pool recycle + steady-state allocs ----
     println!("\n=== host-spill engine: pool recycle at steady state ===\n");
-    let chain = spill_chain(48);
-    let frontier = pareto_frontier(&chain, sc, batch, DEFAULT_FRONTIER_LEVELS);
-    let full = &frontier.last().unwrap().checkpoints;
-    let (_, layout) = plan_arena(&chain, sc, batch, full);
-    let budget = layout.total_bytes() * 3 / 5;
-    let spill: SpillPlan =
-        plan_spill(&chain, sc, batch, full, budget, lookahead).expect("60% chain budget");
+    let (chain, full, _) = &archs[0];
+    let full_total = PlanRequest::for_arch(chain.clone())
+        .batch(batch)
+        .with_checkpoints(full.clone())
+        .run()
+        .expect("chain packs")
+        .device_peak_packed();
+    let budget = full_total * 3 / 5;
+    let spill: SpillPlan = PlanRequest::for_arch(chain.clone())
+        .batch(batch)
+        .with_checkpoints(full.clone())
+        .memory_budget(budget)
+        .spill_lookahead(lookahead)
+        .run()
+        .expect("60% chain budget")
+        .spill
+        .expect("budgeted outcome");
     let mut engine = OffloadEngine::new(&spill);
     engine.run_step(); // warmup: populates the pool
     let warm_allocs = engine.stats().pool_allocs;
@@ -322,12 +356,17 @@ fn main() {
     t.print();
 
     // ---- worker staging scratch: the zero-alloc audit, extended ----
-    // Emulates the producer hot loop's scratch pattern (two k-wide label
-    // rows per batch) against the per-worker slab.
+    // Emulates the producer hot loop's scratch pattern against the
+    // per-worker staging: two k-wide label rows per batch from the slab,
+    // plus the `Dataset::get_into` fetch path into a warm Image buffer —
+    // the per-image allocation `Dataset::get` used to make on every slot.
     let classes = 10usize;
+    let dataset = SynthCifar::cifar10(Split::Train, 512, 7);
     let mut scratch = ArenaAllocator::new(2 * classes * 4);
+    let mut img = Image::zeros(32, 32, 3);
+    let _ = dataset.get_into(0, &mut img); // warm the fetch buffer
     let scratch_before = ALLOC_COUNT.load(Ordering::Relaxed);
-    for _ in 0..256 {
+    for step in 0..256usize {
         scratch.begin_step();
         let h = scratch.alloc_f32(2 * classes).expect("slab sized for the rows");
         let rows = scratch.f32_mut(&h);
@@ -336,11 +375,15 @@ fn main() {
         b.fill(0.0);
         a[3] = 1.0;
         b[7] = 1.0;
-        std::hint::black_box((a[3], b[7]));
+        let label = dataset.get_into(step % dataset.len(), &mut img);
+        std::hint::black_box((a[3], b[7], label, img.data[0]));
     }
     let scratch_steady = ALLOC_COUNT.load(Ordering::Relaxed) - scratch_before;
     if scratch_steady != 0 {
-        eprintln!("FAIL: {scratch_steady} heap allocations across 256 scratch steps");
+        eprintln!(
+            "FAIL: {scratch_steady} heap allocations across 256 scratch+fetch steps \
+             (get_into must stay zero-alloc)"
+        );
         failures += 1;
     }
     if scratch.fallback_allocs() != 0 {
@@ -348,7 +391,8 @@ fn main() {
         failures += 1;
     }
     println!(
-        "\nworker scratch: 256 steps, {} heap allocs, {} slab fallbacks",
+        "\nworker scratch: 256 steps (label rows + get_into fetch), {} heap allocs, \
+         {} slab fallbacks",
         scratch_steady,
         scratch.fallback_allocs()
     );

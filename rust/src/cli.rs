@@ -99,12 +99,15 @@ COMMANDS:
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
             [--kind dp|sqrt|uniformK|bottleneckK] [--frontier] [--arena]
             [--budget BYTES] [--spill BYTES [--host_bw B/s] [--lookahead N]]
+            [--json]
             (--frontier prints the DP time/memory Pareto frontier; --budget
             picks the cheapest-time plan whose packed total fits; --arena
             packs the plan into a memory slab and prints its size,
             fragmentation ratio and per-class offsets; --spill composes a
             host-spill plan for the budget and prints the per-tensor
-            evict/prefetch table + predicted stall)
+            evict/prefetch table + predicted stall; --json renders the one
+            staged PlanRequest→PlanOutcome run as a stable JSON document —
+            arena always included, --spill preferred over --budget)
   models    List architecture profiles and parameter counts.
   figures   Regenerate all paper figures (shortcut for the benches).
   help      Show this message.

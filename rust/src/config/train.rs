@@ -189,11 +189,18 @@ impl TrainConfig {
                 ),
             };
         }
+        // Both route through the memory facade's shared byte parser, so
+        // the config, the CLI flags and the manifest's `device_budget`
+        // all report the same "<field>: <reason>" error shape.
         if let Some(v) = kv.get_str("memory_budget") {
-            cfg.memory_budget = Some(parse_bytes(v).map_err(|e| format!("memory_budget: {e}"))?);
+            cfg.memory_budget = Some(
+                crate::memory::pipeline::parse_bytes_field("memory_budget", v)
+                    .map_err(|e| e.to_string())?,
+            );
         }
         if let Some(v) = kv.get_str("host_bw") {
-            cfg.host_bw = parse_bytes(v).map_err(|e| format!("host_bw: {e}"))?;
+            cfg.host_bw = crate::memory::pipeline::parse_bytes_field("host_bw", v)
+                .map_err(|e| e.to_string())?;
         }
         if let Some(v) = kv.get_usize("spill_lookahead")? {
             cfg.spill_lookahead = v;

@@ -1,14 +1,21 @@
 //! Report writers: CSV + figure-series emission shared by examples and
 //! benches (`reports/` directory by default).
+//!
+//! The per-stage memory summaries (checkpoint plan, arena, host-spill
+//! offload, frontier tables) live in [`crate::memory::outcome`] — the one
+//! set of renderers the trainer report and `plan --json`/`PlanOutcome`
+//! share — and are re-exported here for the examples and benches that
+//! always imported them from this module.
 
 use crate::coordinator::TrainReport;
-use crate::memory::arena::ArenaReport;
-use crate::memory::offload::OffloadReport;
-use crate::memory::planner::CheckpointPlan;
 use crate::memory::simulator::MemoryReport;
-use crate::util::bench::fmt_bytes;
 use std::io::Write;
 use std::path::Path;
+
+pub use crate::memory::outcome::{
+    arena_summary, frontier_csv, frontier_markdown, frontier_table, offload_summary,
+    plan_summary,
+};
 
 /// Write the per-epoch history CSV.
 pub fn write_history_csv(path: &Path, report: &TrainReport) -> std::io::Result<()> {
@@ -77,115 +84,6 @@ pub fn markdown_summary(report: &TrainReport) -> String {
     s
 }
 
-/// One-line description of the checkpoint plan an S-C run trained under.
-pub fn plan_summary(plan: &CheckpointPlan) -> String {
-    format!(
-        "checkpoint plan: {} checkpoints {:?}, simulated peak {}, recompute +{:.1}% fwd FLOPs\n",
-        plan.checkpoints.len(),
-        plan.checkpoints,
-        fmt_bytes(plan.peak_bytes),
-        plan.recompute_overhead * 100.0
-    )
-}
-
-/// One-line description of the packed activation arena for the run's
-/// plan: slab vs exact peak (fragmentation) and the per-class mix.
-pub fn arena_summary(a: &ArenaReport) -> String {
-    let classes = a
-        .by_class
-        .iter()
-        .map(|c| format!("{} {}", c.count, c.class.name()))
-        .collect::<Vec<_>>()
-        .join(" · ");
-    format!(
-        "activation arena: slab {} (+ static {}) vs simulated peak {} — \
-         fragmentation {:.2}x, {} tensors ({classes})\n",
-        fmt_bytes(a.slab_bytes),
-        fmt_bytes(a.base_bytes),
-        fmt_bytes(a.peak_bytes),
-        a.fragmentation,
-        a.tensor_count
-    )
-}
-
-/// One-line description of a host-spill composition: what left the
-/// device, what it costs in predicted stall, and — after a run — the
-/// engine's transfer/pool counters.
-pub fn offload_summary(o: &OffloadReport) -> String {
-    let mut s = format!(
-        "host-spill offload: device {} ≤ budget {} — {} checkpoints to host \
-         ({} out, host peak {}), predicted stall {:.2} ms/step ({:.1}% of {:.2} ms), \
-         bw {}/s, lookahead {}\n",
-        fmt_bytes(o.device_total),
-        fmt_bytes(o.budget),
-        o.spilled_tensors,
-        fmt_bytes(o.spilled_bytes),
-        fmt_bytes(o.host_peak_bytes),
-        o.predicted_stall_secs * 1e3,
-        o.stall_frac() * 100.0,
-        o.predicted_step_secs * 1e3,
-        fmt_bytes(o.host_bw_bytes_per_sec),
-        o.lookahead,
-    );
-    if o.evictions > 0 {
-        s.push_str(&format!(
-            "host-spill engine: {} evictions, {} prefetches, pool hit rate {:.1}%\n",
-            o.evictions,
-            o.prefetches,
-            o.pool_hit_rate * 100.0
-        ));
-    }
-    s
-}
-
-/// Time/memory Pareto frontier as CSV:
-/// `peak_mb,n_checkpoints,recompute_overhead,checkpoints`.
-pub fn frontier_csv(plans: &[CheckpointPlan]) -> String {
-    let mut s = String::from("peak_mb,n_checkpoints,recompute_overhead,checkpoints\n");
-    for p in plans {
-        s.push_str(&format!(
-            "{:.1},{},{:.4},{}\n",
-            p.peak_bytes as f64 / (1024.0 * 1024.0),
-            p.checkpoints.len(),
-            p.recompute_overhead,
-            p.checkpoints
-                .iter()
-                .map(|c| c.to_string())
-                .collect::<Vec<_>>()
-                .join(" ")
-        ));
-    }
-    s
-}
-
-/// Console table of the Pareto frontier (the `plan --frontier` CLI output
-/// and the plan_checkpoints example share this shape).
-pub fn frontier_table(plans: &[CheckpointPlan]) -> crate::util::bench::Table {
-    let mut t = crate::util::bench::Table::new(&["peak", "checkpoints", "recompute overhead"]);
-    for p in plans {
-        t.row(&[
-            fmt_bytes(p.peak_bytes),
-            format!("{}", p.checkpoints.len()),
-            format!("{:.1}%", p.recompute_overhead * 100.0),
-        ]);
-    }
-    t
-}
-
-/// Markdown table of the Pareto frontier (EXPERIMENTS.md fragments).
-pub fn frontier_markdown(plans: &[CheckpointPlan]) -> String {
-    let mut s = String::from("| peak | checkpoints | recompute overhead |\n|---|---|---|\n");
-    for p in plans {
-        s.push_str(&format!(
-            "| {} | {} | {:.1}% |\n",
-            fmt_bytes(p.peak_bytes),
-            p.checkpoints.len(),
-            p.recompute_overhead * 100.0
-        ));
-    }
-    s
-}
-
 /// One-line producer-pool summary: per-worker overlap accounting plus the
 /// buffer-pool counters (how to read them: `produce` is time the worker
 /// spent materializing+encoding, `blocked` is backpressure wait; pool
@@ -216,6 +114,9 @@ pub fn loader_summary(report: &TrainReport) -> String {
 mod tests {
     use super::*;
     use crate::config::Pipeline;
+    use crate::memory::arena::ArenaReport;
+    use crate::memory::offload::OffloadReport;
+    use crate::memory::planner::CheckpointPlan;
     use crate::memory::simulator::simulate;
     use crate::metrics::{EpochRecord, History};
     use crate::models::arch_by_name;

@@ -9,11 +9,11 @@ use crate::data::loader::{BatchPayload, EdLoader, LoaderStats, WorkerSummary};
 use crate::data::pool::BufferPool;
 use crate::data::sampler::SbsSampler;
 use crate::data::synth::{Split, SynthCifar};
-use crate::memory::arena::{plan_arena, summarize, ArenaReport};
-use crate::memory::offload::{
-    select_for_budget, OffloadReport, OverlapModel, SpillPlan, DEFAULT_DEVICE_FLOPS_PER_SEC,
-};
-use crate::memory::planner::{plan_checkpoints, CheckpointPlan, PlannerKind};
+use crate::memory::arena::ArenaReport;
+use crate::memory::offload::OffloadReport;
+use crate::memory::outcome::PlanOutcome;
+use crate::memory::pipeline::{PlanError, PlanRequest};
+use crate::memory::planner::CheckpointPlan;
 use crate::metrics::{EpochRecord, History, Mean, Timer};
 use crate::runtime::{LoadedModel, Runtime, TrainState};
 use crate::{debug, info};
@@ -82,105 +82,74 @@ pub struct Trainer {
     offload: Option<OffloadReport>,
 }
 
-/// What [`select_plan`] decided for one run.
-struct PlanSelection {
-    plan: CheckpointPlan,
-    arena: ArenaReport,
-    /// Present when the budget forced host spilling: the spill plan the
-    /// runtime engine replays plus its report.
-    offload: Option<(SpillPlan, OffloadReport)>,
-}
-
-/// Choose the run's checkpoint plan for an S-C pipeline. Without a budget:
-/// the exact minimum-peak plan, packed into an arena layout. With a
-/// budget: every Pareto-frontier point is ranked by its *packed* total
-/// (`base + slab`), the cheapest host-spill composition is planned for
-/// points that do not fit, and the minimum-predicted-step-time candidate
-/// wins — an error names the smallest achievable device total when even
-/// full spilling cannot reach the budget. `None` when the model has no
-/// analytic profile to plan over.
+/// Choose the run's memory plan for an S-C pipeline — one
+/// [`PlanRequest`] drive of the whole plan → pack → spill stack. Without
+/// a budget: the exact minimum-peak plan, packed into an arena layout.
+/// With a budget: every Pareto-frontier point is ranked by its *packed*
+/// total (`base + slab`), the cheapest host-spill composition is planned
+/// for points that do not fit, and the minimum-predicted-step-time
+/// candidate wins — an error names the smallest achievable device total
+/// when even full spilling cannot reach the budget. `None` when the model
+/// has no analytic profile to plan over (tolerated only without a
+/// budget).
 fn select_plan(
     cfg: &TrainConfig,
     input: (usize, usize, usize),
     classes: usize,
-) -> Result<Option<PlanSelection>> {
+) -> Result<Option<PlanOutcome>> {
     if !cfg.pipeline.sc {
         return Ok(None);
     }
-    let arch = match crate::models::arch_by_name(&cfg.model, input, classes) {
-        Some(a) => a,
-        None if cfg.memory_budget.is_some() => {
-            // An explicit budget that cannot be honored must not be
-            // silently dropped.
-            bail!(
-                "memory_budget is set but '{}' has no architecture profile to plan over \
-                 (see `optorch models`)",
-                cfg.model
-            );
-        }
-        None => {
+    let mut request = PlanRequest::for_model(&cfg.model, input, classes)
+        .pipeline(cfg.pipeline)
+        .batch(cfg.batch_size)
+        .host_bw(cfg.host_bw)
+        .spill_lookahead(cfg.spill_lookahead);
+    if let Some(budget) = cfg.memory_budget {
+        request = request.memory_budget(budget);
+    }
+    let outcome = match request.run() {
+        Ok(outcome) => outcome,
+        Err(PlanError::UnknownArch { .. }) if cfg.memory_budget.is_none() => {
             debug!("no architecture profile for '{}': skipping checkpoint planning", cfg.model);
             return Ok(None);
         }
-    };
-    let selection = match cfg.memory_budget {
-        Some(budget) => {
-            let model = OverlapModel {
-                host_bw_bytes_per_sec: cfg.host_bw as f64,
-                device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
-            };
-            let decision = select_for_budget(
-                &arch,
-                cfg.pipeline,
-                cfg.batch_size,
-                budget,
-                cfg.spill_lookahead,
-                &model,
-            )
-            .map_err(|e| anyhow!(e.to_string()))?;
-            let arena = summarize(&decision.spill.lifetimes, &decision.spill.layout);
-            let offload = if decision.is_spill() {
-                let report =
-                    OffloadReport::from_decision(&decision, cfg.host_bw, cfg.spill_lookahead);
-                info!(
-                    "host-spill offload for {}: {} checkpoints to host ({} KiB), device \
-                     {} KiB ≤ budget {} KiB, predicted stall {:.2} ms/step",
-                    cfg.model,
-                    report.spilled_tensors,
-                    report.spilled_bytes / 1024,
-                    report.device_total / 1024,
-                    budget / 1024,
-                    report.predicted_stall_secs * 1e3
-                );
-                Some((decision.spill, report))
-            } else {
-                None
-            };
-            PlanSelection { plan: decision.plan, arena, offload }
+        Err(e @ PlanError::UnknownArch { .. }) => {
+            // An explicit budget that cannot be honored must not be
+            // silently dropped.
+            bail!("memory_budget is set but {e}");
         }
-        None => {
-            let plan = plan_checkpoints(&arch, PlannerKind::Optimal, cfg.pipeline, cfg.batch_size);
-            let (lifetimes, layout) =
-                plan_arena(&arch, cfg.pipeline, cfg.batch_size, &plan.checkpoints);
-            let arena = summarize(&lifetimes, &layout);
-            PlanSelection { plan, arena, offload: None }
-        }
+        Err(e) => return Err(anyhow!(e.to_string())),
     };
+    if let Some(report) = outcome.offload_report() {
+        info!(
+            "host-spill offload for {}: {} checkpoints to host ({} KiB), device \
+             {} KiB ≤ budget {} KiB, predicted stall {:.2} ms/step",
+            cfg.model,
+            report.spilled_tensors,
+            report.spilled_bytes / 1024,
+            report.device_total / 1024,
+            report.budget / 1024,
+            report.predicted_stall_secs * 1e3
+        );
+    }
     info!(
         "checkpoint plan for {}: {} checkpoints, simulated peak {} KiB, recompute +{:.1}% fwd FLOPs",
         cfg.model,
-        selection.plan.checkpoints.len(),
-        selection.plan.peak_bytes / 1024,
-        selection.plan.recompute_overhead * 100.0
+        outcome.plan.checkpoints.len(),
+        outcome.plan.peak_bytes / 1024,
+        outcome.plan.recompute_overhead * 100.0
     );
-    info!(
-        "activation arena for {}: slab {} KiB over {} tensors, fragmentation {:.2}x",
-        cfg.model,
-        selection.arena.slab_bytes / 1024,
-        selection.arena.tensor_count,
-        selection.arena.fragmentation
-    );
-    Ok(Some(selection))
+    if let Some(arena) = &outcome.arena {
+        info!(
+            "activation arena for {}: slab {} KiB over {} tensors, fragmentation {:.2}x",
+            cfg.model,
+            arena.slab_bytes / 1024,
+            arena.tensor_count,
+            arena.fragmentation
+        );
+    }
+    Ok(Some(outcome))
 }
 
 fn make_dataset(choice: DatasetChoice, split: Split, len: usize, seed: u64) -> Result<Arc<dyn Dataset>> {
@@ -231,17 +200,17 @@ impl Trainer {
             }
         }
         let (plan, arena, offload) = match select_plan(&plan_cfg, (h, w, c), num_classes)? {
-            Some(sel) => {
-                let offload = match sel.offload {
-                    Some((spill, report)) => {
+            Some(outcome) => {
+                let offload = match outcome.offload_report() {
+                    Some(report) => {
                         // The runtime half replays the spill schedule
                         // (host-pool evictions/prefetches) every step.
-                        model.configure_offload(&spill);
+                        model.configure_offload(outcome.spill.as_ref().expect("spilling outcome"));
                         Some(report)
                     }
                     None => None,
                 };
-                (Some(sel.plan), Some(sel.arena), offload)
+                (Some(outcome.plan), outcome.arena, offload)
             }
             None => (None, None, None),
         };
@@ -497,14 +466,17 @@ mod tests {
     fn select_plan_picks_optimal_without_budget_and_packs_an_arena() {
         let cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("sc").unwrap());
         let sel = select_plan(&cfg, (32, 32, 3), 10).unwrap().unwrap();
-        let (plan, arena) = (sel.plan, sel.arena);
-        assert!(sel.offload.is_none(), "no budget → no spilling");
+        assert!(sel.offload_report().is_none(), "no budget → no spilling");
+        let arena = sel.arena.as_ref().unwrap();
+        let plan = &sel.plan;
         assert!(plan.peak_bytes > 0);
         assert!(plan.checkpoints.iter().all(|&c| c < 4)); // tiny_cnn has 5 layers
         assert!(arena.slab_bytes > 0);
         assert_eq!(arena.peak_bytes, plan.peak_bytes);
         assert!(arena.base_bytes + arena.slab_bytes >= plan.peak_bytes);
         assert!((1.0..=1.25).contains(&arena.fragmentation), "{}", arena.fragmentation);
+        // the memory report is staged alongside the plan
+        assert_eq!(sel.memory.peak_bytes, plan.peak_bytes);
     }
 
     #[test]
@@ -512,9 +484,10 @@ mod tests {
         let mut cfg = TrainConfig::default_for("tiny_cnn", Pipeline::parse("sc").unwrap());
         cfg.memory_budget = Some(1 << 30);
         let sel = select_plan(&cfg, (32, 32, 3), 10).unwrap().unwrap();
-        assert!(sel.offload.is_none(), "a 1 GiB budget fits a pure plan");
+        assert!(!sel.is_spill(), "a 1 GiB budget fits a pure plan");
         // the fit decision uses packed bytes, so the packed total obeys it
-        assert!(sel.arena.base_bytes + sel.arena.slab_bytes <= 1 << 30);
+        assert!(sel.fits(1 << 30));
+        assert!(sel.device_peak_packed() <= 1 << 30);
         assert_eq!(sel.plan.recompute_overhead, 0.0, "generous budget → cheapest time");
     }
 

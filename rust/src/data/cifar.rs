@@ -104,9 +104,15 @@ impl Dataset for Cifar10 {
 
     fn get(&self, index: usize) -> (Image, usize) {
         let mut img = Image::zeros(SIDE, SIDE, 3);
-        img.data
-            .copy_from_slice(&self.data[index * PLANE * 3..(index + 1) * PLANE * 3]);
+        self.get_into(index, &mut img);
         (img, self.labels[index])
+    }
+
+    fn get_into(&self, index: usize, out: &mut Image) -> usize {
+        out.reset(SIDE, SIDE, 3);
+        out.data
+            .copy_from_slice(&self.data[index * PLANE * 3..(index + 1) * PLANE * 3]);
+        self.labels[index]
     }
 }
 

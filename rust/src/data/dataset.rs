@@ -19,6 +19,18 @@ pub trait Dataset: Send + Sync {
     /// Fetch image `index` and its class label.
     fn get(&self, index: usize) -> (Image, usize);
 
+    /// Fetch image `index` into a caller-provided buffer (reshaped via
+    /// [`Image::reset`]) and return its class label. This is the worker
+    /// hot-loop path: with a warm buffer an override allocates nothing,
+    /// eliminating the per-image `Image` heap traffic of [`Dataset::get`].
+    /// The default delegates to `get` (correct but allocating) so
+    /// third-party datasets keep working unchanged.
+    fn get_into(&self, index: usize, out: &mut Image) -> usize {
+        let (img, label) = self.get(index);
+        out.copy_from(&img);
+        label
+    }
+
     /// Indices grouped by class — the structure SBS sampling needs.
     /// Default implementation scans the whole dataset once.
     fn indices_by_class(&self) -> Vec<Vec<usize>> {
@@ -63,6 +75,11 @@ impl Dataset for MemDataset {
     fn get(&self, index: usize) -> (Image, usize) {
         (self.images[index].clone(), self.labels[index])
     }
+
+    fn get_into(&self, index: usize, out: &mut Image) -> usize {
+        out.copy_from(&self.images[index]);
+        self.labels[index]
+    }
 }
 
 /// Cheap label-only override: `indices_by_class` for a `MemDataset` without
@@ -100,6 +117,20 @@ mod tests {
         let (img, l) = d.get(4);
         assert_eq!(l, 1);
         assert_eq!(img.data, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn get_into_matches_get_and_reuses_the_buffer() {
+        let d = tiny();
+        let mut buf = Image::zeros(2, 2, 1);
+        let cap = buf.data.capacity();
+        for i in 0..d.len() {
+            let label = d.get_into(i, &mut buf);
+            let (img, l) = d.get(i);
+            assert_eq!(buf, img, "image {i}");
+            assert_eq!(label, l, "label {i}");
+            assert_eq!(buf.data.capacity(), cap, "buffer reallocated at {i}");
+        }
     }
 
     #[test]

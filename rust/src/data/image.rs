@@ -37,6 +37,25 @@ impl Image {
     pub fn pixels(&self) -> usize {
         self.h * self.w * self.c
     }
+
+    /// Re-shape in place for reuse as a staging buffer (the
+    /// [`Dataset::get_into`](crate::data::dataset::Dataset::get_into) hot
+    /// path): the existing allocation is kept when large enough. Contents
+    /// are **unspecified** (only newly grown regions are zero-filled) —
+    /// callers overwrite every pixel.
+    pub fn reset(&mut self, h: usize, w: usize, c: usize) {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.resize(h * w * c, 0);
+    }
+
+    /// Copy `src` into `self`, reusing `self`'s allocation (shape is
+    /// adopted from `src`). With warm capacity this never allocates.
+    pub fn copy_from(&mut self, src: &Image) {
+        self.reset(src.h, src.w, src.c);
+        self.data.copy_from_slice(&src.data);
+    }
 }
 
 /// A batch of same-shaped uint8 images, contiguous NHWC.
@@ -167,6 +186,22 @@ mod tests {
         assert_eq!(img.get(2, 3, 1), 200);
         assert_eq!(img.get(2, 3, 0), 0);
         assert_eq!(img.pixels(), 60);
+    }
+
+    #[test]
+    fn image_reset_keeps_allocation_and_copy_from_matches() {
+        let mut buf = Image::zeros(8, 8, 3);
+        buf.data.fill(7);
+        let cap = buf.data.capacity();
+        buf.reset(4, 4, 3);
+        assert_eq!((buf.h, buf.w, buf.c), (4, 4, 3));
+        assert_eq!(buf.data.len(), 48);
+        assert_eq!(buf.data.capacity(), cap, "reset must keep the allocation");
+        let mut src = Image::zeros(2, 3, 1);
+        src.data.copy_from_slice(&[1, 2, 3, 4, 5, 6]);
+        buf.copy_from(&src);
+        assert_eq!(buf, src);
+        assert_eq!(buf.data.capacity(), cap, "copy_from must keep the allocation");
     }
 
     #[test]

@@ -18,10 +18,12 @@
 //!   [`BatchPlan`] per step, in step order, into a bounded queue.
 //! * **Workers** (`num_workers` threads) pull plans, materialize them
 //!   (fetch + augment, [`materialize_plan_arena`]) into a thread-local
-//!   staging batch — label rows staged in a small per-worker
-//!   [`ArenaAllocator`] slab — and encode/widen into payload buffers drawn
-//!   from the shared [`BufferPool`]. Materialization is a pure function of
-//!   the plan, so any thread may produce any step.
+//!   staging batch — label rows and fetch images staged in a per-worker
+//!   [`StageScratch`] (slab + recycled [`Dataset::get_into`] buffers) —
+//!   and encode/widen into payload buffers drawn from the shared
+//!   [`BufferPool`]. Materialization is a pure function of the plan, so
+//!   any thread may produce any step, and the whole fetch→augment→encode
+//!   loop allocates nothing at steady state.
 //! * The **sequencer** restores step order with a reorder buffer and feeds
 //!   the bounded output channel (depth `prefetch_depth`). A permit gate
 //!   ([`Gate`]) provides the Figure-1 backpressure with a hard bound: at
@@ -60,8 +62,7 @@ use crate::data::dataset::Dataset;
 use crate::data::encode::{encode_batch_grouped_into, EncodeError, EncodeSpec, EncodedBatch};
 use crate::data::image::ImageBatch;
 use crate::data::pool::BufferPool;
-use crate::data::sampler::{materialize_plan_arena, BatchPlan, ClassSpec, SbsSampler};
-use crate::memory::arena::ArenaAllocator;
+use crate::data::sampler::{materialize_plan_arena, BatchPlan, ClassSpec, SbsSampler, StageScratch};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
@@ -269,10 +270,10 @@ struct ProducerCtx {
 }
 
 impl ProducerCtx {
-    /// Per-worker staging-scratch arena sized for the two label rows
-    /// [`materialize_plan_arena`] stages per slot.
-    fn worker_scratch(&self) -> ArenaAllocator {
-        ArenaAllocator::new(2 * self.dataset.num_classes() * 4)
+    /// Per-worker staging scratch: the label-row slab plus the recycled
+    /// fetch-image buffers [`materialize_plan_arena`] stages through.
+    fn worker_scratch(&self) -> StageScratch {
+        StageScratch::new(self.dataset.num_classes())
     }
 
     /// Materialize + encode one plan, accounting to worker `wid`.
@@ -281,7 +282,7 @@ impl ProducerCtx {
         wid: usize,
         plan: &BatchPlan,
         stage: &mut ImageBatch,
-        scratch: &mut ArenaAllocator,
+        scratch: &mut StageScratch,
     ) -> BatchPayload {
         let t0 = Instant::now();
         let (h, w, c) = self.dataset.shape();
@@ -322,8 +323,8 @@ pub enum EdLoader {
         pool: Arc<BufferPool>,
         /// Reused staging batch (allocated once per loader).
         stage: ImageBatch,
-        /// Label-row staging scratch (one slab, recycled per batch).
-        scratch: ArenaAllocator,
+        /// Staging scratch (label-row slab + fetch images, recycled).
+        scratch: StageScratch,
     },
     Par {
         rx: Receiver<BatchPayload>,
@@ -368,7 +369,7 @@ impl EdLoader {
             LoaderMode::Synchronous => {
                 let (h, w, c) = dataset.shape();
                 let stage = ImageBatch::zeros(sampler.batch_size, h, w, c, dataset.num_classes());
-                let scratch = ArenaAllocator::new(2 * dataset.num_classes() * 4);
+                let scratch = StageScratch::new(dataset.num_classes());
                 EdLoader::Sync {
                     dataset,
                     sampler,

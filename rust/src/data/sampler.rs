@@ -26,7 +26,7 @@
 
 use crate::data::augment::AugPolicy;
 use crate::data::dataset::Dataset;
-use crate::data::image::ImageBatch;
+use crate::data::image::{Image, ImageBatch};
 use crate::memory::arena::ArenaAllocator;
 use crate::util::rng::Rng;
 
@@ -97,34 +97,82 @@ pub fn materialize_plan_into(
     let k = out.num_classes;
     let mut label_row = vec![0.0f32; k];
     let mut prow = vec![0.0f32; k];
-    materialize_core(specs, dataset, plan, out, &mut label_row, &mut prow);
+    let mut img = Image::zeros(0, 0, 0);
+    let mut partner = Image::zeros(0, 0, 0);
+    materialize_core(
+        specs, dataset, plan, out, &mut label_row, &mut prow, &mut img, &mut partner,
+    );
 }
 
-/// [`materialize_plan_into`] with the per-slot label staging rows placed
-/// in `scratch` (one recycled slab per worker) instead of fresh heap
-/// vectors, so the worker hot loop's scratch path allocates nothing at
-/// steady state. An undersized slab falls back to the heap — counted by
-/// [`ArenaAllocator::fallback_allocs`], surfaced per worker in
-/// `LoaderStats`.
+/// Per-worker staging scratch for [`materialize_plan_arena`]: the
+/// label-row slab plus the two recycled [`Image`] buffers the slot loop
+/// fetches into via [`Dataset::get_into`]. One per worker, reused across
+/// every batch, so the materialize hot loop performs **zero** heap
+/// allocations at steady state — the per-image `Image` that
+/// [`Dataset::get`] used to return was the last heap traffic in the
+/// worker hot loop.
+#[derive(Debug)]
+pub struct StageScratch {
+    /// Label-row slab (two `num_classes`-wide f32 rows per batch).
+    arena: ArenaAllocator,
+    /// Slot image, fetched and augmented in place.
+    img: Image,
+    /// MixUp/CutMix partner image.
+    partner: Image,
+}
+
+impl StageScratch {
+    /// Scratch sized for `num_classes` label rows; image buffers warm up
+    /// to the dataset's shape on first use and then stay put.
+    pub fn new(num_classes: usize) -> StageScratch {
+        StageScratch {
+            arena: ArenaAllocator::new(2 * num_classes * 4),
+            img: Image::zeros(0, 0, 0),
+            partner: Image::zeros(0, 0, 0),
+        }
+    }
+
+    /// Label-row requests the slab could not serve (see
+    /// [`ArenaAllocator::fallback_allocs`]); 0 ⇒ the scratch path ran
+    /// entirely in the per-worker slab.
+    pub fn fallback_allocs(&self) -> u64 {
+        self.arena.fallback_allocs()
+    }
+}
+
+/// [`materialize_plan_into`] with every staging buffer drawn from one
+/// per-worker [`StageScratch`]: label rows from its recycled slab, slot
+/// and partner images via [`Dataset::get_into`] into its warm buffers. At
+/// steady state the hot loop allocates nothing. An undersized slab falls
+/// back to heap label rows — counted by [`StageScratch::fallback_allocs`],
+/// surfaced per worker in `LoaderStats`.
 pub fn materialize_plan_arena(
     specs: &[ClassSpec],
     dataset: &dyn Dataset,
     plan: &BatchPlan,
     out: &mut ImageBatch,
-    scratch: &mut ArenaAllocator,
+    scratch: &mut StageScratch,
 ) {
     let k = out.num_classes;
-    scratch.begin_step();
-    match scratch.alloc_f32(2 * k) {
+    let StageScratch { arena, img, partner } = scratch;
+    arena.begin_step();
+    match arena.alloc_f32(2 * k) {
         Some(handle) => {
-            let rows = scratch.f32_mut(&handle);
+            let rows = arena.f32_mut(&handle);
             let (label_row, prow) = rows.split_at_mut(k);
-            materialize_core(specs, dataset, plan, out, label_row, prow);
+            materialize_core(specs, dataset, plan, out, label_row, prow, img, partner);
         }
-        None => materialize_plan_into(specs, dataset, plan, out),
+        None => {
+            let mut label_row = vec![0.0f32; k];
+            let mut prow = vec![0.0f32; k];
+            materialize_core(
+                specs, dataset, plan, out, &mut label_row, &mut prow, img, partner,
+            );
+        }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn materialize_core(
     specs: &[ClassSpec],
     dataset: &dyn Dataset,
@@ -132,22 +180,24 @@ fn materialize_core(
     out: &mut ImageBatch,
     label_row: &mut [f32],
     prow: &mut [f32],
+    img: &mut Image,
+    partner: &mut Image,
 ) {
     assert_eq!(out.n, plan.len(), "output batch not sized for the plan");
     for (slot, item) in plan.items.iter().enumerate() {
-        let partner = item.partner.map(|p| dataset.get(p));
-        let (mut img, label) = dataset.get(item.index);
+        let partner_label = item.partner.map(|p| dataset.get_into(p, partner));
+        let label = dataset.get_into(item.index, img);
         debug_assert_eq!(label, item.class);
         label_row.fill(0.0);
         label_row[label] = 1.0;
         let mut rng = item.rng.clone();
         let policy = &specs[item.class].policy;
-        if let Some((pimg, plabel)) = &partner {
+        if let Some(plabel) = partner_label {
             prow.fill(0.0);
-            prow[*plabel] = 1.0;
-            policy.apply(&mut img, label_row, Some((pimg, &*prow)), &mut rng);
+            prow[plabel] = 1.0;
+            policy.apply(img, label_row, Some((&*partner, &*prow)), &mut rng);
         } else {
-            policy.apply(&mut img, label_row, None, &mut rng);
+            policy.apply(img, label_row, None, &mut rng);
         }
         let dst = plan.perm[slot];
         out.image_mut(dst).copy_from_slice(&img.data);
@@ -351,13 +401,14 @@ impl SbsSampler {
         materialize_plan_into(&self.specs, dataset, &plan, out);
     }
 
-    /// [`SbsSampler::next_batch_into`] with label staging scratch drawn
-    /// from `scratch` (see [`materialize_plan_arena`]).
+    /// [`SbsSampler::next_batch_into`] with every staging buffer (label
+    /// rows + fetch images) drawn from `scratch` (see
+    /// [`materialize_plan_arena`]).
     pub fn next_batch_arena(
         &mut self,
         dataset: &dyn Dataset,
         out: &mut ImageBatch,
-        scratch: &mut ArenaAllocator,
+        scratch: &mut StageScratch,
     ) {
         let (h, w, c) = dataset.shape();
         out.reset(self.batch_size, h, w, c, dataset.num_classes());
@@ -444,7 +495,7 @@ mod tests {
         let mut heap = SbsSampler::uniform(&d, 10, policy.clone(), 9).unwrap();
         let mut arena = SbsSampler::uniform(&d, 10, policy, 9).unwrap();
         // slab sized for the two k-wide label rows → zero fallbacks
-        let mut scratch = ArenaAllocator::new(2 * 5 * 4);
+        let mut scratch = StageScratch::new(5);
         let (h, w, c) = d.shape();
         let mut a = ImageBatch::zeros(10, h, w, c, 5);
         let mut b = ImageBatch::zeros(10, h, w, c, 5);
@@ -455,8 +506,8 @@ mod tests {
             assert_eq!(a.labels, b.labels, "labels must be identical");
         }
         assert_eq!(scratch.fallback_allocs(), 0, "sized slab must serve every step");
-        // an undersized slab falls back to the heap path, byte-identically
-        let mut tiny = ArenaAllocator::new(0);
+        // an undersized slab falls back to heap label rows, byte-identically
+        let mut tiny = StageScratch { arena: ArenaAllocator::new(0), ..StageScratch::new(5) };
         heap.next_batch_into(&d, &mut a);
         arena.next_batch_arena(&d, &mut b, &mut tiny);
         assert_eq!(a.data, b.data);

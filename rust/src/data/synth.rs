@@ -73,6 +73,16 @@ impl SynthCifar {
     /// Generate image `index`. Label is `index % num_classes`, so every
     /// class is equally represented in both splits.
     pub fn generate(&self, index: usize) -> (Image, usize) {
+        let mut img = Image::zeros(self.h, self.w, 3);
+        let class = self.generate_into(index, &mut img);
+        (img, class)
+    }
+
+    /// [`SynthCifar::generate`] into a caller-provided buffer (reshaped
+    /// via [`Image::reset`]); every pixel is overwritten, and with a warm
+    /// buffer nothing allocates. Byte-identical to `generate` for the
+    /// same `(seed, split, index)`.
+    pub fn generate_into(&self, index: usize, img: &mut Image) -> usize {
         let class = index % self.num_classes;
         let p = self.class_params(class);
         let split_tag = match self.split {
@@ -90,7 +100,7 @@ impl SynthCifar {
             self.w as f64 * (0.35 + 0.3 * r.f64()),
         );
 
-        let mut img = Image::zeros(self.h, self.w, 3);
+        img.reset(self.h, self.w, 3);
         let (sin_a, cos_a) = p.angle.sin_cos();
         for y in 0..self.h {
             for x in 0..self.w {
@@ -118,7 +128,7 @@ impl SynthCifar {
                 }
             }
         }
-        (img, class)
+        class
     }
 }
 
@@ -147,6 +157,11 @@ impl Dataset for SynthCifar {
         assert!(index < self.len, "index {index} out of range {}", self.len);
         self.generate(index)
     }
+
+    fn get_into(&self, index: usize, out: &mut Image) -> usize {
+        assert!(index < self.len, "index {index} out of range {}", self.len);
+        self.generate_into(index, out)
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +175,20 @@ mod tests {
         let (b, lb) = d.get(13);
         assert_eq!(a, b);
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn get_into_is_byte_identical_to_get() {
+        let d = SynthCifar::cifar10(Split::Train, 64, 7);
+        let mut buf = Image::zeros(32, 32, 3);
+        let cap = buf.data.capacity();
+        for i in [0usize, 3, 13, 63] {
+            let label = d.get_into(i, &mut buf);
+            let (img, l) = d.get(i);
+            assert_eq!(buf, img, "index {i}");
+            assert_eq!(label, l, "index {i}");
+            assert_eq!(buf.data.capacity(), cap, "buffer reallocated at {i}");
+        }
     }
 
     #[test]

@@ -47,6 +47,14 @@
 //! predicted-stall model — when `memory_budget` sits below even the
 //! packed slab.
 //!
+//! **The primary planning surface is
+//! [`PlanRequest`](memory::pipeline::PlanRequest)**: one typed builder
+//! drives the whole plan → pack → spill composition and returns a staged
+//! [`PlanOutcome`](memory::outcome::PlanOutcome) with unified accessors
+//! and stable JSON/markdown renderers. The trainer, the `plan` CLI and
+//! the memory benches all plan through it; the per-subsystem free
+//! functions remain the documented low-level API.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -56,6 +64,28 @@
 //! let mut trainer = Trainer::from_config(&cfg).unwrap();
 //! let report = trainer.run().unwrap();
 //! println!("final accuracy {:.3}", report.final_eval_accuracy);
+//! ```
+//!
+//! Planning without training — one request stages the whole memory
+//! pipeline:
+//!
+//! ```no_run
+//! use optorch::prelude::*;
+//!
+//! let outcome = PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+//!     .pipeline(Pipeline::parse("sc").unwrap())
+//!     .batch(8)
+//!     .memory_budget(512 * 1024 * 1024)
+//!     .frontier(true)
+//!     .run()
+//!     .unwrap();
+//! println!(
+//!     "{} checkpoints, device bytes {}, spills: {}",
+//!     outcome.plan.checkpoints.len(),
+//!     outcome.device_peak_packed(),
+//!     outcome.is_spill(),
+//! );
+//! println!("{}", outcome.to_json().to_string());
 //! ```
 
 pub mod cli;
@@ -82,7 +112,9 @@ pub mod prelude {
         plan_spill, select_for_budget, simulate_overlap, OffloadEngine, OffloadReport,
         OverlapModel, SpillPlan,
     };
+    pub use crate::memory::outcome::PlanOutcome;
     pub use crate::memory::peak::PeakEvaluator;
+    pub use crate::memory::pipeline::{parse_bytes_field, PlanError, PlanRequest};
     pub use crate::memory::planner::{
         pareto_frontier, plan_checkpoints, plan_for_budget, plan_for_budget_packed,
         CheckpointPlan, PlannerKind,

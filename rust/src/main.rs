@@ -1,19 +1,16 @@
 //! `optorch` launcher — the Layer-3 entrypoint.
 //!
 //! See `optorch help` (or [`optorch::cli::USAGE`]) for the command set.
+//! Every planning surface (`plan`, `memsim`'s S-C placement, the
+//! trainer's budget composition) drives the memory stack through one
+//! typed [`PlanRequest`] → [`PlanOutcome`] pipeline.
 
 use anyhow::{anyhow, Result};
 use optorch::cli::{Cli, USAGE};
-use optorch::config::{parse_bytes, Pipeline, TrainConfig};
+use optorch::config::{Pipeline, TrainConfig};
 use optorch::coordinator::{report, Trainer};
-use optorch::memory::arena::{plan_arena, summarize};
-use optorch::memory::offload::{
-    select_for_budget, OverlapModel, DEFAULT_DEVICE_FLOPS_PER_SEC, DEFAULT_HOST_BW_BYTES_PER_SEC,
-};
-use optorch::memory::planner::{
-    pareto_frontier, plan_checkpoints, plan_for_budget_packed, PlannerKind,
-    DEFAULT_FRONTIER_LEVELS,
-};
+use optorch::memory::outcome::PlanOutcome;
+use optorch::memory::pipeline::{PlanError, PlanRequest};
 use optorch::memory::simulator::simulate;
 use optorch::models::{all_arch_names, arch_by_name};
 use optorch::util::bench::{fmt_bytes, Table};
@@ -93,7 +90,16 @@ fn cmd_memsim(cli: &Cli) -> Result<()> {
     let arch = arch_by_name(model, (h, w, 3), classes)
         .ok_or_else(|| anyhow!("unknown model '{model}' (try `optorch models`)"))?;
     let ckpts = if pipeline.sc {
-        plan_checkpoints(&arch, PlannerKind::Optimal, pipeline, batch).checkpoints
+        // One facade drive for the placement; the simulation below uses
+        // the pipeline exactly as given (memsim also models non-S-C).
+        PlanRequest::for_arch(arch.clone())
+            .pipeline(pipeline)
+            .batch(batch)
+            .arena(false)
+            .run()
+            .map_err(|e| anyhow!(e.to_string()))?
+            .plan
+            .checkpoints
     } else {
         vec![]
     };
@@ -112,149 +118,194 @@ fn cmd_memsim(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Attach the CLI's budget hint to a packed-infeasibility error.
+fn plan_err(e: PlanError) -> anyhow::Error {
+    match e {
+        e @ PlanError::BudgetBelowPacked(_) => {
+            anyhow!("{e} — try `plan --spill <budget>` for a host-spill plan")
+        }
+        e => anyhow!(e.to_string()),
+    }
+}
+
 fn cmd_plan(cli: &Cli) -> Result<()> {
     let model = cli.get("model").unwrap_or("resnet18");
     let batch = cli.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap_or(16);
     let h = cli.get_usize("height").map_err(|e| anyhow!(e))?.unwrap_or(224);
-    let arch = arch_by_name(model, (h, h, 3), 1000)
-        .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-    let kinds: Vec<PlannerKind> = match cli.get("kind") {
-        Some(k) => vec![PlannerKind::parse(k).map_err(|e| anyhow!(e))?],
-        None => vec![
-            PlannerKind::Uniform(4),
-            PlannerKind::Sqrt,
-            PlannerKind::Bottleneck(4),
-            PlannerKind::Optimal,
-        ],
+    let lookahead = cli.get_usize("lookahead").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1);
+    let want_arena = cli.has_flag("arena");
+    let want_frontier = cli.has_flag("frontier") || cli.get("budget").is_some();
+
+    // Every drive below derives from this scaffold; unknown models and
+    // bad byte counts surface as the facade's typed errors.
+    let mut base = PlanRequest::for_model(model, (h, h, 3), 1000)
+        .batch(batch)
+        .spill_lookahead(lookahead);
+    if let Some(bw) = cli.get("host_bw") {
+        base = base.host_bw_field("--host_bw", bw);
+    }
+
+    // Planner kinds for the comparison table; the last (the explicit
+    // --kind, or Optimal in the default set) is the one --arena packs
+    // and --json reports.
+    let kind_specs: Vec<&str> = match cli.get("kind") {
+        Some(k) => vec![k],
+        None => vec!["uniform4", "sqrt", "bottleneck4", "dp"],
     };
+
+    if cli.has_flag("json") {
+        // One fully-staged outcome, rendered as the stable JSON schema
+        // (--spill wins over --budget: it is the stronger composition).
+        let mut req = base
+            .clone()
+            .planner_named(kind_specs.last().expect("kind set is never empty"))
+            .arena(true)
+            .frontier(want_frontier);
+        if let Some(v) = cli.get("spill") {
+            req = req.memory_budget_field("--spill", v);
+        } else if let Some(v) = cli.get("budget") {
+            req = req.memory_budget_field("--budget", v).spill(false);
+        }
+        let outcome = req.run().map_err(plan_err)?;
+        println!("{}", outcome.to_json().to_string());
+        return Ok(());
+    }
+
+    // 1. Planner comparison table; the last kind also stages the --arena
+    //    layout and the --frontier curve (no second planning pass).
     let mut table = Table::new(&["planner", "checkpoints", "peak", "recompute overhead"]);
-    // The last kind in the table (the explicit --kind, or Optimal in the
-    // default set) is the one --arena packs — no second planning pass.
-    let mut arena_plan = None;
-    for kind in kinds {
-        let plan = plan_checkpoints(&arch, kind, Pipeline::BASELINE, batch);
+    let mut primary: Option<PlanOutcome> = None;
+    for (i, spec) in kind_specs.iter().enumerate() {
+        let last = i + 1 == kind_specs.len();
+        let outcome = base
+            .clone()
+            .planner_named(spec)
+            .arena(last && want_arena)
+            .frontier(last && want_frontier)
+            .run()
+            .map_err(plan_err)?;
         table.row(&[
-            format!("{kind:?}"),
-            format!("{:?}", plan.checkpoints),
-            fmt_bytes(plan.peak_bytes),
-            format!("{:.1}% of fwd FLOPs", plan.recompute_overhead * 100.0),
+            format!("{:?}", outcome.plan.kind),
+            format!("{:?}", outcome.plan.checkpoints),
+            fmt_bytes(outcome.plan.peak_bytes),
+            format!("{:.1}% of fwd FLOPs", outcome.plan.recompute_overhead * 100.0),
         ]);
-        arena_plan = Some((kind, plan));
+        if last {
+            primary = Some(outcome);
+        }
     }
     table.print();
+    let primary = primary.expect("at least one planner kind is always run");
 
-    if cli.has_flag("arena") {
-        let (kind, plan) = arena_plan.expect("at least one planner kind is always run");
-        let (lifetimes, layout) = plan_arena(&arch, Pipeline::BASELINE, batch, &plan.checkpoints);
-        let rep = summarize(&lifetimes, &layout);
-        println!(
-            "\nactivation arena ({model}, batch {batch}, {kind:?} plan): \
-             slab {} + static {} = {} vs simulated peak {} — fragmentation {:.3}x, {} tensors",
-            fmt_bytes(rep.slab_bytes),
-            fmt_bytes(rep.base_bytes),
-            fmt_bytes(layout.total_bytes()),
-            fmt_bytes(rep.peak_bytes),
-            rep.fragmentation,
-            rep.tensor_count,
-        );
-        let mut t = Table::new(&["class", "tensors", "bytes", "first offsets"]);
-        for c in &rep.by_class {
-            let mut offs: Vec<u64> = lifetimes
-                .tensors
-                .iter()
-                .enumerate()
-                .filter(|(_, tl)| tl.class == c.class)
-                .map(|(i, _)| layout.offsets[i])
-                .collect();
-            offs.sort_unstable();
-            offs.dedup();
-            let shown = offs
-                .iter()
-                .take(4)
-                .map(|o| o.to_string())
-                .collect::<Vec<_>>()
-                .join(", ");
-            let suffix = if offs.len() > 4 { ", …" } else { "" };
-            t.row(&[
-                c.class.name().to_string(),
-                format!("{}", c.count),
-                fmt_bytes(c.bytes),
-                format!("{shown}{suffix}"),
-            ]);
-        }
-        t.print();
+    // 2. --arena: the packed slab of the primary plan.
+    if want_arena {
+        print_arena(&primary, model, batch);
     }
 
-    let budget = match cli.get("budget") {
-        Some(b) => Some(parse_bytes(b).map_err(|e| anyhow!("--budget: {e}"))?),
-        None => None,
-    };
-    if budget.is_some() || cli.has_flag("frontier") {
-        let frontier = pareto_frontier(&arch, Pipeline::BASELINE, batch, DEFAULT_FRONTIER_LEVELS);
+    // 3. --frontier (also staged for --budget, matching the legacy CLI).
+    if let Some(frontier) = &primary.frontier {
         println!("\ntime/memory Pareto frontier ({} points):\n", frontier.len());
-        report::frontier_table(&frontier).print();
-        if let Some(b) = budget {
-            // fit decision on *packed* totals (base + slab), so packing
-            // fragmentation participates
-            let (plan, _, layout) = plan_for_budget_packed(&arch, Pipeline::BASELINE, batch, b)
-                .map_err(|e| anyhow!("{e} — try `plan --spill <budget>` for a host-spill plan"))?;
-            println!(
-                "\nbudget {}: cheapest-time plan fits at packed total {} (simulated peak {}) \
-                 with {} checkpoints {:?} (+{:.1}% fwd FLOPs)",
-                fmt_bytes(b),
-                fmt_bytes(layout.total_bytes()),
-                fmt_bytes(plan.peak_bytes),
-                plan.checkpoints.len(),
-                plan.checkpoints,
-                plan.recompute_overhead * 100.0
-            );
-        }
+        report::frontier_table(frontier).print();
     }
 
-    if let Some(s) = cli.get("spill") {
-        let budget = parse_bytes(s).map_err(|e| anyhow!("--spill: {e}"))?;
-        cmd_plan_spill(cli, &arch, batch, budget)?;
+    // 4. --budget: fit decision on *packed* totals, no spilling allowed.
+    if let Some(v) = cli.get("budget") {
+        let outcome = base
+            .clone()
+            .memory_budget_field("--budget", v)
+            .spill(false)
+            .run()
+            .map_err(plan_err)?;
+        println!(
+            "\nbudget {}: cheapest-time plan fits at packed total {} (simulated peak {}) \
+             with {} checkpoints {:?} (+{:.1}% fwd FLOPs)",
+            fmt_bytes(outcome.budget.expect("budgeted request")),
+            fmt_bytes(outcome.device_peak_packed()),
+            fmt_bytes(outcome.plan.peak_bytes),
+            outcome.plan.checkpoints.len(),
+            outcome.plan.checkpoints,
+            outcome.plan.recompute_overhead * 100.0
+        );
+    }
+
+    // 5. --spill: the best host-spill composition for the budget.
+    if let Some(v) = cli.get("spill") {
+        let outcome = base.memory_budget_field("--spill", v).run().map_err(plan_err)?;
+        print_spill(&outcome);
     }
     Ok(())
 }
 
-/// `plan --spill <budget>`: compose the best host-spill plan for the
-/// budget and print its per-tensor evict/prefetch table + predicted stall.
-fn cmd_plan_spill(
-    cli: &Cli,
-    arch: &optorch::models::ArchProfile,
-    batch: usize,
-    budget: u64,
-) -> Result<()> {
-    let lookahead = cli.get_usize("lookahead").map_err(|e| anyhow!(e))?.unwrap_or(2).max(1);
-    let host_bw = match cli.get("host_bw") {
-        Some(v) => parse_bytes(v).map_err(|e| anyhow!("--host_bw: {e}"))?,
-        None => DEFAULT_HOST_BW_BYTES_PER_SEC,
+/// `plan --arena` block: slab totals plus per-class first offsets.
+fn print_arena(outcome: &PlanOutcome, model: &str, batch: usize) {
+    let (Some(rep), Some(lifetimes), Some(layout)) =
+        (&outcome.arena, outcome.lifetimes(), outcome.layout())
+    else {
+        return;
     };
-    let model = OverlapModel {
-        host_bw_bytes_per_sec: host_bw as f64,
-        device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
-    };
-    let decision = select_for_budget(arch, Pipeline::BASELINE, batch, budget, lookahead, &model)
-        .map_err(|e| anyhow!(e.to_string()))?;
     println!(
-        "\nhost-spill plan for budget {} (bw {}/s, lookahead {lookahead}):",
-        fmt_bytes(budget),
-        fmt_bytes(host_bw)
+        "\nactivation arena ({model}, batch {batch}, {:?} plan): \
+         slab {} + static {} = {} vs simulated peak {} — fragmentation {:.3}x, {} tensors",
+        outcome.plan.kind,
+        fmt_bytes(rep.slab_bytes),
+        fmt_bytes(rep.base_bytes),
+        fmt_bytes(layout.total_bytes()),
+        fmt_bytes(rep.peak_bytes),
+        rep.fragmentation,
+        rep.tensor_count,
+    );
+    let mut t = Table::new(&["class", "tensors", "bytes", "first offsets"]);
+    for c in &rep.by_class {
+        let mut offs: Vec<u64> = lifetimes
+            .tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, tl)| tl.class == c.class)
+            .map(|(i, _)| layout.offsets[i])
+            .collect();
+        offs.sort_unstable();
+        offs.dedup();
+        let shown = offs
+            .iter()
+            .take(4)
+            .map(|o| o.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let suffix = if offs.len() > 4 { ", …" } else { "" };
+        t.row(&[
+            c.class.name().to_string(),
+            format!("{}", c.count),
+            fmt_bytes(c.bytes),
+            format!("{shown}{suffix}"),
+        ]);
+    }
+    t.print();
+}
+
+/// `plan --spill` block: the per-tensor evict/prefetch table + predicted
+/// stall of a budgeted outcome.
+fn print_spill(outcome: &PlanOutcome) {
+    let Some(spill) = &outcome.spill else { return };
+    println!(
+        "\nhost-spill plan for budget {} (bw {}/s, lookahead {}):",
+        fmt_bytes(outcome.budget.expect("budgeted request")),
+        fmt_bytes(outcome.host_bw),
+        outcome.lookahead,
     );
     println!(
         "  plan: {} checkpoints {:?} (+{:.1}% fwd FLOPs), device total {} = static {} + \
          resident slab {}",
-        decision.plan.checkpoints.len(),
-        decision.plan.checkpoints,
-        decision.plan.recompute_overhead * 100.0,
-        fmt_bytes(decision.spill.device_total()),
-        fmt_bytes(decision.spill.layout.base_bytes),
-        fmt_bytes(decision.spill.layout.slab_bytes),
+        outcome.plan.checkpoints.len(),
+        outcome.plan.checkpoints,
+        outcome.plan.recompute_overhead * 100.0,
+        fmt_bytes(spill.device_total()),
+        fmt_bytes(spill.layout.base_bytes),
+        fmt_bytes(spill.layout.slab_bytes),
     );
-    if decision.is_spill() {
+    let Some(overlap) = &outcome.overlap else { return };
+    if outcome.is_spill() {
         let mut t = Table::new(&["layer", "bytes", "evict@", "prefetch@", "need@", "idle steps"]);
-        for s in &decision.spill.steps {
+        for s in &spill.steps {
             t.row(&[
                 format!("{}", s.layer),
                 fmt_bytes(s.bytes),
@@ -268,20 +319,19 @@ fn cmd_plan_spill(
         println!(
             "  {} tensors spilled ({} out, host peak {}) — predicted stall {:.3} ms/step \
              ({:.1}% of {:.3} ms predicted step)",
-            decision.spill.steps.len(),
-            fmt_bytes(decision.spill.spilled_bytes),
-            fmt_bytes(decision.spill.host_peak_bytes),
-            decision.overlap.stall_secs * 1e3,
-            decision.overlap.stall_frac() * 100.0,
-            decision.overlap.predicted_step_secs * 1e3,
+            spill.steps.len(),
+            fmt_bytes(spill.spilled_bytes),
+            fmt_bytes(spill.host_peak_bytes),
+            overlap.stall_secs * 1e3,
+            overlap.stall_frac() * 100.0,
+            overlap.predicted_step_secs * 1e3,
         );
     } else {
         println!(
             "  fits without spilling — predicted step {:.3} ms (no stall)",
-            decision.overlap.predicted_step_secs * 1e3
+            overlap.predicted_step_secs * 1e3
         );
     }
-    Ok(())
 }
 
 fn cmd_models() -> Result<()> {

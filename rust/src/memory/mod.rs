@@ -13,9 +13,18 @@
 //! when the device budget sits below even the packed slab, it evicts the
 //! coldest checkpoints to host memory with a double-buffered prefetch
 //! schedule and an honest stall prediction.
+//!
+//! **The primary surface is [`pipeline`]**: one typed
+//! [`PlanRequest`](pipeline::PlanRequest) stages the whole
+//! plan → pack → spill composition into a
+//! [`PlanOutcome`](outcome::PlanOutcome) — the trainer, the `plan` CLI
+//! and the memory benches all plan through it. The per-subsystem free
+//! functions below it are the documented low-level API.
 
 pub mod arena;
 pub mod offload;
+pub mod outcome;
 pub mod peak;
+pub mod pipeline;
 pub mod planner;
 pub mod simulator;

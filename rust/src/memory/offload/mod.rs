@@ -82,26 +82,41 @@ pub struct OffloadReport {
 }
 
 impl OffloadReport {
-    /// Build the plan-side half of the report from a decision.
-    pub fn from_decision(
-        decision: &BudgetDecision,
+    /// Build the plan-side half of the report from a spill plan and its
+    /// simulated overlap timeline (runtime counters zeroed until a run
+    /// folds the engine's stats in). The one `SpillPlan`/`OverlapReport`
+    /// → report mapping — `from_decision` and
+    /// [`PlanOutcome::offload_report`](crate::memory::outcome::PlanOutcome::offload_report)
+    /// both delegate here.
+    pub fn from_parts(
+        spill: &SpillPlan,
+        overlap: &OverlapReport,
         host_bw_bytes_per_sec: u64,
         lookahead: usize,
     ) -> OffloadReport {
         OffloadReport {
-            budget: decision.spill.budget,
-            device_total: decision.spill.device_total(),
-            spilled_tensors: decision.spill.steps.len(),
-            spilled_bytes: decision.spill.spilled_bytes,
-            host_peak_bytes: decision.spill.host_peak_bytes,
-            predicted_stall_secs: decision.overlap.stall_secs,
-            predicted_step_secs: decision.overlap.predicted_step_secs,
+            budget: spill.budget,
+            device_total: spill.device_total(),
+            spilled_tensors: spill.steps.len(),
+            spilled_bytes: spill.spilled_bytes,
+            host_peak_bytes: spill.host_peak_bytes,
+            predicted_stall_secs: overlap.stall_secs,
+            predicted_step_secs: overlap.predicted_step_secs,
             host_bw_bytes_per_sec,
             lookahead,
             evictions: 0,
             prefetches: 0,
             pool_hit_rate: 0.0,
         }
+    }
+
+    /// [`OffloadReport::from_parts`] over a whole [`BudgetDecision`].
+    pub fn from_decision(
+        decision: &BudgetDecision,
+        host_bw_bytes_per_sec: u64,
+        lookahead: usize,
+    ) -> OffloadReport {
+        Self::from_parts(&decision.spill, &decision.overlap, host_bw_bytes_per_sec, lookahead)
     }
 
     /// Stall share of the predicted step time.

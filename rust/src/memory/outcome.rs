@@ -1,0 +1,453 @@
+//! [`PlanOutcome`]: the staged results of one [`PlanRequest`] run, plus
+//! the serde-free JSON and markdown renderers every consumer (trainer
+//! report, `plan --json`, benches) shares.
+//!
+//! [`PlanRequest`]: crate::memory::pipeline::PlanRequest
+
+use crate::config::Pipeline;
+use crate::memory::arena::{ArenaLayout, ArenaReport, Lifetimes};
+use crate::memory::offload::{OffloadReport, OverlapReport, SpillPlan};
+use crate::memory::planner::{CheckpointPlan, PlannerKind};
+use crate::memory::simulator::MemoryReport;
+use crate::models::ArchProfile;
+use crate::util::bench::fmt_bytes;
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// Everything one planning run produced. Staged results that were not
+/// requested (or do not apply) are `None`; the unified accessors read
+/// across stages so callers stop re-deriving composites.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    /// The resolved architecture the run planned over.
+    pub arch: ArchProfile,
+    pub pipeline: Pipeline,
+    pub batch: usize,
+    /// The device budget the run was constrained by, if any.
+    pub budget: Option<u64>,
+    /// Overlap-model host bandwidth (bytes/s) the run assumed.
+    pub host_bw: u64,
+    /// Prefetch lookahead (schedule steps) the run assumed.
+    pub lookahead: usize,
+    /// Full simulated timeline under the chosen plan (S-C forced on, so
+    /// `memory.peak_bytes == plan.peak_bytes`).
+    pub memory: MemoryReport,
+    /// The chosen checkpoint plan.
+    pub plan: CheckpointPlan,
+    /// The time/memory Pareto frontier, when requested.
+    pub frontier: Option<Vec<CheckpointPlan>>,
+    /// Packed totals (`base + slab`) per frontier point, staged when both
+    /// the frontier and the arena are requested.
+    pub frontier_packed_totals: Option<Vec<u64>>,
+    /// Per-class arena rollup (resident layout under spilling).
+    pub arena: Option<ArenaReport>,
+    /// Tensor lifetimes behind [`PlanOutcome::layout`] for the non-spill
+    /// paths (the spill path carries its own inside [`SpillPlan`]).
+    pub arena_lifetimes: Option<Lifetimes>,
+    /// Packed layout for the non-spill paths.
+    pub arena_layout: Option<ArenaLayout>,
+    /// The host-spill composition, when a budget was planned with
+    /// spilling enabled (`steps` empty when nothing had to move).
+    pub spill: Option<SpillPlan>,
+    /// The simulated transfer/stall timeline for the budgeted paths.
+    pub overlap: Option<OverlapReport>,
+}
+
+impl PlanOutcome {
+    /// Whether the outcome actually moves bytes to the host.
+    pub fn is_spill(&self) -> bool {
+        self.spill.as_ref().is_some_and(|s| !s.steps.is_empty())
+    }
+
+    /// The packed (resident, under spilling) layout, from whichever stage
+    /// produced it.
+    pub fn layout(&self) -> Option<&ArenaLayout> {
+        self.spill.as_ref().map(|s| &s.layout).or(self.arena_layout.as_ref())
+    }
+
+    /// The tensor lifetimes behind [`PlanOutcome::layout`].
+    pub fn lifetimes(&self) -> Option<&Lifetimes> {
+        self.spill.as_ref().map(|s| &s.lifetimes).or(self.arena_lifetimes.as_ref())
+    }
+
+    /// Device bytes the runtime reserves: the packed `base + slab` when a
+    /// layout was staged, else the exact simulated peak.
+    pub fn device_peak_packed(&self) -> u64 {
+        self.layout().map(ArenaLayout::total_bytes).unwrap_or(self.plan.peak_bytes)
+    }
+
+    /// Predicted wall seconds of one training step (compute + transfer
+    /// stall); `None` when no overlap simulation ran (un-budgeted paths).
+    pub fn predicted_step_secs(&self) -> Option<f64> {
+        self.overlap.as_ref().map(|o| o.predicted_step_secs)
+    }
+
+    /// Whether the outcome's device bytes fit `budget`.
+    pub fn fits(&self, budget: u64) -> bool {
+        self.device_peak_packed() <= budget
+    }
+
+    /// The plan-side offload report (runtime counters zeroed), when the
+    /// outcome spills. The trainer folds engine counters in after a run.
+    pub fn offload_report(&self) -> Option<OffloadReport> {
+        if !self.is_spill() {
+            return None;
+        }
+        Some(OffloadReport::from_parts(
+            self.spill.as_ref()?,
+            self.overlap.as_ref()?,
+            self.host_bw,
+            self.lookahead,
+        ))
+    }
+
+    /// Stable JSON rendering of the whole outcome (the `plan --json`
+    /// schema). Deterministic: same outcome, same bytes.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("arch", s(&self.arch.name)),
+            ("pipeline", s(&self.pipeline.name())),
+            ("batch", n(self.batch as f64)),
+            ("planner", s(&planner_kind_spec(self.plan.kind))),
+            (
+                "plan",
+                obj(vec![
+                    (
+                        "checkpoints",
+                        arr(self.plan.checkpoints.iter().map(|&c| n(c as f64)).collect()),
+                    ),
+                    ("peak_bytes", n(self.plan.peak_bytes as f64)),
+                    ("recompute_overhead", n(self.plan.recompute_overhead)),
+                ]),
+            ),
+            (
+                "memory",
+                obj(vec![
+                    ("peak_bytes", n(self.memory.peak_bytes as f64)),
+                    ("state_bytes", n(self.memory.state_bytes as f64)),
+                    ("input_bytes", n(self.memory.input_bytes as f64)),
+                    ("peak_activation_bytes", n(self.memory.peak_activation_bytes as f64)),
+                ]),
+            ),
+            ("device_peak_packed", n(self.device_peak_packed() as f64)),
+        ];
+        if let Some(b) = self.budget {
+            fields.push(("budget", n(b as f64)));
+        }
+        if let Some(frontier) = &self.frontier {
+            let points = frontier
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let mut pf = vec![
+                        ("peak_bytes", n(p.peak_bytes as f64)),
+                        ("recompute_overhead", n(p.recompute_overhead)),
+                        (
+                            "checkpoints",
+                            arr(p.checkpoints.iter().map(|&c| n(c as f64)).collect()),
+                        ),
+                    ];
+                    // `get` rather than indexing: the parallel-length
+                    // invariant holds for facade-built outcomes, but every
+                    // field is pub and a hand-built outcome must not panic
+                    // the renderer.
+                    if let Some(&total) =
+                        self.frontier_packed_totals.as_ref().and_then(|t| t.get(i))
+                    {
+                        pf.push(("packed_total", n(total as f64)));
+                    }
+                    obj(pf)
+                })
+                .collect();
+            fields.push(("frontier", arr(points)));
+        }
+        if let Some(a) = &self.arena {
+            fields.push((
+                "arena",
+                obj(vec![
+                    ("slab_bytes", n(a.slab_bytes as f64)),
+                    ("base_bytes", n(a.base_bytes as f64)),
+                    ("peak_bytes", n(a.peak_bytes as f64)),
+                    ("tensor_count", n(a.tensor_count as f64)),
+                    ("fragmentation", n(a.fragmentation)),
+                    (
+                        "by_class",
+                        arr(a
+                            .by_class
+                            .iter()
+                            .map(|c| {
+                                obj(vec![
+                                    ("class", s(c.class.name())),
+                                    ("count", n(c.count as f64)),
+                                    ("bytes", n(c.bytes as f64)),
+                                ])
+                            })
+                            .collect()),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(sp) = &self.spill {
+            fields.push((
+                "spill",
+                obj(vec![
+                    ("budget", n(sp.budget as f64)),
+                    ("device_total", n(sp.device_total() as f64)),
+                    ("spilled_bytes", n(sp.spilled_bytes as f64)),
+                    ("host_peak_bytes", n(sp.host_peak_bytes as f64)),
+                    (
+                        "steps",
+                        arr(sp
+                            .steps
+                            .iter()
+                            .map(|st| {
+                                obj(vec![
+                                    ("layer", n(st.layer as f64)),
+                                    ("bytes", n(st.bytes as f64)),
+                                    ("evict_step", n(st.evict_step as f64)),
+                                    ("prefetch_step", n(st.prefetch_step as f64)),
+                                    ("need_step", n(st.need_step as f64)),
+                                    ("gap_steps", n(st.gap_steps as f64)),
+                                ])
+                            })
+                            .collect()),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(ov) = &self.overlap {
+            fields.push((
+                "overlap",
+                obj(vec![
+                    ("compute_secs", n(ov.compute_secs)),
+                    ("transfer_secs", n(ov.transfer_secs)),
+                    ("stall_secs", n(ov.stall_secs)),
+                    ("predicted_step_secs", n(ov.predicted_step_secs)),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+
+    /// Markdown rendering: the same per-stage lines the trainer report
+    /// stitches, under one heading.
+    pub fn to_markdown(&self) -> String {
+        let mut md = format!(
+            "### plan: {} / {} @ batch {}\n\n",
+            self.arch.name,
+            self.pipeline.name(),
+            self.batch
+        );
+        md.push_str(&plan_summary(&self.plan));
+        if let Some(a) = &self.arena {
+            md.push_str(&arena_summary(a));
+        }
+        if let Some(o) = self.offload_report() {
+            md.push_str(&offload_summary(&o));
+        }
+        if let Some(b) = self.budget {
+            md.push_str(&format!(
+                "budget {}: device bytes {} — {}\n",
+                fmt_bytes(b),
+                fmt_bytes(self.device_peak_packed()),
+                if self.is_spill() { "fits with host spilling" } else { "fits without spilling" },
+            ));
+        }
+        if let Some(f) = &self.frontier {
+            md.push('\n');
+            md.push_str(&frontier_markdown(f));
+        }
+        md
+    }
+}
+
+/// Canonical spec string for a planner kind (round-trips through
+/// [`PlannerKind::parse`]).
+pub fn planner_kind_spec(kind: PlannerKind) -> String {
+    match kind {
+        PlannerKind::Sqrt => "sqrt".to_string(),
+        PlannerKind::Optimal => "dp".to_string(),
+        PlannerKind::Uniform(k) => format!("uniform{k}"),
+        PlannerKind::Bottleneck(k) => format!("bottleneck{k}"),
+    }
+}
+
+/// One-line description of the checkpoint plan an S-C run trained under.
+pub fn plan_summary(plan: &CheckpointPlan) -> String {
+    format!(
+        "checkpoint plan: {} checkpoints {:?}, simulated peak {}, recompute +{:.1}% fwd FLOPs\n",
+        plan.checkpoints.len(),
+        plan.checkpoints,
+        fmt_bytes(plan.peak_bytes),
+        plan.recompute_overhead * 100.0
+    )
+}
+
+/// One-line description of the packed activation arena for a plan: slab
+/// vs exact peak (fragmentation) and the per-class mix.
+pub fn arena_summary(a: &ArenaReport) -> String {
+    let classes = a
+        .by_class
+        .iter()
+        .map(|c| format!("{} {}", c.count, c.class.name()))
+        .collect::<Vec<_>>()
+        .join(" · ");
+    format!(
+        "activation arena: slab {} (+ static {}) vs simulated peak {} — \
+         fragmentation {:.2}x, {} tensors ({classes})\n",
+        fmt_bytes(a.slab_bytes),
+        fmt_bytes(a.base_bytes),
+        fmt_bytes(a.peak_bytes),
+        a.fragmentation,
+        a.tensor_count
+    )
+}
+
+/// One-line description of a host-spill composition: what left the
+/// device, what it costs in predicted stall, and — after a run — the
+/// engine's transfer/pool counters.
+pub fn offload_summary(o: &OffloadReport) -> String {
+    let mut s = format!(
+        "host-spill offload: device {} ≤ budget {} — {} checkpoints to host \
+         ({} out, host peak {}), predicted stall {:.2} ms/step ({:.1}% of {:.2} ms), \
+         bw {}/s, lookahead {}\n",
+        fmt_bytes(o.device_total),
+        fmt_bytes(o.budget),
+        o.spilled_tensors,
+        fmt_bytes(o.spilled_bytes),
+        fmt_bytes(o.host_peak_bytes),
+        o.predicted_stall_secs * 1e3,
+        o.stall_frac() * 100.0,
+        o.predicted_step_secs * 1e3,
+        fmt_bytes(o.host_bw_bytes_per_sec),
+        o.lookahead,
+    );
+    if o.evictions > 0 {
+        s.push_str(&format!(
+            "host-spill engine: {} evictions, {} prefetches, pool hit rate {:.1}%\n",
+            o.evictions,
+            o.prefetches,
+            o.pool_hit_rate * 100.0
+        ));
+    }
+    s
+}
+
+/// Time/memory Pareto frontier as CSV:
+/// `peak_mb,n_checkpoints,recompute_overhead,checkpoints`.
+pub fn frontier_csv(plans: &[CheckpointPlan]) -> String {
+    let mut s = String::from("peak_mb,n_checkpoints,recompute_overhead,checkpoints\n");
+    for p in plans {
+        s.push_str(&format!(
+            "{:.1},{},{:.4},{}\n",
+            p.peak_bytes as f64 / (1024.0 * 1024.0),
+            p.checkpoints.len(),
+            p.recompute_overhead,
+            p.checkpoints
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(" ")
+        ));
+    }
+    s
+}
+
+/// Console table of the Pareto frontier (the `plan --frontier` CLI output
+/// and the plan_checkpoints example share this shape).
+pub fn frontier_table(plans: &[CheckpointPlan]) -> crate::util::bench::Table {
+    let mut t = crate::util::bench::Table::new(&["peak", "checkpoints", "recompute overhead"]);
+    for p in plans {
+        t.row(&[
+            fmt_bytes(p.peak_bytes),
+            format!("{}", p.checkpoints.len()),
+            format!("{:.1}%", p.recompute_overhead * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Markdown table of the Pareto frontier (EXPERIMENTS.md fragments).
+pub fn frontier_markdown(plans: &[CheckpointPlan]) -> String {
+    let mut s = String::from("| peak | checkpoints | recompute overhead |\n|---|---|---|\n");
+    for p in plans {
+        s.push_str(&format!(
+            "| {} | {} | {:.1}% |\n",
+            fmt_bytes(p.peak_bytes),
+            p.checkpoints.len(),
+            p.recompute_overhead * 100.0
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::pipeline::PlanRequest;
+
+    fn sc() -> Pipeline {
+        Pipeline::parse("sc").unwrap()
+    }
+
+    #[test]
+    fn planner_spec_roundtrips() {
+        for kind in [
+            PlannerKind::Sqrt,
+            PlannerKind::Optimal,
+            PlannerKind::Uniform(4),
+            PlannerKind::Bottleneck(2),
+        ] {
+            assert_eq!(PlannerKind::parse(&planner_kind_spec(kind)).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn json_has_the_stable_top_level_keys() {
+        let out = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(sc())
+            .batch(8)
+            .frontier(true)
+            .run()
+            .unwrap();
+        let j = out.to_json();
+        for key in ["arch", "pipeline", "batch", "planner", "plan", "memory", "device_peak_packed", "frontier", "arena"]
+        {
+            assert!(j.get(key).is_some(), "missing key '{key}'");
+        }
+        assert_eq!(j.get("arch").unwrap().as_str().unwrap(), "tiny_cnn");
+        assert_eq!(
+            j.get("plan").unwrap().get("peak_bytes").unwrap().as_f64().unwrap() as u64,
+            out.plan.peak_bytes
+        );
+        // no budget ⇒ no budget/spill/overlap keys
+        assert!(j.get("budget").is_none());
+        assert!(j.get("spill").is_none());
+    }
+
+    #[test]
+    fn json_rendering_is_deterministic() {
+        let req = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(sc())
+            .batch(8)
+            .frontier(true);
+        let a = req.run().unwrap().to_json().to_string();
+        let b = req.run().unwrap().to_json().to_string();
+        assert_eq!(a, b);
+        // and the text re-parses
+        crate::util::json::Json::parse(&a).unwrap();
+    }
+
+    #[test]
+    fn markdown_mentions_every_staged_section() {
+        let out = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(sc())
+            .batch(8)
+            .frontier(true)
+            .run()
+            .unwrap();
+        let md = out.to_markdown();
+        assert!(md.contains("checkpoint plan:"), "{md}");
+        assert!(md.contains("activation arena:"), "{md}");
+        assert!(md.contains("| peak |"), "{md}");
+    }
+}

@@ -1,0 +1,648 @@
+//! The unified memory-pipeline facade: one typed request in, one staged
+//! outcome out.
+//!
+//! The memory stack spans four subsystems — the simulator/`PeakEvaluator`
+//! ([`crate::memory::simulator`], [`crate::memory::peak`]), the DP
+//! checkpoint planner and its Pareto frontier
+//! ([`crate::memory::planner`]), the activation arena
+//! ([`crate::memory::arena`]) and the host-spill offload engine
+//! ([`crate::memory::offload`]). MONeT (Shah et al., 2020) and OLLA
+//! (Steiner et al., 2022) both argue that checkpointing, lifetime packing
+//! and offload must be planned *jointly*; composing the free functions by
+//! hand at every call site makes joint decisions structurally awkward.
+//! [`PlanRequest`] is the one optimization surface: a builder naming the
+//! architecture, pipeline, batch, planner kind and budget/spill knobs,
+//! whose [`PlanRequest::run`] stages the whole composition into a
+//! [`PlanOutcome`](crate::memory::outcome::PlanOutcome) — or a typed
+//! [`PlanError`].
+//!
+//! The free functions remain available as the documented low-level API
+//! (benches and tests exercise them directly); the trainer, the CLI and
+//! the memory benches all drive planning through this facade.
+//!
+//! ```no_run
+//! use optorch::prelude::*;
+//!
+//! let outcome = PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+//!     .batch(8)
+//!     .memory_budget(512 * 1024 * 1024)
+//!     .run()
+//!     .unwrap();
+//! println!(
+//!     "device bytes {} (fits: {}), predicted step {:?} s",
+//!     outcome.device_peak_packed(),
+//!     outcome.fits(512 * 1024 * 1024),
+//!     outcome.predicted_step_secs(),
+//! );
+//! ```
+
+use crate::config::{parse_bytes, Pipeline};
+use crate::memory::arena::{plan_arena, summarize, Lifetimes};
+use crate::memory::offload::{
+    plan_spill, select_for_budget, simulate_overlap, InfeasibleBudget, OverlapModel,
+    DEFAULT_DEVICE_FLOPS_PER_SEC, DEFAULT_HOST_BW_BYTES_PER_SEC,
+};
+use crate::memory::outcome::PlanOutcome;
+use crate::memory::peak::PeakEvaluator;
+use crate::memory::planner::{
+    pareto_frontier, plan_checkpoints, plan_for_budget_packed, recompute_overhead,
+    CheckpointPlan, InfeasiblePacked, PlannerKind, DEFAULT_FRONTIER_LEVELS,
+};
+use crate::memory::simulator::simulate;
+use crate::models::{arch_by_name, ArchProfile};
+
+/// Typed failure modes of [`PlanRequest::run`], absorbing the stack's
+/// previously stringly errors. Every variant renders the same message the
+/// legacy free functions produced, so CLI/config error text is stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// The named model has no analytic architecture profile to plan over.
+    UnknownArch { model: String },
+    /// The planner spec did not parse ([`PlannerKind::parse`]'s message).
+    UnknownPlanner { reason: String },
+    /// A byte-count flag/field did not parse; `field` names the offending
+    /// source (`--budget`, `--spill`, `memory_budget`, `device_budget`, …).
+    InvalidBytes { field: String, reason: String },
+    /// The budget sits below every packed pure-recompute plan and spilling
+    /// was not enabled; carries the smallest achievable packed total.
+    BudgetBelowPacked(InfeasiblePacked),
+    /// The budget cannot be met even with every cold checkpoint spilled to
+    /// host; carries the smallest achievable device total.
+    BudgetBelowSpilled(InfeasibleBudget),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::UnknownArch { model } => write!(
+                f,
+                "'{model}' has no architecture profile to plan over (see `optorch models`)"
+            ),
+            PlanError::UnknownPlanner { reason } => write!(f, "{reason}"),
+            PlanError::InvalidBytes { field, reason } => write!(f, "{field}: {reason}"),
+            PlanError::BudgetBelowPacked(e) => write!(f, "{e}"),
+            PlanError::BudgetBelowSpilled(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// The one [`parse_bytes`] entry point every budget-shaped flag and config
+/// field routes through: `--budget`, `--spill`, `--host_bw`, the config's
+/// `memory_budget`/`host_bw`, and the manifest's `device_budget`. The
+/// error names the offending source so each caller stops wrapping its own
+/// `map_err`.
+pub fn parse_bytes_field(field: &str, text: &str) -> Result<u64, PlanError> {
+    parse_bytes(text).map_err(|reason| PlanError::InvalidBytes {
+        field: field.to_string(),
+        reason,
+    })
+}
+
+#[derive(Clone, Debug)]
+enum ArchSource {
+    Named { model: String, input: (usize, usize, usize), classes: usize },
+    Profile(ArchProfile),
+}
+
+#[derive(Clone, Debug)]
+enum PlannerChoice {
+    Kind(PlannerKind),
+    /// Deferred-parse spec (validated in [`PlanRequest::run`]).
+    Named(String),
+}
+
+/// A byte-count knob: either already resolved or a deferred-parse string
+/// tagged with the flag/field it came from.
+#[derive(Clone, Debug)]
+enum BytesChoice {
+    Bytes(u64),
+    Field { field: String, text: String },
+}
+
+impl BytesChoice {
+    fn resolve(&self) -> Result<u64, PlanError> {
+        match self {
+            BytesChoice::Bytes(b) => Ok(*b),
+            BytesChoice::Field { field, text } => parse_bytes_field(field, text),
+        }
+    }
+}
+
+/// Builder for one joint planning run over the memory stack.
+///
+/// Knobs and defaults:
+///
+/// * architecture — by registry name ([`PlanRequest::for_model`]) or an
+///   explicit profile ([`PlanRequest::for_arch`])
+/// * `pipeline` (default [`Pipeline::BASELINE`]; S-C is forced on by the
+///   planning layers, mirroring the free functions)
+/// * `batch` (default 16)
+/// * `planner` (default [`PlannerKind::Optimal`]) — ignored when a budget
+///   selects from the frontier or explicit checkpoints are given
+/// * `memory_budget` — rank the Pareto frontier by *packed* totals and
+///   pick the minimum-predicted-step-time composition; with
+///   [`PlanRequest::spill`]`(false)` only pure recompute plans are
+///   considered ([`plan_for_budget_packed`] semantics)
+/// * `arena` (default on) — stage the packed layout + [`ArenaReport`]
+/// * `frontier` (default off) — stage the full time/memory frontier
+/// * `host_bw` / `spill_lookahead` — the offload overlap model's knobs
+/// * [`PlanRequest::with_checkpoints`] — bypass the planner and score /
+///   pack / spill an explicit placement (the benches' escape hatch)
+///
+/// [`ArenaReport`]: crate::memory::arena::ArenaReport
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    arch: ArchSource,
+    pipeline: Pipeline,
+    batch: usize,
+    planner: PlannerChoice,
+    checkpoints: Option<Vec<usize>>,
+    memory_budget: Option<BytesChoice>,
+    spill: bool,
+    arena: bool,
+    frontier: bool,
+    frontier_levels: usize,
+    host_bw: BytesChoice,
+    spill_lookahead: usize,
+    device_flops_per_sec: f64,
+}
+
+impl PlanRequest {
+    fn with_arch(arch: ArchSource) -> PlanRequest {
+        PlanRequest {
+            arch,
+            pipeline: Pipeline::BASELINE,
+            batch: 16,
+            planner: PlannerChoice::Kind(PlannerKind::Optimal),
+            checkpoints: None,
+            memory_budget: None,
+            spill: true,
+            arena: true,
+            frontier: false,
+            frontier_levels: DEFAULT_FRONTIER_LEVELS,
+            host_bw: BytesChoice::Bytes(DEFAULT_HOST_BW_BYTES_PER_SEC),
+            spill_lookahead: 2,
+            device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
+        }
+    }
+
+    /// Plan for a registry model (resolved via [`arch_by_name`] at run
+    /// time; an unknown name is [`PlanError::UnknownArch`]).
+    pub fn for_model(model: &str, input: (usize, usize, usize), classes: usize) -> PlanRequest {
+        Self::with_arch(ArchSource::Named { model: model.to_string(), input, classes })
+    }
+
+    /// Plan for an explicit architecture profile.
+    pub fn for_arch(arch: ArchProfile) -> PlanRequest {
+        Self::with_arch(ArchSource::Profile(arch))
+    }
+
+    /// Pipeline the plan models (S-C is forced on internally).
+    pub fn pipeline(mut self, p: Pipeline) -> Self {
+        self.pipeline = p;
+        self
+    }
+
+    /// Batch size the byte quantities scale with.
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    /// Planner strategy for the un-budgeted path.
+    pub fn planner(mut self, kind: PlannerKind) -> Self {
+        self.planner = PlannerChoice::Kind(kind);
+        self
+    }
+
+    /// Planner strategy by spec string (`dp`, `sqrt`, `uniformK`,
+    /// `bottleneckK`); parsed at [`PlanRequest::run`] so a bad spec is a
+    /// typed [`PlanError::UnknownPlanner`].
+    pub fn planner_named(mut self, spec: &str) -> Self {
+        self.planner = PlannerChoice::Named(spec.to_string());
+        self
+    }
+
+    /// Bypass the planner: score, pack and (under a budget) spill this
+    /// explicit checkpoint placement. Out-of-range indices are dropped,
+    /// the rest sorted and deduped.
+    pub fn with_checkpoints(mut self, checkpoints: Vec<usize>) -> Self {
+        self.checkpoints = Some(checkpoints);
+        self
+    }
+
+    /// Device-memory budget in bytes.
+    pub fn memory_budget(mut self, bytes: u64) -> Self {
+        self.memory_budget = Some(BytesChoice::Bytes(bytes));
+        self
+    }
+
+    /// Device-memory budget as unparsed text tagged with its source flag
+    /// or field name; parsed by the shared [`parse_bytes_field`] at run
+    /// time so every caller reports the same error shape.
+    pub fn memory_budget_field(mut self, field: &str, text: &str) -> Self {
+        self.memory_budget = Some(BytesChoice::Field {
+            field: field.to_string(),
+            text: text.to_string(),
+        });
+        self
+    }
+
+    /// Whether a budget may be met by host-spilling (default `true`).
+    /// `false` = pure recompute only ([`plan_for_budget_packed`]).
+    pub fn spill(mut self, on: bool) -> Self {
+        self.spill = on;
+        self
+    }
+
+    /// Whether to stage the packed arena layout + report (default `true`).
+    pub fn arena(mut self, on: bool) -> Self {
+        self.arena = on;
+        self
+    }
+
+    /// Whether to stage the full time/memory Pareto frontier.
+    pub fn frontier(mut self, on: bool) -> Self {
+        self.frontier = on;
+        self
+    }
+
+    /// Budget-quantization levels for the frontier DP. Only shapes the
+    /// staged frontier of *un-budgeted* runs: budgeted selections
+    /// ([`select_for_budget`] / [`plan_for_budget_packed`]) always rank
+    /// the [`DEFAULT_FRONTIER_LEVELS`]-quantized frontier, and the staged
+    /// curve mirrors exactly what was ranked.
+    pub fn frontier_levels(mut self, levels: usize) -> Self {
+        self.frontier_levels = levels.max(2);
+        self
+    }
+
+    /// Modeled host↔device bandwidth (bytes/s) for the overlap model.
+    pub fn host_bw(mut self, bytes_per_sec: u64) -> Self {
+        self.host_bw = BytesChoice::Bytes(bytes_per_sec);
+        self
+    }
+
+    /// [`PlanRequest::host_bw`] as unparsed text tagged with its source.
+    pub fn host_bw_field(mut self, field: &str, text: &str) -> Self {
+        self.host_bw = BytesChoice::Field { field: field.to_string(), text: text.to_string() };
+        self
+    }
+
+    /// Prefetch lookahead (schedule steps, clamped to ≥ 1).
+    pub fn spill_lookahead(mut self, steps: usize) -> Self {
+        self.spill_lookahead = steps;
+        self
+    }
+
+    fn resolve_arch(&self) -> Result<ArchProfile, PlanError> {
+        match &self.arch {
+            ArchSource::Profile(a) => Ok(a.clone()),
+            ArchSource::Named { model, input, classes } => arch_by_name(model, *input, *classes)
+                .ok_or_else(|| PlanError::UnknownArch { model: model.clone() }),
+        }
+    }
+
+    fn resolve_planner(&self) -> Result<PlannerKind, PlanError> {
+        match &self.planner {
+            PlannerChoice::Kind(k) => Ok(*k),
+            PlannerChoice::Named(s) => {
+                PlannerKind::parse(s).map_err(|reason| PlanError::UnknownPlanner { reason })
+            }
+        }
+    }
+
+    /// Score an explicit checkpoint placement exactly as the planner
+    /// scores its own (S-C forced on, exact replayed peak).
+    fn score_checkpoints(
+        arch: &ArchProfile,
+        kind: PlannerKind,
+        pipeline: Pipeline,
+        batch: usize,
+        mut cps: Vec<usize>,
+    ) -> CheckpointPlan {
+        let mut p = pipeline;
+        p.sc = true;
+        cps.retain(|&c| c < arch.layers.len());
+        cps.sort_unstable();
+        cps.dedup();
+        let mut ev = PeakEvaluator::new(arch, p, batch);
+        CheckpointPlan {
+            kind,
+            recompute_overhead: recompute_overhead(arch, &cps),
+            peak_bytes: ev.peak(&cps),
+            checkpoints: cps,
+        }
+    }
+
+    /// Run the staged composition. Exactly the legacy free-function
+    /// chains, selected by the knobs:
+    ///
+    /// | budget | checkpoints | spill | composition |
+    /// |---|---|---|---|
+    /// | none | planner | — | [`plan_checkpoints`] (+ [`plan_arena`]) |
+    /// | none | explicit | — | exact scoring (+ [`plan_arena`]) |
+    /// | set | planner | on | [`select_for_budget`] |
+    /// | set | planner | off | [`plan_for_budget_packed`] |
+    /// | set | explicit | on | [`plan_spill`] + [`simulate_overlap`] |
+    /// | set | explicit | off | [`plan_arena`] + fit check |
+    pub fn run(&self) -> Result<PlanOutcome, PlanError> {
+        let arch = self.resolve_arch()?;
+        let planner = self.resolve_planner()?;
+        let budget = match &self.memory_budget {
+            Some(c) => Some(c.resolve()?),
+            None => None,
+        };
+        let host_bw = self.host_bw.resolve()?;
+        let lookahead = self.spill_lookahead.max(1);
+        let model = OverlapModel {
+            host_bw_bytes_per_sec: host_bw as f64,
+            device_flops_per_sec: self.device_flops_per_sec,
+        };
+
+        // 1. The plan (and, when budgeted, the spill/overlap staging).
+        let mut arena_lifetimes: Option<Lifetimes> = None;
+        let mut arena_layout = None;
+        let mut spill = None;
+        let mut overlap = None;
+        let plan = match (budget, &self.checkpoints) {
+            (None, None) => plan_checkpoints(&arch, planner, self.pipeline, self.batch),
+            (None, Some(cps)) => {
+                Self::score_checkpoints(&arch, planner, self.pipeline, self.batch, cps.clone())
+            }
+            (Some(b), Some(cps)) if self.spill => {
+                let plan = Self::score_checkpoints(
+                    &arch,
+                    planner,
+                    self.pipeline,
+                    self.batch,
+                    cps.clone(),
+                );
+                let sp = plan_spill(&arch, self.pipeline, self.batch, &plan.checkpoints, b, lookahead)
+                    .map_err(PlanError::BudgetBelowSpilled)?;
+                overlap = Some(simulate_overlap(&arch, self.batch, &sp, &model));
+                spill = Some(sp);
+                plan
+            }
+            (Some(b), Some(cps)) => {
+                let plan = Self::score_checkpoints(
+                    &arch,
+                    planner,
+                    self.pipeline,
+                    self.batch,
+                    cps.clone(),
+                );
+                let (lt, layout) =
+                    plan_arena(&arch, self.pipeline, self.batch, &plan.checkpoints);
+                if layout.total_bytes() > b {
+                    return Err(PlanError::BudgetBelowPacked(InfeasiblePacked {
+                        budget: b,
+                        min_packed_bytes: layout.total_bytes(),
+                        arch: arch.name.clone(),
+                        batch: self.batch,
+                    }));
+                }
+                arena_lifetimes = Some(lt);
+                arena_layout = Some(layout);
+                plan
+            }
+            (Some(b), None) if self.spill => {
+                let decision =
+                    select_for_budget(&arch, self.pipeline, self.batch, b, lookahead, &model)
+                        .map_err(PlanError::BudgetBelowSpilled)?;
+                overlap = Some(decision.overlap);
+                spill = Some(decision.spill);
+                decision.plan
+            }
+            (Some(b), None) => {
+                let (plan, lt, layout) =
+                    plan_for_budget_packed(&arch, self.pipeline, self.batch, b)
+                        .map_err(PlanError::BudgetBelowPacked)?;
+                arena_lifetimes = Some(lt);
+                arena_layout = Some(layout);
+                plan
+            }
+        };
+
+        // 2. The arena staging for the un-budgeted paths (budgeted paths
+        // packed above / inside the spill plan).
+        if self.arena && arena_layout.is_none() && spill.is_none() {
+            let (lt, layout) = plan_arena(&arch, self.pipeline, self.batch, &plan.checkpoints);
+            arena_lifetimes = Some(lt);
+            arena_layout = Some(layout);
+        }
+        let arena = if self.arena {
+            match (&arena_lifetimes, &arena_layout, &spill) {
+                (_, _, Some(sp)) => Some(summarize(&sp.lifetimes, &sp.layout)),
+                (Some(lt), Some(layout), None) => Some(summarize(lt, layout)),
+                _ => None,
+            }
+        } else {
+            None
+        };
+
+        // 3. Optional frontier staging (+ packed totals when the arena is
+        // on, so budget fit decisions can be read off every point). On
+        // budgeted runs the selection above packed the same points
+        // internally but the low-level API discards those layouts, so
+        // requesting both budget and frontier pays the point packs twice —
+        // acceptable for a once-per-invocation planning call; teaching
+        // `select_for_budget` to surface per-point packs is the fix if
+        // this ever sits on a hot path.
+        let frontier = if self.frontier {
+            // Budgeted selections rank the DEFAULT_FRONTIER_LEVELS curve
+            // inside select_for_budget/plan_for_budget_packed — stage that
+            // same quantization so the reported frontier is exactly the
+            // one the plan was chosen from (frontier_levels only shapes
+            // un-budgeted staging).
+            let levels = if budget.is_some() {
+                DEFAULT_FRONTIER_LEVELS
+            } else {
+                self.frontier_levels
+            };
+            Some(pareto_frontier(&arch, self.pipeline, self.batch, levels))
+        } else {
+            None
+        };
+        let frontier_packed_totals = match (&frontier, self.arena) {
+            (Some(f), true) => Some(
+                f.iter()
+                    .map(|p| {
+                        plan_arena(&arch, self.pipeline, self.batch, &p.checkpoints)
+                            .1
+                            .total_bytes()
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        };
+
+        // 4. The simulated memory report under the chosen plan (S-C forced
+        // on, so its peak equals the plan's).
+        let mut sc_pipeline = self.pipeline;
+        sc_pipeline.sc = true;
+        let memory = simulate(&arch, sc_pipeline, self.batch, &plan.checkpoints);
+
+        Ok(PlanOutcome {
+            arch,
+            pipeline: self.pipeline,
+            batch: self.batch,
+            budget,
+            host_bw,
+            lookahead,
+            memory,
+            plan,
+            frontier,
+            frontier_packed_totals,
+            arena,
+            arena_lifetimes,
+            arena_layout,
+            spill,
+            overlap,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::arena::validate;
+
+    fn sc() -> Pipeline {
+        Pipeline::parse("sc").unwrap()
+    }
+
+    #[test]
+    fn unbudgeted_request_matches_plan_checkpoints() {
+        let out = PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+            .pipeline(sc())
+            .batch(8)
+            .run()
+            .unwrap();
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let legacy = plan_checkpoints(&arch, PlannerKind::Optimal, sc(), 8);
+        assert_eq!(out.plan.checkpoints, legacy.checkpoints);
+        assert_eq!(out.plan.peak_bytes, legacy.peak_bytes);
+        assert_eq!(out.memory.peak_bytes, legacy.peak_bytes);
+        let (lt, layout) = plan_arena(&arch, sc(), 8, &legacy.checkpoints);
+        assert_eq!(out.layout().unwrap().offsets, layout.offsets);
+        validate(&lt, &layout).unwrap();
+        assert!(out.spill.is_none());
+        assert!(!out.is_spill());
+        assert!(out.fits(out.device_peak_packed()));
+        assert!(!out.fits(out.device_peak_packed() - 1));
+    }
+
+    #[test]
+    fn unknown_model_is_a_typed_error() {
+        let err = PlanRequest::for_model("warp_net", (32, 32, 3), 10).run().unwrap_err();
+        assert_eq!(err, PlanError::UnknownArch { model: "warp_net".into() });
+        assert!(err.to_string().contains("architecture profile"), "{err}");
+    }
+
+    #[test]
+    fn bad_planner_spec_is_a_typed_error() {
+        let err = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .planner_named("magic")
+            .run()
+            .unwrap_err();
+        match &err {
+            PlanError::UnknownPlanner { reason } => {
+                assert!(reason.contains("unknown planner"), "{reason}")
+            }
+            other => panic!("expected UnknownPlanner, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_bytes_name_the_offending_field() {
+        let err = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget_field("--budget", "lots")
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("--budget:"), "{msg}");
+        let err = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget(1 << 30)
+            .host_bw_field("--host_bw", "fast")
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().starts_with("--host_bw:"), "{err}");
+        assert_eq!(
+            parse_bytes_field("memory_budget", "512MiB").unwrap(),
+            512 * 1024 * 1024
+        );
+    }
+
+    #[test]
+    fn generous_budget_fits_without_spilling() {
+        let out = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(sc())
+            .batch(16)
+            .memory_budget(1 << 30)
+            .run()
+            .unwrap();
+        assert!(!out.is_spill(), "1 GiB fits a pure plan");
+        assert_eq!(out.plan.recompute_overhead, 0.0);
+        assert!(out.device_peak_packed() <= 1 << 30);
+        assert!(out.predicted_step_secs().is_some());
+        assert!(out.offload_report().is_none());
+    }
+
+    #[test]
+    fn impossible_budgets_carry_typed_floors() {
+        let spilled = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget(1)
+            .run()
+            .unwrap_err();
+        match &spilled {
+            PlanError::BudgetBelowSpilled(e) => {
+                assert_eq!(e.budget, 1);
+                assert!(e.min_device_bytes > 1);
+            }
+            other => panic!("expected BudgetBelowSpilled, got {other:?}"),
+        }
+        assert!(spilled.to_string().contains("minimum achievable peak"), "{spilled}");
+        let packed = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget(1)
+            .spill(false)
+            .run()
+            .unwrap_err();
+        match &packed {
+            PlanError::BudgetBelowPacked(e) => assert!(e.min_packed_bytes > 1),
+            other => panic!("expected BudgetBelowPacked, got {other:?}"),
+        }
+        assert!(packed.to_string().contains("minimum packed total"), "{packed}");
+    }
+
+    #[test]
+    fn explicit_checkpoints_are_scored_exactly() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let out = PlanRequest::for_arch(arch.clone())
+            .batch(8)
+            .with_checkpoints(vec![7, 3, 3, 99])
+            .run()
+            .unwrap();
+        assert_eq!(out.plan.checkpoints, vec![3, 7], "sorted, deduped, in range");
+        let mut ev = PeakEvaluator::new(&arch, sc(), 8);
+        assert_eq!(out.plan.peak_bytes, ev.peak(&[3, 7]));
+    }
+
+    #[test]
+    fn frontier_staging_carries_packed_totals() {
+        let out = PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+            .batch(8)
+            .frontier(true)
+            .frontier_levels(12)
+            .run()
+            .unwrap();
+        let frontier = out.frontier.as_ref().unwrap();
+        let totals = out.frontier_packed_totals.as_ref().unwrap();
+        assert_eq!(frontier.len(), totals.len());
+        for (p, &t) in frontier.iter().zip(totals) {
+            assert!(t >= p.peak_bytes, "packed total below the simulated peak");
+        }
+    }
+}

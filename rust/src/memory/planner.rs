@@ -432,20 +432,45 @@ pub fn pareto_frontier(
     out
 }
 
+/// Typed error of [`plan_for_budget_packed`]: the budget sits below every
+/// frontier point's packed total (pure recompute cannot reach it — the
+/// budget then needs host spilling,
+/// [`crate::memory::offload::select_for_budget`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InfeasiblePacked {
+    pub budget: u64,
+    /// Smallest packed total (`base + slab`) any frontier point reaches.
+    pub min_packed_bytes: u64,
+    pub arch: String,
+    pub batch: usize,
+}
+
+impl std::fmt::Display for InfeasiblePacked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "memory budget {} B is below the minimum packed total {} B \
+             (base + slab) for {} (batch {})",
+            self.budget, self.min_packed_bytes, self.arch, self.batch
+        )
+    }
+}
+
+impl std::error::Error for InfeasiblePacked {}
+
 /// The cheapest-time plan whose *packed* total (`base + slab` from a real
 /// arena pack of each frontier point) fits `budget` bytes, so packing
 /// fragmentation participates in the fit decision. Among fitting points
 /// the minimum recompute FLOPs wins, ties broken by the smaller packed
 /// total. Returns the plan together with its lifetimes and layout (the
 /// caller has already paid for the pack). Errors with the minimum packed
-/// total when nothing fits — the budget then needs host spilling
-/// ([`crate::memory::offload::select_for_budget`]).
+/// total ([`InfeasiblePacked`]) when nothing fits.
 pub fn plan_for_budget_packed(
     arch: &ArchProfile,
     pipeline: Pipeline,
     batch: usize,
     budget: u64,
-) -> Result<(CheckpointPlan, Lifetimes, ArenaLayout), String> {
+) -> Result<(CheckpointPlan, Lifetimes, ArenaLayout), InfeasiblePacked> {
     let frontier = pareto_frontier(arch, pipeline, batch, DEFAULT_FRONTIER_LEVELS);
     let mut min_total = u64::MAX;
     let mut best: Option<(CheckpointPlan, Lifetimes, ArenaLayout)> = None;
@@ -468,12 +493,11 @@ pub fn plan_for_budget_packed(
             best = Some((point, lt, layout));
         }
     }
-    best.ok_or_else(|| {
-        format!(
-            "memory budget {budget} B is below the minimum packed total {min_total} B \
-             (base + slab) for {} (batch {batch})",
-            arch.name
-        )
+    best.ok_or_else(|| InfeasiblePacked {
+        budget,
+        min_packed_bytes: min_total,
+        arch: arch.name.clone(),
+        batch,
     })
 }
 
@@ -720,9 +744,11 @@ mod tests {
         assert_eq!(layout.offsets.len(), lt.tensors.len());
         // the fit criterion is the packed total, not the simulated peak
         assert!(layout.total_bytes() >= plan.peak_bytes);
-        // below the minimum packed total → error naming it
+        // below the minimum packed total → typed error naming it
         let err = plan_for_budget_packed(&arch, Pipeline::BASELINE, 8, 1).unwrap_err();
-        assert!(err.contains("minimum packed total"), "{err}");
+        assert_eq!(err.budget, 1);
+        assert!(err.min_packed_bytes > 1);
+        assert!(err.to_string().contains("minimum packed total"), "{err}");
     }
 
     #[test]

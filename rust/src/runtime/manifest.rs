@@ -192,9 +192,17 @@ impl ManifestEntry {
             device_budget: match j.get("device_budget") {
                 None => None,
                 // present ⇒ must parse: a silently dropped budget would
-                // un-cap exactly the artifact that asked for one
+                // un-cap exactly the artifact that asked for one. Suffixed
+                // strings ("512MiB") route through the memory facade's
+                // shared byte parser, same as every other budget source.
+                Some(Json::Str(text)) => Some(
+                    crate::memory::pipeline::parse_bytes_field("device_budget", text)
+                        .map_err(|e| e.to_string())?,
+                ),
                 Some(v) => Some(
-                    v.as_usize().map(|b| b as u64).ok_or("bad 'device_budget' (want bytes)")?,
+                    v.as_usize()
+                        .map(|b| b as u64)
+                        .ok_or("bad 'device_budget' (want bytes or a suffixed string)")?,
                 ),
             },
         })
@@ -341,8 +349,16 @@ mod tests {
         let text = sample().replace("\"lr\": 0.05", "\"device_budget\": 786432, \"lr\": 0.05");
         let m = Manifest::from_text(Path::new("a"), &text).unwrap();
         assert_eq!(m.entries[0].device_budget, Some(786_432));
-        // present but malformed must error, not silently un-cap the artifact
-        let bad = sample().replace("\"lr\": 0.05", "\"device_budget\": \"512MiB\", \"lr\": 0.05");
+        // suffixed strings go through the shared facade parser
+        let text = sample().replace("\"lr\": 0.05", "\"device_budget\": \"512MiB\", \"lr\": 0.05");
+        let m = Manifest::from_text(Path::new("a"), &text).unwrap();
+        assert_eq!(m.entries[0].device_budget, Some(512 * 1024 * 1024));
+        // present but malformed must error (naming the field), not
+        // silently un-cap the artifact
+        let bad = sample().replace("\"lr\": 0.05", "\"device_budget\": \"lots\", \"lr\": 0.05");
+        let err = Manifest::from_text(Path::new("a"), &bad).unwrap_err();
+        assert!(err.contains("device_budget"), "{err}");
+        let bad = sample().replace("\"lr\": 0.05", "\"device_budget\": true, \"lr\": 0.05");
         let err = Manifest::from_text(Path::new("a"), &bad).unwrap_err();
         assert!(err.contains("device_budget"), "{err}");
     }

@@ -1,0 +1,305 @@
+//! Property tests for the unified memory-pipeline facade: a
+//! `PlanRequest::run()` must be **bit-identical** to the legacy
+//! free-function composition it replaced — plan, packed slab, spill
+//! pairing and predicted step seconds — across arch × pipeline × budget
+//! sweeps, and its JSON rendering must be deterministic.
+
+use optorch::config::Pipeline;
+use optorch::memory::arena::plan_arena;
+use optorch::memory::offload::{plan_spill, select_for_budget, OverlapModel};
+use optorch::memory::pipeline::{PlanError, PlanRequest};
+use optorch::memory::planner::{
+    plan_checkpoints, plan_for_budget_packed, PlannerKind, DEFAULT_FRONTIER_LEVELS,
+};
+use optorch::models::{arch_by_name, ArchProfile, LayerKind, LayerProfile};
+use optorch::util::propcheck::check_with;
+use optorch::util::rng::Rng;
+
+/// Random checkpoint-heavy chain (same family as the offload property
+/// tests): uniform-ish widths so budgets below the pure floor stay
+/// spillable.
+fn rand_chain(rng: &mut Rng) -> ArchProfile {
+    let n = 8 + rng.gen_range(10);
+    let layers = (0..n)
+        .map(|i| {
+            let h = 4 + rng.gen_range(5);
+            let c = 32 + rng.gen_range(64);
+            let out = (h * h * c) as u64;
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: LayerKind::Conv,
+                out_shape: (h, h, c),
+                act_elems: out * (1 + rng.gen_range(3)) as u64,
+                params: (64 + rng.gen_range(1024)) as u64,
+                flops_per_image: (1 + rng.gen_range(900)) as u64 * 10_000,
+            }
+        })
+        .collect();
+    ArchProfile { name: "rand_pipeline_chain".into(), input: (8, 8, 3), layers }
+}
+
+fn rand_arch(rng: &mut Rng) -> ArchProfile {
+    match rng.gen_range(3) {
+        0 => arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap(),
+        1 => arch_by_name("resnet18", (64, 64, 3), 10).unwrap(),
+        _ => rand_chain(rng),
+    }
+}
+
+fn rand_pipeline(rng: &mut Rng) -> Pipeline {
+    let spec = ["sc", "ed+sc", "ed+mp+sc"][rng.gen_range(3)];
+    Pipeline::parse(spec).unwrap()
+}
+
+fn rand_batch(rng: &mut Rng) -> usize {
+    [4usize, 8, 16][rng.gen_range(3)]
+}
+
+fn rand_kind(rng: &mut Rng) -> PlannerKind {
+    match rng.gen_range(4) {
+        0 => PlannerKind::Optimal,
+        1 => PlannerKind::Sqrt,
+        2 => PlannerKind::Uniform(1 + rng.gen_range(5)),
+        _ => PlannerKind::Bottleneck(1 + rng.gen_range(4)),
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Case {
+    arch: ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    kind: PlannerKind,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    Case {
+        arch: rand_arch(rng),
+        pipeline: rand_pipeline(rng),
+        batch: rand_batch(rng),
+        kind: rand_kind(rng),
+    }
+}
+
+#[test]
+fn facade_matches_the_legacy_unbudgeted_composition() {
+    check_with("facade == plan_checkpoints + plan_arena", 48, 0x91BE, gen_case, |c| {
+        let outcome = PlanRequest::for_arch(c.arch.clone())
+            .pipeline(c.pipeline)
+            .batch(c.batch)
+            .planner(c.kind)
+            .run()
+            .map_err(|e| format!("facade errored: {e}"))?;
+        let legacy = plan_checkpoints(&c.arch, c.kind, c.pipeline, c.batch);
+        if outcome.plan.checkpoints != legacy.checkpoints {
+            return Err(format!(
+                "checkpoints {:?} != legacy {:?}",
+                outcome.plan.checkpoints, legacy.checkpoints
+            ));
+        }
+        if outcome.plan.peak_bytes != legacy.peak_bytes {
+            return Err("peak bytes diverged".into());
+        }
+        if outcome.plan.recompute_overhead != legacy.recompute_overhead {
+            return Err("recompute overhead diverged".into());
+        }
+        if outcome.memory.peak_bytes != legacy.peak_bytes {
+            return Err("staged memory report peak != plan peak".into());
+        }
+        let (lt, layout) = plan_arena(&c.arch, c.pipeline, c.batch, &legacy.checkpoints);
+        let flayout = outcome.layout().ok_or("facade staged no layout")?;
+        if flayout.offsets != layout.offsets
+            || flayout.slab_bytes != layout.slab_bytes
+            || flayout.base_bytes != layout.base_bytes
+        {
+            return Err("packed layout diverged".into());
+        }
+        if outcome.lifetimes().map(|l| l.tensors.len()) != Some(lt.tensors.len()) {
+            return Err("lifetimes diverged".into());
+        }
+        if outcome.device_peak_packed() != layout.total_bytes() {
+            return Err("device_peak_packed != packed total".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn facade_budget_matches_select_for_budget_exactly() {
+    check_with("facade budget == select_for_budget", 24, 0xB0D6E7, gen_case, |c| {
+        // Budgets straddling the pure floor: comfortable, tight, and
+        // sub-floor (spilling), derived from the optimal plan's pack.
+        let opt = plan_checkpoints(&c.arch, PlannerKind::Optimal, c.pipeline, c.batch);
+        let packed = plan_arena(&c.arch, c.pipeline, c.batch, &opt.checkpoints).1.total_bytes();
+        for pct in [130u64, 95, 60] {
+            let budget = packed * pct / 100;
+            let facade = PlanRequest::for_arch(c.arch.clone())
+                .pipeline(c.pipeline)
+                .batch(c.batch)
+                .memory_budget(budget)
+                .run();
+            let legacy = select_for_budget(
+                &c.arch,
+                c.pipeline,
+                c.batch,
+                budget,
+                2,
+                &OverlapModel::default(),
+            );
+            match (facade, legacy) {
+                (Ok(f), Ok(l)) => {
+                    if f.plan.checkpoints != l.plan.checkpoints {
+                        return Err(format!("{pct}%: chose different plans"));
+                    }
+                    let fs = f.spill.as_ref().ok_or("budgeted outcome lacks spill")?;
+                    if fs.steps != l.spill.steps {
+                        return Err(format!("{pct}%: spill pairing diverged"));
+                    }
+                    if fs.layout.offsets != l.spill.layout.offsets {
+                        return Err(format!("{pct}%: resident offsets diverged"));
+                    }
+                    let fo = f.overlap.as_ref().ok_or("budgeted outcome lacks overlap")?;
+                    if fo.predicted_step_secs != l.overlap.predicted_step_secs
+                        || fo.stall_secs != l.overlap.stall_secs
+                    {
+                        return Err(format!("{pct}%: predicted step secs diverged"));
+                    }
+                    if f.predicted_step_secs() != Some(l.overlap.predicted_step_secs) {
+                        return Err(format!("{pct}%: accessor diverged"));
+                    }
+                    if f.is_spill() != !l.spill.steps.is_empty() {
+                        return Err(format!("{pct}%: is_spill diverged"));
+                    }
+                }
+                (Err(PlanError::BudgetBelowSpilled(fe)), Err(le)) => {
+                    if fe != le {
+                        return Err(format!("{pct}%: infeasibility floors diverged"));
+                    }
+                }
+                (f, l) => {
+                    return Err(format!(
+                        "{pct}%: feasibility diverged (facade ok: {}, legacy ok: {})",
+                        f.is_ok(),
+                        l.is_ok()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn facade_spill_off_matches_plan_for_budget_packed() {
+    check_with("facade spill(false) == plan_for_budget_packed", 24, 0x9AC4ED, gen_case, |c| {
+        let opt = plan_checkpoints(&c.arch, PlannerKind::Optimal, c.pipeline, c.batch);
+        let packed = plan_arena(&c.arch, c.pipeline, c.batch, &opt.checkpoints).1.total_bytes();
+        for pct in [140u64, 100, 55] {
+            let budget = packed * pct / 100;
+            let facade = PlanRequest::for_arch(c.arch.clone())
+                .pipeline(c.pipeline)
+                .batch(c.batch)
+                .memory_budget(budget)
+                .spill(false)
+                .run();
+            let legacy = plan_for_budget_packed(&c.arch, c.pipeline, c.batch, budget);
+            match (facade, legacy) {
+                (Ok(f), Ok((plan, _, layout))) => {
+                    if f.plan.checkpoints != plan.checkpoints {
+                        return Err(format!("{pct}%: chose different plans"));
+                    }
+                    if f.layout().map(|l| l.offsets.clone()) != Some(layout.offsets) {
+                        return Err(format!("{pct}%: layouts diverged"));
+                    }
+                    if f.spill.is_some() {
+                        return Err(format!("{pct}%: spill staged with spilling off"));
+                    }
+                }
+                (Err(PlanError::BudgetBelowPacked(fe)), Err(le)) => {
+                    if fe != le {
+                        return Err(format!("{pct}%: packed floors diverged"));
+                    }
+                }
+                (f, l) => {
+                    return Err(format!(
+                        "{pct}%: feasibility diverged (facade ok: {}, legacy ok: {})",
+                        f.is_ok(),
+                        l.is_ok()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn facade_explicit_checkpoints_match_plan_spill() {
+    check_with("facade with_checkpoints == plan_spill", 24, 0x5B111, gen_case, |c| {
+        let n = c.arch.layers.len();
+        let full: Vec<usize> = (0..n.saturating_sub(1)).collect();
+        let packed = plan_arena(&c.arch, c.pipeline, c.batch, &full).1.total_bytes();
+        for pct in [110u64, 70] {
+            let budget = packed * pct / 100;
+            let facade = PlanRequest::for_arch(c.arch.clone())
+                .pipeline(c.pipeline)
+                .batch(c.batch)
+                .with_checkpoints(full.clone())
+                .memory_budget(budget)
+                .spill_lookahead(3)
+                .run();
+            let legacy = plan_spill(&c.arch, c.pipeline, c.batch, &full, budget, 3);
+            match (facade, legacy) {
+                (Ok(f), Ok(l)) => {
+                    let fs = f.spill.as_ref().ok_or("budgeted outcome lacks spill")?;
+                    if fs.steps != l.steps {
+                        return Err(format!("{pct}%: spill pairing diverged"));
+                    }
+                    if fs.layout.offsets != l.layout.offsets
+                        || fs.layout.slab_bytes != l.layout.slab_bytes
+                    {
+                        return Err(format!("{pct}%: resident layouts diverged"));
+                    }
+                    if fs.spilled_bytes != l.spilled_bytes
+                        || fs.host_peak_bytes != l.host_peak_bytes
+                    {
+                        return Err(format!("{pct}%: spill byte accounting diverged"));
+                    }
+                }
+                (Err(PlanError::BudgetBelowSpilled(fe)), Err(le)) => {
+                    if fe != le {
+                        return Err(format!("{pct}%: floors diverged"));
+                    }
+                }
+                (f, l) => {
+                    return Err(format!(
+                        "{pct}%: feasibility diverged (facade ok: {}, legacy ok: {})",
+                        f.is_ok(),
+                        l.is_ok()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_rendering_is_deterministic_across_runs() {
+    check_with("outcome JSON is deterministic", 16, 0x15014D, gen_case, |c| {
+        let req = PlanRequest::for_arch(c.arch.clone())
+            .pipeline(c.pipeline)
+            .batch(c.batch)
+            .planner(c.kind)
+            .frontier(true)
+            .frontier_levels(DEFAULT_FRONTIER_LEVELS);
+        let a = req.run().map_err(|e| e.to_string())?.to_json().to_string();
+        let b = req.run().map_err(|e| e.to_string())?.to_json().to_string();
+        if a != b {
+            return Err("same request rendered different JSON".into());
+        }
+        optorch::util::json::Json::parse(&a)
+            .map_err(|e| format!("JSON does not re-parse: {e}"))?;
+        Ok(())
+    });
+}
