@@ -1,0 +1,429 @@
+//! Chaos soak: the fault-injection matrix run end to end, timed, and
+//! checked against the recovery invariants.
+//!
+//! Three sweeps:
+//!
+//! 1. **loader matrix** — fault specs × worker counts on the E-D pool
+//!    loader; every faulted stream must be byte-identical to the
+//!    fault-free reference, with the expected respawn/corruption counts;
+//! 2. **link-fault engine** — failure probabilities × slowdowns on the
+//!    offload engine; stats must be deterministic across reruns, retries
+//!    must be bounded, and a healthy link must record zero faults;
+//! 3. **degradation ladder** — budgets from generous to absurd through
+//!    `run_degraded`; every outcome must land on a real Pareto-frontier
+//!    point and re-run to the identical report.
+//!
+//! Emits `BENCH_fault.json`. `OPTORCH_BENCH_CHECK=1` runs a fast smoke
+//! pass that *fails the process* (exit 1) when any invariant breaks.
+
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{EncodeSpec, Encoding, WordType};
+use optorch::data::loader::{dump, BatchPayload, EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::fault::{DegradeTrigger, FaultInjector, FaultSpec};
+use optorch::memory::offload::{LinkFaults, OffloadEngine, SpillPlan};
+use optorch::memory::pipeline::{PlanError, PlanRequest};
+use optorch::memory::planner::{pareto_frontier, DEFAULT_FRONTIER_LEVELS};
+use optorch::models::arch_by_name;
+use optorch::util::bench::{fmt_bytes, Table};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn loader_with(
+    seed: u64,
+    batches: usize,
+    workers: usize,
+    faults: Option<Arc<FaultInjector>>,
+) -> EdLoader {
+    let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 240, 9));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4").unwrap(),
+        seed,
+    )
+    .unwrap();
+    EdLoader::with_faults(
+        d,
+        sampler,
+        Some(EncodeSpec::new(Encoding::Base256, WordType::F64)),
+        batches,
+        LoaderMode::Parallel { prefetch_depth: 2, num_workers: workers },
+        Arc::new(BufferPool::default()),
+        faults,
+        None,
+    )
+}
+
+fn payload_bytes(p: &BatchPayload) -> Vec<u8> {
+    match p {
+        BatchPayload::Raw { data, labels, n } => {
+            let mut out = (*n as u64).to_le_bytes().to_vec();
+            for v in data.iter().chain(labels) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        BatchPayload::Encoded(groups) => {
+            let mut out = Vec::new();
+            for g in groups {
+                out.extend_from_slice(&dump::to_bytes(g));
+            }
+            out
+        }
+    }
+}
+
+/// Drain a loader; `(stream, respawns, corruptions, error, wall ms)`.
+fn drain(mut l: EdLoader) -> (Vec<Vec<u8>>, u64, u64, Option<String>, f64) {
+    let start = Instant::now();
+    let mut out = Vec::new();
+    let mut err = None;
+    loop {
+        match l.try_next() {
+            Ok(Some(p)) => {
+                out.push(payload_bytes(&p));
+                l.recycle(p);
+            }
+            Ok(None) => break,
+            Err(e) => {
+                err = Some(e.to_string());
+                break;
+            }
+        }
+    }
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let stats = l.stats();
+    (
+        out,
+        stats.respawns.load(Ordering::Relaxed),
+        stats.corruptions_detected.load(Ordering::Relaxed),
+        err,
+        wall_ms,
+    )
+}
+
+struct LoaderRow {
+    spec: String,
+    workers: usize,
+    respawns: u64,
+    corruptions: u64,
+    stream_ok: bool,
+    wall_ms: f64,
+}
+
+struct LinkRow {
+    fail_prob: f64,
+    slow_factor: f64,
+    steps: u64,
+    evictions: u64,
+    prefetches: u64,
+    link_faults: u64,
+    link_retries: u64,
+    retry_stall_ms: f64,
+}
+
+struct DegradeRow {
+    budget: u64,
+    met_budget: bool,
+    rungs: usize,
+    device_total: u64,
+    json: String,
+}
+
+fn write_json(loader: &[LoaderRow], link: &[LinkRow], degrade: &[DegradeRow]) -> std::io::Result<()> {
+    let mut j = String::from("{\n  \"loader\": [\n");
+    for (i, r) in loader.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"spec\": \"{}\", \"workers\": {}, \"respawns\": {}, \
+             \"corruptions\": {}, \"stream_ok\": {}, \"wall_ms\": {:.3}}}{}\n",
+            r.spec,
+            r.workers,
+            r.respawns,
+            r.corruptions,
+            r.stream_ok,
+            r.wall_ms,
+            if i + 1 < loader.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n  \"link\": [\n");
+    for (i, r) in link.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"fail_prob\": {:.2}, \"slow_factor\": {:.1}, \"steps\": {}, \
+             \"evictions\": {}, \"prefetches\": {}, \"link_faults\": {}, \
+             \"link_retries\": {}, \"retry_stall_ms\": {:.4}}}{}\n",
+            r.fail_prob,
+            r.slow_factor,
+            r.steps,
+            r.evictions,
+            r.prefetches,
+            r.link_faults,
+            r.link_retries,
+            r.retry_stall_ms,
+            if i + 1 < link.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n  \"degrade\": [\n");
+    for (i, r) in degrade.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"budget\": {}, \"met_budget\": {}, \"rungs\": {}, \
+             \"device_total\": {}, \"report\": {}}}{}\n",
+            r.budget,
+            r.met_budget,
+            r.rungs,
+            r.device_total,
+            r.json,
+            if i + 1 < degrade.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write("BENCH_fault.json", j)
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let mut failures = 0u32;
+
+    // ---- 1. loader chaos matrix ----
+    let batches = if check { 8 } else { 32 };
+    println!("=== chaos soak: E-D loader under injected faults ({batches} batches) ===\n");
+    let mut loader_rows: Vec<LoaderRow> = Vec::new();
+    let mut t = Table::new(&["fault spec", "workers", "respawns", "corruptions", "stream", "wall"]);
+    let kill = batches / 2;
+    let specs = [
+        String::new(),
+        format!("worker-panic@{kill}"),
+        format!("corrupt@{}", batches / 3),
+        format!("seed=3;worker-panic@1;corrupt@{}", batches - 1),
+    ];
+    for workers in [1usize, 2, 4] {
+        let (reference, _, _, ref_err, _) = drain(loader_with(11, batches, workers, None));
+        if ref_err.is_some() || reference.len() != batches {
+            eprintln!("FAIL: fault-free reference broke (workers={workers}): {ref_err:?}");
+            failures += 1;
+            continue;
+        }
+        for spec_text in &specs {
+            let (spec, inj) = if spec_text.is_empty() {
+                (None, None)
+            } else {
+                let s = FaultSpec::parse(spec_text).expect("matrix specs parse");
+                let i = Arc::new(FaultInjector::new(&s));
+                (Some(s), Some(i))
+            };
+            let (stream, respawns, corruptions, err, wall_ms) =
+                drain(loader_with(11, batches, workers, inj));
+            let stream_ok = err.is_none() && stream == reference;
+            if !stream_ok {
+                eprintln!(
+                    "FAIL: faulted stream diverged (spec='{spec_text}', workers={workers}, \
+                     err={err:?})"
+                );
+                failures += 1;
+            }
+            let want_respawns = spec_text.contains("worker-panic") as u64;
+            let want_corruptions = spec_text.contains("corrupt@") as u64;
+            if respawns != want_respawns || corruptions != want_corruptions {
+                eprintln!(
+                    "FAIL: recovery counters off (spec='{spec_text}', workers={workers}): \
+                     {respawns} respawns, {corruptions} corruptions"
+                );
+                failures += 1;
+            }
+            let label = spec.map_or_else(|| "(none)".to_string(), |s| s.to_string());
+            t.row(&[
+                label.clone(),
+                format!("{workers}"),
+                format!("{respawns}"),
+                format!("{corruptions}"),
+                if stream_ok { "identical".into() } else { "DIVERGED".into() },
+                format!("{wall_ms:.1} ms"),
+            ]);
+            loader_rows.push(LoaderRow {
+                spec: label,
+                workers,
+                respawns,
+                corruptions,
+                stream_ok,
+                wall_ms,
+            });
+        }
+    }
+    t.print();
+
+    // ---- 2. link-fault engine sweep ----
+    let steps = if check { 32u64 } else { 256 };
+    println!("\n=== chaos soak: offload engine under link faults ({steps} steps) ===\n");
+    let floor = match PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .batch(16)
+        .memory_budget(1)
+        .run()
+    {
+        Err(PlanError::BudgetBelowSpilled(e)) => e.min_device_bytes,
+        other => {
+            eprintln!("FAIL: 1-byte probe did not hit the spilled floor: {other:?}");
+            failures += 1;
+            0
+        }
+    };
+    let spill: Option<SpillPlan> = (floor > 0)
+        .then(|| {
+            PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+                .batch(16)
+                .memory_budget(floor)
+                .run()
+                .expect("floor budget plans")
+                .spill
+                .expect("floor budget spills")
+        });
+    let mut link_rows: Vec<LinkRow> = Vec::new();
+    if let Some(spill) = &spill {
+        let mut t = Table::new(&[
+            "fail prob",
+            "slowdown",
+            "evict/prefetch",
+            "faults",
+            "retries",
+            "retry stall",
+        ]);
+        for &(fail_prob, factor) in
+            &[(0.0f64, 1.0f64), (0.05, 4.0), (0.15, 4.0), (0.3, 8.0)]
+        {
+            let link = LinkFaults {
+                seed: 0xC0A5,
+                fail_prob,
+                slow: (0.3, factor),
+                ..LinkFaults::default()
+            };
+            let run = || {
+                let mut e = OffloadEngine::with_link_faults(spill, link);
+                for _ in 0..steps {
+                    // give-ups are the degradation under test, not failures
+                    let _ = e.try_step();
+                }
+                e.stats()
+            };
+            let s = run();
+            if s != run() {
+                eprintln!("FAIL: link sweep not deterministic at p={fail_prob}");
+                failures += 1;
+            }
+            if fail_prob == 0.0 && (s.link_faults != 0 || s.link_retries != 0) {
+                eprintln!(
+                    "FAIL: healthy link recorded {} faults / {} retries",
+                    s.link_faults, s.link_retries
+                );
+                failures += 1;
+            }
+            if s.prefetches > s.evictions {
+                eprintln!(
+                    "FAIL: {} prefetches for {} evictions at p={fail_prob}",
+                    s.prefetches, s.evictions
+                );
+                failures += 1;
+            }
+            t.row(&[
+                format!("{fail_prob:.2}"),
+                format!("x{factor:.0}"),
+                format!("{}/{}", s.evictions, s.prefetches),
+                format!("{}", s.link_faults),
+                format!("{}", s.link_retries),
+                format!("{:.3} ms", s.retry_stall_secs * 1e3),
+            ]);
+            link_rows.push(LinkRow {
+                fail_prob,
+                slow_factor: factor,
+                steps,
+                evictions: s.evictions,
+                prefetches: s.prefetches,
+                link_faults: s.link_faults,
+                link_retries: s.link_retries,
+                retry_stall_ms: s.retry_stall_secs * 1e3,
+            });
+        }
+        t.print();
+    }
+
+    // ---- 3. degradation ladder sweep ----
+    println!("\n=== chaos soak: degradation ladder vs shrinking budgets ===\n");
+    let peak = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .batch(16)
+        .run()
+        .expect("unbudgeted plan stages")
+        .device_peak_packed();
+    let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+    let frontier = pareto_frontier(
+        &arch,
+        optorch::config::Pipeline::BASELINE,
+        16,
+        DEFAULT_FRONTIER_LEVELS,
+    );
+    let mut degrade_rows: Vec<DegradeRow> = Vec::new();
+    let mut t = Table::new(&["budget", "met", "rungs", "device total"]);
+    for pct in [100u64, 60, 30, 10, 3, 0] {
+        let budget = if pct == 0 { 1 } else { peak * pct / 100 };
+        let request = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .batch(16)
+            .memory_budget(budget)
+            .spill(false);
+        let trigger = DegradeTrigger::BudgetShrink { from: Some(peak), to: budget };
+        let (outcome, report) = match request.run_degraded(trigger) {
+            Ok(pair) => pair,
+            Err(e) => {
+                eprintln!("FAIL: ladder errored at {} ({e})", fmt_bytes(budget));
+                failures += 1;
+                continue;
+            }
+        };
+        match request.run_degraded(trigger) {
+            Ok((_, again)) if again == report => {}
+            _ => {
+                eprintln!("FAIL: ladder not deterministic at {}", fmt_bytes(budget));
+                failures += 1;
+            }
+        }
+        if !frontier.iter().any(|p| p.checkpoints == outcome.plan.checkpoints) {
+            eprintln!(
+                "FAIL: ladder left the frontier at {} (checkpoints {:?})",
+                fmt_bytes(budget),
+                outcome.plan.checkpoints
+            );
+            failures += 1;
+        }
+        if pct == 100 && !report.actions.is_empty() {
+            eprintln!("FAIL: full budget should not degrade, took {} rungs", report.actions.len());
+            failures += 1;
+        }
+        t.row(&[
+            format!("{pct}% = {}", fmt_bytes(budget)),
+            format!("{}", report.met_budget),
+            format!("{}", report.actions.len()),
+            fmt_bytes(report.device_total),
+        ]);
+        degrade_rows.push(DegradeRow {
+            budget,
+            met_budget: report.met_budget,
+            rungs: report.actions.len(),
+            device_total: report.device_total,
+            json: report.to_json().to_string(),
+        });
+    }
+    t.print();
+
+    match write_json(&loader_rows, &link_rows, &degrade_rows) {
+        Ok(()) => println!("\nwrote BENCH_fault.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_fault.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: all fault-recovery invariants hold");
+    }
+}

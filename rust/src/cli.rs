@@ -94,20 +94,31 @@ COMMANDS:
             checkpoint eviction + double-buffered prefetch, modeled at
             host_bw with spill_lookahead steps of lookahead) when no pure
             recompute plan fits.
+            [--faults SPEC] injects deterministic faults for chaos testing:
+            `;`-separated events `worker-panic@K`, `corrupt@K`,
+            `budget-shrink@K=BYTES`, `link-fail:P`, `link-slow:P,xF`,
+            `seed=N` (e.g. --faults 'seed=7;worker-panic@4;link-fail:0.1').
+            The run recovers (respawn + requeue, detect + re-encode,
+            bounded retries, degradation ladder) and reports what it took.
+            [--loader_watchdog_secs N] turns a stalled loader into a typed
+            error naming the suspect stage instead of a hang.
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
             [--kind dp|sqrt|uniformK|bottleneckK] [--frontier] [--arena]
             [--budget BYTES] [--spill BYTES [--host_bw B/s] [--lookahead N]]
-            [--json]
+            [--degrade] [--json]
             (--frontier prints the DP time/memory Pareto frontier; --budget
             picks the cheapest-time plan whose packed total fits; --arena
             packs the plan into a memory slab and prints its size,
             fragmentation ratio and per-class offsets; --spill composes a
             host-spill plan for the budget and prints the per-tensor
-            evict/prefetch table + predicted stall; --json renders the one
-            staged PlanRequest→PlanOutcome run as a stable JSON document —
-            arena always included, --spill preferred over --budget)
+            evict/prefetch table + predicted stall; --degrade walks the
+            graceful-degradation ladder for an infeasible --budget/--spill
+            instead of erroring, printing the typed episode; --json renders
+            the one staged PlanRequest→PlanOutcome run as a stable JSON
+            document — arena always included, --spill preferred over
+            --budget)
   models    List architecture profiles and parameter counts.
   figures   Regenerate all paper figures (shortcut for the benches).
   help      Show this message.

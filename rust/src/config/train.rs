@@ -4,6 +4,7 @@ use crate::config::kv::KvGet;
 use crate::config::{parse_kv, Pipeline};
 use crate::data::encode::{EncodeSpec, Encoding, WordType};
 use crate::data::loader::LoaderMode;
+use crate::fault::FaultSpec;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -113,6 +114,14 @@ pub struct TrainConfig {
     pub max_batches_per_epoch: usize,
     /// Learning-rate schedule (`const:LR`, `step:LR:N:F`, `cosine:LR:T`).
     pub lr_schedule: crate::coordinator::LrSchedule,
+    /// Deterministic fault-injection spec (chaos testing): worker panics,
+    /// payload corruption, link faults, mid-run budget shrinks. `None` (the
+    /// default) injects nothing. See [`crate::fault::FaultSpec`] grammar.
+    pub faults: Option<FaultSpec>,
+    /// Watchdog deadline (seconds) for the parallel loader: if no batch
+    /// arrives within it, `try_next` returns a typed stall error naming the
+    /// suspect stage instead of blocking forever. `None` = no deadline.
+    pub loader_watchdog_secs: Option<u64>,
 }
 
 impl TrainConfig {
@@ -137,6 +146,8 @@ impl TrainConfig {
             eval_every: 1,
             max_batches_per_epoch: 0,
             lr_schedule: crate::coordinator::LrSchedule::default(),
+            faults: None,
+            loader_watchdog_secs: None,
         }
     }
 
@@ -219,6 +230,13 @@ impl TrainConfig {
         }
         if let Some(v) = kv.get_str("lr_schedule") {
             cfg.lr_schedule = crate::coordinator::LrSchedule::parse(v)?;
+        }
+        if let Some(v) = kv.get_str("faults") {
+            let spec = FaultSpec::parse(v).map_err(|e| format!("faults: {e}"))?;
+            cfg.faults = if spec.is_empty() { None } else { Some(spec) };
+        }
+        if let Some(v) = kv.get_usize("loader_watchdog_secs")? {
+            cfg.loader_watchdog_secs = if v == 0 { None } else { Some(v as u64) };
         }
         cfg.validate()?;
         Ok(cfg)
@@ -443,6 +461,35 @@ mod tests {
         ov.insert("host_bw".to_string(), "fast".to_string());
         let err = TrainConfig::from_sources(None, &ov).unwrap_err();
         assert!(err.contains("host_bw"), "{err}");
+    }
+
+    #[test]
+    fn faults_and_watchdog_parse() {
+        let mut ov = BTreeMap::new();
+        ov.insert("faults".to_string(), "seed=9;worker-panic@3;link-fail:0.1".to_string());
+        ov.insert("loader_watchdog_secs".to_string(), "30".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        let spec = cfg.faults.unwrap();
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.events.len(), 2);
+        assert_eq!(cfg.loader_watchdog_secs, Some(30));
+        // defaults: no faults, no watchdog
+        let d = TrainConfig::default_for("m", Pipeline::BASELINE);
+        assert!(d.faults.is_none());
+        assert!(d.loader_watchdog_secs.is_none());
+        // a seed-only spec injects nothing and normalizes to None
+        let mut ov = BTreeMap::new();
+        ov.insert("faults".to_string(), "seed=4".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).unwrap().faults.is_none());
+        // watchdog 0 = disabled
+        let mut ov = BTreeMap::new();
+        ov.insert("loader_watchdog_secs".to_string(), "0".to_string());
+        assert!(TrainConfig::from_sources(None, &ov).unwrap().loader_watchdog_secs.is_none());
+        // junk rejected with the key named
+        let mut ov = BTreeMap::new();
+        ov.insert("faults".to_string(), "meteor-strike@1".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("faults"), "{err}");
     }
 
     #[test]

@@ -81,6 +81,10 @@ pub fn markdown_summary(report: &TrainReport) -> String {
     if let Some(offload) = &report.offload {
         s.push_str(&offload_summary(offload));
     }
+    if let Some(d) = &report.degradation {
+        s.push_str(&d.to_markdown());
+        s.push('\n');
+    }
     s
 }
 
@@ -183,6 +187,7 @@ mod tests {
                 ],
             }),
             offload: None,
+            degradation: None,
         }
     }
 
@@ -200,6 +205,9 @@ mod tests {
             evictions: 0,
             prefetches: 0,
             pool_hit_rate: 0.0,
+            link_faults: 0,
+            link_retries: 0,
+            retry_stall_secs: 0.0,
         }
     }
 
@@ -294,6 +302,38 @@ mod tests {
         let md = markdown_summary(&rep);
         assert!(md.contains("host-spill engine: 400 evictions"), "{md}");
         assert!(md.contains("pool hit rate 99.0%"), "{md}");
+    }
+
+    #[test]
+    fn markdown_includes_degradation_and_link_fault_lines() {
+        use crate::fault::{DegradationAction, DegradationReport, DegradeTrigger};
+        let mut rep = fake_report();
+        assert!(!markdown_summary(&rep).contains("degradation:"));
+        rep.degradation = Some(DegradationReport {
+            trigger: DegradeTrigger::BudgetShrink { from: Some(8 << 20), to: 2 << 20 },
+            actions: vec![DegradationAction::SteppedDownFrontier {
+                device_total: 1 << 20,
+                recompute_overhead: 0.3,
+            }],
+            met_budget: true,
+            budget: 2 << 20,
+            device_total: 1 << 20,
+            predicted_step_secs: Some(0.01),
+        });
+        let mut off = fake_offload();
+        off.evictions = 12;
+        off.link_faults = 5;
+        off.link_retries = 3;
+        off.retry_stall_secs = 0.002;
+        rep.offload = Some(off);
+        let md = markdown_summary(&rep);
+        assert!(md.contains("degradation: budget shrink"), "{md}");
+        assert!(md.contains("stepped down the frontier"), "{md}");
+        assert!(md.contains("host-link faults: 5 observed, 3 transfers retried"), "{md}");
+        // a healthy run never mentions the link-fault line
+        let mut healthy = fake_report();
+        healthy.offload = Some(fake_offload());
+        assert!(!markdown_summary(&healthy).contains("host-link faults"));
     }
 
     #[test]

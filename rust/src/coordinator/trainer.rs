@@ -9,16 +9,18 @@ use crate::data::loader::{BatchPayload, EdLoader, LoaderStats, WorkerSummary};
 use crate::data::pool::BufferPool;
 use crate::data::sampler::SbsSampler;
 use crate::data::synth::{Split, SynthCifar};
+use crate::fault::{DegradationReport, DegradeTrigger, FaultInjector};
 use crate::memory::arena::ArenaReport;
-use crate::memory::offload::OffloadReport;
+use crate::memory::offload::{LinkFaults, OffloadReport};
 use crate::memory::outcome::PlanOutcome;
 use crate::memory::pipeline::{PlanError, PlanRequest};
 use crate::memory::planner::CheckpointPlan;
 use crate::metrics::{EpochRecord, History, Mean, Timer};
 use crate::runtime::{LoadedModel, Runtime, TrainState};
-use crate::{debug, info};
+use crate::{debug, info, warn_};
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Result of a full training run.
 #[derive(Clone, Debug)]
@@ -53,6 +55,10 @@ pub struct TrainReport {
     /// recompute frontier point: spilled bytes, predicted stall, and the
     /// runtime engine's transfer/pool counters.
     pub offload: Option<OffloadReport>,
+    /// The graceful-degradation episode, when an injected (or real)
+    /// mid-run fault forced a re-plan down the ladder: what triggered it,
+    /// every rung taken, and where the plan landed.
+    pub degradation: Option<DegradationReport>,
 }
 
 /// Orchestrates one training run.
@@ -80,6 +86,30 @@ pub struct Trainer {
     /// Host-spill summary when the budget forced offloading
     /// (see [`TrainReport::offload`]).
     offload: Option<OffloadReport>,
+    /// Deterministic fault injector shared with the loader's producers
+    /// (`None` when the config injects nothing).
+    faults: Option<Arc<FaultInjector>>,
+    /// Global train-step counter across epochs — the clock fire-once
+    /// fault events key on.
+    global_step: usize,
+    /// Last degradation episode (see [`TrainReport::degradation`]).
+    degradation: Option<DegradationReport>,
+}
+
+/// Link-fault parameters for the offload engine, distilled from the
+/// injector's spec (`None` when the spec carries no link faults).
+fn link_faults_for(faults: Option<&FaultInjector>, host_bw: u64) -> Option<LinkFaults> {
+    let f = faults?;
+    if !f.has_link_faults() {
+        return None;
+    }
+    Some(LinkFaults {
+        seed: f.seed(),
+        fail_prob: f.link_fail_prob(),
+        slow: f.link_slow(),
+        bytes_per_sec: host_bw as f64,
+        ..LinkFaults::default()
+    })
 }
 
 /// Choose the run's memory plan for an S-C pipeline — one
@@ -199,6 +229,14 @@ impl Trainer {
                 plan_cfg.memory_budget = Some(b);
             }
         }
+        let faults = cfg
+            .faults
+            .as_ref()
+            .filter(|s| !s.is_empty())
+            .map(|s| Arc::new(FaultInjector::new(s)));
+        if let Some(spec) = cfg.faults.as_ref().filter(|s| !s.is_empty()) {
+            warn_!("fault injection active: {spec}");
+        }
         let (plan, arena, offload) = match select_plan(&plan_cfg, (h, w, c), num_classes)? {
             Some(outcome) => {
                 let offload = match outcome.offload_report() {
@@ -206,6 +244,7 @@ impl Trainer {
                         // The runtime half replays the spill schedule
                         // (host-pool evictions/prefetches) every step.
                         model.configure_offload(outcome.spill.as_ref().expect("spilling outcome"));
+                        model.configure_link_faults(link_faults_for(faults.as_deref(), cfg.host_bw));
                         Some(report)
                     }
                     None => None,
@@ -237,6 +276,9 @@ impl Trainer {
             plan,
             arena,
             offload,
+            faults,
+            global_step: 0,
+            degradation: None,
         })
     }
 
@@ -255,6 +297,12 @@ impl Trainer {
         self.offload.as_ref()
     }
 
+    /// The last graceful-degradation episode, when a mid-run fault forced
+    /// a re-plan down the ladder.
+    pub fn degradation(&self) -> Option<&DegradationReport> {
+        self.degradation.as_ref()
+    }
+
     fn train_loader(&self, epoch: usize) -> Result<EdLoader> {
         let policy = AugPolicy::parse(&self.cfg.augment).map_err(|e| anyhow!(e))?;
         let sampler = SbsSampler::uniform(
@@ -268,14 +316,67 @@ impl Trainer {
         if self.cfg.max_batches_per_epoch > 0 {
             batches = batches.min(self.cfg.max_batches_per_epoch);
         }
-        Ok(EdLoader::with_pool(
+        Ok(EdLoader::with_faults(
             self.train_data.clone(),
             sampler,
             self.cfg.encode_spec(),
             batches,
             self.cfg.loader_mode(),
             self.pool.clone(),
+            self.faults.clone(),
+            self.cfg.loader_watchdog_secs.map(Duration::from_secs),
         ))
+    }
+
+    /// Absorb a mid-run device-budget shrink: walk the degradation ladder
+    /// ([`PlanRequest::run_degraded`]) for the new budget, swap the
+    /// runtime's spill engine for the re-planned one (or drop it on the
+    /// heap-fallback rung) and record the episode for the report.
+    fn replan_for_budget(&mut self, to: u64) -> Result<()> {
+        let from = self
+            .offload
+            .as_ref()
+            .map(|o| o.budget)
+            .or(self.cfg.memory_budget);
+        if !self.cfg.pipeline.sc {
+            warn_!(
+                "injected budget shrink to {} KiB ignored: pipeline has no S-C planning stage",
+                to / 1024
+            );
+            return Ok(());
+        }
+        let (h, w, c) = self.train_data.shape();
+        let request = PlanRequest::for_model(&self.cfg.model, (h, w, c), self.train_data.num_classes())
+            .pipeline(self.cfg.pipeline)
+            .batch(self.cfg.batch_size)
+            .host_bw(self.cfg.host_bw)
+            .spill_lookahead(self.cfg.spill_lookahead)
+            .memory_budget(to);
+        let (outcome, report) = request
+            .run_degraded(DegradeTrigger::BudgetShrink { from, to })
+            .map_err(|e| anyhow!("budget shrink to {to} B could not be re-planned: {e}"))?;
+        warn_!(
+            "device budget shrank to {} KiB at step {}: took {} degradation rung(s), \
+             device total now {} KiB ({})",
+            to / 1024,
+            self.global_step,
+            report.actions.len(),
+            report.device_total / 1024,
+            if report.met_budget { "budget met" } else { "budget MISSED" }
+        );
+        match outcome.spill.as_ref() {
+            Some(spill) => {
+                self.model.configure_offload(spill);
+                self.model
+                    .configure_link_faults(link_faults_for(self.faults.as_deref(), self.cfg.host_bw));
+            }
+            None => self.model.clear_offload(),
+        }
+        self.plan = Some(outcome.plan.clone());
+        self.arena = outcome.arena.clone();
+        self.offload = outcome.offload_report();
+        self.degradation = Some(report);
+        Ok(())
     }
 
     /// Sequential, augmentation-free eval batches matching the artifact's
@@ -331,7 +432,22 @@ impl Trainer {
         let mut acc = Mean::default();
         let mut images: u64 = 0;
         let mut step = 0usize;
-        while let Some(payload) = loader.next() {
+        loop {
+            let payload = match loader.try_next() {
+                Ok(Some(p)) => p,
+                Ok(None) => break,
+                // Typed loader failures (respawn budget exhausted, watchdog
+                // stall, encode error) abort the epoch cleanly instead of
+                // panicking the train thread.
+                Err(e) => bail!("epoch {epoch} aborted: {e}"),
+            };
+            // Fire-once budget shrinks key on the global step counter —
+            // re-plan down the degradation ladder before the step runs.
+            if let Some(faults) = self.faults.clone() {
+                if let Some(to) = faults.budget_shrink_due(self.global_step) {
+                    self.replan_for_budget(to)?;
+                }
+            }
             let out = self.model.train_step_lr(&mut self.state, &payload, lr)?;
             // Spent payload buffers go back to the pool for the producers;
             // this is what makes steady-state epochs allocation-free.
@@ -340,6 +456,7 @@ impl Trainer {
             acc.add_weighted(out.accuracy(), out.batch_size as u64);
             images += out.batch_size as u64;
             step += 1;
+            self.global_step += 1;
             if step % 50 == 0 {
                 debug!(
                     "epoch {epoch} step {step}: loss {:.4} acc {:.3}",
@@ -411,6 +528,9 @@ impl Trainer {
             off.evictions = stats.evictions;
             off.prefetches = stats.prefetches;
             off.pool_hit_rate = stats.hit_rate();
+            off.link_faults = stats.link_faults;
+            off.link_retries = stats.link_retries;
+            off.retry_stall_secs = stats.retry_stall_secs;
         }
         Ok(TrainReport {
             model: self.cfg.model.clone(),
@@ -426,6 +546,7 @@ impl Trainer {
             plan: self.plan.clone(),
             arena: self.arena.clone(),
             offload: self.offload.clone(),
+            degradation: self.degradation.clone(),
             history: std::mem::take(&mut self.history),
         })
     }

@@ -63,11 +63,58 @@ use crate::data::encode::{encode_batch_grouped_into, EncodeError, EncodeSpec, En
 use crate::data::image::ImageBatch;
 use crate::data::pool::BufferPool;
 use crate::data::sampler::{materialize_plan_arena, BatchPlan, ClassSpec, SbsSampler, StageScratch};
-use std::collections::BTreeMap;
+use crate::fault::FaultInjector;
+use crate::util::crc::Crc32;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Every mutex in this module protects plain-old-data whose invariants
+/// hold between statements, so a poisoned lock is safe to adopt — and
+/// required for fault tolerance: one panicking worker must not wedge
+/// every thread sharing the plan queue or the permit gate.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Typed failure surfaced by [`EdLoader::try_next`] instead of a panic or
+/// a silent hang.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LoaderError {
+    /// A producer's encode step failed (capacity violation upstream).
+    Encode { step: usize, reason: String },
+    /// A worker died holding `step`'s plan and the respawn budget was
+    /// exhausted; the batch cannot be produced.
+    WorkerPanicked { step: usize, respawns: u64 },
+    /// No message arrived within the watchdog deadline.
+    Stalled { stage: String, waited: Duration, produced: u64 },
+}
+
+impl std::fmt::Display for LoaderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoaderError::Encode { step, reason } => {
+                write!(f, "E-D producer encode failed at step {step}: {reason}")
+            }
+            LoaderError::WorkerPanicked { step, respawns } => write!(
+                f,
+                "E-D worker died holding step {step}'s plan after {respawns} respawns; \
+                 giving up on this batch"
+            ),
+            LoaderError::Stalled { stage, waited, produced } => write!(
+                f,
+                "E-D loader stalled: no batch within {:.1}s; stalled stage: {stage} \
+                 (producers sent {produced} batches so far)",
+                waited.as_secs_f64()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LoaderError {}
 
 /// What the loader hands the trainer per step.
 #[derive(Clone, Debug)]
@@ -160,6 +207,10 @@ pub struct LoaderStats {
     pub seq_max_depth: AtomicU64,
     /// Batches that arrived at the sequencer ahead of their turn.
     pub seq_out_of_order: AtomicU64,
+    /// Workers the supervisor respawned after a panic.
+    pub respawns: AtomicU64,
+    /// Corrupted payloads detected by checksum and re-encoded.
+    pub corruptions_detected: AtomicU64,
 }
 
 impl LoaderStats {
@@ -232,8 +283,10 @@ impl Gate {
     }
 
     /// Take a permit; returns `false` if `cancel` was raised while waiting.
+    /// Poison-tolerant: a worker that panicked while holding the permit
+    /// mutex must not wedge the remaining workers (see [`lock_recover`]).
     fn acquire(&self, cancel: &AtomicBool) -> bool {
-        let mut p = self.permits.lock().unwrap();
+        let mut p = lock_recover(&self.permits);
         loop {
             if cancel.load(Ordering::Relaxed) {
                 return false;
@@ -242,24 +295,80 @@ impl Gate {
                 *p -= 1;
                 return true;
             }
-            p = self.cv.wait(p).unwrap();
+            p = match self.cv.wait(p) {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
     }
 
     fn release(&self) {
-        *self.permits.lock().unwrap() += 1;
+        *lock_recover(&self.permits) += 1;
         self.cv.notify_one();
     }
 
     /// Wake every waiter (used with the cancel flag on shutdown; taking the
     /// mutex first makes the wakeup race-free against a check-then-wait).
     fn wake_all(&self) {
-        let _guard = self.permits.lock().unwrap();
+        let _guard = lock_recover(&self.permits);
         self.cv.notify_all();
     }
 }
 
+/// Checksum of the bytes a payload ships (used by the corruption
+/// detect-and-reencode path; not on the fault-free hot path).
+fn payload_crc(p: &BatchPayload) -> u32 {
+    let mut c = Crc32::new();
+    match p {
+        BatchPayload::Raw { data, labels, n } => {
+            c.update(&(*n as u64).to_le_bytes());
+            for v in data.iter().chain(labels) {
+                c.update(&v.to_le_bytes());
+            }
+        }
+        BatchPayload::Encoded(groups) => {
+            for g in groups {
+                for w in &g.words_u64 {
+                    c.update(&w.to_le_bytes());
+                }
+                for w in &g.words_f64 {
+                    c.update(&w.to_le_bytes());
+                }
+                c.update(&g.offsets);
+                for l in &g.labels {
+                    c.update(&l.to_le_bytes());
+                }
+            }
+        }
+    }
+    c.finish()
+}
+
+/// Flip one bit in the payload's first shipped buffer (the injected
+/// corruption the checksum must catch).
+fn corrupt_payload(p: &mut BatchPayload) {
+    match p {
+        BatchPayload::Raw { data, .. } => {
+            if let Some(v) = data.first_mut() {
+                *v = f32::from_bits(v.to_bits() ^ 1);
+            }
+        }
+        BatchPayload::Encoded(groups) => {
+            if let Some(g) = groups.first_mut() {
+                if let Some(w) = g.words_u64.first_mut() {
+                    *w ^= 1;
+                } else if let Some(w) = g.words_f64.first_mut() {
+                    *w = f64::from_bits(w.to_bits() ^ 1);
+                } else if let Some(l) = g.labels.first_mut() {
+                    *l = f32::from_bits(l.to_bits() ^ 1);
+                }
+            }
+        }
+    }
+}
+
 /// Shared context for every producer thread.
+#[derive(Clone)]
 struct ProducerCtx {
     dataset: Arc<dyn Dataset>,
     specs: Arc<Vec<ClassSpec>>,
@@ -267,6 +376,7 @@ struct ProducerCtx {
     pool: Arc<BufferPool>,
     stats: Arc<LoaderStats>,
     cancel: Arc<AtomicBool>,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl ProducerCtx {
@@ -276,30 +386,63 @@ impl ProducerCtx {
         StageScratch::new(self.dataset.num_classes())
     }
 
-    /// Materialize + encode one plan, accounting to worker `wid`.
-    fn produce(
+    /// The pure materialize + encode path (a function of the plan alone,
+    /// so a retry or a respawned worker reproduces identical bytes).
+    fn produce_inner(
         &self,
         wid: usize,
         plan: &BatchPlan,
         stage: &mut ImageBatch,
         scratch: &mut StageScratch,
-    ) -> BatchPayload {
-        let t0 = Instant::now();
+    ) -> Result<BatchPayload, EncodeError> {
         let (h, w, c) = self.dataset.shape();
         stage.reset(plan.len(), h, w, c, self.dataset.num_classes());
         materialize_plan_arena(&self.specs, self.dataset.as_ref(), plan, stage, scratch);
         self.stats.workers[wid]
             .scratch_fallbacks
             .store(scratch.fallback_allocs(), Ordering::Relaxed);
-        let payload = match make_payload(stage, self.spec, &self.pool) {
-            Ok(p) => p,
-            // capacity violations are programming errors upstream; surface loudly.
-            Err(e) => panic!("E-D producer encode failed: {e}"),
-        };
+        make_payload(stage, self.spec, &self.pool)
+    }
+
+    /// Materialize + encode one plan, accounting to worker `wid`. Encode
+    /// failures surface as a typed [`LoaderError`] (not a panic, so one
+    /// bad batch cannot wedge the threads sharing this context's mutexes);
+    /// injected faults fire here: a scheduled worker panic (recovered by
+    /// the pool supervisor) or payload corruption, which the checksum
+    /// catches and a clean re-encode repairs.
+    fn produce(
+        &self,
+        wid: usize,
+        step: usize,
+        plan: &BatchPlan,
+        stage: &mut ImageBatch,
+        scratch: &mut StageScratch,
+    ) -> Result<BatchPayload, LoaderError> {
+        let t0 = Instant::now();
+        if let Some(f) = &self.faults {
+            if f.worker_panic_due(step) {
+                panic!("injected fault: worker {wid} panics holding step {step}");
+            }
+        }
+        let encode = |e: &EncodeError| LoaderError::Encode { step, reason: e.to_string() };
+        let mut payload =
+            self.produce_inner(wid, plan, stage, scratch).map_err(|e| encode(&e))?;
+        if let Some(f) = &self.faults {
+            if f.corrupt_due(step) {
+                let expect = payload_crc(&payload);
+                corrupt_payload(&mut payload);
+                if payload_crc(&payload) != expect {
+                    self.stats.corruptions_detected.fetch_add(1, Ordering::Relaxed);
+                    self.pool.recycle_payload(payload);
+                    payload =
+                        self.produce_inner(wid, plan, stage, scratch).map_err(|e| encode(&e))?;
+                }
+            }
+        }
         let dt = t0.elapsed().as_nanos() as u64;
         self.stats.workers[wid].produce_ns.fetch_add(dt, Ordering::Relaxed);
         self.stats.produce_ns.fetch_add(dt, Ordering::Relaxed);
-        payload
+        Ok(payload)
     }
 
     /// Account a completed (sent) batch to worker `wid`.
@@ -327,7 +470,7 @@ pub enum EdLoader {
         scratch: StageScratch,
     },
     Par {
-        rx: Receiver<BatchPayload>,
+        rx: Receiver<Result<BatchPayload, LoaderError>>,
         handles: Vec<std::thread::JoinHandle<()>>,
         stats: Arc<LoaderStats>,
         pool: Arc<BufferPool>,
@@ -335,7 +478,108 @@ pub enum EdLoader {
         /// In-flight payload bound for the worker pool (`None` for the
         /// single-producer mode, where the output channel already bounds it).
         gate: Option<Arc<Gate>>,
+        /// Watchdog deadline for [`EdLoader::try_next`] (`None` = wait
+        /// forever, the historical behavior).
+        watchdog: Option<Duration>,
     },
+}
+
+/// Worker respawn budget per loader: past this the supervisor reports the
+/// in-flight step as a typed error instead of looping on a crashing host.
+const MAX_RESPAWNS: u64 = 8;
+
+/// A dead-man switch each pool worker holds: dropped on unwind with
+/// `clean = false`, telling the supervisor the worker panicked.
+struct DeathNotice {
+    wid: usize,
+    tx: Sender<(usize, bool)>,
+    clean: bool,
+}
+
+impl Drop for DeathNotice {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.wid, self.clean));
+    }
+}
+
+/// Last known state of a worker's in-flight step, published before the
+/// work starts so the supervisor can recover it after a panic.
+#[derive(Default)]
+struct InFlight {
+    /// The worker holds a gate permit not yet transferred to a payload.
+    permit: bool,
+    /// The `(step, plan)` being produced (cleared once sent downstream).
+    work: Option<(usize, BatchPlan)>,
+}
+
+/// Everything a pool worker (or its respawned replacement) needs.
+#[derive(Clone)]
+struct WorkerShared {
+    plan_rx: Arc<Mutex<Receiver<(usize, BatchPlan)>>>,
+    /// Recovered in-flight plans, produced before fresh ones so the
+    /// sequenced stream stays gap-free.
+    requeue: Arc<Mutex<VecDeque<(usize, BatchPlan)>>>,
+    seq_tx: SyncSender<(usize, Result<BatchPayload, LoaderError>)>,
+    gate: Arc<Gate>,
+    slots: Arc<Vec<Mutex<InFlight>>>,
+    death_tx: Sender<(usize, bool)>,
+}
+
+/// Spawn one pool worker thread (used at startup and by the supervisor
+/// when it replaces a dead worker).
+fn spawn_pool_worker(
+    wid: usize,
+    ctx: ProducerCtx,
+    shared: WorkerShared,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("optorch-ed-worker-{wid}"))
+        .spawn(move || {
+            let mut notice = DeathNotice { wid, tx: shared.death_tx.clone(), clean: false };
+            let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
+            let mut scratch = ctx.worker_scratch();
+            loop {
+                // A permit caps in-flight payloads; taking it before the
+                // dequeue keeps step order live (see Gate docs). False =
+                // canceled.
+                if !shared.gate.acquire(&ctx.cancel) {
+                    break;
+                }
+                lock_recover(&shared.slots[wid]).permit = true;
+                // Recovered plans outrank fresh ones; the lock scope on the
+                // plan queue is held only across the blocking recv (plans
+                // are cheap and arrive fast).
+                let requeued = lock_recover(&shared.requeue).pop_front();
+                let (step, plan) = match requeued {
+                    Some(w) => w,
+                    None => match lock_recover(&shared.plan_rx).recv() {
+                        Ok(w) => w,
+                        Err(_) => {
+                            // permit unused: no more plans
+                            shared.gate.release();
+                            lock_recover(&shared.slots[wid]).permit = false;
+                            break;
+                        }
+                    },
+                };
+                lock_recover(&shared.slots[wid]).work = Some((step, plan.clone()));
+                let result = ctx.produce(wid, step, &plan, &mut stage, &mut scratch);
+                // From here the permit travels with the payload (the
+                // consumer releases it), so clear the recovery slot first.
+                {
+                    let mut s = lock_recover(&shared.slots[wid]);
+                    s.permit = false;
+                    s.work = None;
+                }
+                let t1 = Instant::now();
+                if shared.seq_tx.send((step, result)).is_err() {
+                    break; // sequencer gone (shutdown)
+                }
+                ctx.sent(wid, t1);
+            }
+            notice.clean = true;
+        })
+        .expect("spawn E-D worker")
 }
 
 impl EdLoader {
@@ -365,6 +609,25 @@ impl EdLoader {
         mode: LoaderMode,
         pool: Arc<BufferPool>,
     ) -> EdLoader {
+        Self::with_faults(dataset, sampler, spec, num_batches, mode, pool, None, None)
+    }
+
+    /// [`EdLoader::with_pool`] plus the robustness knobs: an optional
+    /// [`FaultInjector`] (worker panics / payload corruption fire in the
+    /// producers) and an optional watchdog deadline for
+    /// [`EdLoader::try_next`]. Both apply to the parallel modes; the
+    /// synchronous loader has no threads to kill or queues to stall.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_faults(
+        dataset: Arc<dyn Dataset>,
+        sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        num_batches: usize,
+        mode: LoaderMode,
+        pool: Arc<BufferPool>,
+        faults: Option<Arc<FaultInjector>>,
+        watchdog: Option<Duration>,
+    ) -> EdLoader {
         match mode {
             LoaderMode::Synchronous => {
                 let (h, w, c) = dataset.shape();
@@ -382,7 +645,16 @@ impl EdLoader {
                 }
             }
             LoaderMode::Parallel { prefetch_depth, num_workers: 0 } => {
-                Self::spawn_single_producer(dataset, sampler, spec, num_batches, prefetch_depth, pool)
+                Self::spawn_single_producer(
+                    dataset,
+                    sampler,
+                    spec,
+                    num_batches,
+                    prefetch_depth,
+                    pool,
+                    faults,
+                    watchdog,
+                )
             }
             LoaderMode::Parallel { prefetch_depth, num_workers } => Self::spawn_worker_pool(
                 dataset,
@@ -392,12 +664,18 @@ impl EdLoader {
                 prefetch_depth,
                 num_workers,
                 pool,
+                faults,
+                watchdog,
             ),
         }
     }
 
     /// The classic Figure-1 shape: one background thread does plan +
-    /// materialize + encode sequentially (`num_workers = 0`).
+    /// materialize + encode sequentially (`num_workers = 0`). With no
+    /// worker pool there is no supervisor: an injected worker panic here
+    /// surfaces as a typed [`LoaderError::WorkerPanicked`] instead of a
+    /// respawn (the sampler state died with the producer).
+    #[allow(clippy::too_many_arguments)]
     fn spawn_single_producer(
         dataset: Arc<dyn Dataset>,
         mut sampler: SbsSampler,
@@ -405,6 +683,8 @@ impl EdLoader {
         num_batches: usize,
         prefetch_depth: usize,
         pool: Arc<BufferPool>,
+        faults: Option<Arc<FaultInjector>>,
+        watchdog: Option<Duration>,
     ) -> EdLoader {
         let stats = Arc::new(LoaderStats::with_workers(1));
         let cancel = Arc::new(AtomicBool::new(false));
@@ -416,30 +696,55 @@ impl EdLoader {
             pool: pool.clone(),
             stats: stats.clone(),
             cancel: cancel.clone(),
+            faults,
         };
         let handle = std::thread::Builder::new()
             .name("optorch-ed-producer".into())
             .spawn(move || {
                 let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
                 let mut scratch = ctx.worker_scratch();
-                for _ in 0..num_batches {
+                for step in 0..num_batches {
                     if ctx.cancel.load(Ordering::Relaxed) {
                         return;
                     }
                     let plan = sampler.plan_batch(ctx.dataset.as_ref());
-                    let payload = ctx.produce(0, &plan, &mut stage, &mut scratch);
+                    if let Some(f) = &ctx.faults {
+                        // A panic would silently truncate the stream (there
+                        // is nothing to respawn a single producer's sampler
+                        // state into); report it typed instead.
+                        if f.worker_panic_due(step) {
+                            let _ = tx.send(Err(LoaderError::WorkerPanicked {
+                                step,
+                                respawns: 0,
+                            }));
+                            return;
+                        }
+                    }
+                    let result = ctx.produce(0, step, &plan, &mut stage, &mut scratch);
+                    let failed = result.is_err();
                     let t1 = Instant::now();
-                    if tx.send(payload).is_err() {
+                    if tx.send(result).is_err() {
                         return; // consumer dropped; stop quietly
+                    }
+                    if failed {
+                        return; // typed error delivered; end the stream
                     }
                     ctx.sent(0, t1);
                 }
             })
             .expect("spawn E-D producer");
-        EdLoader::Par { rx, handles: vec![handle], stats, pool, cancel, gate: None }
+        EdLoader::Par { rx, handles: vec![handle], stats, pool, cancel, gate: None, watchdog }
     }
 
-    /// The producer pool: planner → N workers → sequencer (see module docs).
+    /// The producer pool: planner → N workers → sequencer (see module
+    /// docs), plus a supervisor that watches for worker deaths. When a
+    /// worker panics the supervisor releases its stranded gate permit,
+    /// requeues its in-flight `(step, plan)` (materialization is a pure
+    /// function of the plan, so whoever re-produces it emits identical
+    /// bytes and the sequenced stream stays byte-identical to a
+    /// fault-free run), and spawns a replacement — up to [`MAX_RESPAWNS`],
+    /// after which the step surfaces as a typed error.
+    #[allow(clippy::too_many_arguments)]
     fn spawn_worker_pool(
         dataset: Arc<dyn Dataset>,
         mut sampler: SbsSampler,
@@ -448,13 +753,15 @@ impl EdLoader {
         prefetch_depth: usize,
         num_workers: usize,
         pool: Arc<BufferPool>,
+        faults: Option<Arc<FaultInjector>>,
+        watchdog: Option<Duration>,
     ) -> EdLoader {
         let depth = prefetch_depth.max(1);
         let stats = Arc::new(LoaderStats::with_workers(num_workers));
         let cancel = Arc::new(AtomicBool::new(false));
         let specs = Arc::new(sampler.specs().to_vec());
         let gate = Arc::new(Gate::new(depth + num_workers));
-        let mut handles = Vec::with_capacity(num_workers + 2);
+        let mut handles = Vec::with_capacity(num_workers + 3);
 
         // Plans flow through a bounded queue so the planner (and its RNG
         // state) never runs more than depth + num_workers steps ahead.
@@ -464,10 +771,14 @@ impl EdLoader {
         // sequencer. The gate (not this capacity) is what bounds payload
         // memory; the sequencer drains this queue eagerly into its reorder
         // buffer, so a small capacity cannot deadlock.
-        let (seq_tx, seq_rx) = sync_channel::<(usize, BatchPayload)>(depth);
+        let (seq_tx, seq_rx) =
+            sync_channel::<(usize, Result<BatchPayload, LoaderError>)>(depth);
         // The sequencer feeds the consumer in step order; this channel's
         // depth is the Figure-1 prefetch bound.
-        let (out_tx, out_rx) = sync_channel::<BatchPayload>(depth);
+        let (out_tx, out_rx) = sync_channel::<Result<BatchPayload, LoaderError>>(depth);
+        // Unbounded: a worker's death notice (sent from a Drop guard during
+        // unwind) must never block.
+        let (death_tx, death_rx) = std::sync::mpsc::channel::<(usize, bool)>();
 
         {
             let dataset = dataset.clone();
@@ -490,50 +801,96 @@ impl EdLoader {
             );
         }
 
+        let ctx = ProducerCtx {
+            dataset,
+            specs,
+            spec,
+            pool: pool.clone(),
+            stats: stats.clone(),
+            cancel: cancel.clone(),
+            faults,
+        };
+        let shared = WorkerShared {
+            plan_rx,
+            requeue: Arc::new(Mutex::new(VecDeque::new())),
+            seq_tx: seq_tx.clone(),
+            gate: gate.clone(),
+            slots: Arc::new((0..num_workers).map(|_| Mutex::new(InFlight::default())).collect()),
+            death_tx,
+        };
         for wid in 0..num_workers {
-            let ctx = ProducerCtx {
-                dataset: dataset.clone(),
-                specs: specs.clone(),
-                spec,
-                pool: pool.clone(),
-                stats: stats.clone(),
-                cancel: cancel.clone(),
-            };
-            let plan_rx = plan_rx.clone();
-            let seq_tx = seq_tx.clone();
-            let gate = gate.clone();
+            handles.push(spawn_pool_worker(wid, ctx.clone(), shared.clone()));
+        }
+
+        {
+            // The supervisor: consumes death notices until every worker
+            // (original or replacement) has exited cleanly.
+            let ctx = ctx.clone();
+            let shared = shared.clone();
+            let stats = stats.clone();
+            let cancel = cancel.clone();
             handles.push(
                 std::thread::Builder::new()
-                    .name(format!("optorch-ed-worker-{wid}"))
+                    .name("optorch-ed-supervisor".into())
                     .spawn(move || {
-                        let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
-                        let mut scratch = ctx.worker_scratch();
-                        loop {
-                            // A permit caps in-flight payloads; taking it
-                            // before the dequeue keeps step order live (see
-                            // Gate docs). False = canceled.
-                            if !gate.acquire(&ctx.cancel) {
-                                return;
+                        let mut live = num_workers;
+                        let mut respawns = 0u64;
+                        let mut replacements: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                        while live > 0 {
+                            let Ok((wid, clean)) = death_rx.recv() else { break };
+                            if clean || cancel.load(Ordering::Relaxed) {
+                                live -= 1;
+                                continue;
                             }
-                            // Lock scope: held only across the blocking
-                            // recv (plans are cheap and arrive fast).
-                            let msg = plan_rx.lock().unwrap().recv();
-                            let Ok((step, plan)) = msg else {
-                                gate.release(); // permit unused: no more plans
-                                return;
+                            // Unclean death: recover the permit and the
+                            // in-flight plan the worker took with it.
+                            let (permit, work) = {
+                                let mut s = lock_recover(&shared.slots[wid]);
+                                (std::mem::replace(&mut s.permit, false), s.work.take())
                             };
-                            let payload = ctx.produce(wid, &plan, &mut stage, &mut scratch);
-                            let t1 = Instant::now();
-                            if seq_tx.send((step, payload)).is_err() {
-                                return; // sequencer gone
+                            if respawns < MAX_RESPAWNS {
+                                respawns += 1;
+                                stats.respawns.fetch_add(1, Ordering::Relaxed);
+                                if permit {
+                                    // The replacement acquires its own
+                                    // permit; free the dead worker's.
+                                    shared.gate.release();
+                                }
+                                if let Some(w) = work {
+                                    lock_recover(&shared.requeue).push_front(w);
+                                }
+                                replacements.push(spawn_pool_worker(
+                                    wid,
+                                    ctx.clone(),
+                                    shared.clone(),
+                                ));
+                            } else {
+                                live -= 1;
+                                if let Some((step, _)) = work {
+                                    // The permit travels with the error
+                                    // message (the consumer releases it);
+                                    // send only if the worker still held it.
+                                    if !permit {
+                                        shared.gate.acquire(&ctx.cancel);
+                                    }
+                                    let _ = shared.seq_tx.send((
+                                        step,
+                                        Err(LoaderError::WorkerPanicked { step, respawns }),
+                                    ));
+                                } else if permit {
+                                    shared.gate.release();
+                                }
                             }
-                            ctx.sent(wid, t1);
+                        }
+                        for h in replacements {
+                            let _ = h.join();
                         }
                     })
-                    .expect("spawn E-D worker"),
+                    .expect("spawn E-D supervisor"),
             );
         }
-        drop(seq_tx); // sequencer sees disconnect once all workers exit
+        drop(seq_tx); // sequencer sees disconnect once workers + supervisor exit
+        drop(ctx);
 
         {
             let stats = stats.clone();
@@ -542,7 +899,8 @@ impl EdLoader {
                     .name("optorch-ed-sequencer".into())
                     .spawn(move || {
                         let mut next = 0usize;
-                        let mut parked: BTreeMap<usize, BatchPayload> = BTreeMap::new();
+                        let mut parked: BTreeMap<usize, Result<BatchPayload, LoaderError>> =
+                            BTreeMap::new();
                         while next < num_batches {
                             let Ok((step, payload)) = seq_rx.recv() else { return };
                             if step != next {
@@ -564,33 +922,73 @@ impl EdLoader {
             );
         }
 
-        EdLoader::Par { rx: out_rx, handles, stats, pool, cancel, gate: Some(gate) }
+        EdLoader::Par { rx: out_rx, handles, stats, pool, cancel, gate: Some(gate), watchdog }
     }
 
-    /// Next batch, or `None` at end of the configured run.
-    pub fn next(&mut self) -> Option<BatchPayload> {
+    /// Next batch, or `Ok(None)` at end of the configured run. Typed
+    /// failures — an encode error, a worker dead past its respawn budget,
+    /// a watchdog-detected stall — surface as `Err` instead of a panic;
+    /// [`EdLoader::next`] is the panicking convenience wrapper.
+    pub fn try_next(&mut self) -> Result<Option<BatchPayload>, LoaderError> {
         match self {
             EdLoader::Sync { dataset, sampler, spec, remaining, stats, pool, stage, scratch } => {
                 if *remaining == 0 {
-                    return None;
+                    return Ok(None);
                 }
                 *remaining -= 1;
                 let t0 = Instant::now();
                 sampler.next_batch_arena(dataset.as_ref(), stage, scratch);
-                let payload = make_payload(stage, *spec, pool).expect("encode failed");
+                let step = stats.batches.load(Ordering::Relaxed) as usize;
+                let payload = make_payload(stage, *spec, pool)
+                    .map_err(|e| LoaderError::Encode { step, reason: e.to_string() })?;
                 stats
                     .produce_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 stats.batches.fetch_add(1, Ordering::Relaxed);
-                Some(payload)
+                Ok(Some(payload))
             }
-            EdLoader::Par { rx, gate, .. } => {
-                let payload = rx.recv().ok();
-                if let (Some(_), Some(g)) = (payload.as_ref(), gate.as_ref()) {
-                    g.release(); // one payload left the pipeline
+            EdLoader::Par { rx, gate, stats, watchdog, .. } => {
+                let msg = match watchdog {
+                    None => rx.recv().ok(),
+                    Some(d) => match rx.recv_timeout(*d) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Disconnected) => None,
+                        Err(RecvTimeoutError::Timeout) => {
+                            let produced = stats.batches.load(Ordering::Relaxed);
+                            let stage = if produced == 0 {
+                                "planner/encode workers (no batch produced yet)"
+                            } else {
+                                "sequencer/output channel"
+                            };
+                            return Err(LoaderError::Stalled {
+                                stage: stage.into(),
+                                waited: *d,
+                                produced,
+                            });
+                        }
+                    },
+                };
+                match msg {
+                    Some(res) => {
+                        if let Some(g) = gate.as_ref() {
+                            // One message (payload or error) left the
+                            // pipeline; its permit comes back here.
+                            g.release();
+                        }
+                        res.map(Some)
+                    }
+                    None => Ok(None),
                 }
-                payload
             }
+        }
+    }
+
+    /// Next batch, or `None` at end of the configured run. Panics on a
+    /// typed loader failure; use [`EdLoader::try_next`] to handle those.
+    pub fn next(&mut self) -> Option<BatchPayload> {
+        match self.try_next() {
+            Ok(p) => p,
+            Err(e) => panic!("E-D loader failed: {e}"),
         }
     }
 
@@ -644,7 +1042,12 @@ pub mod dump {
     use std::io::{Read, Write};
     use std::path::Path;
 
-    const MAGIC: &[u8; 8] = b"OPTORCH1";
+    /// Current format: `OPTORCH2` payload + trailing CRC-32 of everything
+    /// before it, so silent media corruption surfaces as a typed error
+    /// instead of a scrambled batch.
+    const MAGIC: &[u8; 8] = b"OPTORCH2";
+    /// Pre-checksum format, still accepted on read (no CRC to verify).
+    const LEGACY_MAGIC: &[u8; 8] = b"OPTORCH1";
 
     fn push_u32(buf: &mut Vec<u8>, v: u32) {
         buf.extend_from_slice(&v.to_le_bytes());
@@ -679,6 +1082,8 @@ pub mod dump {
         for l in &e.labels {
             buf.extend_from_slice(&l.to_le_bytes());
         }
+        let crc = crate::util::crc::crc32(&buf);
+        push_u32(&mut buf, crc);
         buf
     }
 
@@ -698,10 +1103,29 @@ pub mod dump {
         Ok(u32::from_le_bytes(take(b, 4)?.try_into().unwrap()))
     }
 
-    /// Deserialize one encoded batch.
+    /// Deserialize one encoded batch. `OPTORCH2` dumps are CRC-verified;
+    /// legacy `OPTORCH1` dumps parse without a checksum.
     pub fn from_bytes(mut b: &[u8]) -> std::io::Result<EncodedBatch> {
+        let all = b;
         let magic = take(&mut b, 8)?;
-        if magic != MAGIC {
+        if magic == MAGIC {
+            if b.len() < 4 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "truncated dump (missing checksum)",
+                ));
+            }
+            let (payload, stored) = b.split_at(b.len() - 4);
+            let stored = u32::from_le_bytes(stored.try_into().unwrap());
+            let computed = crate::util::crc::crc32(&all[..all.len() - 4]);
+            if stored != computed {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("dump checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"),
+                ));
+            }
+            b = payload;
+        } else if magic != LEGACY_MAGIC {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 "bad magic",
@@ -998,5 +1422,221 @@ mod tests {
             bytes.truncate(bytes.len() / 2);
             assert!(dump::from_bytes(&bytes).is_err());
         }
+    }
+
+    #[test]
+    fn dump_detects_single_bit_flips() {
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let mut l = setup(1, spec, LoaderMode::Synchronous);
+        let Some(BatchPayload::Encoded(groups)) = l.next() else { panic!("expected encoded") };
+        let bytes = dump::to_bytes(&groups[0]);
+        for pos in [9, bytes.len() / 2, bytes.len() - 5] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            assert!(dump::from_bytes(&bad).is_err(), "flip at {pos} went undetected");
+        }
+    }
+
+    #[test]
+    fn dump_accepts_legacy_unchecksummed_format() {
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let mut l = setup(1, spec, LoaderMode::Synchronous);
+        let Some(BatchPayload::Encoded(groups)) = l.next() else { panic!("expected encoded") };
+        let bytes = dump::to_bytes(&groups[0]);
+        // A legacy dump is the same payload with the old magic and no
+        // trailing checksum.
+        let mut legacy = bytes[..bytes.len() - 4].to_vec();
+        legacy[..8].copy_from_slice(b"OPTORCH1");
+        let back = dump::from_bytes(&legacy).unwrap();
+        assert_eq!(back.words_u64, groups[0].words_u64);
+        assert_eq!(back.labels, groups[0].labels);
+    }
+
+    // ---- fault injection & recovery ----
+
+    fn setup_faults(
+        batches: usize,
+        mode: LoaderMode,
+        faults: &str,
+        watchdog: Option<Duration>,
+    ) -> EdLoader {
+        let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 200, 7));
+        let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), 1).unwrap();
+        let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::U64));
+        let parsed = crate::fault::FaultSpec::parse(faults).unwrap();
+        let injector = (!parsed.is_empty()).then(|| Arc::new(FaultInjector::new(&parsed)));
+        EdLoader::with_faults(
+            d,
+            sampler,
+            spec,
+            batches,
+            mode,
+            Arc::new(BufferPool::default()),
+            injector,
+            watchdog,
+        )
+    }
+
+    /// Drain the loader, serializing every batch for byte-exact comparison.
+    fn stream_bytes(l: &mut EdLoader) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(p) = l.next() {
+            match p {
+                BatchPayload::Encoded(gs) => {
+                    out.push(gs.iter().flat_map(dump::to_bytes).collect())
+                }
+                other => panic!("expected encoded payload, got {other:?}"),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn injected_worker_panic_respawns_without_changing_the_stream() {
+        let mut healthy = setup_faults(10, par(2, 3), "", None);
+        let reference = stream_bytes(&mut healthy);
+        let mut faulted = setup_faults(10, par(2, 3), "worker-panic@4", None);
+        let stats = faulted.stats();
+        let stream = stream_bytes(&mut faulted);
+        assert_eq!(stream.len(), reference.len());
+        assert_eq!(stream, reference, "recovered stream diverged from the fault-free run");
+        assert_eq!(stats.respawns.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn injected_corruption_is_detected_and_reencoded() {
+        let mut healthy = setup_faults(6, par(2, 2), "", None);
+        let reference = stream_bytes(&mut healthy);
+        let mut faulted = setup_faults(6, par(2, 2), "corrupt@3", None);
+        let stats = faulted.stats();
+        let stream = stream_bytes(&mut faulted);
+        assert_eq!(stream, reference, "re-encoded stream diverged from the fault-free run");
+        assert_eq!(stats.corruptions_detected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn respawn_budget_exhaustion_surfaces_a_typed_error() {
+        // One panic event per allowed respawn plus one: the supervisor
+        // gives up on step 0 and reports it typed instead of looping.
+        let spec = vec!["worker-panic@0"; MAX_RESPAWNS as usize + 1].join(";");
+        let mut l = setup_faults(6, par(1, 2), &spec, None);
+        let stats = l.stats();
+        match l.try_next() {
+            Err(LoaderError::WorkerPanicked { step: 0, respawns }) => {
+                assert_eq!(respawns, MAX_RESPAWNS);
+            }
+            other => panic!("expected worker-panicked error, got {other:?}"),
+        }
+        // The surviving workers still deliver every other step.
+        let mut delivered = 0;
+        while let Ok(Some(p)) = l.try_next() {
+            delivered += 1;
+            l.recycle(p);
+        }
+        assert_eq!(delivered, 5);
+        assert_eq!(stats.respawns.load(Ordering::Relaxed), MAX_RESPAWNS);
+    }
+
+    #[test]
+    fn single_producer_panic_fault_is_typed_not_silent() {
+        let mut l = setup_faults(5, par(2, 0), "worker-panic@2", None);
+        let mut seen = 0;
+        loop {
+            match l.try_next() {
+                Ok(Some(p)) => {
+                    seen += 1;
+                    l.recycle(p);
+                }
+                Err(LoaderError::WorkerPanicked { step: 2, respawns: 0 }) => break,
+                other => panic!("unexpected loader result: {other:?}"),
+            }
+        }
+        assert_eq!(seen, 2, "steps before the fault must still arrive");
+    }
+
+    /// Dataset wrapper that sleeps on every fetch — drives the watchdog.
+    struct SlowDataset {
+        inner: SynthCifar,
+        delay: Duration,
+    }
+
+    impl Dataset for SlowDataset {
+        fn len(&self) -> usize {
+            self.inner.len()
+        }
+        fn num_classes(&self) -> usize {
+            self.inner.num_classes()
+        }
+        fn shape(&self) -> (usize, usize, usize) {
+            self.inner.shape()
+        }
+        fn get(&self, index: usize) -> (crate::data::image::Image, usize) {
+            std::thread::sleep(self.delay);
+            self.inner.get(index)
+        }
+        fn get_into(&self, index: usize, out: &mut crate::data::image::Image) -> usize {
+            std::thread::sleep(self.delay);
+            self.inner.get_into(index, out)
+        }
+    }
+
+    #[test]
+    fn watchdog_names_the_stalled_stage() {
+        let d: Arc<dyn Dataset> = Arc::new(SlowDataset {
+            inner: SynthCifar::cifar10(Split::Train, 200, 7),
+            delay: Duration::from_millis(25),
+        });
+        let sampler = SbsSampler::uniform(d.as_ref(), 16, AugPolicy::none(), 1).unwrap();
+        let mut l = EdLoader::with_faults(
+            d,
+            sampler,
+            None,
+            4,
+            par(2, 2),
+            Arc::new(BufferPool::default()),
+            None,
+            Some(Duration::from_millis(50)),
+        );
+        match l.try_next() {
+            Err(LoaderError::Stalled { stage, produced, .. }) => {
+                assert!(stage.contains("planner"), "stage was {stage:?}");
+                assert_eq!(produced, 0);
+            }
+            other => panic!("expected a stall, got {other:?}"),
+        }
+        // Dropping after the timeout must still shut the pool down cleanly.
+    }
+
+    #[test]
+    fn dropping_with_workers_parked_on_a_full_gate_cannot_deadlock() {
+        // depth 1 + many batches: the prefetch window fills and workers
+        // park on the gate; dropping the loader without consuming must
+        // wake them (cancel-then-wake ordering) rather than deadlock.
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let l = setup(100, None, par(1, 4));
+            std::thread::sleep(Duration::from_millis(100));
+            drop(l);
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("loader drop deadlocked with a full gate");
+    }
+
+    #[test]
+    fn loader_errors_name_the_failure() {
+        let e = LoaderError::Stalled {
+            stage: "sequencer/output channel".into(),
+            waited: Duration::from_secs(5),
+            produced: 3,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("stalled"), "{msg}");
+        assert!(msg.contains("sequencer"), "{msg}");
+        let e = LoaderError::WorkerPanicked { step: 7, respawns: 8 };
+        assert!(e.to_string().contains("step 7"), "{e}");
+        let e = LoaderError::Encode { step: 1, reason: "capacity".into() };
+        assert!(e.to_string().contains("encode failed"), "{e}");
     }
 }

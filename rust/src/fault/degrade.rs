@@ -1,0 +1,238 @@
+//! Typed record of a graceful-degradation episode.
+//!
+//! When the planning facade is asked to absorb a fault — a budget that
+//! shrank mid-run, a host link that stopped cooperating — it walks a
+//! fixed ladder of cheaper-memory fallbacks (documented on
+//! [`PlanRequest::run_degraded`]) and reports every rung it took here, so
+//! the trainer's report and the CLI can say exactly *how* the run kept
+//! going and at what predicted cost.
+//!
+//! [`PlanRequest::run_degraded`]: crate::memory::pipeline::PlanRequest::run_degraded
+
+use crate::util::json::{arr, n, obj, s, Json};
+use std::fmt;
+
+/// What forced the re-plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DegradeTrigger {
+    /// The device budget shrank (e.g. a co-tenant claimed memory).
+    BudgetShrink { from: Option<u64>, to: u64 },
+    /// The host link degraded past the retry budget.
+    LinkFailure { retries_exhausted: u64 },
+}
+
+impl fmt::Display for DegradeTrigger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DegradeTrigger::BudgetShrink { from: Some(from), to } => {
+                write!(f, "budget shrink {from} → {to} bytes")
+            }
+            DegradeTrigger::BudgetShrink { from: None, to } => {
+                write!(f, "budget shrink → {to} bytes")
+            }
+            DegradeTrigger::LinkFailure { retries_exhausted } => {
+                write!(f, "host link failure ({retries_exhausted} retries exhausted)")
+            }
+        }
+    }
+}
+
+/// One rung of the degradation ladder, in the order it was taken.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DegradationAction {
+    /// Re-planned at a cheaper-memory Pareto-frontier point.
+    SteppedDownFrontier { device_total: u64, recompute_overhead: f64 },
+    /// Shrank the spill prefetch lookahead (fewer resident buffers).
+    ShrunkLookahead { from: usize, to: usize },
+    /// Gave up on the budget: cheapest-memory plan, heap-backed arena.
+    HeapFallbackArena,
+}
+
+impl DegradationAction {
+    fn kind(&self) -> &'static str {
+        match self {
+            DegradationAction::SteppedDownFrontier { .. } => "stepped-down-frontier",
+            DegradationAction::ShrunkLookahead { .. } => "shrunk-lookahead",
+            DegradationAction::HeapFallbackArena => "heap-fallback-arena",
+        }
+    }
+}
+
+impl fmt::Display for DegradationAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DegradationAction::SteppedDownFrontier { device_total, recompute_overhead } => {
+                write!(
+                    f,
+                    "stepped down the frontier (device total {device_total} B, \
+                     recompute overhead {recompute_overhead:.3})"
+                )
+            }
+            DegradationAction::ShrunkLookahead { from, to } => {
+                write!(f, "shrank spill lookahead {from} → {to}")
+            }
+            DegradationAction::HeapFallbackArena => {
+                write!(f, "heap-fallback arena (budget abandoned)")
+            }
+        }
+    }
+}
+
+/// The full episode: what triggered it, which rungs were taken, and where
+/// the plan landed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradationReport {
+    pub trigger: DegradeTrigger,
+    pub actions: Vec<DegradationAction>,
+    /// True when the final plan fits the (possibly shrunk) budget.
+    pub met_budget: bool,
+    /// The budget the ladder was solving for.
+    pub budget: u64,
+    /// Device-resident total of the chosen plan.
+    pub device_total: u64,
+    /// Predicted step time of the chosen plan, when a spill schedule was
+    /// simulated.
+    pub predicted_step_secs: Option<f64>,
+}
+
+impl DegradationReport {
+    /// Stable JSON (same builder conventions as `PlanOutcome::to_json`).
+    pub fn to_json(&self) -> Json {
+        let trigger = match self.trigger {
+            DegradeTrigger::BudgetShrink { from, to } => {
+                let mut fields = vec![("kind", s("budget-shrink")), ("to", n(to as f64))];
+                if let Some(from) = from {
+                    fields.push(("from", n(from as f64)));
+                }
+                obj(fields)
+            }
+            DegradeTrigger::LinkFailure { retries_exhausted } => obj(vec![
+                ("kind", s("link-failure")),
+                ("retries_exhausted", n(retries_exhausted as f64)),
+            ]),
+        };
+        let actions = arr(
+            self.actions
+                .iter()
+                .map(|a| {
+                    let mut fields = vec![("kind", s(a.kind()))];
+                    match a {
+                        DegradationAction::SteppedDownFrontier {
+                            device_total,
+                            recompute_overhead,
+                        } => {
+                            fields.push(("device_total", n(*device_total as f64)));
+                            fields.push(("recompute_overhead", n(*recompute_overhead)));
+                        }
+                        DegradationAction::ShrunkLookahead { from, to } => {
+                            fields.push(("from", n(*from as f64)));
+                            fields.push(("to", n(*to as f64)));
+                        }
+                        DegradationAction::HeapFallbackArena => {}
+                    }
+                    obj(fields)
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("trigger", trigger),
+            ("actions", actions),
+            ("met_budget", Json::Bool(self.met_budget)),
+            ("budget", n(self.budget as f64)),
+            ("device_total", n(self.device_total as f64)),
+        ];
+        if let Some(p) = self.predicted_step_secs {
+            fields.push(("predicted_step_secs", n(p)));
+        }
+        obj(fields)
+    }
+
+    /// One-paragraph markdown summary for the train report.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("degradation: {} → ", self.trigger);
+        if self.actions.is_empty() {
+            out.push_str("re-planned without stepping down");
+        } else {
+            let rungs: Vec<String> = self.actions.iter().map(|a| a.to_string()).collect();
+            out.push_str(&rungs.join("; "));
+        }
+        out.push_str(&format!(
+            " ({} budget {} B, device total {} B",
+            if self.met_budget { "met" } else { "MISSED" },
+            self.budget,
+            self.device_total
+        ));
+        if let Some(p) = self.predicted_step_secs {
+            out.push_str(&format!(", predicted step {:.3} ms", p * 1e3));
+        }
+        out.push(')');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DegradationReport {
+        DegradationReport {
+            trigger: DegradeTrigger::BudgetShrink { from: Some(8 << 20), to: 4 << 20 },
+            actions: vec![
+                DegradationAction::SteppedDownFrontier {
+                    device_total: 3 << 20,
+                    recompute_overhead: 0.21,
+                },
+                DegradationAction::ShrunkLookahead { from: 2, to: 1 },
+            ],
+            met_budget: true,
+            budget: 4 << 20,
+            device_total: 3 << 20,
+            predicted_step_secs: Some(0.0123),
+        }
+    }
+
+    #[test]
+    fn json_has_trigger_actions_and_outcome() {
+        let j = sample().to_json();
+        assert_eq!(j.get("trigger").unwrap().get("kind").unwrap().as_str().unwrap(), "budget-shrink");
+        let actions = j.get("actions").unwrap().as_arr().unwrap();
+        assert_eq!(actions.len(), 2);
+        assert_eq!(
+            actions[0].get("kind").unwrap().as_str().unwrap(),
+            "stepped-down-frontier"
+        );
+        assert_eq!(j.get("met_budget").unwrap().as_bool().unwrap(), true);
+        // stable rendering + reparse
+        let text = j.to_string();
+        assert_eq!(text, sample().to_json().to_string());
+        crate::util::json::Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn markdown_names_every_rung() {
+        let md = sample().to_markdown();
+        assert!(md.contains("budget shrink"), "{md}");
+        assert!(md.contains("stepped down the frontier"), "{md}");
+        assert!(md.contains("shrank spill lookahead 2 → 1"), "{md}");
+        assert!(md.contains("met budget"), "{md}");
+    }
+
+    #[test]
+    fn heap_fallback_renders_as_missed() {
+        let r = DegradationReport {
+            trigger: DegradeTrigger::LinkFailure { retries_exhausted: 3 },
+            actions: vec![DegradationAction::HeapFallbackArena],
+            met_budget: false,
+            budget: 1 << 20,
+            device_total: 5 << 20,
+            predicted_step_secs: None,
+        };
+        let md = r.to_markdown();
+        assert!(md.contains("MISSED"), "{md}");
+        assert!(md.contains("heap-fallback arena"), "{md}");
+        assert_eq!(
+            r.to_json().get("trigger").unwrap().get("kind").unwrap().as_str().unwrap(),
+            "link-failure"
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! Deterministic fault injector shared across the pipeline's threads.
+//!
+//! Two delivery mechanisms, both timing-independent so a faulted run is
+//! exactly reproducible no matter how worker threads interleave:
+//!
+//! * **fire-once step events** (worker panic, payload corruption, budget
+//!   shrink) key on the *batch/step index* — whichever thread holds that
+//!   step triggers the event, and an atomic swap guarantees the respawned
+//!   worker re-producing the requeued plan does not re-trigger it;
+//! * **probabilistic link faults** are a *stateless* hash draw over
+//!   `(seed, step, slot, attempt)` — no shared RNG stream, so the outcome
+//!   of a given transfer attempt is a pure function of its coordinates.
+
+use super::spec::{FaultEvent, FaultSpec};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Outcome of one host-link transfer attempt under the injected link model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkOutcome {
+    /// Transfer proceeds at full bandwidth.
+    Healthy,
+    /// Transfer completes, slowed by the given factor (≥ 1).
+    Slow(f64),
+    /// Transfer fails; the caller should retry.
+    Fail,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless uniform draw in `[0, 1)` from mixed coordinates.
+fn unit_draw(seed: u64, label: u64, step: u64, slot: u64, attempt: u64) -> f64 {
+    let mut s = seed
+        ^ label.wrapping_mul(0xD2B7_4407_B1CE_6E93)
+        ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ slot.rotate_left(21).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ attempt.rotate_left(42);
+    let z = splitmix64(&mut s);
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Thread-shareable injector built from a [`FaultSpec`]. Cheap to probe:
+/// the hot-path queries are a linear scan over the (tiny) event list.
+#[derive(Debug)]
+pub struct FaultInjector {
+    seed: u64,
+    events: Vec<FaultEvent>,
+    /// Parallel to `events`; set when a fire-once event has triggered.
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultInjector {
+    pub fn new(spec: &FaultSpec) -> FaultInjector {
+        FaultInjector {
+            seed: spec.seed,
+            fired: spec.events.iter().map(|_| AtomicBool::new(false)).collect(),
+            events: spec.events.clone(),
+        }
+    }
+
+    /// Atomically claim the first unfired event matching `pick`.
+    fn fire_once<T>(&self, pick: impl Fn(&FaultEvent) -> Option<T>) -> Option<T> {
+        for (i, e) in self.events.iter().enumerate() {
+            if let Some(v) = pick(e) {
+                if !self.fired[i].swap(true, Ordering::AcqRel) {
+                    return Some(v);
+                }
+            }
+        }
+        None
+    }
+
+    /// Should the worker holding `step`'s plan panic now? Fires once.
+    pub fn worker_panic_due(&self, step: usize) -> bool {
+        self.fire_once(|e| match e {
+            FaultEvent::WorkerPanic { step: s } if *s == step => Some(()),
+            _ => None,
+        })
+        .is_some()
+    }
+
+    /// Should `step`'s encoded payload be corrupted? Fires once.
+    pub fn corrupt_due(&self, step: usize) -> bool {
+        self.fire_once(|e| match e {
+            FaultEvent::CorruptPayload { step: s } if *s == step => Some(()),
+            _ => None,
+        })
+        .is_some()
+    }
+
+    /// New device budget if a shrink is scheduled at `step`. Fires once.
+    pub fn budget_shrink_due(&self, step: usize) -> Option<u64> {
+        self.fire_once(|e| match e {
+            FaultEvent::BudgetShrink { step: s, bytes } if *s == step => Some(*bytes),
+            _ => None,
+        })
+    }
+
+    /// True when the spec carries any probabilistic link fault.
+    pub fn has_link_faults(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e, FaultEvent::LinkFail { .. } | FaultEvent::LinkSlow { .. }))
+    }
+
+    /// Configured link failure probability (0 when absent).
+    pub fn link_fail_prob(&self) -> f64 {
+        self.events
+            .iter()
+            .find_map(|e| match e {
+                FaultEvent::LinkFail { prob } => Some(*prob),
+                _ => None,
+            })
+            .unwrap_or(0.0)
+    }
+
+    /// Configured link slowdown `(prob, factor)` (`(0, 1)` when absent).
+    pub fn link_slow(&self) -> (f64, f64) {
+        self.events
+            .iter()
+            .find_map(|e| match e {
+                FaultEvent::LinkSlow { prob, factor } => Some((*prob, *factor)),
+                _ => None,
+            })
+            .unwrap_or((0.0, 1.0))
+    }
+
+    /// The injector's seed (forwarded into stateless link draws).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Deterministic outcome for transfer `attempt` of `(step, slot)`.
+    /// A pure function of its arguments and the spec — thread timing
+    /// cannot change it. Failure takes precedence over slowdown.
+    pub fn link_outcome(&self, step: u64, slot: u64, attempt: u64) -> LinkOutcome {
+        let fail_p = self.link_fail_prob();
+        if fail_p > 0.0 && unit_draw(self.seed, 0xFA11, step, slot, attempt) < fail_p {
+            return LinkOutcome::Fail;
+        }
+        let (slow_p, factor) = self.link_slow();
+        if slow_p > 0.0 && unit_draw(self.seed, 0x510E, step, slot, attempt) < slow_p {
+            return LinkOutcome::Slow(factor);
+        }
+        LinkOutcome::Healthy
+    }
+}
+
+/// Stateless link draw for callers that hold a spec's parameters but not
+/// an injector (the offload engine keeps only the numbers it needs).
+pub fn link_draw(
+    seed: u64,
+    fail_prob: f64,
+    slow: (f64, f64),
+    step: u64,
+    slot: u64,
+    attempt: u64,
+) -> LinkOutcome {
+    if fail_prob > 0.0 && unit_draw(seed, 0xFA11, step, slot, attempt) < fail_prob {
+        return LinkOutcome::Fail;
+    }
+    let (slow_p, factor) = slow;
+    if slow_p > 0.0 && unit_draw(seed, 0x510E, step, slot, attempt) < slow_p {
+        return LinkOutcome::Slow(factor);
+    }
+    LinkOutcome::Healthy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(text: &str) -> FaultSpec {
+        FaultSpec::parse(text).unwrap()
+    }
+
+    #[test]
+    fn step_events_fire_exactly_once() {
+        let inj = FaultInjector::new(&spec("worker-panic@3;corrupt@3;budget-shrink@3=1MiB"));
+        assert!(!inj.worker_panic_due(2));
+        assert!(inj.worker_panic_due(3));
+        assert!(!inj.worker_panic_due(3), "must not re-fire for the requeued plan");
+        assert!(inj.corrupt_due(3));
+        assert!(!inj.corrupt_due(3));
+        assert_eq!(inj.budget_shrink_due(3), Some(1 << 20));
+        assert_eq!(inj.budget_shrink_due(3), None);
+    }
+
+    #[test]
+    fn duplicate_events_fire_independently() {
+        let inj = FaultInjector::new(&spec("corrupt@1;corrupt@1"));
+        assert!(inj.corrupt_due(1));
+        assert!(inj.corrupt_due(1));
+        assert!(!inj.corrupt_due(1));
+    }
+
+    #[test]
+    fn link_outcomes_are_pure_functions_of_coordinates() {
+        let a = FaultInjector::new(&spec("seed=9;link-fail:0.3;link-slow:0.3,x4"));
+        let b = FaultInjector::new(&spec("seed=9;link-fail:0.3;link-slow:0.3,x4"));
+        for step in 0..16u64 {
+            for slot in 0..4u64 {
+                for attempt in 0..3u64 {
+                    assert_eq!(
+                        a.link_outcome(step, slot, attempt),
+                        b.link_outcome(step, slot, attempt)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn link_fail_rate_tracks_probability() {
+        let inj = FaultInjector::new(&spec("seed=1;link-fail:0.25"));
+        let n = 10_000u64;
+        let fails = (0..n)
+            .filter(|&s| inj.link_outcome(s, 0, 0) == LinkOutcome::Fail)
+            .count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn healthy_spec_never_faults() {
+        let inj = FaultInjector::new(&FaultSpec::default());
+        assert!(!inj.has_link_faults());
+        assert_eq!(inj.link_outcome(0, 0, 0), LinkOutcome::Healthy);
+        assert!(!inj.worker_panic_due(0));
+        assert_eq!(inj.budget_shrink_due(0), None);
+    }
+
+    #[test]
+    fn retries_see_fresh_draws() {
+        // with p = 0.5 some (step, slot) must fail on attempt 0 yet pass
+        // on attempt 1 — the retry path depends on it
+        let inj = FaultInjector::new(&spec("seed=3;link-fail:0.5"));
+        let recovered = (0..256u64).any(|s| {
+            inj.link_outcome(s, 0, 0) == LinkOutcome::Fail
+                && inj.link_outcome(s, 0, 1) == LinkOutcome::Healthy
+        });
+        assert!(recovered);
+    }
+}

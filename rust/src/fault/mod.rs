@@ -1,0 +1,22 @@
+//! Seeded, deterministic fault injection and the graceful-degradation
+//! vocabulary the rest of the pipeline speaks.
+//!
+//! * [`spec`] — the `--faults` grammar ([`FaultSpec`]): worker panics,
+//!   payload corruption, budget shrinks, probabilistic link faults.
+//! * [`injector`] — [`FaultInjector`], the thread-shareable trigger:
+//!   fire-once step events plus stateless per-transfer link draws, both
+//!   independent of thread timing so faulted runs replay exactly.
+//! * [`degrade`] — [`DegradationReport`]: the typed record of which rungs
+//!   of the degradation ladder a re-plan took and where it landed.
+//!
+//! The recovery machinery itself lives with the components it protects:
+//! worker respawn in `data::loader`, transfer retries in
+//! `memory::offload`, and the ladder in `memory::pipeline::PlanRequest::run_degraded`.
+
+pub mod degrade;
+pub mod injector;
+pub mod spec;
+
+pub use degrade::{DegradationAction, DegradationReport, DegradeTrigger};
+pub use injector::{link_draw, FaultInjector, LinkOutcome};
+pub use spec::{FaultEvent, FaultSpec};

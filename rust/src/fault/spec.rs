@@ -1,0 +1,208 @@
+//! Fault specification: a small, `;`-separated grammar describing the
+//! deterministic fault schedule a run should inject.
+//!
+//! ```text
+//! worker-panic@K          kill the encode worker holding batch K's plan
+//! corrupt@K               flip bits in batch K's encoded payload
+//! budget-shrink@K=BYTES   shrink the device budget to BYTES before step K
+//! link-fail:P             each host transfer fails with probability P
+//! link-slow:P,xF          each host transfer slows by F× with probability P
+//! seed=N                  seed for the probabilistic link draws (default 0)
+//! ```
+//!
+//! `BYTES` accepts the same suffixes as every other byte knob
+//! (`512MiB`, `1GiB`, …). Parsing round-trips through [`Display`], so a
+//! spec can be logged and replayed verbatim.
+
+use std::fmt;
+
+/// One injected fault event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Panic the worker that dequeued batch `step`'s plan (fires once).
+    WorkerPanic { step: usize },
+    /// Corrupt batch `step`'s encoded payload after encode (fires once).
+    CorruptPayload { step: usize },
+    /// Shrink the device budget to `bytes` before global step `step`.
+    BudgetShrink { step: usize, bytes: u64 },
+    /// Every host-link transfer attempt fails with probability `prob`.
+    LinkFail { prob: f64 },
+    /// Every host-link transfer slows by `factor`× with probability `prob`.
+    LinkSlow { prob: f64, factor: f64 },
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultEvent::WorkerPanic { step } => write!(f, "worker-panic@{step}"),
+            FaultEvent::CorruptPayload { step } => write!(f, "corrupt@{step}"),
+            FaultEvent::BudgetShrink { step, bytes } => {
+                write!(f, "budget-shrink@{step}={bytes}")
+            }
+            FaultEvent::LinkFail { prob } => write!(f, "link-fail:{prob}"),
+            FaultEvent::LinkSlow { prob, factor } => {
+                write!(f, "link-slow:{prob},x{factor}")
+            }
+        }
+    }
+}
+
+/// A parsed fault schedule: the events plus the seed that makes the
+/// probabilistic ones (link faults) reproducible.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+fn parse_prob(what: &str, s: &str) -> Result<f64, String> {
+    let p: f64 = s
+        .parse()
+        .map_err(|_| format!("{what}: probability `{s}` is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("{what}: probability {p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_step(what: &str, s: &str) -> Result<usize, String> {
+    s.parse()
+        .map_err(|_| format!("{what}: step `{s}` is not an integer"))
+}
+
+impl FaultSpec {
+    /// Parse the `;`-separated grammar described in the module docs.
+    pub fn parse(text: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(rest) = part.strip_prefix("worker-panic@") {
+                let step = parse_step("worker-panic", rest)?;
+                spec.events.push(FaultEvent::WorkerPanic { step });
+            } else if let Some(rest) = part.strip_prefix("corrupt@") {
+                let step = parse_step("corrupt", rest)?;
+                spec.events.push(FaultEvent::CorruptPayload { step });
+            } else if let Some(rest) = part.strip_prefix("budget-shrink@") {
+                let (step, bytes) = rest
+                    .split_once('=')
+                    .ok_or_else(|| format!("budget-shrink: `{rest}` needs `@K=BYTES`"))?;
+                let step = parse_step("budget-shrink", step)?;
+                let bytes = crate::config::parse_bytes(bytes)
+                    .map_err(|e| format!("budget-shrink: {e}"))?;
+                spec.events.push(FaultEvent::BudgetShrink { step, bytes });
+            } else if let Some(rest) = part.strip_prefix("link-fail:") {
+                let prob = parse_prob("link-fail", rest)?;
+                spec.events.push(FaultEvent::LinkFail { prob });
+            } else if let Some(rest) = part.strip_prefix("link-slow:") {
+                let (prob, factor) = rest
+                    .split_once(",x")
+                    .ok_or_else(|| format!("link-slow: `{rest}` needs `P,xF`"))?;
+                let prob = parse_prob("link-slow", prob)?;
+                let factor: f64 = factor
+                    .parse()
+                    .map_err(|_| format!("link-slow: factor `{factor}` is not a number"))?;
+                if factor < 1.0 {
+                    return Err(format!("link-slow: factor {factor} must be ≥ 1"));
+                }
+                spec.events.push(FaultEvent::LinkSlow { prob, factor });
+            } else if let Some(rest) = part.strip_prefix("seed=") {
+                spec.seed = rest
+                    .parse()
+                    .map_err(|_| format!("seed: `{rest}` is not an integer"))?;
+            } else {
+                return Err(format!(
+                    "unknown fault event `{part}` (expected worker-panic@K, corrupt@K, \
+                     budget-shrink@K=BYTES, link-fail:P, link-slow:P,xF, or seed=N)"
+                ));
+            }
+        }
+        Ok(spec)
+    }
+
+    /// True when the spec injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        if self.seed != 0 {
+            write!(f, "seed={}", self.seed)?;
+            first = false;
+        }
+        for e in &self.events {
+            if !first {
+                write!(f, ";")?;
+            }
+            write!(f, "{e}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_event_kind() {
+        let s = FaultSpec::parse(
+            "worker-panic@3;corrupt@5;budget-shrink@8=4MiB;link-fail:0.2;link-slow:0.1,x4;seed=7",
+        )
+        .unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(
+            s.events,
+            vec![
+                FaultEvent::WorkerPanic { step: 3 },
+                FaultEvent::CorruptPayload { step: 5 },
+                FaultEvent::BudgetShrink { step: 8, bytes: 4 << 20 },
+                FaultEvent::LinkFail { prob: 0.2 },
+                FaultEvent::LinkSlow { prob: 0.1, factor: 4.0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for text in [
+            "worker-panic@3",
+            "seed=7;corrupt@5",
+            "budget-shrink@8=4194304",
+            "link-fail:0.2;link-slow:0.1,x4",
+            "",
+        ] {
+            let spec = FaultSpec::parse(text).unwrap();
+            let back = FaultSpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(spec, back, "`{text}`");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        for bad in [
+            "explode@3",
+            "worker-panic@x",
+            "budget-shrink@3",
+            "budget-shrink@3=chunky",
+            "link-fail:1.5",
+            "link-slow:0.2",
+            "link-slow:0.2,x0.5",
+            "seed=abc",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "`{bad}` should fail");
+        }
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_empty() {
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert!(FaultSpec::parse(" ; ;").unwrap().is_empty());
+    }
+}

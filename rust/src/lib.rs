@@ -92,6 +92,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod memory;
 pub mod metrics;
 pub mod models;
@@ -107,6 +108,9 @@ pub mod prelude {
     pub use crate::data::pool::BufferPool;
     pub use crate::data::sampler::SbsSampler;
     pub use crate::data::synth::SynthCifar;
+    pub use crate::fault::{
+        DegradationAction, DegradationReport, DegradeTrigger, FaultInjector, FaultSpec,
+    };
     pub use crate::memory::arena::{plan_arena, ArenaAllocator, ArenaLayout, ArenaReport};
     pub use crate::memory::offload::{
         plan_spill, select_for_budget, simulate_overlap, OffloadEngine, OffloadReport,

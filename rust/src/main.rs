@@ -9,8 +9,9 @@ use anyhow::{anyhow, Result};
 use optorch::cli::{Cli, USAGE};
 use optorch::config::{Pipeline, TrainConfig};
 use optorch::coordinator::{report, Trainer};
+use optorch::fault::DegradeTrigger;
 use optorch::memory::outcome::PlanOutcome;
-use optorch::memory::pipeline::{PlanError, PlanRequest};
+use optorch::memory::pipeline::{parse_bytes_field, PlanError, PlanRequest};
 use optorch::memory::simulator::simulate;
 use optorch::models::{all_arch_names, arch_by_name};
 use optorch::util::bench::{fmt_bytes, Table};
@@ -152,6 +153,36 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         Some(k) => vec![k],
         None => vec!["uniform4", "sqrt", "bottleneck4", "dp"],
     };
+
+    if cli.has_flag("degrade") {
+        // Walk the graceful-degradation ladder instead of erroring on an
+        // infeasible budget: cheaper frontier point → shrunk lookahead →
+        // heap-fallback arena, with a typed episode of every rung taken.
+        let v = cli
+            .get("budget")
+            .or_else(|| cli.get("spill"))
+            .ok_or_else(|| anyhow!("--degrade needs a --budget (or --spill) to solve for"))?;
+        let to = parse_bytes_field("--budget", v).map_err(|e| anyhow!(e.to_string()))?;
+        let req = base
+            .clone()
+            .planner_named(kind_specs.last().expect("kind set is never empty"))
+            .arena(true)
+            .memory_budget(to);
+        let (outcome, episode) = req
+            .run_degraded(DegradeTrigger::BudgetShrink { from: None, to })
+            .map_err(plan_err)?;
+        if cli.has_flag("json") {
+            let doc = optorch::util::json::obj(vec![
+                ("outcome", outcome.to_json()),
+                ("degradation", episode.to_json()),
+            ]);
+            println!("{}", doc.to_string());
+        } else {
+            print!("{}", outcome.to_markdown());
+            println!("\n{}", episode.to_markdown());
+        }
+        return Ok(());
+    }
 
     if cli.has_flag("json") {
         // One fully-staged outcome, rendered as the stable JSON schema

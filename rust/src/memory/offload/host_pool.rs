@@ -12,8 +12,9 @@
 //! `LoadedModel` step flow, keeping eviction/prefetch/byte counters the
 //! trainer surfaces in `TrainReport::offload`.
 
+use crate::fault::{link_draw, LinkOutcome};
 use crate::memory::offload::plan::SpillPlan;
-use crate::memory::offload::schedule::TransferKind;
+use crate::memory::offload::schedule::{TransferKind, DEFAULT_HOST_BW_BYTES_PER_SEC};
 
 /// Recycled host staging buffers, bucketed by capacity best-fit.
 #[derive(Debug, Default)]
@@ -90,6 +91,74 @@ impl HostSpillPool {
     }
 }
 
+/// Injected host-link fault model plus the engine's retry policy
+/// (`None` on the engine ⇒ a perfect link, the historical behavior).
+/// The numbers mirror a parsed `FaultSpec`'s link events; keeping them
+/// as plain fields lets the engine draw outcomes statelessly via
+/// [`link_draw`], so a replayed step sees identical faults regardless of
+/// thread timing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFaults {
+    /// Seed forwarded into every stateless draw.
+    pub seed: u64,
+    /// Per-attempt transfer failure probability.
+    pub fail_prob: f64,
+    /// `(probability, slowdown factor ≥ 1)` of a degraded transfer.
+    pub slow: (f64, f64),
+    /// Retry attempts allowed per transfer beyond the first.
+    pub max_retries: u32,
+    /// Modeled link bandwidth used to charge retried / slowed transfers
+    /// as stall seconds.
+    pub bytes_per_sec: f64,
+}
+
+impl Default for LinkFaults {
+    fn default() -> LinkFaults {
+        LinkFaults {
+            seed: 0,
+            fail_prob: 0.0,
+            slow: (0.0, 1.0),
+            max_retries: DEFAULT_MAX_TRANSFER_RETRIES,
+            bytes_per_sec: DEFAULT_HOST_BW_BYTES_PER_SEC as f64,
+        }
+    }
+}
+
+/// Default bounded-retry budget per transfer.
+pub const DEFAULT_MAX_TRANSFER_RETRIES: u32 = 3;
+
+/// Base backoff delay charged after a failed attempt; doubles per
+/// consecutive failure of the same transfer (bounded by `max_retries`).
+const BACKOFF_BASE_SECS: f64 = 1e-4;
+
+/// A transfer that kept failing past the engine's retry budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransferError {
+    pub kind: TransferKind,
+    /// Training step (engine replay count) the transfer belonged to.
+    pub step: u64,
+    /// Spill-plan slot of the tensor being moved.
+    pub slot: usize,
+    /// Attempts made (1 initial + retries).
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for TransferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dir = match self.kind {
+            TransferKind::Evict => "eviction",
+            TransferKind::Prefetch => "prefetch",
+        };
+        write!(
+            f,
+            "host-link {dir} of spill slot {} failed {} attempts at train step {}",
+            self.slot, self.attempts, self.step
+        )
+    }
+}
+
+impl std::error::Error for TransferError {}
+
 /// Counter snapshot of one engine (surfaced via `TrainReport::offload`).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct OffloadStats {
@@ -101,6 +170,12 @@ pub struct OffloadStats {
     pub bytes_prefetched: u64,
     pub pool_allocs: u64,
     pub pool_reuses: u64,
+    /// Injected link faults observed (failed or slowed attempts).
+    pub link_faults: u64,
+    /// Transfer attempts retried after a failure.
+    pub link_retries: u64,
+    /// Stall seconds charged to retries, backoff and slowed transfers.
+    pub retry_stall_secs: f64,
 }
 
 impl OffloadStats {
@@ -133,11 +208,16 @@ pub struct OffloadEngine {
     /// eviction and its prefetch within one step).
     held: Vec<Option<Vec<u8>>>,
     pool: HostSpillPool,
+    /// Injected link fault model (`None` = perfect link).
+    link: Option<LinkFaults>,
     steps: u64,
     evictions: u64,
     prefetches: u64,
     bytes_evicted: u64,
     bytes_prefetched: u64,
+    link_faults: u64,
+    link_retries: u64,
+    retry_stall_secs: f64,
 }
 
 impl OffloadEngine {
@@ -160,24 +240,95 @@ impl OffloadEngine {
             ops: keyed.into_iter().map(|(_, _, op)| op).collect(),
             held: vec![None; plan.steps.len()],
             pool: HostSpillPool::new(),
+            link: None,
             steps: 0,
             evictions: 0,
             prefetches: 0,
             bytes_evicted: 0,
             bytes_prefetched: 0,
+            link_faults: 0,
+            link_retries: 0,
+            retry_stall_secs: 0.0,
         }
     }
 
-    /// Replay one training step's evictions and prefetches.
-    pub fn run_step(&mut self) {
+    /// [`OffloadEngine::new`] with an injected link fault model.
+    pub fn with_link_faults(plan: &SpillPlan, link: LinkFaults) -> OffloadEngine {
+        let mut e = OffloadEngine::new(plan);
+        e.link = Some(link);
+        e
+    }
+
+    /// Install or clear the injected link fault model.
+    pub fn set_link_faults(&mut self, link: Option<LinkFaults>) {
+        self.link = link;
+    }
+
+    /// Replay one training step's evictions and prefetches, retrying
+    /// failed transfers with exponential backoff (both charged as stall
+    /// seconds). `Err` means a transfer kept failing past the retry
+    /// budget — the step still completed the remaining transfers, and a
+    /// given-up eviction simply leaves its tensor device-resident (its
+    /// paired prefetch becomes a no-op), so the engine stays consistent.
+    pub fn try_step(&mut self) -> Result<(), TransferError> {
+        let step = self.steps;
         let ops = &self.ops;
         let pool = &mut self.pool;
         let held = &mut self.held;
+        let link = self.link;
         let mut evictions = 0u64;
         let mut prefetches = 0u64;
         let mut bytes_evicted = 0u64;
         let mut bytes_prefetched = 0u64;
+        let mut link_faults = 0u64;
+        let mut link_retries = 0u64;
+        let mut retry_stall = 0.0f64;
+        let mut first_err: Option<TransferError> = None;
         for op in ops {
+            let mut gave_up = false;
+            if let Some(lf) = link {
+                // Decorrelate the two transfers of one slot within a step.
+                let hslot =
+                    (op.slot as u64) * 2 + u64::from(op.kind == TransferKind::Prefetch);
+                let bw = lf.bytes_per_sec.max(1.0);
+                let mut attempt = 0u32;
+                loop {
+                    match link_draw(lf.seed, lf.fail_prob, lf.slow, step, hslot, attempt as u64)
+                    {
+                        LinkOutcome::Healthy => break,
+                        LinkOutcome::Slow(factor) => {
+                            // Completes, but occupies the link longer.
+                            link_faults += 1;
+                            retry_stall += (factor - 1.0).max(0.0) * op.bytes as f64 / bw;
+                            break;
+                        }
+                        LinkOutcome::Fail => {
+                            link_faults += 1;
+                            // The failed attempt occupied the link, then
+                            // the engine backs off exponentially.
+                            retry_stall += op.bytes as f64 / bw
+                                + BACKOFF_BASE_SECS * f64::from(1u32 << attempt.min(16));
+                            if attempt >= lf.max_retries {
+                                gave_up = true;
+                                if first_err.is_none() {
+                                    first_err = Some(TransferError {
+                                        kind: op.kind,
+                                        step,
+                                        slot: op.slot,
+                                        attempts: attempt + 1,
+                                    });
+                                }
+                                break;
+                            }
+                            link_retries += 1;
+                            attempt += 1;
+                        }
+                    }
+                }
+            }
+            if gave_up {
+                continue;
+            }
             match op.kind {
                 TransferKind::Evict => {
                     held[op.slot] = Some(pool.acquire(op.bytes));
@@ -197,7 +348,21 @@ impl OffloadEngine {
         self.prefetches += prefetches;
         self.bytes_evicted += bytes_evicted;
         self.bytes_prefetched += bytes_prefetched;
+        self.link_faults += link_faults;
+        self.link_retries += link_retries;
+        self.retry_stall_secs += retry_stall;
         self.steps += 1;
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Replay one training step's evictions and prefetches. Infallible
+    /// convenience over [`OffloadEngine::try_step`]: a transfer that
+    /// exhausts its retries is skipped (still counted in the stats).
+    pub fn run_step(&mut self) {
+        let _ = self.try_step();
     }
 
     pub fn stats(&self) -> OffloadStats {
@@ -209,6 +374,9 @@ impl OffloadEngine {
             bytes_prefetched: self.bytes_prefetched,
             pool_allocs: self.pool.allocs(),
             pool_reuses: self.pool.reuses(),
+            link_faults: self.link_faults,
+            link_retries: self.link_retries,
+            retry_stall_secs: self.retry_stall_secs,
         }
     }
 }
@@ -309,5 +477,49 @@ mod tests {
         assert_eq!(s.evictions, 0);
         assert_eq!(s.pool_allocs, 0);
         assert_eq!(s.steps, 1);
+    }
+
+    #[test]
+    fn link_fault_outcomes_are_deterministic() {
+        let plan = spilled_plan();
+        let lf = LinkFaults { seed: 7, fail_prob: 0.3, slow: (0.2, 4.0), ..LinkFaults::default() };
+        let mut a = OffloadEngine::with_link_faults(&plan, lf);
+        let mut b = OffloadEngine::with_link_faults(&plan, lf);
+        for _ in 0..16 {
+            assert_eq!(a.try_step(), b.try_step());
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert!(a.stats().link_faults > 0, "p=0.3 over 16 steps must fault");
+        assert!(a.stats().link_retries > 0);
+    }
+
+    #[test]
+    fn dead_link_gives_up_typed_and_stays_consistent() {
+        let plan = spilled_plan();
+        let lf = LinkFaults { seed: 1, fail_prob: 1.0, ..LinkFaults::default() };
+        let mut engine = OffloadEngine::with_link_faults(&plan, lf);
+        let err = engine.try_step().unwrap_err();
+        assert_eq!(err.attempts, DEFAULT_MAX_TRANSFER_RETRIES + 1);
+        assert!(err.to_string().contains("failed"), "{err}");
+        let s = engine.stats();
+        assert_eq!(s.evictions, 0, "every transfer gave up");
+        assert!(engine.held.iter().all(Option::is_none));
+        assert!(s.retry_stall_secs > 0.0);
+        engine.run_step(); // infallible path must absorb the same failure
+        assert_eq!(engine.stats().steps, 2);
+    }
+
+    #[test]
+    fn slow_link_completes_with_stall_accounting() {
+        let plan = spilled_plan();
+        let n = plan.steps.len() as u64;
+        let lf = LinkFaults { seed: 2, fail_prob: 0.0, slow: (1.0, 8.0), ..LinkFaults::default() };
+        let mut engine = OffloadEngine::with_link_faults(&plan, lf);
+        engine.try_step().unwrap();
+        let s = engine.stats();
+        assert_eq!(s.evictions, n);
+        assert_eq!(s.prefetches, n);
+        assert_eq!(s.link_retries, 0, "slowdowns complete without retrying");
+        assert!(s.retry_stall_secs > 0.0);
     }
 }

@@ -29,7 +29,10 @@ pub mod host_pool;
 pub mod plan;
 pub mod schedule;
 
-pub use host_pool::{HostSpillPool, OffloadEngine, OffloadStats};
+pub use host_pool::{
+    HostSpillPool, LinkFaults, OffloadEngine, OffloadStats, TransferError,
+    DEFAULT_MAX_TRANSFER_RETRIES,
+};
 pub use plan::{plan_spill, InfeasibleBudget, SpillPlan, SpillStep};
 pub use schedule::{
     simulate_overlap, step_flops, OverlapModel, OverlapReport, Transfer, TransferKind,
@@ -79,6 +82,13 @@ pub struct OffloadReport {
     pub evictions: u64,
     pub prefetches: u64,
     pub pool_hit_rate: f64,
+    /// Injected link faults the engine observed (failed/slowed attempts).
+    pub link_faults: u64,
+    /// Transfer attempts the engine retried after a failure.
+    pub link_retries: u64,
+    /// Stall seconds the engine charged to retries, backoff and slowed
+    /// transfers.
+    pub retry_stall_secs: f64,
 }
 
 impl OffloadReport {
@@ -107,6 +117,9 @@ impl OffloadReport {
             evictions: 0,
             prefetches: 0,
             pool_hit_rate: 0.0,
+            link_faults: 0,
+            link_retries: 0,
+            retry_stall_secs: 0.0,
         }
     }
 

@@ -75,6 +75,10 @@ pub struct OverlapReport {
     pub transfer_secs: f64,
     /// Compute idle time waiting on late prefetches.
     pub stall_secs: f64,
+    /// Extra link occupancy from retried / slowed transfers (0 unless a
+    /// faulted engine folded its measured retry stall in; the base
+    /// simulation assumes a healthy link).
+    pub retry_stall_secs: f64,
     /// Predicted wall time of one training step: compute + stall.
     pub predicted_step_secs: f64,
 }
@@ -194,6 +198,7 @@ pub fn simulate_overlap(
         compute_secs,
         transfer_secs,
         stall_secs: stall,
+        retry_stall_secs: 0.0,
         predicted_step_secs: now,
     }
 }

@@ -329,6 +329,15 @@ pub fn offload_summary(o: &OffloadReport) -> String {
             o.pool_hit_rate * 100.0
         ));
     }
+    if o.link_faults > 0 {
+        s.push_str(&format!(
+            "host-link faults: {} observed, {} transfers retried, \
+             {:.2} ms/run retry stall\n",
+            o.link_faults,
+            o.link_retries,
+            o.retry_stall_secs * 1e3
+        ));
+    }
     s
 }
 

@@ -37,6 +37,7 @@
 //! ```
 
 use crate::config::{parse_bytes, Pipeline};
+use crate::fault::{DegradationAction, DegradationReport, DegradeTrigger};
 use crate::memory::arena::{plan_arena, summarize, Lifetimes};
 use crate::memory::offload::{
     plan_spill, select_for_budget, simulate_overlap, InfeasibleBudget, OverlapModel,
@@ -503,6 +504,98 @@ impl PlanRequest {
             overlap,
         })
     }
+
+    /// Like [`PlanRequest::run`], but a budget that cannot be met absorbs
+    /// the failure by walking a fixed degradation ladder instead of
+    /// erroring:
+    ///
+    /// 1. **step down the Pareto frontier** — drop any pinned checkpoint
+    ///    placement and allow host spilling, letting [`select_for_budget`]
+    ///    pick the cheapest-memory composition that still fits;
+    /// 2. **shrink the prefetch lookahead** toward 1 (fewer resident
+    ///    landing slots, smaller device total);
+    /// 3. **heap fallback** — give up on the budget: plan the frontier's
+    ///    cheapest-memory point unbudgeted with a heap-backed arena and
+    ///    report `met_budget = false`.
+    ///
+    /// The chosen plan is always a real Pareto-frontier point: rungs 1–2
+    /// re-run the budgeted frontier selection, and rung 3 plans the
+    /// frontier's cheapest-memory point directly. Every rung taken is
+    /// recorded in the returned [`DegradationReport`]. Non-budget errors
+    /// (unknown model, bad planner spec, unparseable bytes) still return
+    /// `Err` — the ladder cannot fix a malformed request.
+    pub fn run_degraded(
+        &self,
+        trigger: DegradeTrigger,
+    ) -> Result<(PlanOutcome, DegradationReport), PlanError> {
+        let budget = match &self.memory_budget {
+            Some(c) => Some(c.resolve()?),
+            None => None,
+        };
+        let report = |out: &PlanOutcome, actions: Vec<DegradationAction>| DegradationReport {
+            trigger,
+            actions,
+            met_budget: budget.map_or(true, |b| out.device_peak_packed() <= b),
+            budget: budget.unwrap_or(0),
+            device_total: out.device_peak_packed(),
+            predicted_step_secs: out.predicted_step_secs(),
+        };
+
+        let mut attempt = self.clone();
+        match attempt.run() {
+            Ok(out) => {
+                let r = report(&out, Vec::new());
+                return Ok((out, r));
+            }
+            Err(PlanError::BudgetBelowPacked(_) | PlanError::BudgetBelowSpilled(_)) => {}
+            Err(e) => return Err(e),
+        }
+
+        // Rung 1: step down the frontier — release any pinned placement
+        // and allow spilling so the selection may choose a cheaper-memory
+        // frontier point.
+        attempt.checkpoints = None;
+        attempt.spill = true;
+        if let Ok(out) = attempt.run() {
+            let actions = vec![DegradationAction::SteppedDownFrontier {
+                device_total: out.device_peak_packed(),
+                recompute_overhead: out.plan.recompute_overhead,
+            }];
+            let r = report(&out, actions);
+            return Ok((out, r));
+        }
+
+        // Rung 2: shrink the prefetch lookahead toward 1.
+        let from = attempt.spill_lookahead.max(1);
+        let mut to = from;
+        while to > 1 {
+            to -= 1;
+            attempt.spill_lookahead = to;
+            if let Ok(out) = attempt.run() {
+                let actions = vec![DegradationAction::ShrunkLookahead { from, to }];
+                let r = report(&out, actions);
+                return Ok((out, r));
+            }
+        }
+
+        // Rung 3: abandon the budget — the frontier's cheapest-memory
+        // point, heap-backed arena, no spilling.
+        let arch = self.resolve_arch()?;
+        let frontier =
+            pareto_frontier(&arch, self.pipeline, self.batch, DEFAULT_FRONTIER_LEVELS);
+        let cheapest = frontier
+            .into_iter()
+            .min_by_key(|p| p.peak_bytes)
+            .expect("pareto_frontier returns at least one point");
+        attempt.checkpoints = Some(cheapest.checkpoints);
+        attempt.memory_budget = None;
+        attempt.spill = false;
+        attempt.arena = true;
+        let out = attempt.run()?;
+        let actions = vec![DegradationAction::HeapFallbackArena];
+        let r = report(&out, actions);
+        Ok((out, r))
+    }
 }
 
 #[cfg(test)]
@@ -628,6 +721,79 @@ mod tests {
         assert_eq!(out.plan.checkpoints, vec![3, 7], "sorted, deduped, in range");
         let mut ev = PeakEvaluator::new(&arch, sc(), 8);
         assert_eq!(out.plan.peak_bytes, ev.peak(&[3, 7]));
+    }
+
+    #[test]
+    fn degraded_run_without_pressure_takes_no_rungs() {
+        let (out, report) = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget(1 << 30)
+            .run_degraded(DegradeTrigger::BudgetShrink { from: None, to: 1 << 30 })
+            .unwrap();
+        assert!(report.actions.is_empty());
+        assert!(report.met_budget);
+        assert_eq!(report.device_total, out.device_peak_packed());
+    }
+
+    #[test]
+    fn degradation_ladder_steps_down_to_a_spill_plan() {
+        // Probe the spilled floor, then ask for exactly that budget with
+        // spilling disabled: run() fails, the ladder's first rung fixes it.
+        let probe = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget(1)
+            .run()
+            .unwrap_err();
+        let floor = match probe {
+            PlanError::BudgetBelowSpilled(e) => e.min_device_bytes,
+            other => panic!("expected BudgetBelowSpilled, got {other:?}"),
+        };
+        let req = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .memory_budget(floor)
+            .spill(false);
+        assert!(matches!(req.run(), Err(PlanError::BudgetBelowPacked(_))));
+        let (out, report) = req
+            .run_degraded(DegradeTrigger::BudgetShrink { from: Some(1 << 30), to: floor })
+            .unwrap();
+        assert!(report.met_budget, "{report:?}");
+        assert_eq!(report.actions.len(), 1);
+        assert!(
+            matches!(report.actions[0], crate::fault::DegradationAction::SteppedDownFrontier { .. }),
+            "{report:?}"
+        );
+        assert!(out.device_peak_packed() <= floor);
+        assert!(report.to_markdown().contains("degradation:"));
+    }
+
+    #[test]
+    fn degradation_ladder_bottoms_out_in_heap_fallback() {
+        let req = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10).memory_budget(1);
+        let (out, report) = req
+            .run_degraded(DegradeTrigger::LinkFailure { retries_exhausted: 4 })
+            .unwrap();
+        assert!(!report.met_budget);
+        assert_eq!(
+            report.actions.last(),
+            Some(&crate::fault::DegradationAction::HeapFallbackArena)
+        );
+        // the fallback plan is a real frontier point (its cheapest-memory
+        // placement), packed into a heap-backed arena with no spill
+        let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+        let frontier =
+            pareto_frontier(&arch, Pipeline::BASELINE, 16, DEFAULT_FRONTIER_LEVELS);
+        assert!(
+            frontier.iter().any(|p| p.checkpoints == out.plan.checkpoints),
+            "chosen checkpoints {:?} not on the frontier",
+            out.plan.checkpoints
+        );
+        assert!(out.spill.is_none());
+        assert!(out.layout().is_some());
+    }
+
+    #[test]
+    fn degraded_run_still_types_malformed_requests() {
+        let err = PlanRequest::for_model("warp_net", (32, 32, 3), 10)
+            .run_degraded(DegradeTrigger::BudgetShrink { from: None, to: 1 })
+            .unwrap_err();
+        assert!(matches!(err, PlanError::UnknownArch { .. }));
     }
 
     #[test]

@@ -271,6 +271,20 @@ impl LoadedModel {
         self.offload.borrow().as_ref().map(OffloadEngine::stats)
     }
 
+    /// Inject (or clear) a deterministic link-fault model on the installed
+    /// offload engine. No-op until [`LoadedModel::configure_offload`] ran.
+    pub fn configure_link_faults(&self, link: Option<crate::memory::offload::LinkFaults>) {
+        if let Some(engine) = self.offload.borrow_mut().as_mut() {
+            engine.set_link_faults(link);
+        }
+    }
+
+    /// Remove the installed host-spill plan (degradation abandoned
+    /// spilling, e.g. the heap-fallback rung).
+    pub fn clear_offload(&self) {
+        *self.offload.borrow_mut() = None;
+    }
+
     /// Initialize training state from a seed (runs the init artifact).
     pub fn init_state(&self, seed: u64) -> Result<TrainState> {
         let seed_lit = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]).reshape(&[2])?;
@@ -328,9 +342,13 @@ impl LoadedModel {
         lr: f32,
     ) -> Result<StepOutput> {
         // Host-spill replay: evictions into recycled host buffers,
-        // prefetch releases — the step's transfer schedule.
+        // prefetch releases — the step's transfer schedule. A transfer
+        // that exhausted its retry budget leaves the tensor
+        // device-resident; the step proceeds degraded rather than dying.
         if let Some(engine) = self.offload.borrow_mut().as_mut() {
-            engine.run_step();
+            if let Err(e) = engine.try_step() {
+                crate::warn_!("{e}; continuing with the tensor device-resident");
+            }
         }
         let mut out = self.run(&self.train, &state.tensors, payload, Some(lr))?;
         let s = self.entry.state.len();

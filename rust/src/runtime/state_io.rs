@@ -4,15 +4,20 @@
 //! validating shape and order on both sides.
 //!
 //! Format: magic, tensor count, then per tensor: name-len, name bytes,
-//! elem count, f32 little-endian data.
+//! elem count, f32 little-endian data — and, since `OPTSTAT2`, a trailing
+//! CRC-32 of everything before it, so a checkpoint corrupted at rest is a
+//! typed load error instead of silently wrong weights. `OPTSTAT1` files
+//! (pre-checksum) still load, without integrity verification.
 
 use crate::runtime::manifest::{Dtype, ManifestEntry};
 use crate::runtime::TrainState;
+use crate::util::crc::crc32;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"OPTSTAT1";
+const MAGIC: &[u8; 8] = b"OPTSTAT2";
+const LEGACY_MAGIC: &[u8; 8] = b"OPTSTAT1";
 
 /// Serialize `state` (validated against `entry`) to `path`.
 pub fn save(path: &Path, entry: &ManifestEntry, state: &TrainState) -> Result<()> {
@@ -66,6 +71,8 @@ pub fn save(path: &Path, entry: &ManifestEntry, state: &TrainState) -> Result<()
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
     std::fs::File::create(path)?.write_all(&buf)?;
     Ok(())
 }
@@ -86,7 +93,25 @@ pub fn load(path: &Path, entry: &ManifestEntry) -> Result<TrainState> {
         .with_context(|| format!("open {}", path.display()))?
         .read_to_end(&mut raw)?;
     let mut b: &[u8] = &raw;
-    if take(&mut b, 8, "magic")? != MAGIC {
+    let magic = take(&mut b, 8, "magic")?;
+    if magic == MAGIC {
+        // Checksummed format: verify the trailing CRC-32 over everything
+        // before it, then parse the payload between magic and checksum.
+        if b.len() < 4 {
+            bail!("{}: truncated state file (missing checksum)", path.display());
+        }
+        let (payload, tail) = raw.split_at(raw.len() - 4);
+        let stored = u32::from_le_bytes(tail.try_into().unwrap());
+        let computed = crc32(payload);
+        if stored != computed {
+            bail!(
+                "{}: state checksum mismatch: stored {stored:#010x}, computed \
+                 {computed:#010x} (file corrupt — re-save the checkpoint)",
+                path.display()
+            );
+        }
+        b = &payload[8..];
+    } else if magic != LEGACY_MAGIC {
         bail!("{}: not an optorch state file", path.display());
     }
     let count = u32::from_le_bytes(take(&mut b, 4, "count")?.try_into().unwrap()) as usize;
@@ -272,12 +297,64 @@ mod tests {
         let mut buf = Vec::new();
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&5u32.to_le_bytes()); // entry expects 1
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
         std::fs::write(&p, &buf).unwrap();
         let err = match load(&p, &entry()) {
             Err(e) => e,
             Ok(_) => panic!("expected count mismatch"),
         };
         assert!(err.to_string().contains("expects 1"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_corrupted_checkpoints() {
+        let dir = std::env::temp_dir().join(format!("optorch_sio5_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("flip.state");
+        let state = TrainState { tensors: vec![xla::Literal::vec1(&[1.0f32, 2.0, 3.0])] };
+        let mut e = entry();
+        e.state[0].shape = vec![3];
+        save(&p, &e, &state).unwrap();
+        load(&p, &e).unwrap();
+        // flip one bit in the middle of the tensor data
+        let mut raw = std::fs::read(&p).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x04;
+        std::fs::write(&p, &raw).unwrap();
+        let err = match load(&p, &e) {
+            Err(err) => err,
+            Ok(_) => panic!("expected checksum mismatch"),
+        };
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // a truncated checksummed file is also typed, not a panic
+        std::fs::write(&p, &raw[..9]).unwrap();
+        assert!(load(&p, &e).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn accepts_legacy_unchecksummed_checkpoints() {
+        let dir = std::env::temp_dir().join(format!("optorch_sio6_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("legacy.state");
+        let state = TrainState { tensors: vec![xla::Literal::vec1(&[1.0f32, 2.0, 3.0])] };
+        let mut e = entry();
+        e.state[0].shape = vec![3];
+        save(&p, &e, &state).unwrap();
+        // rewrite as the pre-checksum format: legacy magic, no trailing CRC
+        let raw = std::fs::read(&p).unwrap();
+        let mut legacy = raw[..raw.len() - 4].to_vec();
+        legacy[..8].copy_from_slice(LEGACY_MAGIC);
+        std::fs::write(&p, &legacy).unwrap();
+        let restored = load(&p, &e).unwrap();
+        let back: Vec<f32> = restored.tensors[0]
+            .convert(xla::PrimitiveType::F32)
+            .unwrap()
+            .to_vec()
+            .unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0]);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -113,6 +113,21 @@ impl LoadedModel {
         self.offload.borrow().as_ref().map(OffloadEngine::stats)
     }
 
+    /// Inject (or clear) a deterministic link-fault model on the installed
+    /// offload engine (same surface as the PJRT runtime). No-op until
+    /// [`LoadedModel::configure_offload`] ran.
+    pub fn configure_link_faults(&self, link: Option<crate::memory::offload::LinkFaults>) {
+        if let Some(engine) = self.offload.borrow_mut().as_mut() {
+            engine.set_link_faults(link);
+        }
+    }
+
+    /// Remove the installed host-spill plan (degradation abandoned
+    /// spilling, e.g. the heap-fallback rung).
+    pub fn clear_offload(&self) {
+        *self.offload.borrow_mut() = None;
+    }
+
     pub fn init_state(&self, _seed: u64) -> Result<TrainState> {
         bail!(NO_PJRT);
     }
@@ -217,6 +232,13 @@ mod tests {
         let stats = model.offload_stats().unwrap();
         assert_eq!(stats.steps, 0);
         assert_eq!(stats.evictions, 0);
+        model.configure_link_faults(Some(crate::memory::offload::LinkFaults {
+            seed: 7,
+            fail_prob: 1.0,
+            ..Default::default()
+        }));
+        model.clear_offload();
+        assert!(model.offload_stats().is_none());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Substrate utilities: RNG, JSON, property testing, bench harness, logging.
 
 pub mod bench;
+pub mod crc;
 pub mod json;
 pub mod log;
 pub mod propcheck;

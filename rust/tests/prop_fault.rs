@@ -1,0 +1,324 @@
+//! Property tests for the fault-injection harness and the recovery
+//! machinery around it — the acceptance contract of the robustness PR:
+//!
+//! * a faulted run is **deterministic**: same seed + same `FaultSpec` ⇒
+//!   the byte-identical batch stream and the same recovery counters, no
+//!   matter how worker threads interleave;
+//! * a worker kill inside the respawn budget is **invisible** in the
+//!   stream: byte-identical to the fault-free run;
+//! * the offload engine under link faults is deterministic and never
+//!   leaves its held-buffer accounting inconsistent;
+//! * the degradation ladder is deterministic and always lands on a real
+//!   Pareto-frontier point — and every fault class either completes the
+//!   run or surfaces a typed error, never a panic or a hang.
+
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{EncodeSpec, Encoding, WordType};
+use optorch::data::loader::{dump, BatchPayload, EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::fault::{DegradeTrigger, FaultInjector, FaultSpec, LinkOutcome};
+use optorch::memory::offload::{LinkFaults, OffloadEngine};
+use optorch::memory::pipeline::{PlanError, PlanRequest};
+use optorch::memory::planner::{pareto_frontier, DEFAULT_FRONTIER_LEVELS};
+use optorch::models::arch_by_name;
+use optorch::util::propcheck::check_with;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn loader_with(
+    seed: u64,
+    batches: usize,
+    workers: usize,
+    faults: Option<Arc<FaultInjector>>,
+) -> EdLoader {
+    let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 240, 9));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4").unwrap(),
+        seed,
+    )
+    .unwrap();
+    EdLoader::with_faults(
+        d,
+        sampler,
+        Some(EncodeSpec::new(Encoding::Base256, WordType::F64)),
+        batches,
+        LoaderMode::Parallel { prefetch_depth: 2, num_workers: workers },
+        Arc::new(BufferPool::default()),
+        faults,
+        None,
+    )
+}
+
+/// Serialize a payload to comparable bytes (dump covers words, offsets,
+/// labels and geometry — the full shipped content).
+fn payload_bytes(p: &BatchPayload) -> Vec<u8> {
+    match p {
+        BatchPayload::Raw { data, labels, n } => {
+            let mut out = (*n as u64).to_le_bytes().to_vec();
+            for v in data.iter().chain(labels) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        BatchPayload::Encoded(groups) => {
+            let mut out = Vec::new();
+            for g in groups {
+                out.extend_from_slice(&dump::to_bytes(g));
+            }
+            out
+        }
+    }
+}
+
+/// Drain a loader to `(payload bytes per step, respawns, corruptions,
+/// error)`; a typed error ends the stream and rides back alongside
+/// whatever arrived before it.
+fn drain(mut l: EdLoader) -> (Vec<Vec<u8>>, u64, u64, Option<String>) {
+    let mut out = Vec::new();
+    let mut err = None;
+    loop {
+        match l.try_next() {
+            Ok(Some(p)) => {
+                out.push(payload_bytes(&p));
+                l.recycle(p);
+            }
+            Ok(None) => break,
+            Err(e) => {
+                err = Some(e.to_string());
+                break;
+            }
+        }
+    }
+    let stats = l.stats();
+    let respawns = stats.respawns.load(Ordering::Relaxed);
+    let corruptions = stats.corruptions_detected.load(Ordering::Relaxed);
+    (out, respawns, corruptions, err)
+}
+
+/// Same seed + same `FaultSpec` ⇒ the identical batch stream and the
+/// identical recovery counters, across reruns and worker counts.
+#[test]
+fn prop_faulted_streams_are_deterministic() {
+    check_with("faulted stream determinism", 8, 0xFA17, |rng| {
+        let batches = 4 + rng.gen_range(6);
+        (
+            rng.next_u64(),
+            batches,
+            rng.gen_range(batches),
+            rng.gen_range(batches),
+            1 + rng.gen_range(3),
+        )
+    }, |(seed, batches, panic_at, corrupt_at, workers)| {
+        let spec = FaultSpec::parse(&format!(
+            "seed={seed};worker-panic@{panic_at};corrupt@{corrupt_at}"
+        ))
+        .map_err(|e| e.to_string())?;
+        let run = || {
+            let inj = Some(Arc::new(FaultInjector::new(&spec)));
+            drain(loader_with(*seed, *batches, *workers, inj))
+        };
+        let (a, a_respawns, a_corruptions, a_err) = run();
+        let (b, b_respawns, b_corruptions, b_err) = run();
+        if a_err.is_some() || b_err.is_some() {
+            return Err(format!("unexpected typed error: {a_err:?} / {b_err:?}"));
+        }
+        if a != b {
+            return Err(format!("streams diverged across reruns (workers={workers})"));
+        }
+        if a.len() != *batches {
+            return Err(format!("faulted run yielded {} of {batches}", a.len()));
+        }
+        if (a_respawns, a_corruptions) != (b_respawns, b_corruptions) {
+            return Err("recovery counters diverged across reruns".into());
+        }
+        if a_respawns != 1 || a_corruptions != 1 {
+            return Err(format!(
+                "expected 1 respawn + 1 corruption, saw {a_respawns} + {a_corruptions}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// A worker kill inside the respawn budget must be invisible: the faulted
+/// stream is byte-identical to the fault-free one.
+#[test]
+fn prop_worker_kill_is_invisible_in_the_stream() {
+    check_with("worker kill ⇒ byte-identical stream", 8, 0xDEAD, |rng| {
+        let batches = 4 + rng.gen_range(6);
+        (rng.next_u64(), batches, rng.gen_range(batches), 1 + rng.gen_range(3))
+    }, |(seed, batches, panic_at, workers)| {
+        let (clean, _, _, clean_err) = drain(loader_with(*seed, *batches, *workers, None));
+        if clean_err.is_some() {
+            return Err(format!("fault-free run errored: {clean_err:?}"));
+        }
+        let spec = FaultSpec::parse(&format!("worker-panic@{panic_at}"))
+            .map_err(|e| e.to_string())?;
+        let inj = Some(Arc::new(FaultInjector::new(&spec)));
+        let (faulted, respawns, _, err) = drain(loader_with(*seed, *batches, *workers, inj));
+        if err.is_some() {
+            return Err(format!("faulted run errored: {err:?}"));
+        }
+        if respawns != 1 {
+            return Err(format!("expected exactly 1 respawn, saw {respawns}"));
+        }
+        if clean != faulted {
+            return Err(format!(
+                "stream changed under a worker kill at step {panic_at} (workers={workers})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Compose a spill plan the public way: probe the spilled floor with an
+/// impossible budget, then plan at exactly that floor — which no pure
+/// recompute plan can meet, so the outcome must carry a spill schedule.
+fn floor_spill_plan() -> Result<optorch::memory::offload::SpillPlan, String> {
+    let probe = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .batch(16)
+        .memory_budget(1)
+        .run()
+        .err()
+        .ok_or("a 1-byte budget cannot be satisfiable")?;
+    let floor = match probe {
+        PlanError::BudgetBelowSpilled(e) => e.min_device_bytes,
+        other => return Err(format!("expected BudgetBelowSpilled, got {other:?}")),
+    };
+    PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .batch(16)
+        .memory_budget(floor)
+        .run()
+        .map_err(|e| e.to_string())?
+        .spill
+        .ok_or_else(|| "floor budget must compose a spill plan".into())
+}
+
+/// The offload engine under probabilistic link faults: identical per-step
+/// outcomes and stats across reruns, and every prefetch accounted to an
+/// eviction that actually happened (a gave-up evict must not resurrect).
+#[test]
+fn prop_link_faulted_engine_is_deterministic() {
+    let spill = floor_spill_plan().unwrap();
+    check_with("link-faulted engine determinism", 10, 0x11AC, |rng| {
+        (
+            rng.next_u64(),
+            rng.gen_range(50) as f64 / 100.0,   // fail_prob in [0, 0.5)
+            1.0 + rng.gen_range(8) as f64,      // slowdown factor in [1, 9)
+            8 + rng.gen_range(17),              // steps
+        )
+    }, |(seed, fail_prob, factor, steps)| {
+        let link = LinkFaults {
+            seed: *seed,
+            fail_prob: *fail_prob,
+            slow: (0.3, *factor),
+            ..LinkFaults::default()
+        };
+        let run = || {
+            let mut e = OffloadEngine::with_link_faults(&spill, link);
+            let outcomes: Vec<Option<String>> = (0..*steps)
+                .map(|_| e.try_step().err().map(|err| err.to_string()))
+                .collect();
+            (outcomes, e.stats())
+        };
+        let (ra, sa) = run();
+        let (rb, sb) = run();
+        if ra != rb {
+            return Err("per-step outcomes diverged across reruns".into());
+        }
+        if sa != sb {
+            return Err(format!("engine stats diverged: {sa:?} vs {sb:?}"));
+        }
+        if sa.prefetches > sa.evictions {
+            return Err(format!(
+                "{} prefetches for {} evictions: engine resurrected a failed evict",
+                sa.prefetches, sa.evictions
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The degradation ladder: deterministic across reruns, and the chosen
+/// plan is always a *real* Pareto-frontier point — even when the budget
+/// is impossible and the ladder bottoms out in the heap fallback.
+#[test]
+fn prop_degradation_lands_on_a_frontier_point() {
+    let arch = arch_by_name("tiny_cnn", (32, 32, 3), 10).unwrap();
+    let frontier = pareto_frontier(
+        &arch,
+        optorch::config::Pipeline::BASELINE,
+        16,
+        DEFAULT_FRONTIER_LEVELS,
+    );
+    check_with("degradation ladder determinism", 12, 0xDE64, |rng| {
+        // budgets from absurd (1 B) to generous — every regime of the ladder
+        1u64 << rng.gen_range(31)
+    }, |budget| {
+        let request = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .batch(16)
+            .memory_budget(*budget)
+            .spill(false);
+        let trigger = DegradeTrigger::BudgetShrink { from: None, to: *budget };
+        let (out_a, rep_a) = request.run_degraded(trigger).map_err(|e| e.to_string())?;
+        let (out_b, rep_b) = request.run_degraded(trigger).map_err(|e| e.to_string())?;
+        if rep_a != rep_b || out_a.plan.checkpoints != out_b.plan.checkpoints {
+            return Err("degraded outcome diverged across reruns".into());
+        }
+        if !frontier.iter().any(|p| p.checkpoints == out_a.plan.checkpoints) {
+            return Err(format!(
+                "budget {budget}: chosen checkpoints {:?} are not a frontier point",
+                out_a.plan.checkpoints
+            ));
+        }
+        if rep_a.met_budget && rep_a.device_total > *budget {
+            return Err(format!(
+                "met_budget claimed but device total {} exceeds {budget}",
+                rep_a.device_total
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Belt-and-braces acceptance sweep: every fault class in one spec, on a
+/// pool loader + the degradation ladder + the link fault model — the run
+/// completes (or degrades with a typed report), never panics, never hangs.
+#[test]
+fn all_fault_classes_complete_or_degrade_typed() {
+    let spec = FaultSpec::parse(
+        "seed=5;worker-panic@2;corrupt@4;budget-shrink@6=1MiB;link-fail:0.2;link-slow:0.2,x4",
+    )
+    .unwrap();
+    let inj = Arc::new(FaultInjector::new(&spec));
+
+    // data path: panic + corruption recovered, full stream delivered
+    let (stream, respawns, corruptions, err) =
+        drain(loader_with(7, 10, 2, Some(inj.clone())));
+    assert!(err.is_none(), "loader surfaced an error: {err:?}");
+    assert_eq!(stream.len(), 10);
+    assert_eq!(respawns, 1);
+    assert_eq!(corruptions, 1);
+
+    // budget shrink: the ladder absorbs it and reports what it took
+    let to = inj.budget_shrink_due(6).expect("shrink event fires at step 6");
+    assert_eq!(to, 1 << 20);
+    let (outcome, report) = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .batch(16)
+        .memory_budget(to)
+        .run_degraded(DegradeTrigger::BudgetShrink { from: None, to })
+        .expect("ladder must absorb any budget");
+    assert!(!report.actions.is_empty() || report.met_budget, "{report:?}");
+    assert!(outcome.plan.peak_bytes > 0);
+    assert!(report.to_markdown().starts_with("degradation:"));
+
+    // link faults: the injector's stateless draws drive the engine
+    assert!(inj.has_link_faults());
+    let saw_fault = (0..64u64).any(|step| inj.link_outcome(step, 0, 0) != LinkOutcome::Healthy);
+    assert!(saw_fault, "p=0.4 combined over 64 draws must fault at least once");
+}
