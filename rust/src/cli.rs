@@ -84,7 +84,8 @@ COMMANDS:
             [--epochs N] [--batch_size N] [--dataset synth10|synth100|cifar10]
             [--config FILE] [--train_size N] [--seed N]
             [--num_workers N|auto] [--prefetch_depth N]
-            [--memory_budget BYTES] [--host_bw BYTES/s] [--spill_lookahead N] ...
+            [--memory_budget BYTES] [--host_bw BYTES/s] [--spill_lookahead N]
+            [--planner dp|sqrt|uniformK|bottleneckK|joint] [--grad_spill BOOL] ...
             E-D producer pool: num_workers sizes the encode-worker pool
             (0 = single producer thread, auto = cores-1, default auto);
             prefetch_depth bounds how far producers run ahead.
@@ -93,7 +94,11 @@ COMMANDS:
             bytes fit — composing a host-spill offload plan (budget-driven
             checkpoint eviction + double-buffered prefetch, modeled at
             host_bw with spill_lookahead steps of lookahead) when no pure
-            recompute plan fits.
+            recompute plan fits. planner=joint switches the budgeted
+            composition to the joint recompute/spill optimizer, which may
+            also offload param-gradient optimizer updates to the host
+            (grad_spill, default true) — it never predicts a slower step
+            than the sequential plan→spill pipeline.
             [--faults SPEC] injects deterministic faults for chaos testing:
             `;`-separated events `worker-panic@K`, `corrupt@K`,
             `budget-shrink@K=BYTES`, `link-fail:P`, `link-slow:P,xF`,
@@ -105,9 +110,9 @@ COMMANDS:
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
-            [--kind dp|sqrt|uniformK|bottleneckK] [--frontier] [--arena]
+            [--kind dp|sqrt|uniformK|bottleneckK|joint] [--frontier] [--arena]
             [--budget BYTES] [--spill BYTES [--host_bw B/s] [--lookahead N]]
-            [--degrade] [--json]
+            [--compare [--grad_spill BOOL]] [--degrade] [--json]
             (--frontier prints the DP time/memory Pareto frontier; --budget
             picks the cheapest-time plan whose packed total fits; --arena
             packs the plan into a memory slab and prints its size,
@@ -115,7 +120,11 @@ COMMANDS:
             host-spill plan for the budget and prints the per-tensor
             evict/prefetch table + predicted stall; --degrade walks the
             graceful-degradation ladder for an infeasible --budget/--spill
-            instead of erroring, printing the typed episode; --json renders
+            instead of erroring, printing the typed episode; --compare
+            solves the same --spill/--budget twice — sequential plan→spill
+            vs the joint recompute/spill optimizer (kind=joint, optionally
+            spilling param-gradients) — and prints the two outcomes side by
+            side as markdown, or one JSON document under --json; --json renders
             the one staged PlanRequest→PlanOutcome run as a stable JSON
             document — arena always included, --spill preferred over
             --budget)

@@ -40,16 +40,32 @@ impl DatasetChoice {
 
 /// Parse a byte count: a plain integer, or a number with a `B`/`KB`/`MB`/
 /// `GB` (decimal) or `KiB`/`MiB`/`GiB` (binary) suffix, case-insensitive
-/// (`512MiB`, `1.5GB`, `786432`).
+/// (`512MiB`, `1.5GB`, `786432`). Underscores may group digits in the
+/// integer part (`512_000`, `1_024MiB`); they are not allowed after the
+/// decimal point.
 pub fn parse_bytes(s: &str) -> Result<u64, String> {
     let t = s.trim();
     if t.starts_with('-') {
         return Err(format!("byte count '{s}' is negative — sizes must be ≥ 1 B"));
     }
     let split = t
-        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '_'))
         .unwrap_or(t.len());
     let (num, suffix) = t.split_at(split);
+    if let Some(frac) = num.split_once('.').map(|(_, f)| f) {
+        if frac.contains('_') {
+            return Err(format!(
+                "bad byte count '{s}' — underscores may only group digits in the \
+                 integer part (e.g. 512_000), not the fraction"
+            ));
+        }
+    }
+    if num.starts_with('_') || num.ends_with('_') || num.contains("__") {
+        return Err(format!(
+            "bad byte count '{s}' — underscores must sit between digits (e.g. 512_000)"
+        ));
+    }
+    let num = num.replace('_', "");
     let num: f64 = num
         .parse()
         .map_err(|_| format!("bad byte count '{s}' (expected e.g. 786432, 512MiB, 1.5GB)"))?;
@@ -103,6 +119,13 @@ pub struct TrainConfig {
     /// How many schedule steps before its first backward use a spilled
     /// checkpoint's prefetch is issued (the double-buffer window, ≥ 1).
     pub spill_lookahead: usize,
+    /// Checkpoint planner spec (`sqrt`, `dp`, `uniformK`, `bottleneckK`,
+    /// `joint`). `joint` switches budgeted S-C runs to the joint
+    /// recompute/spill optimizer.
+    pub planner: String,
+    /// Let the `joint` planner offload param-gradient optimizer updates
+    /// to the host (ignored by every other planner).
+    pub grad_spill: bool,
     /// Augmentation policy applied to every class (SBS per-class policies
     /// are configured programmatically via [`crate::data::sampler`]).
     pub augment: String,
@@ -141,6 +164,8 @@ impl TrainConfig {
             memory_budget: None,
             host_bw: crate::memory::offload::DEFAULT_HOST_BW_BYTES_PER_SEC,
             spill_lookahead: 2,
+            planner: "dp".into(),
+            grad_spill: true,
             augment: "hflip,crop4".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             eval_every: 1,
@@ -216,6 +241,12 @@ impl TrainConfig {
         if let Some(v) = kv.get_usize("spill_lookahead")? {
             cfg.spill_lookahead = v;
         }
+        if let Some(v) = kv.get_str("planner") {
+            cfg.planner = v.to_string();
+        }
+        if let Some(v) = kv.get_bool("grad_spill")? {
+            cfg.grad_spill = v;
+        }
         if let Some(a) = kv.get_str("augment") {
             cfg.augment = a.to_string();
         }
@@ -266,6 +297,8 @@ impl TrainConfig {
                     .into(),
             );
         }
+        crate::memory::planner::PlannerKind::parse(&self.planner)
+            .map_err(|e| format!("planner: {e}"))?;
         crate::data::augment::AugPolicy::parse(&self.augment)?;
         Ok(())
     }
@@ -407,6 +440,41 @@ mod tests {
         assert_eq!(parse_bytes("0.5MiB").unwrap(), 512 * 1024);
         assert_eq!(parse_bytes("2.5KB").unwrap(), 2_500);
         assert_eq!(parse_bytes("0.25KiB").unwrap(), 256);
+    }
+
+    #[test]
+    fn parse_bytes_underscore_grouping() {
+        assert_eq!(parse_bytes("512_000").unwrap(), 512_000);
+        assert_eq!(parse_bytes("1_024MiB").unwrap(), 1024 * 1024 * 1024);
+        assert_eq!(parse_bytes("786_432").unwrap(), 786_432);
+        assert_eq!(parse_bytes("1_000_000KB").unwrap(), 1_000_000_000);
+        // underscores group the integer part only
+        let err = parse_bytes("1.5_0MB").unwrap_err();
+        assert!(err.contains("fraction"), "{err}");
+        // and must sit between digits
+        assert!(parse_bytes("_512").is_err());
+        assert!(parse_bytes("512_").is_err());
+        assert!(parse_bytes("5__12").is_err());
+    }
+
+    #[test]
+    fn planner_and_grad_spill_parse() {
+        let mut ov = BTreeMap::new();
+        ov.insert("pipeline".to_string(), "sc".to_string());
+        ov.insert("planner".to_string(), "joint".to_string());
+        ov.insert("grad_spill".to_string(), "false".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.planner, "joint");
+        assert!(!cfg.grad_spill);
+        // defaults
+        let d = TrainConfig::default_for("m", Pipeline::BASELINE);
+        assert_eq!(d.planner, "dp");
+        assert!(d.grad_spill);
+        // junk planner rejected with the key named
+        let mut ov = BTreeMap::new();
+        ov.insert("planner".to_string(), "clairvoyant".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("planner"), "{err}");
     }
 
     #[test]

@@ -133,6 +133,8 @@ fn select_plan(
     let mut request = PlanRequest::for_model(&cfg.model, input, classes)
         .pipeline(cfg.pipeline)
         .batch(cfg.batch_size)
+        .planner_named(&cfg.planner)
+        .grad_spill(cfg.grad_spill)
         .host_bw(cfg.host_bw)
         .spill_lookahead(cfg.spill_lookahead);
     if let Some(budget) = cfg.memory_budget {
@@ -153,10 +155,11 @@ fn select_plan(
     };
     if let Some(report) = outcome.offload_report() {
         info!(
-            "host-spill offload for {}: {} checkpoints to host ({} KiB), device \
-             {} KiB ≤ budget {} KiB, predicted stall {:.2} ms/step",
+            "host-spill offload for {}: {} checkpoints + {} param-grads to host ({} KiB), \
+             device {} KiB ≤ budget {} KiB, predicted stall {:.2} ms/step",
             cfg.model,
-            report.spilled_tensors,
+            report.spilled_tensors - report.spilled_grad_tensors,
+            report.spilled_grad_tensors,
             report.spilled_bytes / 1024,
             report.device_total / 1024,
             report.budget / 1024,

@@ -45,7 +45,9 @@
 //! concrete slab, and [`memory::offload`] spills the coldest checkpoints
 //! to host memory — with a double-buffered prefetch schedule and a
 //! predicted-stall model — when `memory_budget` sits below even the
-//! packed slab.
+//! packed slab. [`memory::joint`] replaces that plan-then-spill sequence
+//! with one optimizer over keep / recompute / spill per tensor
+//! (param-gradients included) that never predicts a slower step.
 //!
 //! **The primary planning surface is
 //! [`PlanRequest`](memory::pipeline::PlanRequest)**: one typed builder
@@ -112,9 +114,10 @@ pub mod prelude {
         DegradationAction, DegradationReport, DegradeTrigger, FaultInjector, FaultSpec,
     };
     pub use crate::memory::arena::{plan_arena, ArenaAllocator, ArenaLayout, ArenaReport};
+    pub use crate::memory::joint::{joint_spill_for_checkpoints, plan_joint};
     pub use crate::memory::offload::{
         plan_spill, select_for_budget, simulate_overlap, OffloadEngine, OffloadReport,
-        OverlapModel, SpillPlan,
+        OverlapModel, SpillClass, SpillPlan,
     };
     pub use crate::memory::outcome::PlanOutcome;
     pub use crate::memory::peak::PeakEvaluator;

@@ -184,6 +184,53 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         return Ok(());
     }
 
+    if cli.has_flag("compare") {
+        // Sequential plan→spill vs the joint recompute/spill optimizer,
+        // side by side, under the same budget (--spill wins over
+        // --budget, matching the --json precedence).
+        let (field, v) = match (cli.get("spill"), cli.get("budget")) {
+            (Some(v), _) => ("--spill", v),
+            (None, Some(v)) => ("--budget", v),
+            (None, None) => {
+                return Err(anyhow!("--compare needs a --spill (or --budget) to solve for"))
+            }
+        };
+        let grad_spill = match cli.get("grad_spill") {
+            None | Some("true") | Some("on") | Some("1") => true,
+            Some("false") | Some("off") | Some("0") => false,
+            Some(other) => {
+                return Err(anyhow!("--grad_spill: expected true/false, got '{other}'"))
+            }
+        };
+        // The joint side always runs `joint`; the sequential side runs
+        // the explicit --kind, or the budgeted default (dp) when --kind
+        // is absent or itself `joint`.
+        let seq_spec = match cli.get("kind") {
+            Some("joint") | None => "dp",
+            Some(k) => k,
+        };
+        let budgeted = base.clone().memory_budget_field(field, v).arena(true);
+        let sequential = budgeted.clone().planner_named(seq_spec).run();
+        let joint = budgeted.planner_named("joint").grad_spill(grad_spill).run();
+        if sequential.is_err() && joint.is_err() {
+            // Both sides infeasible: surface it as an error exit, with
+            // the joint side's floor (the smaller of the two).
+            return Err(plan_err(joint.unwrap_err()));
+        }
+        if cli.has_flag("json") {
+            println!(
+                "{}",
+                optorch::memory::outcome::compare_json(&sequential, &joint).to_string()
+            );
+        } else {
+            print!(
+                "{}",
+                optorch::memory::outcome::compare_markdown(&sequential, &joint)
+            );
+        }
+        return Ok(());
+    }
+
     if cli.has_flag("json") {
         // One fully-staged outcome, rendered as the stable JSON schema
         // (--spill wins over --budget: it is the stronger composition).

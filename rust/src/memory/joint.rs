@@ -1,0 +1,441 @@
+//! Joint recompute/spill planning: one optimizer over keep / recompute /
+//! spill, including param-gradient offload.
+//!
+//! The sequential pipeline decomposes the budget problem: the DP planner
+//! picks a checkpoint frontier first
+//! ([`pareto_frontier`](crate::memory::planner::pareto_frontier)), then
+//! [`select_for_budget`](crate::memory::offload::select_for_budget)
+//! composes the greedy coldest-first spill for each point and keeps the
+//! best. MONeT (Shah et al., "Memory Optimization for Deep Networks")
+//! shows that deciding location and recomputation *jointly per tensor*
+//! strictly dominates that decomposition; [`plan_joint`] is that search
+//! over this crate's exact cost models:
+//!
+//! * **Recompute** comes from the same chain decomposition the PR 2 DP
+//!   uses — every candidate checkpoint placement is costed by its exact
+//!   re-forward FLOPs
+//!   ([`recompute_overhead`](crate::memory::planner::recompute_overhead))
+//!   folded into the simulated step time.
+//! * **Spill** is costed against the double-buffered link model of
+//!   [`simulate_overlap`](crate::memory::offload::simulate_overlap): a
+//!   transfer only costs what its stall fails to hide behind compute.
+//! * **Param-gradients** join the spill candidate set
+//!   ([`grad_candidates`](crate::memory::offload::plan)). A gradient is
+//!   idle from its backward step to the optimizer step; spilling it
+//!   applies the optimizer update host-side (ZeRO-Offload style), so the
+//!   bytes leave the slab for good and only the refreshed parameters ride
+//!   the link back. On parameter-heavy nets this drops the device floor
+//!   below anything checkpoint spilling can reach.
+//!
+//! The search: every candidate checkpoint placement — all `2^(n−1)`
+//! subsets on chains of at most [`JOINT_EXHAUSTIVE_DEPTH`] layers, the
+//! Pareto frontier otherwise — is combined with several deterministic
+//! spill orders (sequential coldest-first over checkpoints; a merged
+//! checkpoint+gradient order ranked by how hideable each transfer is;
+//! gradients first). The shortest fitting prefix of each order is packed
+//! and simulated, and the minimum predicted step time wins, ties broken
+//! by lower recompute then smaller device total — the same ranking
+//! `select_for_budget` uses.
+//!
+//! **Dominance by construction:** the sequential winner's exact
+//! composition (its frontier point, its coldest-first spill prefix, the
+//! same packer and the same simulator) is always one of the candidates
+//! joint scores, so `plan_joint`'s predicted step time is never worse
+//! than `select_for_budget`'s — exactly, in the same arithmetic, not
+//! merely approximately. The benches and `tests/prop_joint.rs` hold it to
+//! that.
+
+use crate::config::Pipeline;
+use crate::memory::arena::{pack, Lifetimes, ScheduleTimes};
+use crate::memory::offload::plan::{
+    candidates, grad_candidates, host_peak, resident_lifetimes, SpillStep,
+};
+use crate::memory::offload::schedule::step_flops;
+use crate::memory::offload::{
+    simulate_overlap, BudgetDecision, InfeasibleBudget, OverlapModel, OverlapReport, SpillPlan,
+};
+use crate::memory::peak::PeakEvaluator;
+use crate::memory::planner::{
+    pareto_frontier, recompute_overhead, CheckpointPlan, PlannerKind, DEFAULT_FRONTIER_LEVELS,
+};
+use crate::models::ArchProfile;
+
+/// Chains up to this many layers are searched over every checkpoint
+/// subset (`2^(n−1)` placements); deeper chains fall back to the Pareto
+/// frontier. Matches the brute-force optimality bound pinned by
+/// `tests/prop_joint.rs`.
+pub const JOINT_EXHAUSTIVE_DEPTH: usize = 10;
+
+/// Jointly choose keep / recompute / spill per tensor for `budget` device
+/// bytes. `grad_spill` admits param-gradients to the spill candidate set;
+/// with it off the search still dominates the sequential pipeline (it
+/// scores strictly more checkpoint placements), with it on the reachable
+/// floor drops below the resident-gradient minimum. Returns the same
+/// [`BudgetDecision`] the sequential
+/// [`select_for_budget`](crate::memory::offload::select_for_budget)
+/// yields, or [`InfeasibleBudget`] carrying the smallest device total any
+/// scored composition reached.
+pub fn plan_joint(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    budget: u64,
+    lookahead: usize,
+    model: &OverlapModel,
+    grad_spill: bool,
+) -> Result<BudgetDecision, InfeasibleBudget> {
+    let mut p = pipeline;
+    p.sc = true;
+    let lookahead = lookahead.max(1);
+    let n = arch.layers.len();
+    let placements: Vec<Vec<usize>> = if n == 0 {
+        vec![vec![]]
+    } else if n <= JOINT_EXHAUSTIVE_DEPTH {
+        (0u32..(1u32 << (n - 1)))
+            .map(|mask| (0..n - 1).filter(|&i| mask >> i & 1 == 1).collect())
+            .collect()
+    } else {
+        pareto_frontier(arch, p, batch, DEFAULT_FRONTIER_LEVELS)
+            .into_iter()
+            .map(|pt| pt.checkpoints)
+            .collect()
+    };
+    let mut ev = PeakEvaluator::new(arch, p, batch);
+    let mut best: Option<BudgetDecision> = None;
+    let mut min_bytes = u64::MAX;
+    for cps in placements {
+        match joint_spill_for_checkpoints(
+            arch, p, batch, &cps, budget, lookahead, model, grad_spill,
+        ) {
+            Ok((spill, overlap)) => {
+                let overhead = recompute_overhead(arch, &cps);
+                let replace = match &best {
+                    None => true,
+                    Some(b) => {
+                        let cand = (overlap.predicted_step_secs, overhead, spill.device_total());
+                        let cur = (
+                            b.overlap.predicted_step_secs,
+                            b.plan.recompute_overhead,
+                            b.spill.device_total(),
+                        );
+                        cand.partial_cmp(&cur) == Some(std::cmp::Ordering::Less)
+                    }
+                };
+                if replace {
+                    best = Some(BudgetDecision {
+                        plan: CheckpointPlan {
+                            kind: PlannerKind::Joint,
+                            peak_bytes: ev.peak(&cps),
+                            recompute_overhead: overhead,
+                            checkpoints: cps,
+                        },
+                        spill,
+                        overlap,
+                    });
+                }
+            }
+            Err(e) => min_bytes = min_bytes.min(e.min_device_bytes),
+        }
+    }
+    best.ok_or(InfeasibleBudget { budget, min_device_bytes: min_bytes })
+}
+
+/// Joint spill selection for one *fixed* checkpoint placement: score every
+/// candidate eviction order's shortest fitting prefix and keep the minimum
+/// predicted step time (ties: smaller device total). This is the budgeted
+/// explicit-checkpoints path of the facade (`PlanRequest::with_checkpoints`
+/// under `PlannerKind::Joint`) — the placement is pinned, only location is
+/// optimized.
+#[allow(clippy::too_many_arguments)]
+pub fn joint_spill_for_checkpoints(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    checkpoints: &[usize],
+    budget: u64,
+    lookahead: usize,
+    model: &OverlapModel,
+    grad_spill: bool,
+) -> Result<(SpillPlan, OverlapReport), InfeasibleBudget> {
+    let mut p = pipeline;
+    p.sc = true;
+    let lookahead = lookahead.max(1);
+    let spills =
+        joint_spill_for_plan(arch, p, batch, checkpoints, budget, lookahead, model, grad_spill)
+            .map_err(|min| InfeasibleBudget { budget, min_device_bytes: min })?;
+    let mut best: Option<(SpillPlan, OverlapReport)> = None;
+    for spill in spills {
+        let overlap = simulate_overlap(arch, batch, &spill, model);
+        let replace = match &best {
+            None => true,
+            Some((bs, bo)) => {
+                let cand = (overlap.predicted_step_secs, spill.device_total());
+                let cur = (bo.predicted_step_secs, bs.device_total());
+                cand.partial_cmp(&cur) == Some(std::cmp::Ordering::Less)
+            }
+        };
+        if replace {
+            best = Some((spill, overlap));
+        }
+    }
+    Ok(best.expect("joint_spill_for_plan returns at least one plan on Ok"))
+}
+
+/// All fitting spill compositions [`plan_joint`] scores for one
+/// checkpoint placement: the shortest fitting prefix of each candidate
+/// eviction order (at most one plan per order, deduplicated by step set).
+/// `Err` carries the smallest device total any prefix reached when none
+/// fit. The first order is the sequential planner's own coldest-first
+/// checkpoint order, inserted layer-sorted exactly like
+/// [`plan_spill`](crate::memory::offload::plan_spill) — that candidate is
+/// byte-identical to the sequential composition, which is what makes the
+/// joint result dominant by construction rather than by luck.
+#[allow(clippy::too_many_arguments)]
+fn joint_spill_for_plan(
+    arch: &ArchProfile,
+    pipeline: Pipeline,
+    batch: usize,
+    checkpoints: &[usize],
+    budget: u64,
+    lookahead: usize,
+    model: &OverlapModel,
+    grad_spill: bool,
+) -> Result<Vec<SpillPlan>, u64> {
+    let ev = PeakEvaluator::new(arch, pipeline, batch);
+    let times = ScheduleTimes::compute(&ev, checkpoints);
+    let lt = Lifetimes::extract(&ev, checkpoints);
+    let layout = pack(&lt);
+    if layout.total_bytes() <= budget {
+        return Ok(vec![SpillPlan {
+            steps: Vec::new(),
+            lifetimes: lt,
+            layout,
+            times,
+            budget,
+            spilled_bytes: 0,
+            host_peak_bytes: 0,
+        }]);
+    }
+    let ckpts: Vec<SpillStep> =
+        candidates(arch, &ev, &times, lookahead).into_iter().map(|c| c.step).collect();
+    let grads: Vec<SpillStep> = if grad_spill {
+        grad_candidates(arch, &ev, &times, lookahead).into_iter().map(|c| c.step).collect()
+    } else {
+        Vec::new()
+    };
+
+    let mut orders: Vec<Vec<SpillStep>> = vec![ckpts.clone()];
+    if !grads.is_empty() {
+        // Merged order: cheapest-to-hide first. A transfer of `bytes` each
+        // way costs `2·bytes/bw` link seconds against the compute seconds
+        // of its idle window — the smaller that ratio, the more of the
+        // transfer the overlap model hides for free.
+        let flops = step_flops(arch, batch, &times);
+        let bw = model.host_bw_bytes_per_sec.max(1.0);
+        let speed = model.device_flops_per_sec.max(1.0);
+        let hide_ratio = |s: &SpillStep| -> f64 {
+            let window: f64 =
+                flops[s.evict_step..s.need_step].iter().map(|f| f / speed).sum();
+            (2.0 * s.bytes as f64 / bw) / window.max(1e-12)
+        };
+        let mut merged: Vec<SpillStep> = ckpts.iter().chain(grads.iter()).cloned().collect();
+        merged.sort_by(|a, b| {
+            hide_ratio(a)
+                .partial_cmp(&hide_ratio(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.gap_steps.cmp(&a.gap_steps))
+                .then(a.layer.cmp(&b.layer))
+                .then(a.class.cmp(&b.class))
+        });
+        orders.push(merged);
+        // Gradients first: on parameter-heavy nets the slab peak sits at
+        // the optimizer step, where no amount of checkpoint spilling
+        // helps; this order reaches that floor with the fewest transfers.
+        let mut gf = grads.clone();
+        gf.extend(ckpts.iter().cloned());
+        orders.push(gf);
+    }
+
+    let mut out: Vec<SpillPlan> = Vec::new();
+    let mut min_total = layout.total_bytes();
+    for order in &orders {
+        // Shortest fitting prefix: every further eviction adds link load
+        // without freeing budget-relevant bytes, so within one order more
+        // spills never predict a faster step.
+        let mut chosen: Vec<SpillStep> = Vec::new();
+        for step in order {
+            let pos = chosen
+                .partition_point(|s| (s.layer, s.class) < (step.layer, step.class));
+            chosen.insert(pos, step.clone());
+            let rl = resident_lifetimes(&lt, &chosen);
+            let rlay = pack(&rl);
+            min_total = min_total.min(rlay.total_bytes());
+            if rlay.total_bytes() <= budget {
+                let spilled_bytes = chosen.iter().map(|s| s.bytes).sum();
+                let host_peak_bytes = host_peak(&chosen, times.steps);
+                let dup = out.iter().any(|p| p.steps == chosen);
+                if !dup {
+                    out.push(SpillPlan {
+                        steps: chosen,
+                        lifetimes: rl,
+                        layout: rlay,
+                        times: times.clone(),
+                        budget,
+                        spilled_bytes,
+                        host_peak_bytes,
+                    });
+                }
+                break;
+            }
+        }
+    }
+    if out.is_empty() {
+        Err(min_total)
+    } else {
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::arena::{plan_arena, validate};
+    use crate::memory::offload::{select_for_budget, SpillClass};
+    use crate::models::{LayerKind, LayerProfile};
+
+    fn sc() -> Pipeline {
+        Pipeline::parse("sc").unwrap()
+    }
+
+    /// Checkpoint-heavy uniform chain (activations dominate parameters).
+    fn uniform_chain(depth: usize) -> ArchProfile {
+        let layers = (0..depth)
+            .map(|i| {
+                let c = 64 + 8 * (i % 4);
+                let out = (8 * 8 * c) as u64;
+                LayerProfile {
+                    name: format!("l{i}"),
+                    kind: LayerKind::Conv,
+                    out_shape: (8, 8, c),
+                    act_elems: out * 2,
+                    params: (c * 9) as u64,
+                    flops_per_image: c as u64 * 10_000,
+                }
+            })
+            .collect();
+        ArchProfile { name: format!("chain{depth}"), input: (8, 8, 3), layers }
+    }
+
+    /// Parameter-heavy chain: per-layer param bytes rival activation
+    /// bytes, so resident gradients set the floor at the optimizer step.
+    fn param_heavy_chain(depth: usize) -> ArchProfile {
+        let layers = (0..depth)
+            .map(|i| {
+                let out = (8 * 8 * 64) as u64;
+                LayerProfile {
+                    name: format!("fc{i}"),
+                    kind: LayerKind::Dense,
+                    out_shape: (8, 8, 64),
+                    act_elems: out * 2,
+                    // ≈ batch·act bytes worth of parameters per layer
+                    params: out * 16,
+                    flops_per_image: 2_000_000,
+                }
+            })
+            .collect();
+        ArchProfile { name: format!("fc_chain{depth}"), input: (8, 8, 3), layers }
+    }
+
+    #[test]
+    fn joint_matches_or_beats_sequential_on_checkpoint_heavy_chain() {
+        let arch = uniform_chain(24);
+        let (_, layout) = plan_arena(&arch, sc(), 16, &(0..23).collect::<Vec<_>>());
+        let model = OverlapModel::default();
+        for frac in [4u64, 3, 2] {
+            let budget = layout.total_bytes() * frac / 5;
+            let seq = select_for_budget(&arch, sc(), 16, budget, 2, &model);
+            let joint = plan_joint(&arch, sc(), 16, budget, 2, &model, true);
+            match (seq, joint) {
+                (Ok(s), Ok(j)) => {
+                    assert!(
+                        j.overlap.predicted_step_secs <= s.overlap.predicted_step_secs,
+                        "budget {budget}: joint {} > seq {}",
+                        j.overlap.predicted_step_secs,
+                        s.overlap.predicted_step_secs
+                    );
+                    assert!(j.spill.device_total() <= budget);
+                    validate(&j.spill.lifetimes, &j.spill.layout).unwrap();
+                }
+                (Err(_), Ok(j)) => assert!(j.spill.device_total() <= budget),
+                (Ok(_), Err(e)) => {
+                    panic!("joint infeasible where sequential fits: {e}")
+                }
+                (Err(_), Err(_)) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn grad_spill_reaches_below_the_sequential_floor() {
+        let arch = param_heavy_chain(12);
+        let model = OverlapModel::default();
+        // The sequential floor: every frontier point with every cold
+        // checkpoint spilled still keeps all param-gradients resident.
+        let seq_floor = match select_for_budget(&arch, sc(), 16, 1, 2, &model) {
+            Err(e) => e.min_device_bytes,
+            Ok(_) => panic!("1-byte budget cannot be feasible"),
+        };
+        let budget = seq_floor - 1;
+        assert!(
+            select_for_budget(&arch, sc(), 16, budget, 2, &model).is_err(),
+            "budget just below the sequential floor must be sequentially infeasible"
+        );
+        let j = plan_joint(&arch, sc(), 16, budget, 2, &model, true)
+            .expect("grad spilling reaches below the sequential floor");
+        assert!(j.spill.device_total() <= budget);
+        assert!(
+            j.spill.steps.iter().any(|s| s.class == SpillClass::ParamGrad),
+            "the win must come from param-gradient spills: {:?}",
+            j.spill.steps
+        );
+        validate(&j.spill.lifetimes, &j.spill.layout).unwrap();
+        // with grad_spill off the same budget stays infeasible
+        assert!(plan_joint(&arch, sc(), 16, budget, 2, &model, false).is_err());
+    }
+
+    #[test]
+    fn joint_is_deterministic() {
+        let arch = param_heavy_chain(10);
+        let (_, layout) = plan_arena(&arch, sc(), 16, &(0..9).collect::<Vec<_>>());
+        let budget = layout.total_bytes() / 2;
+        let model = OverlapModel::default();
+        let a = plan_joint(&arch, sc(), 16, budget, 2, &model, true).unwrap();
+        let b = plan_joint(&arch, sc(), 16, budget, 2, &model, true).unwrap();
+        assert_eq!(a.plan.checkpoints, b.plan.checkpoints);
+        assert_eq!(a.spill.steps, b.spill.steps);
+        assert_eq!(a.spill.layout.offsets, b.spill.layout.offsets);
+        assert_eq!(a.overlap.predicted_step_secs, b.overlap.predicted_step_secs);
+    }
+
+    #[test]
+    fn generous_budget_degenerates_to_the_cheapest_pure_plan() {
+        let arch = uniform_chain(8);
+        let model = OverlapModel::default();
+        let j = plan_joint(&arch, sc(), 8, u64::MAX, 2, &model, true).unwrap();
+        assert!(!j.is_spill());
+        assert_eq!(j.plan.recompute_overhead, 0.0);
+        assert_eq!(j.overlap.stall_secs, 0.0);
+    }
+
+    #[test]
+    fn impossible_budget_reports_the_joint_floor() {
+        let arch = param_heavy_chain(8);
+        let model = OverlapModel::default();
+        let err = plan_joint(&arch, sc(), 16, 1, 2, &model, true).unwrap_err();
+        assert_eq!(err.budget, 1);
+        assert!(err.min_device_bytes > 1);
+        // the joint floor is at or below the sequential one
+        let seq = select_for_budget(&arch, sc(), 16, 1, 2, &model).unwrap_err();
+        assert!(err.min_device_bytes <= seq.min_device_bytes);
+    }
+}

@@ -12,7 +12,10 @@
 //! buffers through. [`offload`] goes one step further down the hierarchy:
 //! when the device budget sits below even the packed slab, it evicts the
 //! coldest checkpoints to host memory with a double-buffered prefetch
-//! schedule and an honest stall prediction.
+//! schedule and an honest stall prediction. [`joint`] folds the two
+//! decisions into one optimizer — keep / recompute / spill per tensor,
+//! param-gradients included — that never predicts a slower step than the
+//! sequential plan-then-spill composition.
 //!
 //! **The primary surface is [`pipeline`]**: one typed
 //! [`PlanRequest`](pipeline::PlanRequest) stages the whole
@@ -22,6 +25,7 @@
 //! functions below it are the documented low-level API.
 
 pub mod arena;
+pub mod joint;
 pub mod offload;
 pub mod outcome;
 pub mod peak;

@@ -33,7 +33,7 @@ pub use host_pool::{
     HostSpillPool, LinkFaults, OffloadEngine, OffloadStats, TransferError,
     DEFAULT_MAX_TRANSFER_RETRIES,
 };
-pub use plan::{plan_spill, InfeasibleBudget, SpillPlan, SpillStep};
+pub use plan::{plan_spill, InfeasibleBudget, SpillClass, SpillPlan, SpillStep};
 pub use schedule::{
     simulate_overlap, step_flops, OverlapModel, OverlapReport, Transfer, TransferKind,
     DEFAULT_DEVICE_FLOPS_PER_SEC, DEFAULT_HOST_BW_BYTES_PER_SEC,
@@ -72,6 +72,9 @@ pub struct OffloadReport {
     /// Device bytes actually reserved: static base + resident slab.
     pub device_total: u64,
     pub spilled_tensors: usize,
+    /// How many of `spilled_tensors` are param-gradients (joint planner
+    /// with `grad_spill`; always 0 for the sequential pipeline).
+    pub spilled_grad_tensors: usize,
     pub spilled_bytes: u64,
     pub host_peak_bytes: u64,
     pub predicted_stall_secs: f64,
@@ -108,6 +111,11 @@ impl OffloadReport {
             budget: spill.budget,
             device_total: spill.device_total(),
             spilled_tensors: spill.steps.len(),
+            spilled_grad_tensors: spill
+                .steps
+                .iter()
+                .filter(|s| s.class == SpillClass::ParamGrad)
+                .count(),
             spilled_bytes: spill.spilled_bytes,
             host_peak_bytes: spill.host_peak_bytes,
             predicted_stall_secs: overlap.stall_secs,

@@ -25,10 +25,34 @@ use crate::memory::arena::{pack, ArenaLayout, Lifetimes, ScheduleTimes, TensorCl
 use crate::memory::peak::PeakEvaluator;
 use crate::models::ArchProfile;
 
-/// One evicted checkpoint: the transfer endpoints in schedule steps.
+/// What kind of tensor a spill step moves. Checkpoints were the original
+/// (and sequential pipeline's only) candidates; the joint optimizer
+/// ([`crate::memory::joint`]) adds param-gradients — idle from their
+/// backward step until the optimizer step — whose spilled updates are
+/// applied host-side (ZeRO-Offload style): the gradient leaves the slab at
+/// its eviction and never returns, and the "prefetch" transfer models the
+/// refreshed parameters copied back before the optimizer step completes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpillClass {
+    Checkpoint,
+    ParamGrad,
+}
+
+impl SpillClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpillClass::Checkpoint => "checkpoint",
+            SpillClass::ParamGrad => "param-grad",
+        }
+    }
+}
+
+/// One evicted tensor: the transfer endpoints in schedule steps.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SpillStep {
-    /// Layer whose boundary output is spilled.
+    /// What is being spilled (checkpoint boundary or param-gradient).
+    pub class: SpillClass,
+    /// Layer whose tensor is spilled.
     pub layer: usize,
     /// Bytes moved each way.
     pub bytes: u64,
@@ -104,18 +128,18 @@ impl std::fmt::Display for InfeasibleBudget {
 impl std::error::Error for InfeasibleBudget {}
 
 /// Spill candidate with its greedy sort key.
-struct Candidate {
-    step: SpillStep,
+pub(crate) struct Candidate {
+    pub(crate) step: SpillStep,
     /// Bytes transferred per FLOP of the covering backward segment —
     /// smaller is easier to hide behind compute.
-    bytes_per_flop: f64,
+    pub(crate) bytes_per_flop: f64,
 }
 
 /// Enumerate evictable checkpoints under `times` with their idle windows.
 /// The final layer's checkpoint is never a candidate (the loss gradient
 /// consumes it immediately), nor is any checkpoint whose idle window
 /// collapses once `lookahead` is subtracted.
-fn candidates(
+pub(crate) fn candidates(
     arch: &ArchProfile,
     ev: &PeakEvaluator,
     times: &ScheduleTimes,
@@ -145,6 +169,7 @@ fn candidates(
         let seg_flops = (flops_prefix[s + 1] - flops_prefix[i + 1]).max(1);
         out.push(Candidate {
             step: SpillStep {
+                class: SpillClass::Checkpoint,
                 layer: i,
                 bytes: ev.out_bytes(i),
                 evict_step: evict,
@@ -169,25 +194,99 @@ fn candidates(
     out
 }
 
-/// Split the spilled checkpoints' intervals into their device-resident
-/// windows; everything else is untouched.
-fn resident_lifetimes(lt: &Lifetimes, spilled: &[SpillStep]) -> Lifetimes {
+/// Enumerate spillable param-gradients under `times`. A gradient is
+/// written at its layer's backward step and then sits idle until the
+/// optimizer step — on parameter-heavy nets the dominant cold bytes of
+/// the whole backward pass. Spilling one offloads its optimizer update to
+/// the host: the gradient is copied out right after its backward step and
+/// its slab range is free from then on; the paired "prefetch" transfer is
+/// the refreshed parameters returning, due by the optimizer step
+/// (`need_step = t_opt`). Layers whose backward runs too close to the
+/// optimizer step (no window once `lookahead` is subtracted) are not
+/// candidates. Sorted coldest-first like [`candidates`].
+pub(crate) fn grad_candidates(
+    arch: &ArchProfile,
+    ev: &PeakEvaluator,
+    times: &ScheduleTimes,
+    lookahead: usize,
+) -> Vec<Candidate> {
+    let n = ev.depth();
+    let flops_prefix = arch.flops_prefix();
+    let total_flops = flops_prefix.last().copied().unwrap_or(0).max(1);
+    let mut out: Vec<Candidate> = Vec::new();
+    for i in 0..n {
+        let bytes = ev.param_grad_bytes(i);
+        if bytes == 0 {
+            continue;
+        }
+        let evict = times.t_bwd[i] + 1;
+        let need = times.t_opt;
+        if need <= evict {
+            continue;
+        }
+        let prefetch = need.saturating_sub(lookahead).max(evict);
+        if prefetch <= evict {
+            continue; // backward lands too close to the optimizer step
+        }
+        out.push(Candidate {
+            step: SpillStep {
+                class: SpillClass::ParamGrad,
+                layer: i,
+                bytes,
+                evict_step: evict,
+                prefetch_step: prefetch,
+                need_step: need,
+                gap_steps: need - evict,
+            },
+            // The idle window spans the remaining backward pass; rate the
+            // transfer against the whole run's compute (the window's FLOPs
+            // are a plan-dependent subset of it).
+            bytes_per_flop: bytes as f64 / total_flops as f64,
+        });
+    }
+    out.sort_by(|a, b| {
+        b.step
+            .gap_steps
+            .cmp(&a.step.gap_steps)
+            .then(
+                a.bytes_per_flop
+                    .partial_cmp(&b.bytes_per_flop)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.step.layer.cmp(&b.step.layer))
+    });
+    out
+}
+
+/// Split the spilled tensors' intervals into their device-resident
+/// windows; everything else is untouched. A spilled checkpoint keeps two
+/// windows (pre-evict and post-prefetch); a spilled param-gradient keeps
+/// only its pre-evict window — its update is applied host-side and the
+/// returning transfer refreshes the static parameter storage, not the
+/// slab.
+pub(crate) fn resident_lifetimes(lt: &Lifetimes, spilled: &[SpillStep]) -> Lifetimes {
     let mut out = lt.clone();
     for s in spilled {
+        let class = match s.class {
+            SpillClass::Checkpoint => TensorClass::Checkpoint,
+            SpillClass::ParamGrad => TensorClass::ParamGrad,
+        };
         let idx = out
             .tensors
             .iter()
-            .position(|t| t.class == TensorClass::Checkpoint && t.layer == s.layer)
-            .expect("spilled checkpoint has a lifetime");
+            .position(|t| t.class == class && t.layer == s.layer)
+            .expect("spilled tensor has a lifetime");
         let end = out.tensors[idx].end;
         out.tensors[idx].end = s.evict_step;
-        out.tensors.push(TensorLife {
-            class: TensorClass::Checkpoint,
-            layer: s.layer,
-            bytes: s.bytes,
-            start: s.prefetch_step,
-            end,
-        });
+        if s.class == SpillClass::Checkpoint {
+            out.tensors.push(TensorLife {
+                class,
+                layer: s.layer,
+                bytes: s.bytes,
+                start: s.prefetch_step,
+                end,
+            });
+        }
     }
     out
 }
@@ -195,7 +294,7 @@ fn resident_lifetimes(lt: &Lifetimes, spilled: &[SpillStep]) -> Lifetimes {
 /// Peak concurrent host bytes: each spilled tensor occupies host memory
 /// from its eviction until its prefetch lands (conservatively, until its
 /// first backward use).
-fn host_peak(steps: &[SpillStep], total_steps: usize) -> u64 {
+pub(crate) fn host_peak(steps: &[SpillStep], total_steps: usize) -> u64 {
     let mut delta = vec![0i128; total_steps + 1];
     for s in steps {
         delta[s.evict_step] += s.bytes as i128;

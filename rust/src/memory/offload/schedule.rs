@@ -18,7 +18,7 @@
 //! stalls are compared in the same unit.
 
 use crate::memory::arena::ScheduleTimes;
-use crate::memory::offload::plan::SpillPlan;
+use crate::memory::offload::plan::{SpillClass, SpillPlan};
 use crate::models::ArchProfile;
 
 /// Default modeled device throughput (FLOP/s) for converting schedule
@@ -55,6 +55,9 @@ pub enum TransferKind {
 #[derive(Clone, Debug)]
 pub struct Transfer {
     pub layer: usize,
+    /// What the transfer moves (a layer can spill both its checkpoint and
+    /// its param-gradient; the pair is distinguished here).
+    pub class: SpillClass,
     pub kind: TransferKind,
     pub issue_step: usize,
     pub bytes: u64,
@@ -138,38 +141,40 @@ pub fn simulate_overlap(
     let bw = model.host_bw_bytes_per_sec.max(1.0);
     let speed = model.device_flops_per_sec.max(1.0);
 
-    // (issue step, prefetch?, layer, bytes) — link order is issue order.
-    let mut issues: Vec<(usize, bool, usize, u64)> = Vec::new();
+    // (issue step, prefetch?, layer, class, bytes) — link order is issue
+    // order; class keeps a layer's checkpoint and param-grad distinct.
+    let mut issues: Vec<(usize, bool, usize, SpillClass, u64)> = Vec::new();
     for s in &spill.steps {
-        issues.push((s.evict_step, false, s.layer, s.bytes));
-        issues.push((s.prefetch_step, true, s.layer, s.bytes));
+        issues.push((s.evict_step, false, s.layer, s.class, s.bytes));
+        issues.push((s.prefetch_step, true, s.layer, s.class, s.bytes));
     }
     issues.sort_unstable();
-    // need_step per spilled layer, in step order.
-    let mut needs: Vec<(usize, usize)> =
-        spill.steps.iter().map(|s| (s.need_step, s.layer)).collect();
+    // need_step per spilled tensor, in step order.
+    let mut needs: Vec<(usize, usize, SpillClass)> =
+        spill.steps.iter().map(|s| (s.need_step, s.layer, s.class)).collect();
     needs.sort_unstable();
 
     let mut now = 0.0f64;
     let mut link_free = 0.0f64;
     let mut stall = 0.0f64;
     let mut transfers: Vec<Transfer> = Vec::with_capacity(issues.len());
-    let mut prefetch_done: Vec<(usize, f64)> = Vec::with_capacity(spill.steps.len());
+    let mut prefetch_done: Vec<(usize, SpillClass, f64)> = Vec::with_capacity(spill.steps.len());
     let mut step_start = Vec::with_capacity(times.steps);
     let mut qi = 0usize;
     let mut ni = 0usize;
     for step in 0..times.steps {
         while qi < issues.len() && issues[qi].0 == step {
-            let (_, is_prefetch, layer, bytes) = issues[qi];
+            let (_, is_prefetch, layer, class, bytes) = issues[qi];
             qi += 1;
             let start = now.max(link_free);
             let done = start + bytes as f64 / bw;
             link_free = done;
             if is_prefetch {
-                prefetch_done.push((layer, done));
+                prefetch_done.push((layer, class, done));
             }
             transfers.push(Transfer {
                 layer,
+                class,
                 kind: if is_prefetch { TransferKind::Prefetch } else { TransferKind::Evict },
                 issue_step: step,
                 bytes,
@@ -178,9 +183,11 @@ pub fn simulate_overlap(
             });
         }
         while ni < needs.len() && needs[ni].0 == step {
-            let (_, layer) = needs[ni];
+            let (_, layer, class) = needs[ni];
             ni += 1;
-            if let Some(&(_, done)) = prefetch_done.iter().find(|&&(l, _)| l == layer) {
+            if let Some(&(_, _, done)) =
+                prefetch_done.iter().find(|&&(l, c, _)| l == layer && c == class)
+            {
                 if done > now {
                     stall += done - now;
                     now = done;

@@ -6,7 +6,8 @@
 
 use crate::config::Pipeline;
 use crate::memory::arena::{ArenaLayout, ArenaReport, Lifetimes};
-use crate::memory::offload::{OffloadReport, OverlapReport, SpillPlan};
+use crate::memory::offload::{OffloadReport, OverlapReport, SpillClass, SpillPlan};
+use crate::memory::pipeline::PlanError;
 use crate::memory::planner::{CheckpointPlan, PlannerKind};
 use crate::memory::simulator::MemoryReport;
 use crate::models::ArchProfile;
@@ -201,6 +202,7 @@ impl PlanOutcome {
                             .iter()
                             .map(|st| {
                                 obj(vec![
+                                    ("class", s(st.class.name())),
                                     ("layer", n(st.layer as f64)),
                                     ("bytes", n(st.bytes as f64)),
                                     ("evict_step", n(st.evict_step as f64)),
@@ -268,6 +270,7 @@ pub fn planner_kind_spec(kind: PlannerKind) -> String {
         PlannerKind::Optimal => "dp".to_string(),
         PlannerKind::Uniform(k) => format!("uniform{k}"),
         PlannerKind::Bottleneck(k) => format!("bottleneck{k}"),
+        PlannerKind::Joint => "joint".to_string(),
     }
 }
 
@@ -306,13 +309,22 @@ pub fn arena_summary(a: &ArenaReport) -> String {
 /// device, what it costs in predicted stall, and — after a run — the
 /// engine's transfer/pool counters.
 pub fn offload_summary(o: &OffloadReport) -> String {
+    let what = if o.spilled_grad_tensors > 0 {
+        format!(
+            "{} checkpoints + {} param-grads",
+            o.spilled_tensors - o.spilled_grad_tensors,
+            o.spilled_grad_tensors
+        )
+    } else {
+        format!("{} checkpoints", o.spilled_tensors)
+    };
     let mut s = format!(
-        "host-spill offload: device {} ≤ budget {} — {} checkpoints to host \
+        "host-spill offload: device {} ≤ budget {} — {} to host \
          ({} out, host peak {}), predicted stall {:.2} ms/step ({:.1}% of {:.2} ms), \
          bw {}/s, lookahead {}\n",
         fmt_bytes(o.device_total),
         fmt_bytes(o.budget),
-        o.spilled_tensors,
+        what,
         fmt_bytes(o.spilled_bytes),
         fmt_bytes(o.host_peak_bytes),
         o.predicted_stall_secs * 1e3,
@@ -339,6 +351,96 @@ pub fn offload_summary(o: &OffloadReport) -> String {
         ));
     }
     s
+}
+
+/// Side-by-side JSON of a sequential and a joint planning run (the
+/// `plan --compare` schema): each side is the full
+/// [`PlanOutcome::to_json`], or `{"error": …}` when that side was
+/// infeasible.
+pub fn compare_json(
+    sequential: &Result<PlanOutcome, PlanError>,
+    joint: &Result<PlanOutcome, PlanError>,
+) -> Json {
+    let side = |r: &Result<PlanOutcome, PlanError>| match r {
+        Ok(o) => o.to_json(),
+        Err(e) => obj(vec![("error", s(&e.to_string()))]),
+    };
+    obj(vec![("sequential", side(sequential)), ("joint", side(joint))])
+}
+
+/// Side-by-side markdown of a sequential and a joint planning run: one
+/// metric per row, an infeasible side rendered as a note above the table,
+/// and — when both sides planned — the predicted-step verdict.
+pub fn compare_markdown(
+    sequential: &Result<PlanOutcome, PlanError>,
+    joint: &Result<PlanOutcome, PlanError>,
+) -> String {
+    let mut md = String::from("### plan comparison: sequential vs joint\n\n");
+    for (label, r) in [("sequential", sequential), ("joint", joint)] {
+        if let Err(e) = r {
+            md.push_str(&format!("_{label} infeasible: {e}_\n\n"));
+        }
+    }
+    let spilled = |o: &PlanOutcome| match &o.spill {
+        Some(sp) if !sp.steps.is_empty() => {
+            let grads =
+                sp.steps.iter().filter(|st| st.class == SpillClass::ParamGrad).count();
+            format!(
+                "{} ({} ckpt + {} grad)",
+                fmt_bytes(sp.spilled_bytes),
+                sp.steps.len() - grads,
+                grads
+            )
+        }
+        _ => "none".to_string(),
+    };
+    type Metric<'a> = (&'a str, Box<dyn Fn(&PlanOutcome) -> String>);
+    let metrics: Vec<Metric> = vec![
+        ("planner", Box::new(|o| planner_kind_spec(o.plan.kind))),
+        ("checkpoints", Box::new(|o| o.plan.checkpoints.len().to_string())),
+        (
+            "recompute overhead",
+            Box::new(|o| format!("{:.1}%", o.plan.recompute_overhead * 100.0)),
+        ),
+        ("frontier point peak", Box::new(|o| fmt_bytes(o.plan.peak_bytes))),
+        ("device bytes", Box::new(|o| fmt_bytes(o.device_peak_packed()))),
+        ("spilled", Box::new(spilled)),
+        (
+            "predicted stall",
+            Box::new(|o| match &o.overlap {
+                Some(ov) => format!("{:.3} ms", ov.stall_secs * 1e3),
+                None => "—".to_string(),
+            }),
+        ),
+        (
+            "predicted step",
+            Box::new(|o| match o.predicted_step_secs() {
+                Some(t) => format!("{:.3} ms", t * 1e3),
+                None => "—".to_string(),
+            }),
+        ),
+    ];
+    md.push_str("| metric | sequential | joint |\n|---|---|---|\n");
+    for (name, f) in &metrics {
+        let cell = |r: &Result<PlanOutcome, PlanError>| match r {
+            Ok(o) => f(o),
+            Err(_) => "—".to_string(),
+        };
+        md.push_str(&format!("| {name} | {} | {} |\n", cell(sequential), cell(joint)));
+    }
+    if let (Ok(sq), Ok(jt)) = (sequential, joint) {
+        if let (Some(a), Some(b)) = (sq.predicted_step_secs(), jt.predicted_step_secs()) {
+            let verdict = if b < a {
+                format!("joint is {:.2}% faster", (1.0 - b / a.max(f64::MIN_POSITIVE)) * 100.0)
+            } else if b == a {
+                "joint matches sequential".to_string()
+            } else {
+                "sequential is faster (unexpected — joint should dominate)".to_string()
+            };
+            md.push_str(&format!("\npredicted step: {verdict}\n"));
+        }
+    }
+    md
 }
 
 /// Time/memory Pareto frontier as CSV:
@@ -403,6 +505,7 @@ mod tests {
         for kind in [
             PlannerKind::Sqrt,
             PlannerKind::Optimal,
+            PlannerKind::Joint,
             PlannerKind::Uniform(4),
             PlannerKind::Bottleneck(2),
         ] {
@@ -444,6 +547,38 @@ mod tests {
         assert_eq!(a, b);
         // and the text re-parses
         crate::util::json::Json::parse(&a).unwrap();
+    }
+
+    #[test]
+    fn compare_renders_both_sides_and_infeasibility() {
+        let seq = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(sc())
+            .batch(8)
+            .memory_budget(1 << 30)
+            .run();
+        let joint = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(sc())
+            .batch(8)
+            .planner_named("joint")
+            .memory_budget(1 << 30)
+            .run();
+        let j = compare_json(&seq, &joint);
+        assert!(j.get("sequential").is_some() && j.get("joint").is_some());
+        assert_eq!(
+            j.get("joint").unwrap().get("planner").unwrap().as_str().unwrap(),
+            "joint"
+        );
+        let md = compare_markdown(&seq, &joint);
+        assert!(md.contains("| metric | sequential | joint |"), "{md}");
+        assert!(md.contains("| planner |"), "{md}");
+        assert!(md.contains("predicted step:"), "{md}");
+        // an infeasible side renders as a note + em-dash cells, not a panic
+        let bad = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10).memory_budget(1).run();
+        assert!(bad.is_err());
+        let md = compare_markdown(&bad, &joint);
+        assert!(md.contains("sequential infeasible"), "{md}");
+        let j = compare_json(&bad, &joint);
+        assert!(j.get("sequential").unwrap().get("error").is_some());
     }
 
     #[test]

@@ -39,6 +39,7 @@
 use crate::config::{parse_bytes, Pipeline};
 use crate::fault::{DegradationAction, DegradationReport, DegradeTrigger};
 use crate::memory::arena::{plan_arena, summarize, Lifetimes};
+use crate::memory::joint::{joint_spill_for_checkpoints, plan_joint};
 use crate::memory::offload::{
     plan_spill, select_for_budget, simulate_overlap, InfeasibleBudget, OverlapModel,
     DEFAULT_DEVICE_FLOPS_PER_SEC, DEFAULT_HOST_BW_BYTES_PER_SEC,
@@ -141,11 +142,15 @@ impl BytesChoice {
 ///   planning layers, mirroring the free functions)
 /// * `batch` (default 16)
 /// * `planner` (default [`PlannerKind::Optimal`]) — ignored when a budget
-///   selects from the frontier or explicit checkpoints are given
+///   selects from the frontier or explicit checkpoints are given, with
+///   one exception: [`PlannerKind::Joint`] switches budgeted runs to the
+///   joint recompute/spill optimizer ([`plan_joint`])
 /// * `memory_budget` — rank the Pareto frontier by *packed* totals and
 ///   pick the minimum-predicted-step-time composition; with
 ///   [`PlanRequest::spill`]`(false)` only pure recompute plans are
 ///   considered ([`plan_for_budget_packed`] semantics)
+/// * `grad_spill` (default on) — let the joint planner offload
+///   param-gradient optimizer updates to the host
 /// * `arena` (default on) — stage the packed layout + [`ArenaReport`]
 /// * `frontier` (default off) — stage the full time/memory frontier
 /// * `host_bw` / `spill_lookahead` — the offload overlap model's knobs
@@ -162,6 +167,7 @@ pub struct PlanRequest {
     checkpoints: Option<Vec<usize>>,
     memory_budget: Option<BytesChoice>,
     spill: bool,
+    grad_spill: bool,
     arena: bool,
     frontier: bool,
     frontier_levels: usize,
@@ -180,6 +186,7 @@ impl PlanRequest {
             checkpoints: None,
             memory_budget: None,
             spill: true,
+            grad_spill: true,
             arena: true,
             frontier: false,
             frontier_levels: DEFAULT_FRONTIER_LEVELS,
@@ -219,8 +226,8 @@ impl PlanRequest {
     }
 
     /// Planner strategy by spec string (`dp`, `sqrt`, `uniformK`,
-    /// `bottleneckK`); parsed at [`PlanRequest::run`] so a bad spec is a
-    /// typed [`PlanError::UnknownPlanner`].
+    /// `bottleneckK`, `joint`); parsed at [`PlanRequest::run`] so a bad
+    /// spec is a typed [`PlanError::UnknownPlanner`].
     pub fn planner_named(mut self, spec: &str) -> Self {
         self.planner = PlannerChoice::Named(spec.to_string());
         self
@@ -255,6 +262,15 @@ impl PlanRequest {
     /// `false` = pure recompute only ([`plan_for_budget_packed`]).
     pub fn spill(mut self, on: bool) -> Self {
         self.spill = on;
+        self
+    }
+
+    /// Whether the joint planner may spill param-gradients and apply
+    /// their optimizer updates host-side (default `true`). Only read when
+    /// `planner` is [`PlannerKind::Joint`] and a budget is set; the
+    /// sequential pipeline never spills gradients.
+    pub fn grad_spill(mut self, on: bool) -> Self {
+        self.grad_spill = on;
         self
     }
 
@@ -345,9 +361,9 @@ impl PlanRequest {
     /// |---|---|---|---|
     /// | none | planner | — | [`plan_checkpoints`] (+ [`plan_arena`]) |
     /// | none | explicit | — | exact scoring (+ [`plan_arena`]) |
-    /// | set | planner | on | [`select_for_budget`] |
+    /// | set | planner | on | [`select_for_budget`], or [`plan_joint`] for [`PlannerKind::Joint`] |
     /// | set | planner | off | [`plan_for_budget_packed`] |
-    /// | set | explicit | on | [`plan_spill`] + [`simulate_overlap`] |
+    /// | set | explicit | on | [`plan_spill`] + [`simulate_overlap`], or [`joint_spill_for_checkpoints`] for [`PlannerKind::Joint`] |
     /// | set | explicit | off | [`plan_arena`] + fit check |
     pub fn run(&self) -> Result<PlanOutcome, PlanError> {
         let arch = self.resolve_arch()?;
@@ -381,10 +397,33 @@ impl PlanRequest {
                     self.batch,
                     cps.clone(),
                 );
-                let sp = plan_spill(&arch, self.pipeline, self.batch, &plan.checkpoints, b, lookahead)
+                if planner == PlannerKind::Joint {
+                    let (sp, ov) = joint_spill_for_checkpoints(
+                        &arch,
+                        self.pipeline,
+                        self.batch,
+                        &plan.checkpoints,
+                        b,
+                        lookahead,
+                        &model,
+                        self.grad_spill,
+                    )
                     .map_err(PlanError::BudgetBelowSpilled)?;
-                overlap = Some(simulate_overlap(&arch, self.batch, &sp, &model));
-                spill = Some(sp);
+                    overlap = Some(ov);
+                    spill = Some(sp);
+                } else {
+                    let sp = plan_spill(
+                        &arch,
+                        self.pipeline,
+                        self.batch,
+                        &plan.checkpoints,
+                        b,
+                        lookahead,
+                    )
+                    .map_err(PlanError::BudgetBelowSpilled)?;
+                    overlap = Some(simulate_overlap(&arch, self.batch, &sp, &model));
+                    spill = Some(sp);
+                }
                 plan
             }
             (Some(b), Some(cps)) => {
@@ -410,9 +449,21 @@ impl PlanRequest {
                 plan
             }
             (Some(b), None) if self.spill => {
-                let decision =
+                let decision = if planner == PlannerKind::Joint {
+                    plan_joint(
+                        &arch,
+                        self.pipeline,
+                        self.batch,
+                        b,
+                        lookahead,
+                        &model,
+                        self.grad_spill,
+                    )
+                    .map_err(PlanError::BudgetBelowSpilled)?
+                } else {
                     select_for_budget(&arch, self.pipeline, self.batch, b, lookahead, &model)
-                        .map_err(PlanError::BudgetBelowSpilled)?;
+                        .map_err(PlanError::BudgetBelowSpilled)?
+                };
                 overlap = Some(decision.overlap);
                 spill = Some(decision.spill);
                 decision.plan

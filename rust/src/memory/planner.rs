@@ -38,15 +38,34 @@ pub enum PlannerKind {
     Sqrt,
     Bottleneck(usize),
     Optimal,
+    /// Joint recompute/spill optimizer ([`crate::memory::joint`]): under a
+    /// budget it decides keep / recompute / spill per tensor (including
+    /// param-gradients) in one pass; without a budget it degenerates to
+    /// [`PlannerKind::Optimal`] (there is nothing to spill).
+    Joint,
 }
 
 impl PlannerKind {
+    /// `(spec, description)` for every parseable kind — the one source of
+    /// truth behind the [`PlannerKind::parse`] error message, so a new
+    /// variant cannot be forgotten there.
+    pub const SPECS: [(&'static str, &'static str); 5] = [
+        ("sqrt", "√n segments"),
+        ("dp", "exact DP, alias: optimal"),
+        ("uniformK", "every ⌈n/K⌉-th layer, K ≥ 1, e.g. uniform4"),
+        ("bottleneckK", "K narrowest layers, K ≥ 1, e.g. bottleneck4"),
+        ("joint", "joint recompute/spill optimizer for budgeted runs"),
+    ];
+
     pub fn parse(s: &str) -> Result<PlannerKind, String> {
         if s == "sqrt" {
             return Ok(PlannerKind::Sqrt);
         }
         if s == "dp" || s == "optimal" {
             return Ok(PlannerKind::Optimal);
+        }
+        if s == "joint" {
+            return Ok(PlannerKind::Joint);
         }
         if let Some(k) = s.strip_prefix("uniform") {
             let k: usize = k.parse().map_err(|_| format!("bad uniform arg: {s}"))?;
@@ -64,11 +83,12 @@ impl PlannerKind {
             }
             return Ok(PlannerKind::Bottleneck(k));
         }
-        Err(format!(
-            "unknown planner '{s}' — valid kinds: sqrt (√n segments), dp (exact DP, \
-             alias: optimal), uniformK (every ⌈n/K⌉-th layer, K ≥ 1, e.g. uniform4), \
-             bottleneckK (K narrowest layers, K ≥ 1, e.g. bottleneck4)"
-        ))
+        let kinds = Self::SPECS
+            .iter()
+            .map(|(spec, what)| format!("{spec} ({what})"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        Err(format!("unknown planner '{s}' — valid kinds: {kinds}"))
     }
 }
 
@@ -102,7 +122,9 @@ pub fn plan_checkpoints(
         PlannerKind::Uniform(k) => uniform(n, k),
         PlannerKind::Sqrt => uniform(n, (n as f64).sqrt().round() as usize),
         PlannerKind::Bottleneck(k) => bottleneck(arch, k),
-        PlannerKind::Optimal => optimal(arch, p, batch),
+        // Un-budgeted joint planning has no spill decisions to make; the
+        // exact minimum-peak placement is its degenerate answer.
+        PlannerKind::Optimal | PlannerKind::Joint => optimal(arch, p, batch),
     };
     score(arch, kind, p, batch, checkpoints)
 }
@@ -560,6 +582,7 @@ mod tests {
     fn parse_kinds() {
         assert_eq!(PlannerKind::parse("sqrt").unwrap(), PlannerKind::Sqrt);
         assert_eq!(PlannerKind::parse("dp").unwrap(), PlannerKind::Optimal);
+        assert_eq!(PlannerKind::parse("joint").unwrap(), PlannerKind::Joint);
         assert_eq!(PlannerKind::parse("uniform3").unwrap(), PlannerKind::Uniform(3));
         assert_eq!(
             PlannerKind::parse("bottleneck2").unwrap(),
@@ -570,10 +593,34 @@ mod tests {
 
     #[test]
     fn parse_error_enumerates_valid_kinds() {
+        // The error is generated from PlannerKind::SPECS, so it stays
+        // exhaustive by construction — this test pins the other half:
+        // every enum variant has a spec in SPECS (via its canonical spec
+        // string), and every SPECS entry appears in the error.
         let err = PlannerKind::parse("magic").unwrap_err();
-        for kind in ["sqrt", "dp", "optimal", "uniformK", "bottleneckK"] {
-            assert!(err.contains(kind), "error does not mention '{kind}': {err}");
+        for (spec, _) in PlannerKind::SPECS {
+            assert!(err.contains(spec), "error does not mention '{spec}': {err}");
         }
+        for kind in [
+            PlannerKind::Sqrt,
+            PlannerKind::Optimal,
+            PlannerKind::Joint,
+            PlannerKind::Uniform(4),
+            PlannerKind::Bottleneck(4),
+        ] {
+            let spec = crate::memory::outcome::planner_kind_spec(kind);
+            // A parameterized spec like `uniform4` maps onto its SPECS
+            // template `uniformK` by stripping the trailing count.
+            let template = spec.trim_end_matches(|c: char| c.is_ascii_digit());
+            assert!(
+                PlannerKind::SPECS
+                    .iter()
+                    .any(|(s, _)| s.trim_end_matches('K') == template),
+                "variant {kind:?} (spec '{spec}') missing from PlannerKind::SPECS"
+            );
+            assert_eq!(PlannerKind::parse(&spec).unwrap(), kind, "spec '{spec}'");
+        }
+        assert_eq!(PlannerKind::parse("optimal").unwrap(), PlannerKind::Optimal);
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Property tests for the joint recompute/spill planner: joint is
+//! feasible wherever the sequential plan→spill pipeline is and never
+//! predicts a slower step; on chains short enough for the exhaustive
+//! search it matches a brute-force sweep over every checkpoint subset;
+//! planning is deterministic; param-gradient offload reaches budgets the
+//! sequential pipeline reports `BudgetBelowSpilled` on; and a degraded
+//! joint request still lands on a real Pareto-frontier point.
+
+use optorch::config::Pipeline;
+use optorch::fault::{DegradationAction, DegradeTrigger};
+use optorch::memory::arena::{plan_arena, validate};
+use optorch::memory::joint::{plan_joint, JOINT_EXHAUSTIVE_DEPTH};
+use optorch::memory::offload::{
+    plan_spill, select_for_budget, simulate_overlap, OverlapModel, SpillClass,
+};
+use optorch::memory::pipeline::{PlanError, PlanRequest};
+use optorch::memory::planner::{pareto_frontier, PlannerKind, DEFAULT_FRONTIER_LEVELS};
+use optorch::models::{ArchProfile, LayerKind, LayerProfile};
+use optorch::util::propcheck::check_with;
+use optorch::util::rng::Rng;
+
+fn sc() -> Pipeline {
+    Pipeline::parse("sc").unwrap()
+}
+
+/// Random chain. About a third of the chains are parameter-heavy (per-layer
+/// param bytes rival activation bytes), so the sweep exercises both the
+/// checkpoint-spill regime and the regime where resident gradients pin the
+/// optimizer-step floor.
+fn rand_chain(rng: &mut Rng, min_layers: usize, max_extra: usize) -> ArchProfile {
+    let n = min_layers + rng.gen_range(max_extra + 1);
+    let param_heavy = rng.gen_range(3) == 0;
+    let layers = (0..n)
+        .map(|i| {
+            let h = 4 + rng.gen_range(5);
+            let c = 32 + rng.gen_range(64);
+            let out = (h * h * c) as u64;
+            let params = if param_heavy {
+                out * (4 + rng.gen_range(12)) as u64
+            } else {
+                (64 + rng.gen_range(1024)) as u64
+            };
+            LayerProfile {
+                name: format!("l{i}"),
+                kind: if param_heavy { LayerKind::Dense } else { LayerKind::Conv },
+                out_shape: (h, h, c),
+                act_elems: out * (1 + rng.gen_range(3)) as u64,
+                params,
+                flops_per_image: (1 + rng.gen_range(900)) as u64 * 10_000,
+            }
+        })
+        .collect();
+    ArchProfile {
+        name: "rand_joint_chain".into(),
+        input: (1 + rng.gen_range(6), 1 + rng.gen_range(6), 3),
+        layers,
+    }
+}
+
+/// Parameter-heavy chain (same shape as the joint module's unit-test
+/// profile): per-layer param bytes ≈ batch·act bytes, so the sequential
+/// floor sits at the optimizer step where only gradient offload helps.
+fn param_heavy_chain(depth: usize) -> ArchProfile {
+    let layers = (0..depth)
+        .map(|i| {
+            let out = (8 * 8 * 64) as u64;
+            LayerProfile {
+                name: format!("fc{i}"),
+                kind: LayerKind::Dense,
+                out_shape: (8, 8, 64),
+                act_elems: out * 2,
+                params: out * 16,
+                flops_per_image: 2_000_000,
+            }
+        })
+        .collect();
+    ArchProfile { name: format!("fc_chain{depth}"), input: (8, 8, 3), layers }
+}
+
+/// Reference budget scale: the packed total of the all-checkpointed plan.
+fn packed_total(arch: &ArchProfile, batch: usize) -> u64 {
+    let cps: Vec<usize> = (0..arch.layers.len().saturating_sub(1)).collect();
+    plan_arena(arch, sc(), batch, &cps).1.total_bytes()
+}
+
+#[test]
+fn prop_joint_dominates_sequential_everywhere() {
+    check_with(
+        "joint is feasible wherever sequential is, never predicts a slower \
+         step, and reports a floor at or below the sequential one",
+        60,
+        0x10A1,
+        |rng| {
+            let arch = rand_chain(rng, 6, 14);
+            let batch = 1 + rng.gen_range(8);
+            let frac = 15 + rng.gen_range(96); // 15..=110 percent
+            let budget = (packed_total(&arch, batch) as u128 * frac as u128 / 100).max(1) as u64;
+            let bw = [1e6, 1e8, 12e9][rng.gen_range(3)];
+            (arch, batch, budget, 1 + rng.gen_range(3), bw)
+        },
+        |(arch, batch, budget, lookahead, bw)| {
+            let model = OverlapModel { host_bw_bytes_per_sec: *bw, device_flops_per_sec: 2e12 };
+            let seq = select_for_budget(arch, sc(), *batch, *budget, *lookahead, &model);
+            let joint = plan_joint(arch, sc(), *batch, *budget, *lookahead, &model, true);
+            match (seq, joint) {
+                (Ok(s), Ok(j)) => {
+                    if j.overlap.predicted_step_secs > s.overlap.predicted_step_secs {
+                        return Err(format!(
+                            "joint {} slower than sequential {}",
+                            j.overlap.predicted_step_secs, s.overlap.predicted_step_secs
+                        ));
+                    }
+                    if j.spill.device_total() > *budget {
+                        return Err(format!(
+                            "joint device total {} exceeds budget {budget}",
+                            j.spill.device_total()
+                        ));
+                    }
+                    validate(&j.spill.lifetimes, &j.spill.layout)
+                        .map_err(|e| format!("joint resident layout invalid: {e}"))?;
+                    Ok(())
+                }
+                (Ok(_), Err(e)) => {
+                    Err(format!("joint infeasible where sequential fits: {e}"))
+                }
+                (Err(_), Ok(j)) => {
+                    // gradient offload reaching below the sequential floor
+                    if j.spill.device_total() > *budget {
+                        return Err(format!(
+                            "rescue plan {} exceeds budget {budget}",
+                            j.spill.device_total()
+                        ));
+                    }
+                    Ok(())
+                }
+                (Err(s), Err(j)) => {
+                    if j.min_device_bytes > s.min_device_bytes {
+                        return Err(format!(
+                            "joint floor {} above sequential floor {}",
+                            j.min_device_bytes, s.min_device_bytes
+                        ));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_joint_matches_brute_force_on_short_chains() {
+    check_with(
+        "chains within the exhaustive depth: joint without grad offload \
+         equals the brute-force minimum over every checkpoint subset \
+         composed via plan_spill, and with grad offload never exceeds it",
+        25,
+        0x10A2,
+        |rng| {
+            // 4..=JOINT_EXHAUSTIVE_DEPTH layers so plan_joint enumerates
+            // every subset rather than the frontier
+            let arch = rand_chain(rng, 4, JOINT_EXHAUSTIVE_DEPTH - 4);
+            let batch = 1 + rng.gen_range(8);
+            let frac = 25 + rng.gen_range(86); // 25..=110 percent
+            let budget = (packed_total(&arch, batch) as u128 * frac as u128 / 100).max(1) as u64;
+            let bw = [1e8, 12e9][rng.gen_range(2)];
+            (arch, batch, budget, bw)
+        },
+        |(arch, batch, budget, bw)| {
+            let model = OverlapModel { host_bw_bytes_per_sec: *bw, device_flops_per_sec: 2e12 };
+            let n = arch.layers.len();
+            let mut brute: Option<f64> = None;
+            for mask in 0u32..(1u32 << (n - 1)) {
+                let cps: Vec<usize> = (0..n - 1).filter(|&i| mask >> i & 1 == 1).collect();
+                if let Ok(sp) = plan_spill(arch, sc(), *batch, &cps, *budget, 2) {
+                    let rep = simulate_overlap(arch, *batch, &sp, &model);
+                    let t = rep.predicted_step_secs;
+                    brute = Some(brute.unwrap_or(f64::INFINITY).min(t));
+                }
+            }
+            let seq_only = plan_joint(arch, sc(), *batch, *budget, 2, &model, false);
+            match (brute, &seq_only) {
+                (Some(b), Ok(j)) => {
+                    if j.overlap.predicted_step_secs != b {
+                        return Err(format!(
+                            "joint (no grads) {} ≠ brute-force minimum {b}",
+                            j.overlap.predicted_step_secs
+                        ));
+                    }
+                }
+                (Some(_), Err(e)) => {
+                    return Err(format!("joint infeasible where brute force found a plan: {e}"))
+                }
+                (None, Ok(_)) => {
+                    return Err("joint (no grads) feasible where brute force found none".into())
+                }
+                (None, Err(_)) => {}
+            }
+            let with_grads = plan_joint(arch, sc(), *batch, *budget, 2, &model, true);
+            if let (Some(b), Ok(j)) = (brute, &with_grads) {
+                if j.overlap.predicted_step_secs > b {
+                    return Err(format!(
+                        "joint with grad offload {} slower than brute force {b}",
+                        j.overlap.predicted_step_secs
+                    ));
+                }
+            }
+            if brute.is_some() && with_grads.is_err() {
+                return Err("grad offload lost feasibility the sequential orders had".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_joint_planning_is_deterministic() {
+    check_with(
+        "same inputs → identical placement, spill steps, layout and timing",
+        40,
+        0x10A3,
+        |rng| {
+            let arch = rand_chain(rng, 6, 12);
+            let batch = 1 + rng.gen_range(8);
+            let frac = 30 + rng.gen_range(71);
+            let budget = (packed_total(&arch, batch) as u128 * frac as u128 / 100).max(1) as u64;
+            (arch, batch, budget)
+        },
+        |(arch, batch, budget)| {
+            let model = OverlapModel::default();
+            let a = plan_joint(arch, sc(), *batch, *budget, 2, &model, true);
+            let b = plan_joint(arch, sc(), *batch, *budget, 2, &model, true);
+            match (a, b) {
+                (Ok(x), Ok(y)) => {
+                    if x.plan.checkpoints != y.plan.checkpoints {
+                        return Err("placements differ across identical runs".into());
+                    }
+                    if x.spill.steps != y.spill.steps {
+                        return Err("spill steps differ across identical runs".into());
+                    }
+                    if x.spill.layout.offsets != y.spill.layout.offsets {
+                        return Err("layouts differ across identical runs".into());
+                    }
+                    if x.overlap.predicted_step_secs != y.overlap.predicted_step_secs {
+                        return Err("predicted step times differ".into());
+                    }
+                    Ok(())
+                }
+                (Err(x), Err(y)) => {
+                    if x == y {
+                        Ok(())
+                    } else {
+                        Err("infeasibility errors differ".into())
+                    }
+                }
+                _ => Err("feasibility verdict differs across identical runs".into()),
+            }
+        },
+    );
+}
+
+/// The ISSUE's acceptance test, at the facade level: a budget one byte
+/// below the sequential floor makes the default pipeline return
+/// `PlanError::BudgetBelowSpilled`, and the *same request* with
+/// `PlannerKind::Joint` plans it — with the win coming from param-gradient
+/// spills.
+#[test]
+fn facade_joint_reaches_a_budget_sequential_reports_infeasible() {
+    let arch = param_heavy_chain(12);
+    let model = OverlapModel::default();
+    let seq_floor = select_for_budget(&arch, sc(), 16, 1, 2, &model)
+        .expect_err("a 1-byte budget cannot be feasible")
+        .min_device_bytes;
+    let budget = seq_floor - 1;
+    let base = PlanRequest::for_arch(arch.clone())
+        .pipeline(sc())
+        .batch(16)
+        .memory_budget(budget);
+    match base.clone().run() {
+        Err(PlanError::BudgetBelowSpilled(e)) => assert!(e.min_device_bytes > budget),
+        other => panic!("expected BudgetBelowSpilled from the sequential pipeline, got {other:?}"),
+    }
+    let out = base
+        .planner(PlannerKind::Joint)
+        .run()
+        .expect("the joint planner reaches below the sequential floor");
+    assert!(out.device_peak_packed() <= budget);
+    let spill = out.spill.as_ref().expect("the rescue must come from spilling");
+    assert!(
+        spill.steps.iter().any(|s| s.class == SpillClass::ParamGrad),
+        "expected param-gradient spills in the rescue plan: {:?}",
+        spill.steps
+    );
+}
+
+/// `run_degraded` on a joint request: an impossible budget walks the
+/// ladder to the heap fallback, and the chosen plan is a real point of
+/// the Pareto frontier — not an ad-hoc placement.
+#[test]
+fn degraded_joint_request_lands_on_a_frontier_point() {
+    let arch = param_heavy_chain(10);
+    let req = PlanRequest::for_arch(arch.clone())
+        .pipeline(sc())
+        .batch(16)
+        .planner(PlannerKind::Joint)
+        .memory_budget(1);
+    assert!(req.run().is_err(), "a 1-byte budget cannot be met even jointly");
+    let (out, report) = req
+        .run_degraded(DegradeTrigger::BudgetShrink { from: None, to: 1 })
+        .expect("the degradation ladder absorbs an impossible budget");
+    assert!(!report.met_budget);
+    assert_eq!(report.actions, vec![DegradationAction::HeapFallbackArena]);
+    let frontier = pareto_frontier(&arch, sc(), 16, DEFAULT_FRONTIER_LEVELS);
+    assert!(
+        frontier.iter().any(|p| p.checkpoints == out.plan.checkpoints),
+        "degraded plan {:?} is not a frontier point",
+        out.plan.checkpoints
+    );
+}
