@@ -1,0 +1,191 @@
+//! Tracing overhead: the cost of the structured tracing layer on the
+//! data-pipeline hot path, traced vs untraced.
+//!
+//! Three measurements:
+//!
+//! 1. **baseline** — `EdLoader::with_faults` (no tracer plumbed at all);
+//! 2. **disabled** — `with_observability` with `Tracer::disabled()`: the
+//!    shipped default, which must cost ~nothing (one branch per event
+//!    site);
+//! 3. **enabled** — `Tracer::enabled()`: full span/instant recording.
+//!
+//! Wall time per run is the **minimum over several trials** (standard
+//! latency-bench practice: the minimum tracks the true cost, the rest is
+//! scheduler noise). A per-event microbench (spin on `begin`/`end_span`)
+//! rides along for the absolute numbers.
+//!
+//! Emits `BENCH_trace.json`. `OPTORCH_BENCH_CHECK=1` runs a fast smoke
+//! pass that *fails the process* (exit 1) when enabled-tracing overhead
+//! reaches 5% or disabled-tracing overhead is measurably nonzero (same
+//! 5% noise bound — the code paths are identical, so anything beyond
+//! noise is a regression).
+
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{EncodeSpec, Encoding, WordType};
+use optorch::data::loader::{EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::trace::Tracer;
+use optorch::util::bench::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn loader_with(batches: usize, workers: usize, tracer: Option<Tracer>) -> EdLoader {
+    let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 240, 9));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4").unwrap(),
+        11,
+    )
+    .unwrap();
+    let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::F64));
+    let mode = LoaderMode::Parallel { prefetch_depth: 2, num_workers: workers };
+    let pool = Arc::new(BufferPool::default());
+    match tracer {
+        None => EdLoader::with_faults(d, sampler, spec, batches, mode, pool, None, None),
+        Some(tr) => {
+            EdLoader::with_observability(d, sampler, spec, batches, mode, pool, None, None, tr)
+        }
+    }
+}
+
+/// Drain one loader; wall seconds (consumer side, batch count asserted).
+fn drain_secs(mut l: EdLoader, batches: usize) -> f64 {
+    let start = Instant::now();
+    let mut n = 0usize;
+    loop {
+        match l.try_next() {
+            Ok(Some(p)) => {
+                n += 1;
+                l.recycle(p);
+            }
+            Ok(None) => break,
+            Err(e) => panic!("loader errored mid-bench: {e}"),
+        }
+    }
+    assert_eq!(n, batches, "short stream");
+    start.elapsed().as_secs_f64()
+}
+
+/// Minimum wall seconds across `trials` fresh loaders.
+fn best_of(trials: usize, batches: usize, workers: usize, make: impl Fn() -> Option<Tracer>) -> f64 {
+    (0..trials)
+        .map(|_| drain_secs(loader_with(batches, workers, make()), batches))
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let mut failures = 0u32;
+    let (batches, trials) = if check { (16, 3) } else { (32, 3) };
+    let workers = 2;
+
+    println!("=== tracing overhead: E-D pool loader ({batches} batches, {workers} workers, best of {trials}) ===\n");
+
+    let baseline = best_of(trials, batches, workers, || None);
+    let disabled = best_of(trials, batches, workers, || Some(Tracer::disabled()));
+    // Keep the traced runs' logs: the last one reports the event volume.
+    let enabled_tracer = Tracer::enabled();
+    let mut enabled = f64::INFINITY;
+    for _ in 0..trials {
+        enabled =
+            enabled.min(drain_secs(loader_with(batches, workers, Some(enabled_tracer.clone())), batches));
+    }
+    let log = enabled_tracer.drain();
+    let events = log.event_count();
+    let dropped = log.dropped();
+
+    let disabled_pct = (disabled / baseline - 1.0) * 100.0;
+    let enabled_pct = (enabled / baseline - 1.0) * 100.0;
+
+    let mut t = Table::new(&["variant", "wall", "overhead"]);
+    t.row(&["baseline (no tracer)".into(), format!("{:.1} ms", baseline * 1e3), "—".into()]);
+    t.row(&[
+        "tracing disabled".into(),
+        format!("{:.1} ms", disabled * 1e3),
+        format!("{disabled_pct:+.2}%"),
+    ]);
+    t.row(&[
+        "tracing enabled".into(),
+        format!("{:.1} ms", enabled * 1e3),
+        format!("{enabled_pct:+.2}%"),
+    ]);
+    t.print();
+    println!("\ntraced runs recorded {events} events ({dropped} dropped)");
+
+    // ---- per-event microbench ----
+    let spins: u64 = if check { 50_000 } else { 200_000 };
+    let tr = Tracer::with_capacity(1 << 18);
+    let mut hot = tr.thread("bench/hot");
+    let start = Instant::now();
+    for _ in 0..spins {
+        let t0 = hot.begin();
+        hot.end_span("spin", "bench", t0);
+    }
+    let ns_enabled = start.elapsed().as_nanos() as f64 / spins as f64;
+    hot.finish();
+    let micro_events = tr.drain().event_count();
+
+    let off = Tracer::disabled();
+    let mut cold = off.thread("bench/hot");
+    let start = Instant::now();
+    for _ in 0..spins {
+        let t0 = cold.begin();
+        cold.end_span("spin", "bench", t0);
+    }
+    let ns_disabled = start.elapsed().as_nanos() as f64 / spins as f64;
+    cold.finish();
+
+    println!(
+        "per span (begin + end_span): {ns_enabled:.0} ns enabled, {ns_disabled:.1} ns disabled"
+    );
+
+    // ---- invariants ----
+    if !(enabled_pct < 5.0) {
+        eprintln!("FAIL: enabled-tracing overhead {enabled_pct:.2}% (gate < 5%)");
+        failures += 1;
+    }
+    if !(disabled_pct < 5.0) {
+        eprintln!("FAIL: disabled-tracing overhead {disabled_pct:.2}% (gate ~0, noise bound 5%)");
+        failures += 1;
+    }
+    if events == 0 {
+        eprintln!("FAIL: traced runs recorded no events");
+        failures += 1;
+    }
+    if micro_events as u64 != spins.min(1 << 18) {
+        eprintln!("FAIL: microbench recorded {micro_events} of {spins} spans");
+        failures += 1;
+    }
+    if !(ns_enabled < 10_000.0) {
+        eprintln!("FAIL: {ns_enabled:.0} ns per traced span (sanity gate < 10 µs)");
+        failures += 1;
+    }
+
+    let json = format!(
+        "{{\n  \"batches\": {batches},\n  \"workers\": {workers},\n  \"trials\": {trials},\n  \
+         \"baseline_ms\": {:.3},\n  \"disabled_ms\": {:.3},\n  \"enabled_ms\": {:.3},\n  \
+         \"disabled_overhead_pct\": {disabled_pct:.3},\n  \
+         \"enabled_overhead_pct\": {enabled_pct:.3},\n  \"events\": {events},\n  \
+         \"dropped\": {dropped},\n  \"ns_per_span_enabled\": {ns_enabled:.1},\n  \
+         \"ns_per_span_disabled\": {ns_disabled:.2}\n}}\n",
+        baseline * 1e3,
+        disabled * 1e3,
+        enabled * 1e3,
+    );
+    match std::fs::write("BENCH_trace.json", json) {
+        Ok(()) => println!("\nwrote BENCH_trace.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_trace.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: tracing overhead within gates");
+    }
+}

@@ -107,12 +107,18 @@ COMMANDS:
             bounded retries, degradation ladder) and reports what it took.
             [--loader_watchdog_secs N] turns a stalled loader into a typed
             error naming the suspect stage instead of a hang.
+            [--trace FILE] records a Chrome trace-event timeline (load it
+            in Perfetto / chrome://tracing): one track per loader worker,
+            the offload link and the train-step loop, plus fault instants;
+            the run summary then includes per-phase p50/p95/p99 timings,
+            the unified counter table and a predicted-vs-observed drift
+            line when a spill plan made a step-time prediction.
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
             [--kind dp|sqrt|uniformK|bottleneckK|joint] [--frontier] [--arena]
             [--budget BYTES] [--spill BYTES [--host_bw B/s] [--lookahead N]]
-            [--compare [--grad_spill BOOL]] [--degrade] [--json]
+            [--compare [--grad_spill BOOL]] [--degrade] [--drift FILE] [--json]
             (--frontier prints the DP time/memory Pareto frontier; --budget
             picks the cheapest-time plan whose packed total fits; --arena
             packs the plan into a memory slab and prints its size,
@@ -124,7 +130,10 @@ COMMANDS:
             solves the same --spill/--budget twice — sequential plan→spill
             vs the joint recompute/spill optimizer (kind=joint, optionally
             spilling param-gradients) — and prints the two outcomes side by
-            side as markdown, or one JSON document under --json; --json renders
+            side as markdown, or one JSON document under --json; --drift
+            replays a `train --trace` export: the observed `train-step`
+            span quantiles against the step time the same flags predict,
+            as one drift line (or JSON under --json); --json renders
             the one staged PlanRequest→PlanOutcome run as a stable JSON
             document — arena always included, --spill preferred over
             --budget)

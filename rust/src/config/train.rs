@@ -145,6 +145,12 @@ pub struct TrainConfig {
     /// arrives within it, `try_next` returns a typed stall error naming the
     /// suspect stage instead of blocking forever. `None` = no deadline.
     pub loader_watchdog_secs: Option<u64>,
+    /// Write a Chrome trace-event JSON timeline of the run here (loadable
+    /// in Perfetto / `chrome://tracing`): one track per loader thread, the
+    /// offload link and the train-step loop. `None` (the default) disables
+    /// tracing entirely — the hot paths then pay one branch per would-be
+    /// event.
+    pub trace: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -173,6 +179,7 @@ impl TrainConfig {
             lr_schedule: crate::coordinator::LrSchedule::default(),
             faults: None,
             loader_watchdog_secs: None,
+            trace: None,
         }
     }
 
@@ -268,6 +275,9 @@ impl TrainConfig {
         }
         if let Some(v) = kv.get_usize("loader_watchdog_secs")? {
             cfg.loader_watchdog_secs = if v == 0 { None } else { Some(v as u64) };
+        }
+        if let Some(v) = kv.get_str("trace") {
+            cfg.trace = if v.is_empty() { None } else { Some(PathBuf::from(v)) };
         }
         cfg.validate()?;
         Ok(cfg)
@@ -558,6 +568,19 @@ mod tests {
         ov.insert("faults".to_string(), "meteor-strike@1".to_string());
         let err = TrainConfig::from_sources(None, &ov).unwrap_err();
         assert!(err.contains("faults"), "{err}");
+    }
+
+    #[test]
+    fn trace_path_parses() {
+        let mut ov = BTreeMap::new();
+        ov.insert("trace".to_string(), "out/trace.json".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.trace, Some(PathBuf::from("out/trace.json")));
+        // default off; empty string normalizes to off
+        assert!(TrainConfig::default_for("m", Pipeline::BASELINE).trace.is_none());
+        let mut ov = BTreeMap::new();
+        ov.insert("trace".to_string(), String::new());
+        assert!(TrainConfig::from_sources(None, &ov).unwrap().trace.is_none());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::coordinator::TrainReport;
 use crate::memory::simulator::MemoryReport;
+use crate::trace::{CounterRegistry, PhaseStat};
 use std::io::Write;
 use std::path::Path;
 
@@ -85,6 +86,59 @@ pub fn markdown_summary(report: &TrainReport) -> String {
         s.push_str(&d.to_markdown());
         s.push('\n');
     }
+    if !report.phase_stats.is_empty() {
+        s.push_str(&phase_table(&report.phase_stats));
+    }
+    if let Some(d) = &report.drift {
+        s.push_str(&d.to_markdown_line());
+        s.push('\n');
+    }
+    if !report.counters.is_empty() {
+        s.push_str(&counter_summary(&report.counters));
+    }
+    s
+}
+
+/// Markdown table of per-phase wall-time quantiles from a traced run
+/// (`trace=PATH`): one row per span name, p50/p95/p99.
+pub fn phase_table(stats: &[PhaseStat]) -> String {
+    let mut s = String::from(
+        "\nphase timings:\n\n| phase | count | p50 | p95 | p99 |\n|---|---|---|---|---|\n",
+    );
+    for p in stats {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            p.name,
+            p.count,
+            fmt_secs(p.p50_secs),
+            fmt_secs(p.p95_secs),
+            fmt_secs(p.p99_secs)
+        ));
+    }
+    s
+}
+
+fn fmt_secs(v: f64) -> String {
+    if v >= 1.0 {
+        format!("{v:.2} s")
+    } else if v >= 1e-3 {
+        format!("{:.2} ms", v * 1e3)
+    } else {
+        format!("{:.1} µs", v * 1e6)
+    }
+}
+
+/// One-line rendering of the unified counter registry (name order, so
+/// output is byte-stable across runs with the same counts).
+pub fn counter_summary(counters: &CounterRegistry) -> String {
+    let mut s = String::from("\ncounters: ");
+    for (i, (name, v)) in counters.iter().enumerate() {
+        if i > 0 {
+            s.push_str(" · ");
+        }
+        s.push_str(&format!("{name} {v}"));
+    }
+    s.push('\n');
     s
 }
 
@@ -135,6 +189,8 @@ mod tests {
             eval_accuracy: Some(0.35),
             wall_secs: 2.0,
             images: 320,
+            step_p50_secs: None,
+            step_p99_secs: None,
         });
         TrainReport {
             model: "tiny_cnn".into(),
@@ -188,6 +244,9 @@ mod tests {
             }),
             offload: None,
             degradation: None,
+            phase_stats: Vec::new(),
+            counters: CounterRegistry::new(),
+            drift: None,
         }
     }
 
@@ -334,6 +393,34 @@ mod tests {
         let mut healthy = fake_report();
         healthy.offload = Some(fake_offload());
         assert!(!markdown_summary(&healthy).contains("host-link faults"));
+    }
+
+    #[test]
+    fn markdown_includes_phase_table_drift_and_counters() {
+        let mut rep = fake_report();
+        let md = markdown_summary(&rep);
+        assert!(!md.contains("phase timings"), "{md}");
+        assert!(!md.contains("counters:"), "{md}");
+        rep.phase_stats = vec![PhaseStat {
+            name: "train-step".into(),
+            count: 100,
+            p50_secs: 0.012,
+            p95_secs: 0.015,
+            p99_secs: 0.02,
+        }];
+        rep.counters.set("pool_allocs", 9);
+        rep.counters.set("trace_dropped", 0);
+        rep.drift = Some(crate::trace::DriftReport {
+            predicted_step_secs: 0.016,
+            observed_mean_secs: 0.018,
+            observed_p50_secs: 0.017,
+            observed_p99_secs: 0.02,
+            steps: 100,
+        });
+        let md = markdown_summary(&rep);
+        assert!(md.contains("| train-step | 100 | 12.00 ms | 15.00 ms | 20.00 ms |"), "{md}");
+        assert!(md.contains("drift: predicted 0.016000 s/step"), "{md}");
+        assert!(md.contains("counters: pool_allocs 9 · trace_dropped 0"), "{md}");
     }
 
     #[test]

@@ -15,10 +15,12 @@ use crate::memory::offload::{LinkFaults, OffloadReport};
 use crate::memory::outcome::PlanOutcome;
 use crate::memory::pipeline::{PlanError, PlanRequest};
 use crate::memory::planner::CheckpointPlan;
-use crate::metrics::{EpochRecord, History, Mean, Timer};
+use crate::metrics::{EpochRecord, Histogram, History, Mean, Timer};
 use crate::runtime::{LoadedModel, Runtime, TrainState};
+use crate::trace::{CounterRegistry, DriftReport, PhaseStat, Tracer};
 use crate::{debug, info, warn_};
 use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -59,6 +61,17 @@ pub struct TrainReport {
     /// mid-run fault forced a re-plan down the ladder: what triggered it,
     /// every rung taken, and where the plan landed.
     pub degradation: Option<DegradationReport>,
+    /// Per-phase wall-time quantiles (p50/p95/p99) aggregated from the
+    /// structured tracer's span timeline — empty unless the run traced
+    /// (`trace=PATH` / `--trace`).
+    pub phase_stats: Vec<PhaseStat>,
+    /// Unified named-counter registry: the pipeline's pool, fault, link
+    /// and tracer counters in one deterministically-ordered table.
+    pub counters: CounterRegistry,
+    /// Predicted-vs-observed step time, when the planner produced a
+    /// `predicted_step_secs` (host-spill compositions) and at least one
+    /// train step was timed.
+    pub drift: Option<DriftReport>,
 }
 
 /// Orchestrates one training run.
@@ -94,6 +107,17 @@ pub struct Trainer {
     global_step: usize,
     /// Last degradation episode (see [`TrainReport::degradation`]).
     degradation: Option<DegradationReport>,
+    /// Structured tracer behind every instrumented thread (loader
+    /// workers, offload link, train loop). Disabled unless `cfg.trace`
+    /// names an output path; disabled it costs one branch per event site.
+    tracer: Tracer,
+    /// Nanosecond `train_step_lr` durations across the whole run —
+    /// recorded unconditionally (one `Instant::now` pair per step) so
+    /// drift and the CSV step quantiles work without tracing.
+    step_hist: Histogram,
+    /// Loader counters accumulated across the epoch-scoped loaders.
+    respawns: u64,
+    corruptions: u64,
 }
 
 /// Link-fault parameters for the offload engine, distilled from the
@@ -240,6 +264,10 @@ impl Trainer {
         if let Some(spec) = cfg.faults.as_ref().filter(|s| !s.is_empty()) {
             warn_!("fault injection active: {spec}");
         }
+        let tracer = match cfg.trace {
+            Some(_) => Tracer::enabled(),
+            None => Tracer::disabled(),
+        };
         let (plan, arena, offload) = match select_plan(&plan_cfg, (h, w, c), num_classes)? {
             Some(outcome) => {
                 let offload = match outcome.offload_report() {
@@ -248,6 +276,9 @@ impl Trainer {
                         // (host-pool evictions/prefetches) every step.
                         model.configure_offload(outcome.spill.as_ref().expect("spilling outcome"));
                         model.configure_link_faults(link_faults_for(faults.as_deref(), cfg.host_bw));
+                        if tracer.is_enabled() {
+                            model.configure_trace(tracer.thread("offload/link"));
+                        }
                         Some(report)
                     }
                     None => None,
@@ -282,6 +313,10 @@ impl Trainer {
             faults,
             global_step: 0,
             degradation: None,
+            tracer,
+            step_hist: Histogram::new(),
+            respawns: 0,
+            corruptions: 0,
         })
     }
 
@@ -319,7 +354,7 @@ impl Trainer {
         if self.cfg.max_batches_per_epoch > 0 {
             batches = batches.min(self.cfg.max_batches_per_epoch);
         }
-        Ok(EdLoader::with_faults(
+        Ok(EdLoader::with_observability(
             self.train_data.clone(),
             sampler,
             self.cfg.encode_spec(),
@@ -328,6 +363,7 @@ impl Trainer {
             self.pool.clone(),
             self.faults.clone(),
             self.cfg.loader_watchdog_secs.map(Duration::from_secs),
+            self.tracer.clone(),
         ))
     }
 
@@ -372,6 +408,11 @@ impl Trainer {
                 self.model.configure_offload(spill);
                 self.model
                     .configure_link_faults(link_faults_for(self.faults.as_deref(), self.cfg.host_bw));
+                // configure_offload replaced the engine (the old one
+                // flushed its track on drop) — re-hand it a buffer.
+                if self.tracer.is_enabled() {
+                    self.model.configure_trace(self.tracer.thread("offload/link"));
+                }
             }
             None => self.model.clear_offload(),
         }
@@ -435,7 +476,13 @@ impl Trainer {
         let mut acc = Mean::default();
         let mut images: u64 = 0;
         let mut step = 0usize;
+        // The train loop's own trace track, one per epoch: "next-batch"
+        // and "train-step" spans plus fault instants. Flushed when the
+        // tracer drops at the end of the epoch (abort paths included).
+        let mut step_trace = self.tracer.thread("train/step");
+        let mut epoch_hist = Histogram::new();
         loop {
+            let next0 = step_trace.begin();
             let payload = match loader.try_next() {
                 Ok(Some(p)) => p,
                 Ok(None) => break,
@@ -444,14 +491,35 @@ impl Trainer {
                 // panicking the train thread.
                 Err(e) => bail!("epoch {epoch} aborted: {e}"),
             };
+            step_trace.end_span_arg(
+                "next-batch",
+                "train",
+                next0,
+                Some(("step", self.global_step as f64)),
+            );
             // Fire-once budget shrinks key on the global step counter —
             // re-plan down the degradation ladder before the step runs.
             if let Some(faults) = self.faults.clone() {
                 if let Some(to) = faults.budget_shrink_due(self.global_step) {
+                    step_trace.instant_arg("budget-shrink", "fault", Some(("to_bytes", to as f64)));
                     self.replan_for_budget(to)?;
+                    if let Some(report) = self.degradation.as_ref() {
+                        for action in &report.actions {
+                            step_trace.instant_label("degrade-rung", "fault", &action.to_string());
+                        }
+                    }
                 }
             }
+            let t0 = step_trace.begin();
+            let started = std::time::Instant::now();
             let out = self.model.train_step_lr(&mut self.state, &payload, lr)?;
+            epoch_hist.record(started.elapsed().as_nanos() as u64);
+            step_trace.end_span_arg(
+                "train-step",
+                "train",
+                t0,
+                Some(("step", self.global_step as f64)),
+            );
             // Spent payload buffers go back to the pool for the producers;
             // this is what makes steady-state epochs allocation-free.
             loader.recycle(payload);
@@ -468,10 +536,13 @@ impl Trainer {
                 );
             }
         }
+        step_trace.finish();
         let stats: Arc<LoaderStats> = loader.stats();
         drop(loader); // joins producer threads → counters are final
         self.produce_secs += stats.produce_secs();
         self.blocked_secs += stats.blocked_secs();
+        self.respawns += stats.respawns.load(Ordering::Relaxed);
+        self.corruptions += stats.corruptions_detected.load(Ordering::Relaxed);
         let per_worker = stats.worker_summaries();
         if self.worker_acc.len() < per_worker.len() {
             self.worker_acc.resize(per_worker.len(), WorkerSummary::default());
@@ -490,6 +561,15 @@ impl Trainer {
         } else {
             (None, None)
         };
+        let (step_p50_secs, step_p99_secs) = if epoch_hist.is_empty() {
+            (None, None)
+        } else {
+            (
+                Some(epoch_hist.p50() as f64 / 1e9),
+                Some(epoch_hist.p99() as f64 / 1e9),
+            )
+        };
+        self.step_hist.merge(&epoch_hist);
         let rec = EpochRecord {
             epoch,
             train_loss: loss.mean(),
@@ -498,6 +578,8 @@ impl Trainer {
             eval_accuracy: eval_acc,
             wall_secs: wall,
             images,
+            step_p50_secs,
+            step_p99_secs,
         };
         info!(
             "epoch {epoch}: loss {:.4} acc {:.3} eval_acc {} [{:.1}s, {:.0} img/s]",
@@ -535,6 +617,47 @@ impl Trainer {
             off.link_retries = stats.link_retries;
             off.retry_stall_secs = stats.retry_stall_secs;
         }
+        // The unified counter table absorbs the previously ad-hoc
+        // counters; names sort deterministically (BTreeMap) for reports.
+        let mut counters = CounterRegistry::new();
+        counters.set("pool_allocs", self.pool.allocs());
+        counters.set("pool_reuses", self.pool.reuses());
+        counters.set("loader_respawns", self.respawns);
+        counters.set("corruptions_detected", self.corruptions);
+        if let Some(off) = self.offload.as_ref() {
+            counters.set("offload_evictions", off.evictions);
+            counters.set("offload_prefetches", off.prefetches);
+            counters.set("link_faults", off.link_faults);
+            counters.set("link_retries", off.link_retries);
+        }
+        let mut phase_stats = Vec::new();
+        if self.tracer.is_enabled() {
+            // The offload engine owns a trace buffer that only flushes on
+            // drop — retire it (stats were folded above) before draining.
+            if self.model.offload_stats().is_some() {
+                self.model.clear_offload();
+            }
+            let log = self.tracer.drain();
+            counters.set("trace_events", log.event_count() as u64);
+            counters.set("trace_dropped", log.dropped());
+            phase_stats = log.phase_stats();
+            if let Some(path) = self.cfg.trace.as_ref() {
+                match log.write_chrome(path) {
+                    Ok(()) => info!(
+                        "wrote trace timeline to {} ({} events)",
+                        path.display(),
+                        log.event_count()
+                    ),
+                    Err(e) => warn_!("could not write trace to {}: {e}", path.display()),
+                }
+            }
+        }
+        // Drift needs no tracing: the step histogram is always recorded,
+        // and the prediction comes from the spill planner's cost model.
+        let drift = self
+            .offload
+            .as_ref()
+            .and_then(|o| DriftReport::from_observed(o.predicted_step_secs, &self.step_hist));
         Ok(TrainReport {
             model: self.cfg.model.clone(),
             pipeline: self.cfg.pipeline.name(),
@@ -550,6 +673,9 @@ impl Trainer {
             arena: self.arena.clone(),
             offload: self.offload.clone(),
             degradation: self.degradation.clone(),
+            phase_stats,
+            counters,
+            drift,
             history: std::mem::take(&mut self.history),
         })
     }

@@ -64,6 +64,7 @@ use crate::data::image::ImageBatch;
 use crate::data::pool::BufferPool;
 use crate::data::sampler::{materialize_plan_arena, BatchPlan, ClassSpec, SbsSampler, StageScratch};
 use crate::fault::FaultInjector;
+use crate::trace::{ThreadTracer, Tracer};
 use crate::util::crc::Crc32;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -377,6 +378,9 @@ struct ProducerCtx {
     stats: Arc<LoaderStats>,
     cancel: Arc<AtomicBool>,
     faults: Option<Arc<FaultInjector>>,
+    /// Tracing handle each pipeline thread derives its buffer from
+    /// (disabled unless built via [`EdLoader::with_observability`]).
+    tracer: Tracer,
 }
 
 impl ProducerCtx {
@@ -417,13 +421,19 @@ impl ProducerCtx {
         plan: &BatchPlan,
         stage: &mut ImageBatch,
         scratch: &mut StageScratch,
+        trace: &mut ThreadTracer,
     ) -> Result<BatchPayload, LoaderError> {
         let t0 = Instant::now();
+        let span0 = trace.begin();
         if let Some(f) = &self.faults {
             if f.worker_panic_due(step) {
+                // The instant survives the unwind: the thread's trace
+                // buffer flushes from the ThreadTracer Drop guard.
+                trace.instant_arg("worker-panic", "fault", Some(("step", step as f64)));
                 panic!("injected fault: worker {wid} panics holding step {step}");
             }
         }
+        let fallbacks_before = scratch.fallback_allocs();
         let encode = |e: &EncodeError| LoaderError::Encode { step, reason: e.to_string() };
         let mut payload =
             self.produce_inner(wid, plan, stage, scratch).map_err(|e| encode(&e))?;
@@ -433,12 +443,25 @@ impl ProducerCtx {
                 corrupt_payload(&mut payload);
                 if payload_crc(&payload) != expect {
                     self.stats.corruptions_detected.fetch_add(1, Ordering::Relaxed);
+                    trace.instant_arg(
+                        "corruption-reencode",
+                        "fault",
+                        Some(("step", step as f64)),
+                    );
                     self.pool.recycle_payload(payload);
                     payload =
                         self.produce_inner(wid, plan, stage, scratch).map_err(|e| encode(&e))?;
                 }
             }
         }
+        if scratch.fallback_allocs() > fallbacks_before {
+            trace.instant_arg(
+                "scratch-heap-fallback",
+                "arena",
+                Some(("total", scratch.fallback_allocs() as f64)),
+            );
+        }
+        trace.end_span_arg("produce", "loader", span0, Some(("step", step as f64)));
         let dt = t0.elapsed().as_nanos() as u64;
         self.stats.workers[wid].produce_ns.fetch_add(dt, Ordering::Relaxed);
         self.stats.produce_ns.fetch_add(dt, Ordering::Relaxed);
@@ -538,13 +561,19 @@ fn spawn_pool_worker(
             let mut notice = DeathNotice { wid, tx: shared.death_tx.clone(), clean: false };
             let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
             let mut scratch = ctx.worker_scratch();
+            // Per-thread trace buffer; a respawned replacement registers
+            // the same name with a later seq, so its track sorts after its
+            // predecessor's in the drained log.
+            let mut trace = ctx.tracer.thread(format!("loader/worker-{wid}"));
             loop {
                 // A permit caps in-flight payloads; taking it before the
                 // dequeue keeps step order live (see Gate docs). False =
                 // canceled.
+                let gate0 = trace.begin();
                 if !shared.gate.acquire(&ctx.cancel) {
                     break;
                 }
+                trace.end_span("gate-blocked", "loader", gate0);
                 lock_recover(&shared.slots[wid]).permit = true;
                 // Recovered plans outrank fresh ones; the lock scope on the
                 // plan queue is held only across the blocking recv (plans
@@ -563,7 +592,7 @@ fn spawn_pool_worker(
                     },
                 };
                 lock_recover(&shared.slots[wid]).work = Some((step, plan.clone()));
-                let result = ctx.produce(wid, step, &plan, &mut stage, &mut scratch);
+                let result = ctx.produce(wid, step, &plan, &mut stage, &mut scratch, &mut trace);
                 // From here the permit travels with the payload (the
                 // consumer releases it), so clear the recovery slot first.
                 {
@@ -572,9 +601,11 @@ fn spawn_pool_worker(
                     s.work = None;
                 }
                 let t1 = Instant::now();
+                let send0 = trace.begin();
                 if shared.seq_tx.send((step, result)).is_err() {
                     break; // sequencer gone (shutdown)
                 }
+                trace.end_span("send-blocked", "loader", send0);
                 ctx.sent(wid, t1);
             }
             notice.clean = true;
@@ -628,6 +659,38 @@ impl EdLoader {
         faults: Option<Arc<FaultInjector>>,
         watchdog: Option<Duration>,
     ) -> EdLoader {
+        Self::with_observability(
+            dataset,
+            sampler,
+            spec,
+            num_batches,
+            mode,
+            pool,
+            faults,
+            watchdog,
+            Tracer::disabled(),
+        )
+    }
+
+    /// [`EdLoader::with_faults`] plus a [`Tracer`]: every pipeline thread
+    /// (planner, encode workers, sequencer, supervisor) registers its own
+    /// trace buffer and records produce / gate-blocked / send-blocked
+    /// spans, fault instants (worker panics, corruption re-encodes,
+    /// respawns) and the sequencer's reorder-depth counter. A
+    /// [`Tracer::disabled`] handle makes every record a single branch; the
+    /// synchronous mode has no pipeline threads and stays untraced.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_observability(
+        dataset: Arc<dyn Dataset>,
+        sampler: SbsSampler,
+        spec: Option<EncodeSpec>,
+        num_batches: usize,
+        mode: LoaderMode,
+        pool: Arc<BufferPool>,
+        faults: Option<Arc<FaultInjector>>,
+        watchdog: Option<Duration>,
+        tracer: Tracer,
+    ) -> EdLoader {
         match mode {
             LoaderMode::Synchronous => {
                 let (h, w, c) = dataset.shape();
@@ -654,6 +717,7 @@ impl EdLoader {
                     pool,
                     faults,
                     watchdog,
+                    tracer,
                 )
             }
             LoaderMode::Parallel { prefetch_depth, num_workers } => Self::spawn_worker_pool(
@@ -666,6 +730,7 @@ impl EdLoader {
                 pool,
                 faults,
                 watchdog,
+                tracer,
             ),
         }
     }
@@ -685,6 +750,7 @@ impl EdLoader {
         pool: Arc<BufferPool>,
         faults: Option<Arc<FaultInjector>>,
         watchdog: Option<Duration>,
+        tracer: Tracer,
     ) -> EdLoader {
         let stats = Arc::new(LoaderStats::with_workers(1));
         let cancel = Arc::new(AtomicBool::new(false));
@@ -697,22 +763,31 @@ impl EdLoader {
             stats: stats.clone(),
             cancel: cancel.clone(),
             faults,
+            tracer,
         };
         let handle = std::thread::Builder::new()
             .name("optorch-ed-producer".into())
             .spawn(move || {
                 let mut stage = ImageBatch::zeros(0, 0, 0, 0, 1);
                 let mut scratch = ctx.worker_scratch();
+                let mut trace = ctx.tracer.thread("loader/producer");
                 for step in 0..num_batches {
                     if ctx.cancel.load(Ordering::Relaxed) {
                         return;
                     }
+                    let plan0 = trace.begin();
                     let plan = sampler.plan_batch(ctx.dataset.as_ref());
+                    trace.end_span_arg("plan", "loader", plan0, Some(("step", step as f64)));
                     if let Some(f) = &ctx.faults {
                         // A panic would silently truncate the stream (there
                         // is nothing to respawn a single producer's sampler
                         // state into); report it typed instead.
                         if f.worker_panic_due(step) {
+                            trace.instant_arg(
+                                "worker-panic",
+                                "fault",
+                                Some(("step", step as f64)),
+                            );
                             let _ = tx.send(Err(LoaderError::WorkerPanicked {
                                 step,
                                 respawns: 0,
@@ -720,12 +795,14 @@ impl EdLoader {
                             return;
                         }
                     }
-                    let result = ctx.produce(0, step, &plan, &mut stage, &mut scratch);
+                    let result = ctx.produce(0, step, &plan, &mut stage, &mut scratch, &mut trace);
                     let failed = result.is_err();
                     let t1 = Instant::now();
+                    let send0 = trace.begin();
                     if tx.send(result).is_err() {
                         return; // consumer dropped; stop quietly
                     }
+                    trace.end_span("send-blocked", "loader", send0);
                     if failed {
                         return; // typed error delivered; end the stream
                     }
@@ -755,6 +832,7 @@ impl EdLoader {
         pool: Arc<BufferPool>,
         faults: Option<Arc<FaultInjector>>,
         watchdog: Option<Duration>,
+        tracer: Tracer,
     ) -> EdLoader {
         let depth = prefetch_depth.max(1);
         let stats = Arc::new(LoaderStats::with_workers(num_workers));
@@ -783,18 +861,29 @@ impl EdLoader {
         {
             let dataset = dataset.clone();
             let cancel = cancel.clone();
+            let tracer = tracer.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name("optorch-ed-planner".into())
                     .spawn(move || {
+                        let mut trace = tracer.thread("loader/planner");
                         for step in 0..num_batches {
                             if cancel.load(Ordering::Relaxed) {
                                 return;
                             }
+                            let plan0 = trace.begin();
                             let plan = sampler.plan_batch(dataset.as_ref());
+                            trace.end_span_arg(
+                                "plan",
+                                "loader",
+                                plan0,
+                                Some(("step", step as f64)),
+                            );
+                            let send0 = trace.begin();
                             if plan_tx.send((step, plan)).is_err() {
                                 return; // workers gone
                             }
+                            trace.end_span("send-blocked", "loader", send0);
                         }
                     })
                     .expect("spawn E-D planner"),
@@ -809,6 +898,7 @@ impl EdLoader {
             stats: stats.clone(),
             cancel: cancel.clone(),
             faults,
+            tracer: tracer.clone(),
         };
         let shared = WorkerShared {
             plan_rx,
@@ -833,6 +923,7 @@ impl EdLoader {
                 std::thread::Builder::new()
                     .name("optorch-ed-supervisor".into())
                     .spawn(move || {
+                        let mut trace = ctx.tracer.thread("loader/supervisor");
                         let mut live = num_workers;
                         let mut respawns = 0u64;
                         let mut replacements: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -851,6 +942,11 @@ impl EdLoader {
                             if respawns < MAX_RESPAWNS {
                                 respawns += 1;
                                 stats.respawns.fetch_add(1, Ordering::Relaxed);
+                                trace.instant_arg(
+                                    "worker-respawn",
+                                    "fault",
+                                    Some(("worker", wid as f64)),
+                                );
                                 if permit {
                                     // The replacement acquires its own
                                     // permit; free the dead worker's.
@@ -866,6 +962,11 @@ impl EdLoader {
                                 ));
                             } else {
                                 live -= 1;
+                                trace.instant_arg(
+                                    "worker-giveup",
+                                    "fault",
+                                    Some(("worker", wid as f64)),
+                                );
                                 if let Some((step, _)) = work {
                                     // The permit travels with the error
                                     // message (the consumer releases it);
@@ -898,6 +999,7 @@ impl EdLoader {
                 std::thread::Builder::new()
                     .name("optorch-ed-sequencer".into())
                     .spawn(move || {
+                        let mut trace = tracer.thread("loader/sequencer");
                         let mut next = 0usize;
                         let mut parked: BTreeMap<usize, Result<BatchPayload, LoaderError>> =
                             BTreeMap::new();
@@ -905,11 +1007,17 @@ impl EdLoader {
                             let Ok((step, payload)) = seq_rx.recv() else { return };
                             if step != next {
                                 stats.seq_out_of_order.fetch_add(1, Ordering::Relaxed);
+                                trace.instant_arg(
+                                    "out-of-order",
+                                    "loader",
+                                    Some(("step", step as f64)),
+                                );
                             }
                             parked.insert(step, payload);
                             stats
                                 .seq_max_depth
                                 .fetch_max(parked.len() as u64, Ordering::Relaxed);
+                            trace.counter("reorder-depth", "loader", parked.len() as f64);
                             while let Some(ready) = parked.remove(&next) {
                                 if out_tx.send(ready).is_err() {
                                     return; // consumer dropped

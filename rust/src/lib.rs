@@ -99,6 +99,7 @@ pub mod memory;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports for downstream users.
@@ -129,4 +130,5 @@ pub mod prelude {
     pub use crate::memory::simulator::{simulate, MemoryReport};
     pub use crate::models::{arch_by_name, ArchProfile};
     pub use crate::runtime::Runtime;
+    pub use crate::trace::{CounterRegistry, DriftReport, ThreadTracer, TraceLog, Tracer};
 }

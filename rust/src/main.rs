@@ -154,6 +154,37 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         None => vec!["uniform4", "sqrt", "bottleneck4", "dp"],
     };
 
+    if let Some(path) = cli.get("drift") {
+        // Predicted-vs-observed replay: read the `train --trace` export
+        // back in and compare its observed `train-step` spans against the
+        // step time the same planning flags predict today.
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("--drift: could not read {path}: {e}"))?;
+        let doc = optorch::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("--drift: {path} is not valid JSON: {e}"))?;
+        let observed = optorch::trace::observed_span_histogram(&doc, "train-step");
+        let mut req = base
+            .clone()
+            .planner_named(kind_specs.last().expect("kind set is never empty"));
+        if let Some(v) = cli.get("spill") {
+            req = req.memory_budget_field("--spill", v);
+        } else if let Some(v) = cli.get("budget") {
+            req = req.memory_budget_field("--budget", v);
+        }
+        let outcome = req.run().map_err(plan_err)?;
+        let predicted = outcome.predicted_step_secs().ok_or_else(|| {
+            anyhow!("--drift needs a cost-model prediction: add --spill or --budget BYTES")
+        })?;
+        let drift = optorch::trace::DriftReport::from_observed(predicted, &observed)
+            .ok_or_else(|| anyhow!("--drift: no 'train-step' spans found in {path}"))?;
+        if cli.has_flag("json") {
+            println!("{}", drift.to_json().to_string());
+        } else {
+            println!("{}", drift.to_markdown_line());
+        }
+        return Ok(());
+    }
+
     if cli.has_flag("degrade") {
         // Walk the graceful-degradation ladder instead of erroring on an
         // infeasible budget: cheaper frontier point → shrunk lookahead →

@@ -15,6 +15,7 @@
 use crate::fault::{link_draw, LinkOutcome};
 use crate::memory::offload::plan::SpillPlan;
 use crate::memory::offload::schedule::{TransferKind, DEFAULT_HOST_BW_BYTES_PER_SEC};
+use crate::trace::ThreadTracer;
 
 /// Recycled host staging buffers, bucketed by capacity best-fit.
 #[derive(Debug, Default)]
@@ -210,6 +211,9 @@ pub struct OffloadEngine {
     pool: HostSpillPool,
     /// Injected link fault model (`None` = perfect link).
     link: Option<LinkFaults>,
+    /// Trace buffer for transfer spans and link-fault instants (`None` =
+    /// untraced, the zero-cost default).
+    trace: Option<ThreadTracer>,
     steps: u64,
     evictions: u64,
     prefetches: u64,
@@ -241,6 +245,7 @@ impl OffloadEngine {
             held: vec![None; plan.steps.len()],
             pool: HostSpillPool::new(),
             link: None,
+            trace: None,
             steps: 0,
             evictions: 0,
             prefetches: 0,
@@ -264,6 +269,16 @@ impl OffloadEngine {
         self.link = link;
     }
 
+    /// Install a per-thread trace buffer: every replayed transfer lands as
+    /// an `evict`/`prefetch` span (bytes attached) and link faults as
+    /// `link-slow` / `link-retry` / `link-giveup` instants. The buffer
+    /// flushes to its parent [`crate::trace::Tracer`] when the engine is
+    /// dropped or replaced (a replan builds a fresh engine, so callers
+    /// re-install after `configure_offload`).
+    pub fn set_tracer(&mut self, trace: ThreadTracer) {
+        self.trace = Some(trace);
+    }
+
     /// Replay one training step's evictions and prefetches, retrying
     /// failed transfers with exponential backoff (both charged as stall
     /// seconds). `Err` means a transfer kept failing past the retry
@@ -272,6 +287,10 @@ impl OffloadEngine {
     /// paired prefetch becomes a no-op), so the engine stays consistent.
     pub fn try_step(&mut self) -> Result<(), TransferError> {
         let step = self.steps;
+        let step_t0 = match self.trace.as_ref() {
+            Some(t) => t.begin(),
+            None => 0,
+        };
         let ops = &self.ops;
         let pool = &mut self.pool;
         let held = &mut self.held;
@@ -285,6 +304,10 @@ impl OffloadEngine {
         let mut retry_stall = 0.0f64;
         let mut first_err: Option<TransferError> = None;
         for op in ops {
+            let op_t0 = match self.trace.as_ref() {
+                Some(t) => t.begin(),
+                None => 0,
+            };
             let mut gave_up = false;
             if let Some(lf) = link {
                 // Decorrelate the two transfers of one slot within a step.
@@ -300,6 +323,9 @@ impl OffloadEngine {
                             // Completes, but occupies the link longer.
                             link_faults += 1;
                             retry_stall += (factor - 1.0).max(0.0) * op.bytes as f64 / bw;
+                            if let Some(t) = self.trace.as_mut() {
+                                t.instant_arg("link-slow", "offload", Some(("factor", factor)));
+                            }
                             break;
                         }
                         LinkOutcome::Fail => {
@@ -318,9 +344,23 @@ impl OffloadEngine {
                                         attempts: attempt + 1,
                                     });
                                 }
+                                if let Some(t) = self.trace.as_mut() {
+                                    t.instant_arg(
+                                        "link-giveup",
+                                        "offload",
+                                        Some(("attempts", f64::from(attempt + 1))),
+                                    );
+                                }
                                 break;
                             }
                             link_retries += 1;
+                            if let Some(t) = self.trace.as_mut() {
+                                t.instant_arg(
+                                    "link-retry",
+                                    "offload",
+                                    Some(("attempt", f64::from(attempt + 1))),
+                                );
+                            }
                             attempt += 1;
                         }
                     }
@@ -342,6 +382,18 @@ impl OffloadEngine {
                         bytes_prefetched += op.bytes as u64;
                     }
                 }
+            }
+            if let Some(t) = self.trace.as_mut() {
+                let name = match op.kind {
+                    TransferKind::Evict => "evict",
+                    TransferKind::Prefetch => "prefetch",
+                };
+                t.end_span_arg(name, "offload", op_t0, Some(("bytes", op.bytes as f64)));
+            }
+        }
+        if let Some(t) = self.trace.as_mut() {
+            if !ops.is_empty() {
+                t.end_span_arg("offload-step", "offload", step_t0, Some(("step", step as f64)));
             }
         }
         self.evictions += evictions;
@@ -507,6 +559,53 @@ mod tests {
         assert!(s.retry_stall_secs > 0.0);
         engine.run_step(); // infallible path must absorb the same failure
         assert_eq!(engine.stats().steps, 2);
+    }
+
+    #[test]
+    fn traced_engine_emits_one_span_per_transfer() {
+        let plan = spilled_plan();
+        let n = plan.steps.len();
+        let tr = crate::trace::Tracer::enabled();
+        let mut engine = OffloadEngine::new(&plan);
+        engine.set_tracer(tr.thread("offload/link"));
+        engine.run_step();
+        drop(engine); // flushes the thread buffer to the collector
+        let log = tr.drain();
+        assert_eq!(log.tracks.len(), 1);
+        assert_eq!(log.tracks[0].name, "offload/link");
+        let evicts = log.tracks[0].events.iter().filter(|e| e.name == "evict").count();
+        let prefetches =
+            log.tracks[0].events.iter().filter(|e| e.name == "prefetch").count();
+        assert_eq!(evicts, n);
+        assert_eq!(prefetches, n);
+        assert_eq!(
+            log.tracks[0].events.iter().filter(|e| e.name == "offload-step").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn traced_dead_link_records_giveups() {
+        let plan = spilled_plan();
+        let lf = LinkFaults { seed: 1, fail_prob: 1.0, ..LinkFaults::default() };
+        let tr = crate::trace::Tracer::enabled();
+        let mut engine = OffloadEngine::with_link_faults(&plan, lf);
+        engine.set_tracer(tr.thread("offload/link"));
+        engine.run_step();
+        let stats = engine.stats();
+        drop(engine);
+        let log = tr.drain();
+        let giveups =
+            log.tracks[0].events.iter().filter(|e| e.name == "link-giveup").count() as u64;
+        let retries =
+            log.tracks[0].events.iter().filter(|e| e.name == "link-retry").count() as u64;
+        assert!(giveups > 0);
+        assert_eq!(retries, stats.link_retries);
+        assert_eq!(
+            log.tracks[0].events.iter().filter(|e| e.name == "evict").count(),
+            0,
+            "a dead link completes no transfers, so no spans"
+        );
     }
 
     #[test]

@@ -36,6 +36,147 @@ impl Mean {
         self.sum = 0.0;
         self.n = 0;
     }
+
+    /// Fold another tracker in (combining per-worker stats).
+    pub fn merge(&mut self, other: &Mean) {
+        self.sum += other.sum;
+        self.n += other.n;
+    }
+}
+
+/// Bucket count of [`Histogram`]: bucket 0 holds the value 0, bucket `b`
+/// (1 ≤ b ≤ 64) holds values in `[2^(b-1), 2^b)`.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Fixed-bucket log2 histogram over `u64` samples (latencies in
+/// nanoseconds, byte counts, …). Recording is a shift and two adds — no
+/// allocation, ever — and quantiles resolve to the midpoint of their
+/// power-of-two bucket, clamped into the exact observed `[min, max]`
+/// (≤ 2× resolution, which is plenty for p50/p95/p99 reporting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: [0; HISTOGRAM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    #[inline]
+    fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean of the recorded samples (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`): midpoint of the bucket holding the
+    /// `⌈q·count⌉`-th sample, clamped into `[min, max]`. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let (lo, hi) = if b == 0 {
+                    (0u64, 0u64)
+                } else {
+                    let lo = 1u64 << (b - 1);
+                    let hi = if b == 64 { u64::MAX } else { (1u64 << b) - 1 };
+                    (lo, hi)
+                };
+                let mid = lo + (hi - lo) / 2;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram in (same fixed buckets, so merging is exact).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// One epoch's record.
@@ -48,6 +189,10 @@ pub struct EpochRecord {
     pub eval_accuracy: Option<f64>,
     pub wall_secs: f64,
     pub images: u64,
+    /// Observed per-step wall-time p50 (seconds); `None` when tracing off.
+    pub step_p50_secs: Option<f64>,
+    /// Observed per-step wall-time p99 (seconds); `None` when tracing off.
+    pub step_p99_secs: Option<f64>,
 }
 
 impl EpochRecord {
@@ -79,14 +224,16 @@ impl History {
         self.epochs.iter().rev().find_map(|e| e.eval_accuracy)
     }
 
-    /// CSV with a fixed header; `None` cells are empty.
+    /// CSV with a fixed header; `None` cells are empty (the step quantile
+    /// columns stay empty whenever tracing is off).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "epoch,train_loss,train_accuracy,eval_loss,eval_accuracy,wall_secs,images_per_sec\n",
+            "epoch,train_loss,train_accuracy,eval_loss,eval_accuracy,wall_secs,\
+             images_per_sec,step_p50_secs,step_p99_secs\n",
         );
         for e in &self.epochs {
             s.push_str(&format!(
-                "{},{:.6},{:.4},{},{},{:.3},{:.1}\n",
+                "{},{:.6},{:.4},{},{},{:.3},{:.1},{},{}\n",
                 e.epoch,
                 e.train_loss,
                 e.train_accuracy,
@@ -94,6 +241,8 @@ impl History {
                 e.eval_accuracy.map(|v| format!("{v:.4}")).unwrap_or_default(),
                 e.wall_secs,
                 e.images_per_sec(),
+                e.step_p50_secs.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                e.step_p99_secs.map(|v| format!("{v:.6}")).unwrap_or_default(),
             ));
         }
         s
@@ -135,6 +284,77 @@ mod tests {
     }
 
     #[test]
+    fn mean_merge_combines_per_worker_stats() {
+        let mut a = Mean::default();
+        a.add(2.0);
+        a.add(4.0);
+        let mut b = Mean::default();
+        b.add(6.0);
+        let mut whole = Mean::default();
+        whole.merge(&a);
+        whole.merge(&b);
+        assert_eq!(whole.count(), 3);
+        assert!((whole.mean() - 4.0).abs() < 1e-9);
+        // merging an empty tracker is a no-op
+        whole.merge(&Mean::default());
+        assert_eq!(whole.count(), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        // log2 buckets: quantiles land within 2x of the exact value and
+        // inside the observed range
+        let p50 = h.p50();
+        assert!((25..=100).contains(&p50), "p50 {p50}");
+        let p99 = h.p99();
+        assert!((64..=100).contains(&p99), "p99 {p99}");
+        assert!(h.quantile(1.0) >= h.quantile(0.0));
+    }
+
+    #[test]
+    fn histogram_handles_zero_and_extremes() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.quantile(0.5), 0, "two of three samples are zero");
+        // top-bucket midpoint, clamped into the observed range
+        let p100 = h.quantile(1.0);
+        assert!(p100 >= 1u64 << 63, "p100 {p100}");
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for v in [3u64, 70, 900, 4096] {
+            a.record(v);
+            whole.record(v);
+        }
+        for v in [1u64, 2, 1_000_000] {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge must equal recording everything in one histogram");
+        a.merge(&Histogram::new());
+        assert_eq!(a, whole);
+    }
+
+    #[test]
     fn history_csv_shape() {
         let mut h = History::default();
         h.push(EpochRecord {
@@ -145,6 +365,8 @@ mod tests {
             eval_accuracy: None,
             wall_secs: 1.5,
             images: 300,
+            step_p50_secs: None,
+            step_p99_secs: None,
         });
         h.push(EpochRecord {
             epoch: 1,
@@ -154,10 +376,17 @@ mod tests {
             eval_accuracy: Some(0.52),
             wall_secs: 1.4,
             images: 300,
+            step_p50_secs: Some(0.004),
+            step_p99_secs: Some(0.009),
         });
         let csv = h.to_csv();
         assert_eq!(csv.lines().count(), 3);
-        assert!(csv.lines().nth(1).unwrap().ends_with(",,1.500,200.0"));
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with("epoch,train_loss,"), "{header}");
+        assert!(header.ends_with(",images_per_sec,step_p50_secs,step_p99_secs"), "{header}");
+        // tracing off → trailing step-quantile cells stay empty
+        assert!(csv.lines().nth(1).unwrap().ends_with(",,1.500,200.0,,"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",0.004000,0.009000"));
         assert_eq!(h.final_eval_accuracy(), Some(0.52));
         assert!((h.total_wall_secs() - 2.9).abs() < 1e-9);
     }
@@ -172,6 +401,8 @@ mod tests {
             eval_accuracy: None,
             wall_secs: 0.0,
             images: 10,
+            step_p50_secs: None,
+            step_p99_secs: None,
         };
         assert_eq!(e.images_per_sec(), 0.0);
     }

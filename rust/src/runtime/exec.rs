@@ -279,6 +279,16 @@ impl LoadedModel {
         }
     }
 
+    /// Hand the installed offload engine a per-thread trace buffer: every
+    /// replayed transfer and link fault lands on an `offload/link` track.
+    /// No-op until [`LoadedModel::configure_offload`] ran; a replan
+    /// replaces the engine, so callers re-install the tracer afterwards.
+    pub fn configure_trace(&self, trace: crate::trace::ThreadTracer) {
+        if let Some(engine) = self.offload.borrow_mut().as_mut() {
+            engine.set_tracer(trace);
+        }
+    }
+
     /// Remove the installed host-spill plan (degradation abandoned
     /// spilling, e.g. the heap-fallback rung).
     pub fn clear_offload(&self) {

@@ -1,0 +1,431 @@
+//! Trace events, per-thread buffers and the [`Tracer`] handle.
+//!
+//! The hot-path contract: recording an event is a bounds check + a write
+//! into a thread-owned, pre-allocated `Vec` — no locks, no allocation, no
+//! shared state. Each thread of the pipeline (loader planner, encode
+//! workers, sequencer, the train-step loop, the offload engine's link
+//! replay) owns a [`ThreadTracer`]; its buffer is handed to the shared
+//! collector exactly once, when the thread finishes (drop or
+//! [`ThreadTracer::finish`]). A buffer that fills up *drops* further
+//! events and counts them — tracing never grows memory or stalls the
+//! pipeline it is observing.
+//!
+//! A disabled tracer ([`Tracer::disabled`]) hands out `ThreadTracer`s
+//! whose every method is a single branch on an `Option` — the "tracing
+//! off" configuration costs nothing measurable (gated by
+//! `benches/trace_overhead.rs`).
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::trace::export::TraceLog;
+
+/// Default per-thread event capacity (events, not bytes). At ~64 B/event
+/// this bounds a track at ~2 MiB.
+pub const DEFAULT_TRACK_CAPACITY: usize = 32 * 1024;
+
+/// What one [`TraceEvent`] records.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A completed span: the event's `ts_ns` is the span *start*, `dur_ns`
+    /// its length (Chrome `ph: "X"`).
+    Span { dur_ns: u64 },
+    /// A point-in-time marker (Chrome `ph: "i"`).
+    Instant,
+    /// A sampled counter value (Chrome `ph: "C"`).
+    Counter { value: f64 },
+}
+
+/// One recorded event. Steady-state events carry only `'static` names and
+/// numeric args; `label` is reserved for rare-path annotations (fault
+/// specs, degradation rungs) where an allocation is acceptable.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: Cow<'static, str>,
+    /// Category (Chrome `cat`): `loader`, `offload`, `step`, `fault`, …
+    pub cat: &'static str,
+    /// Nanoseconds since the tracer's origin ([`Tracer`] creation).
+    pub ts_ns: u64,
+    pub kind: EventKind,
+    /// Optional numeric argument (rendered into Chrome `args`).
+    pub arg: Option<(&'static str, f64)>,
+    /// Optional string annotation (rare path only).
+    pub label: Option<String>,
+}
+
+/// One thread's finished event buffer, as handed to the collector.
+#[derive(Clone, Debug)]
+pub struct Track {
+    /// Display name (`loader/worker-0`, `offload/link`, `train/step`, …).
+    pub name: String,
+    /// Collector-assigned registration sequence; orders same-named tracks
+    /// (a respawned worker reuses its predecessor's name) causally.
+    pub seq: u64,
+    /// Events in push order (per-thread program order).
+    pub events: Vec<TraceEvent>,
+    /// Events discarded because the buffer was full.
+    pub dropped: u64,
+}
+
+#[derive(Debug)]
+struct Shared {
+    start: Instant,
+    capacity: usize,
+    next_seq: AtomicU64,
+    done: Mutex<Vec<Track>>,
+}
+
+/// The cheap-to-clone tracing handle threaded through the pipeline. A
+/// disabled tracer is a `None` and costs one branch per would-be event.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    shared: Option<Arc<Shared>>,
+}
+
+impl Tracer {
+    /// An enabled tracer with the default per-thread capacity.
+    pub fn enabled() -> Tracer {
+        Tracer::with_capacity(DEFAULT_TRACK_CAPACITY)
+    }
+
+    /// An enabled tracer with an explicit per-thread event capacity
+    /// (clamped to ≥ 16 so guards and flushes always have room to record).
+    pub fn with_capacity(capacity: usize) -> Tracer {
+        Tracer {
+            shared: Some(Arc::new(Shared {
+                start: Instant::now(),
+                capacity: capacity.max(16),
+                next_seq: AtomicU64::new(0),
+                done: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// The no-op tracer: every derived [`ThreadTracer`] is a single-branch
+    /// stub and [`Tracer::drain`] returns an empty log.
+    pub fn disabled() -> Tracer {
+        Tracer { shared: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Register a new per-thread buffer. The returned [`ThreadTracer`] is
+    /// `Send` and owned by exactly one thread; its events surface in the
+    /// drained log once the thread drops (or `finish`es) it.
+    pub fn thread(&self, name: impl Into<String>) -> ThreadTracer {
+        match &self.shared {
+            None => ThreadTracer {
+                shared: None,
+                name: String::new(),
+                seq: 0,
+                buf: Vec::new(),
+                dropped: 0,
+            },
+            Some(sh) => ThreadTracer {
+                seq: sh.next_seq.fetch_add(1, Ordering::Relaxed),
+                shared: Some(sh.clone()),
+                name: name.into(),
+                buf: Vec::with_capacity(sh.capacity),
+                dropped: 0,
+            },
+        }
+    }
+
+    /// Nanoseconds since this tracer's origin (0 when disabled).
+    pub fn now_ns(&self) -> u64 {
+        match &self.shared {
+            None => 0,
+            Some(sh) => sh.start.elapsed().as_nanos() as u64,
+        }
+    }
+
+    /// Collect every finished track into an ordered [`TraceLog`]. Tracks
+    /// still owned by live threads are not included — finish/drop their
+    /// [`ThreadTracer`]s first (the loader and engine do this when they
+    /// wind down).
+    pub fn drain(&self) -> TraceLog {
+        let tracks = match &self.shared {
+            None => Vec::new(),
+            Some(sh) => std::mem::take(&mut *sh.done.lock().unwrap_or_else(|e| e.into_inner())),
+        };
+        TraceLog::from_tracks(tracks)
+    }
+}
+
+/// A thread-owned event buffer. All recording methods are no-ops (one
+/// branch) when the parent tracer is disabled, and never allocate or lock
+/// when it is enabled.
+#[derive(Debug)]
+pub struct ThreadTracer {
+    shared: Option<Arc<Shared>>,
+    name: String,
+    seq: u64,
+    buf: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl ThreadTracer {
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Nanoseconds since the tracer origin (0 when disabled).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        match &self.shared {
+            None => 0,
+            Some(sh) => sh.start.elapsed().as_nanos() as u64,
+        }
+    }
+
+    /// Start a span: returns the begin timestamp to pass to
+    /// [`ThreadTracer::end_span`]. Spans nest by call discipline — end the
+    /// inner one before the outer (verified by `tests/prop_trace.rs`).
+    #[inline]
+    pub fn begin(&self) -> u64 {
+        self.now_ns()
+    }
+
+    /// Close a span begun at `t0`.
+    #[inline]
+    pub fn end_span(&mut self, name: &'static str, cat: &'static str, t0: u64) {
+        self.end_span_arg(name, cat, t0, None);
+    }
+
+    /// Close a span begun at `t0`, attaching one numeric argument.
+    #[inline]
+    pub fn end_span_arg(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        t0: u64,
+        arg: Option<(&'static str, f64)>,
+    ) {
+        if self.shared.is_none() {
+            return;
+        }
+        let now = self.now_ns();
+        self.push(TraceEvent {
+            name: Cow::Borrowed(name),
+            cat,
+            ts_ns: t0,
+            kind: EventKind::Span { dur_ns: now.saturating_sub(t0) },
+            arg,
+            label: None,
+        });
+    }
+
+    /// Run `f` inside a span.
+    #[inline]
+    pub fn with_span<R>(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        f: impl FnOnce(&mut ThreadTracer) -> R,
+    ) -> R {
+        let t0 = self.begin();
+        let r = f(self);
+        self.end_span(name, cat, t0);
+        r
+    }
+
+    /// Record an instant event.
+    #[inline]
+    pub fn instant(&mut self, name: &'static str, cat: &'static str) {
+        self.instant_arg(name, cat, None);
+    }
+
+    /// Record an instant event with one numeric argument.
+    #[inline]
+    pub fn instant_arg(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        arg: Option<(&'static str, f64)>,
+    ) {
+        if self.shared.is_none() {
+            return;
+        }
+        let ts = self.now_ns();
+        self.push(TraceEvent {
+            name: Cow::Borrowed(name),
+            cat,
+            ts_ns: ts,
+            kind: EventKind::Instant,
+            arg,
+            label: None,
+        });
+    }
+
+    /// Record an instant carrying a string annotation (allocates — rare
+    /// path only: fault firings, degradation rungs).
+    pub fn instant_label(&mut self, name: &'static str, cat: &'static str, label: &str) {
+        if self.shared.is_none() {
+            return;
+        }
+        let ts = self.now_ns();
+        self.push(TraceEvent {
+            name: Cow::Borrowed(name),
+            cat,
+            ts_ns: ts,
+            kind: EventKind::Instant,
+            arg: None,
+            label: Some(label.to_string()),
+        });
+    }
+
+    /// Record a counter sample.
+    #[inline]
+    pub fn counter(&mut self, name: &'static str, cat: &'static str, value: f64) {
+        if self.shared.is_none() {
+            return;
+        }
+        let ts = self.now_ns();
+        self.push(TraceEvent {
+            name: Cow::Borrowed(name),
+            cat,
+            ts_ns: ts,
+            kind: EventKind::Counter { value },
+            arg: None,
+            label: None,
+        });
+    }
+
+    #[inline]
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Buffered event count (0 when disabled).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events discarded because the buffer filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The fixed buffer capacity (never grows after construction).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Hand the buffer to the collector now (drop does the same).
+    pub fn finish(self) {}
+}
+
+impl Drop for ThreadTracer {
+    fn drop(&mut self) {
+        if let Some(sh) = self.shared.take() {
+            let track = Track {
+                name: std::mem::take(&mut self.name),
+                seq: self.seq,
+                events: std::mem::take(&mut self.buf),
+                dropped: self.dropped,
+            };
+            sh.done.lock().unwrap_or_else(|e| e.into_inner()).push(track);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let tr = Tracer::disabled();
+        assert!(!tr.is_enabled());
+        let mut t = tr.thread("x");
+        assert!(!t.is_enabled());
+        let t0 = t.begin();
+        t.end_span("a", "c", t0);
+        t.instant("b", "c");
+        t.counter("n", "c", 1.0);
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.capacity(), 0, "disabled threads must not allocate");
+        drop(t);
+        assert_eq!(tr.drain().tracks.len(), 0);
+    }
+
+    #[test]
+    fn spans_and_instants_surface_after_finish() {
+        let tr = Tracer::with_capacity(64);
+        let mut t = tr.thread("worker");
+        let outer = t.begin();
+        t.with_span("inner", "test", |t| t.instant_arg("tick", "test", Some(("step", 3.0))));
+        t.end_span_arg("outer", "test", outer, Some(("bytes", 42.0)));
+        assert!(tr.drain().tracks.is_empty(), "live threads are not drained");
+        t.finish();
+        let log = tr.drain();
+        assert_eq!(log.tracks.len(), 1);
+        let track = &log.tracks[0];
+        assert_eq!(track.name, "worker");
+        let names: Vec<&str> = track.events.iter().map(|e| e.name.as_ref()).collect();
+        assert_eq!(names, ["tick", "inner", "outer"], "push order = per-thread program order");
+        match track.events[2].kind {
+            EventKind::Span { dur_ns } => assert!(dur_ns > 0),
+            ref k => panic!("outer should be a span, got {k:?}"),
+        }
+        assert_eq!(track.events[2].arg, Some(("bytes", 42.0)));
+        // a second drain is empty — the log moved out
+        assert!(tr.drain().tracks.is_empty());
+    }
+
+    #[test]
+    fn full_buffer_drops_instead_of_growing() {
+        let tr = Tracer::with_capacity(16);
+        let mut t = tr.thread("tight");
+        let cap = t.capacity();
+        for _ in 0..cap + 10 {
+            t.instant("e", "test");
+        }
+        assert_eq!(t.len(), cap);
+        assert_eq!(t.dropped(), 10);
+        assert_eq!(t.capacity(), cap, "buffer must never reallocate");
+        t.finish();
+        let log = tr.drain();
+        assert_eq!(log.tracks[0].dropped, 10);
+    }
+
+    #[test]
+    fn timestamps_are_monotonic_per_thread() {
+        let tr = Tracer::enabled();
+        let mut t = tr.thread("mono");
+        for _ in 0..100 {
+            t.instant("tick", "test");
+        }
+        t.finish();
+        let log = tr.drain();
+        let ts: Vec<u64> = log.tracks[0].events.iter().map(|e| e.ts_ns).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn respawned_same_name_tracks_are_ordered_by_seq() {
+        let tr = Tracer::with_capacity(16);
+        let mut a = tr.thread("loader/worker-0");
+        a.instant("first-life", "test");
+        a.finish();
+        let mut b = tr.thread("loader/worker-0");
+        b.instant("second-life", "test");
+        b.finish();
+        let log = tr.drain();
+        assert_eq!(log.tracks.len(), 2);
+        assert!(log.tracks[0].seq < log.tracks[1].seq);
+        assert_eq!(log.tracks[0].events[0].name, "first-life");
+    }
+}

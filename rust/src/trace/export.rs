@@ -1,0 +1,425 @@
+//! Draining, aggregation and export of trace buffers: the ordered
+//! [`TraceLog`], its Chrome trace-event JSON rendering (loadable in
+//! Perfetto / `chrome://tracing`), per-phase latency histograms, the
+//! unified [`CounterRegistry`], and the predicted-vs-observed
+//! [`DriftReport`].
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Histogram;
+use crate::trace::event::{EventKind, Track};
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// Every finished track, ordered deterministically: by track name, then by
+/// registration sequence (so a respawned worker's two lives render as two
+/// causally ordered tracks under the same name). Event order inside a
+/// track is per-thread program order.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub tracks: Vec<Track>,
+}
+
+impl TraceLog {
+    pub fn from_tracks(mut tracks: Vec<Track>) -> TraceLog {
+        tracks.sort_by(|a, b| a.name.cmp(&b.name).then(a.seq.cmp(&b.seq)));
+        TraceLog { tracks }
+    }
+
+    /// Total recorded events across all tracks.
+    pub fn event_count(&self) -> usize {
+        self.tracks.iter().map(|t| t.events.len()).sum()
+    }
+
+    /// Total events dropped by full buffers across all tracks.
+    pub fn dropped(&self) -> u64 {
+        self.tracks.iter().map(|t| t.dropped).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tracks.is_empty()
+    }
+
+    /// Render the log as a Chrome trace-event document: one `tid` per
+    /// track (named via `thread_name` metadata), `pid` 0, timestamps in
+    /// microseconds. Spans are complete (`ph: "X"`) events, instants
+    /// thread-scoped `"i"`, counters `"C"`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.event_count() + self.tracks.len());
+        for (tid, track) in self.tracks.iter().enumerate() {
+            let tid_n = tid as f64;
+            events.push(obj(vec![
+                ("ph", s("M")),
+                ("name", s("thread_name")),
+                ("pid", n(0.0)),
+                ("tid", n(tid_n)),
+                ("args", obj(vec![("name", s(&track.name))])),
+            ]));
+            for ev in &track.events {
+                let mut args: Vec<(&str, Json)> = Vec::new();
+                if let Some((k, v)) = ev.arg {
+                    args.push((k, n(v)));
+                }
+                if let Some(label) = &ev.label {
+                    args.push(("label", s(label)));
+                }
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("name", s(ev.name.as_ref())),
+                    ("cat", s(ev.cat)),
+                    ("pid", n(0.0)),
+                    ("tid", n(tid_n)),
+                    ("ts", n(ev.ts_ns as f64 / 1e3)),
+                ];
+                match ev.kind {
+                    EventKind::Span { dur_ns } => {
+                        fields.push(("ph", s("X")));
+                        fields.push(("dur", n(dur_ns as f64 / 1e3)));
+                    }
+                    EventKind::Instant => {
+                        fields.push(("ph", s("i")));
+                        fields.push(("s", s("t")));
+                    }
+                    EventKind::Counter { value } => {
+                        fields.push(("ph", s("C")));
+                        args.push((ev.name.as_ref(), n(value)));
+                    }
+                }
+                if !args.is_empty() {
+                    fields.push(("args", Json::Obj(
+                        args.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+                    )));
+                }
+                events.push(Json::Obj(
+                    fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+                ));
+            }
+        }
+        obj(vec![
+            ("traceEvents", arr(events)),
+            ("displayTimeUnit", s("ms")),
+        ])
+    }
+
+    /// Write the Chrome trace-event document to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+
+    /// Span durations aggregated per span name into log2 histograms
+    /// (nanosecond samples), deterministically ordered by name.
+    pub fn phase_histograms(&self) -> BTreeMap<String, Histogram> {
+        let mut map: BTreeMap<String, Histogram> = BTreeMap::new();
+        for track in &self.tracks {
+            for ev in &track.events {
+                if let EventKind::Span { dur_ns } = ev.kind {
+                    map.entry(ev.name.to_string()).or_default().record(dur_ns);
+                }
+            }
+        }
+        map
+    }
+
+    /// Per-phase latency quantiles for report rendering.
+    pub fn phase_stats(&self) -> Vec<PhaseStat> {
+        self.phase_histograms()
+            .into_iter()
+            .map(|(name, h)| PhaseStat::from_histogram(name, &h))
+            .collect()
+    }
+}
+
+/// p50/p95/p99 wall time of one span phase, in seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseStat {
+    pub name: String,
+    pub count: u64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub p99_secs: f64,
+}
+
+impl PhaseStat {
+    pub fn from_histogram(name: String, h: &Histogram) -> PhaseStat {
+        PhaseStat {
+            name,
+            count: h.count(),
+            p50_secs: h.p50() as f64 / 1e9,
+            p95_secs: h.p95() as f64 / 1e9,
+            p99_secs: h.p99() as f64 / 1e9,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("count", n(self.count as f64)),
+            ("p50_secs", n(self.p50_secs)),
+            ("p95_secs", n(self.p95_secs)),
+            ("p99_secs", n(self.p99_secs)),
+        ])
+    }
+}
+
+/// The unified named-counter registry: one deterministic home for the
+/// pipeline's previously ad-hoc counters (`pool_allocs`/`pool_reuses`,
+/// `corruptions_detected`, `link_faults`/`link_retries`, …) plus the
+/// tracer's own bookkeeping (`trace_events`, `trace_dropped`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CounterRegistry {
+    counters: BTreeMap<String, u64>,
+}
+
+impl CounterRegistry {
+    pub fn new() -> CounterRegistry {
+        CounterRegistry::default()
+    }
+
+    /// Set `name` to `value` (overwrites).
+    pub fn set(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    /// Add `value` to `name` (0-initialized).
+    pub fn add(&mut self, name: &str, value: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += value;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    /// Name-ordered iteration (BTreeMap order, so rendering is stable).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.counters.iter().map(|(k, &v)| (k.clone(), n(v as f64))).collect())
+    }
+}
+
+/// Cost-model error: the facade's `predicted_step_secs` against the
+/// per-step spans a real (or replayed) run observed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftReport {
+    /// The overlap model's prediction for one train step.
+    pub predicted_step_secs: f64,
+    /// Mean observed `train-step` span duration.
+    pub observed_mean_secs: f64,
+    pub observed_p50_secs: f64,
+    pub observed_p99_secs: f64,
+    /// Observed steps the comparison covers.
+    pub steps: u64,
+}
+
+impl DriftReport {
+    /// Compare a prediction against an observed step histogram
+    /// (nanosecond samples). `None` when nothing was observed.
+    pub fn from_observed(predicted_step_secs: f64, observed: &Histogram) -> Option<DriftReport> {
+        if observed.is_empty() {
+            return None;
+        }
+        Some(DriftReport {
+            predicted_step_secs,
+            observed_mean_secs: observed.mean() / 1e9,
+            observed_p50_secs: observed.p50() as f64 / 1e9,
+            observed_p99_secs: observed.p99() as f64 / 1e9,
+            steps: observed.count(),
+        })
+    }
+
+    /// Signed model error in seconds (positive = the model was optimistic).
+    pub fn abs_err_secs(&self) -> f64 {
+        self.observed_mean_secs - self.predicted_step_secs
+    }
+
+    /// Relative model error against the prediction (infinite when the
+    /// model predicted a zero-cost step but one was observed).
+    pub fn rel_err(&self) -> f64 {
+        if self.predicted_step_secs > 0.0 {
+            self.abs_err_secs() / self.predicted_step_secs
+        } else if self.observed_mean_secs > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line markdown rendering for reports.
+    pub fn to_markdown_line(&self) -> String {
+        format!(
+            "drift: predicted {:.6} s/step vs observed {:.6} s/step mean \
+             ({:+.1}% over {} steps; observed p50 {:.6} s, p99 {:.6} s)",
+            self.predicted_step_secs,
+            self.observed_mean_secs,
+            self.rel_err() * 100.0,
+            self.steps,
+            self.observed_p50_secs,
+            self.observed_p99_secs,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("predicted_step_secs", n(self.predicted_step_secs)),
+            ("observed_mean_secs", n(self.observed_mean_secs)),
+            ("observed_p50_secs", n(self.observed_p50_secs)),
+            ("observed_p99_secs", n(self.observed_p99_secs)),
+            ("steps", n(self.steps as f64)),
+            ("abs_err_secs", n(self.abs_err_secs())),
+            ("rel_err", n(self.rel_err())),
+        ])
+    }
+}
+
+/// Extract an observed-duration histogram (nanosecond samples) for the
+/// named span from a Chrome trace-event document (`plan --drift FILE`
+/// reads a `train --trace` export back through this).
+pub fn observed_span_histogram(doc: &Json, span_name: &str) -> Histogram {
+    let mut h = Histogram::new();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap_or(&[]);
+    for ev in events {
+        let is_span = ev.get("ph").and_then(Json::as_str) == Some("X");
+        let named = ev.get("name").and_then(Json::as_str) == Some(span_name);
+        if is_span && named {
+            if let Some(dur_us) = ev.get("dur").and_then(Json::as_f64) {
+                h.record((dur_us * 1e3).max(0.0) as u64);
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::Tracer;
+
+    fn sample_log() -> TraceLog {
+        let tr = Tracer::with_capacity(64);
+        let mut a = tr.thread("loader/worker-1");
+        let mut b = tr.thread("loader/worker-0");
+        let t0 = a.begin();
+        a.end_span_arg("produce", "loader", t0, Some(("step", 0.0)));
+        a.instant("corruption-reencode", "fault");
+        let t0 = b.begin();
+        b.end_span("produce", "loader", t0);
+        b.counter("seq_depth", "loader", 3.0);
+        a.finish();
+        b.finish();
+        tr.drain()
+    }
+
+    #[test]
+    fn drain_orders_tracks_by_name() {
+        let log = sample_log();
+        let names: Vec<&str> = log.tracks.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["loader/worker-0", "loader/worker-1"]);
+        assert_eq!(log.event_count(), 4);
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_carries_tracks() {
+        let log = sample_log();
+        let text = log.to_chrome_json().to_string();
+        let doc = Json::parse(&text).expect("export must be valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata records + 4 events
+        assert_eq!(events.len(), 6);
+        let thread_names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(thread_names, ["loader/worker-0", "loader/worker-1"]);
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .unwrap();
+        assert!(span.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(span.get("cat").unwrap().as_str().unwrap(), "loader");
+        let counter = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .unwrap();
+        assert_eq!(
+            counter.get("args").unwrap().get("seq_depth").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn phase_stats_aggregate_across_tracks() {
+        let log = sample_log();
+        let stats = log.phase_stats();
+        assert_eq!(stats.len(), 1, "both produce spans fold into one phase");
+        assert_eq!(stats[0].name, "produce");
+        assert_eq!(stats[0].count, 2);
+        assert!(stats[0].p99_secs >= stats[0].p50_secs);
+    }
+
+    #[test]
+    fn counter_registry_is_ordered_and_additive() {
+        let mut reg = CounterRegistry::new();
+        reg.set("pool_allocs", 7);
+        reg.add("link_retries", 2);
+        reg.add("link_retries", 3);
+        assert_eq!(reg.get("link_retries"), 5);
+        assert_eq!(reg.get("absent"), 0);
+        let keys: Vec<&str> = reg.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["link_retries", "pool_allocs"], "BTreeMap order");
+        assert_eq!(
+            reg.to_json().to_string(),
+            r#"{"link_retries":5,"pool_allocs":7}"#
+        );
+    }
+
+    #[test]
+    fn drift_report_math() {
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.record(2_000_000_000); // 2 s steps
+        }
+        let d = DriftReport::from_observed(1.0, &h).unwrap();
+        assert_eq!(d.steps, 10);
+        assert!((d.abs_err_secs() - 1.0).abs() < 0.5, "{}", d.abs_err_secs());
+        assert!(d.rel_err() > 0.0);
+        let line = d.to_markdown_line();
+        assert!(line.starts_with("drift: predicted 1.0"), "{line}");
+        assert!(DriftReport::from_observed(1.0, &Histogram::new()).is_none());
+        let zero = DriftReport {
+            predicted_step_secs: 0.0,
+            observed_mean_secs: 0.0,
+            observed_p50_secs: 0.0,
+            observed_p99_secs: 0.0,
+            steps: 1,
+        };
+        assert_eq!(zero.rel_err(), 0.0);
+    }
+
+    #[test]
+    fn observed_histogram_reads_chrome_export_back() {
+        let tr = Tracer::with_capacity(64);
+        let mut t = tr.thread("train/step");
+        for _ in 0..4 {
+            let t0 = t.begin();
+            t.end_span("train-step", "step", t0);
+        }
+        t.instant("not-a-span", "step");
+        t.finish();
+        let doc = tr.drain().to_chrome_json();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let h = observed_span_histogram(&parsed, "train-step");
+        assert_eq!(h.count(), 4);
+        assert_eq!(observed_span_histogram(&parsed, "missing").count(), 0);
+    }
+}

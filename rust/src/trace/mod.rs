@@ -1,0 +1,38 @@
+//! Structured tracing & profiling: the observability layer over the whole
+//! pipeline.
+//!
+//! Every planning decision in this crate rests on a *predicted* cost model
+//! (checkpoint recompute FLOPs, double-buffered link transfers, stall
+//! estimates); this module records what actually happened at event
+//! granularity so model error becomes measurable (MONeT, Shah et al. 2020,
+//! makes the case that offload planning is only as good as its measured
+//! per-operator costs). Three layers:
+//!
+//! * [`event`] — the recording half: a cheap-to-clone [`Tracer`] handle
+//!   hands each pipeline thread (loader planner / encode workers /
+//!   sequencer, the train-step loop, the offload engine's link replay) an
+//!   owned [`ThreadTracer`] buffer. Recording a span/instant/counter is a
+//!   bounds check and a write into a pre-allocated `Vec` — no locks, no
+//!   allocation on the hot path; full buffers drop (and count) rather than
+//!   grow. A [`Tracer::disabled`] handle reduces every call to one branch.
+//! * [`export`] — the reporting half: [`Tracer::drain`] collects finished
+//!   buffers into a deterministically ordered [`TraceLog`], rendered as
+//!   Chrome trace-event JSON (`train --trace out.json`, loadable in
+//!   Perfetto / `chrome://tracing` with one named track per
+//!   worker/link/step), folded into per-phase p50/p95/p99 latency
+//!   histograms ([`PhaseStat`], shared [`crate::metrics::Histogram`]
+//!   buckets), and absorbed into the unified [`CounterRegistry`].
+//! * [`DriftReport`] — the feedback loop: the facade's
+//!   `predicted_step_secs` compared against observed `train-step` spans
+//!   (`TrainReport.drift`, `plan --drift FILE`), so cost-model error is a
+//!   first-class number instead of an invisible assumption.
+
+pub mod event;
+pub mod export;
+
+pub use event::{
+    EventKind, ThreadTracer, TraceEvent, Tracer, Track, DEFAULT_TRACK_CAPACITY,
+};
+pub use export::{
+    observed_span_histogram, CounterRegistry, DriftReport, PhaseStat, TraceLog,
+};

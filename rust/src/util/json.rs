@@ -421,6 +421,33 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_control_and_quote_chars() {
+        // Trace labels carry user-authored fault-spec text and arbitrary
+        // degradation-rung strings — every control char (incl. \u{8}/\u{c},
+        // which parse back via \b/\f), quotes, backslashes and DEL must
+        // survive write → parse unchanged.
+        let mut all_controls = String::new();
+        for c in 0u32..0x20 {
+            all_controls.push(char::from_u32(c).unwrap());
+        }
+        for text in [
+            all_controls.as_str(),
+            "link-slow:0.1,x4",
+            "seed=7;worker-panic@4;corrupt@2;budget-shrink@6=1MiB",
+            "quote\" backslash\\ slash/ del\u{7f}",
+            "\u{8}\u{c}\n\r\t",
+            "héllo ∆ — µs",
+        ] {
+            let j = Json::Str(text.into());
+            let out = j.to_string();
+            assert_eq!(Json::parse(&out).unwrap(), j, "round-trip broke for {out}");
+        }
+        // spot-check the wire form: controls below 0x20 are never raw
+        let wire = Json::Str(all_controls).to_string();
+        assert!(wire.bytes().all(|b| b >= 0x20), "raw control byte in {wire:?}");
+    }
+
+    #[test]
     fn as_usize_guards() {
         assert_eq!(Json::Num(5.0).as_usize(), Some(5));
         assert_eq!(Json::Num(5.5).as_usize(), None);

@@ -1,0 +1,295 @@
+//! Property tests for the structured tracing layer — the observability
+//! PR's acceptance contract:
+//!
+//! * spans on any one track are **properly nested** (stack discipline:
+//!   two spans either nest or are disjoint, never partially overlap);
+//! * the drained track order and per-track event-name sequences are
+//!   **deterministic** for a fixed seed (timestamps vary, structure
+//!   does not);
+//! * tracing is **invisible to the data**: the batch stream under
+//!   `--faults` with worker respawns is byte-identical traced vs
+//!   untraced, and the respawn shows up as a trace instant;
+//! * the hot path never allocates at steady state: a full per-thread
+//!   buffer drops (and counts) events instead of growing.
+
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{EncodeSpec, Encoding, WordType};
+use optorch::data::loader::{dump, BatchPayload, EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::fault::{FaultInjector, FaultSpec};
+use optorch::trace::{EventKind, TraceLog, Track, Tracer};
+use optorch::util::json::Json;
+use optorch::util::propcheck::check_with;
+use std::sync::Arc;
+
+fn loader_with(
+    seed: u64,
+    batches: usize,
+    workers: usize,
+    faults: Option<Arc<FaultInjector>>,
+    tracer: Tracer,
+) -> EdLoader {
+    let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 240, 9));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4").unwrap(),
+        seed,
+    )
+    .unwrap();
+    EdLoader::with_observability(
+        d,
+        sampler,
+        Some(EncodeSpec::new(Encoding::Base256, WordType::F64)),
+        batches,
+        LoaderMode::Parallel { prefetch_depth: 2, num_workers: workers },
+        Arc::new(BufferPool::default()),
+        faults,
+        None,
+        tracer,
+    )
+}
+
+fn payload_bytes(p: &BatchPayload) -> Vec<u8> {
+    match p {
+        BatchPayload::Raw { data, labels, n } => {
+            let mut out = (*n as u64).to_le_bytes().to_vec();
+            for v in data.iter().chain(labels) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        BatchPayload::Encoded(groups) => {
+            let mut out = Vec::new();
+            for g in groups {
+                out.extend_from_slice(&dump::to_bytes(g));
+            }
+            out
+        }
+    }
+}
+
+fn drain(mut l: EdLoader) -> Result<Vec<Vec<u8>>, String> {
+    let mut out = Vec::new();
+    loop {
+        match l.try_next() {
+            Ok(Some(p)) => {
+                out.push(payload_bytes(&p));
+                l.recycle(p);
+            }
+            Ok(None) => break,
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+    Ok(out)
+}
+
+/// Spans on one track must use stack discipline: sorted by (start asc,
+/// end desc), every span either contains or is disjoint from the one
+/// below it — a span reaching past its enclosing span is an error.
+fn assert_nested(track: &Track) -> Result<(), String> {
+    let mut spans: Vec<(u64, u64)> = track
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::Span { dur_ns } => Some((e.ts_ns, e.ts_ns + dur_ns)),
+            _ => None,
+        })
+        .collect();
+    spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut stack: Vec<(u64, u64)> = Vec::new();
+    for (start, end) in spans {
+        while let Some(&(_, top_end)) = stack.last() {
+            if start >= top_end {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(top_start, top_end)) = stack.last() {
+            if end > top_end {
+                return Err(format!(
+                    "track '{}': span [{start}, {end}) partially overlaps [{top_start}, {top_end})",
+                    track.name
+                ));
+            }
+        }
+        stack.push((start, end));
+    }
+    Ok(())
+}
+
+/// The name sequence of every track, in drained (deterministic) order.
+fn name_shape(log: &TraceLog) -> Vec<(String, Vec<String>)> {
+    log.tracks
+        .iter()
+        .map(|t| {
+            (
+                t.name.clone(),
+                t.events.iter().map(|e| e.name.to_string()).collect(),
+            )
+        })
+        .collect()
+}
+
+/// Every track of a traced pool run — workers, planner, supervisor,
+/// sequencer — keeps stack discipline, under faults included.
+#[test]
+fn prop_tracks_are_properly_nested() {
+    check_with("span nesting per track", 8, 0x7A0E, |rng| {
+        let batches = 4 + rng.gen_range(6);
+        (rng.next_u64(), batches, 1 + rng.gen_range(3), rng.gen_range(batches))
+    }, |(seed, batches, workers, corrupt_at)| {
+        let spec = FaultSpec::parse(&format!("seed={seed};corrupt@{corrupt_at}"))
+            .map_err(|e| e.to_string())?;
+        let inj = Some(Arc::new(FaultInjector::new(&spec)));
+        let tracer = Tracer::enabled();
+        drain(loader_with(*seed, *batches, *workers, inj, tracer.clone()))?;
+        let log = tracer.drain();
+        if log.event_count() == 0 {
+            return Err("traced run recorded no events".into());
+        }
+        for track in &log.tracks {
+            assert_nested(track)?;
+        }
+        Ok(())
+    });
+}
+
+/// The nesting checker itself must reject a partially-overlapping pair
+/// (the API can express misuse; the property test is what forbids it).
+#[test]
+fn nesting_checker_rejects_partial_overlap() {
+    let tr = Tracer::enabled();
+    let mut t = tr.thread("bad");
+    let outer = t.begin();
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    let inner = t.begin();
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    t.end_span("outer", "x", outer); // ends while "inner" still open
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    t.end_span("inner", "x", inner); // reaches past its enclosing span
+    t.finish();
+    let log = tr.drain();
+    assert!(assert_nested(&log.tracks[0]).is_err(), "checker accepted partial overlap");
+}
+
+/// Single-producer mode: same seed ⇒ the same tracks with the same
+/// event-name sequences, run after run (timestamps differ; shape not).
+#[test]
+fn prop_trace_shape_is_deterministic_for_fixed_seed() {
+    check_with("trace shape determinism", 8, 0xD5EE, |rng| {
+        let batches = 3 + rng.gen_range(5);
+        (rng.next_u64(), batches, rng.gen_range(batches))
+    }, |(seed, batches, corrupt_at)| {
+        let spec = FaultSpec::parse(&format!("seed={seed};corrupt@{corrupt_at}"))
+            .map_err(|e| e.to_string())?;
+        let run = || -> Result<_, String> {
+            let inj = Some(Arc::new(FaultInjector::new(&spec)));
+            let tracer = Tracer::enabled();
+            let stream = drain(loader_with(*seed, *batches, 0, inj, tracer.clone()))?;
+            Ok((stream, name_shape(&tracer.drain())))
+        };
+        let (stream_a, shape_a) = run()?;
+        let (stream_b, shape_b) = run()?;
+        if stream_a != stream_b {
+            return Err("payload streams diverged across reruns".into());
+        }
+        if shape_a != shape_b {
+            return Err(format!("trace shape diverged:\n{shape_a:?}\nvs\n{shape_b:?}"));
+        }
+        if !shape_a.iter().any(|(_, names)| names.iter().any(|n| n == "produce")) {
+            return Err("no 'produce' span recorded".into());
+        }
+        if !shape_a
+            .iter()
+            .any(|(_, names)| names.iter().any(|n| n == "corruption-reencode"))
+        {
+            return Err("injected corruption left no trace instant".into());
+        }
+        Ok(())
+    });
+}
+
+/// Tracing must be invisible to the data: under a worker kill inside the
+/// respawn budget, the traced stream is byte-identical to the untraced
+/// one — and the supervisor's respawn shows up as a trace instant.
+#[test]
+fn prop_traced_faulted_stream_is_byte_identical() {
+    check_with("traced stream = untraced stream", 8, 0xBEEF, |rng| {
+        let batches = 4 + rng.gen_range(6);
+        (rng.next_u64(), batches, rng.gen_range(batches), 1 + rng.gen_range(3))
+    }, |(seed, batches, panic_at, workers)| {
+        let spec = FaultSpec::parse(&format!("seed={seed};worker-panic@{panic_at}"))
+            .map_err(|e| e.to_string())?;
+        let untraced = {
+            let inj = Some(Arc::new(FaultInjector::new(&spec)));
+            drain(loader_with(*seed, *batches, *workers, inj, Tracer::disabled()))?
+        };
+        let tracer = Tracer::enabled();
+        let traced = {
+            let inj = Some(Arc::new(FaultInjector::new(&spec)));
+            drain(loader_with(*seed, *batches, *workers, inj, tracer.clone()))?
+        };
+        if untraced != traced {
+            return Err(format!(
+                "stream changed under tracing (workers={workers}, panic@{panic_at})"
+            ));
+        }
+        let log = tracer.drain();
+        let respawns = log
+            .tracks
+            .iter()
+            .flat_map(|t| &t.events)
+            .filter(|e| matches!(e.kind, EventKind::Instant) && e.name == "worker-respawn")
+            .count();
+        if respawns != 1 {
+            return Err(format!("expected 1 worker-respawn instant, saw {respawns}"));
+        }
+        Ok(())
+    });
+}
+
+/// A full per-thread buffer must drop (and count) events, never grow —
+/// this is the no-hot-path-allocation guarantee at steady state.
+#[test]
+fn full_buffer_drops_instead_of_growing() {
+    let tr = Tracer::with_capacity(16);
+    let mut t = tr.thread("hot");
+    let cap = t.capacity();
+    assert!(cap >= 16);
+    for _ in 0..100 {
+        let t0 = t.begin();
+        t.end_span("spin", "bench", t0);
+    }
+    assert_eq!(t.capacity(), cap, "hot-path push grew the buffer");
+    assert_eq!(t.len(), cap);
+    assert_eq!(t.dropped(), 100 - cap as u64);
+    t.finish();
+    let log = tr.drain();
+    assert_eq!(log.event_count(), cap);
+    assert_eq!(log.dropped(), 100 - cap as u64);
+}
+
+/// The Chrome export of a real traced run parses back as JSON and its
+/// `produce` spans survive the round trip through the drift reader.
+#[test]
+fn chrome_export_round_trips_through_the_drift_reader() {
+    let tracer = Tracer::enabled();
+    let stream = drain(loader_with(11, 6, 2, None, tracer.clone())).unwrap();
+    assert_eq!(stream.len(), 6);
+    let log = tracer.drain();
+    let produce_spans = log
+        .tracks
+        .iter()
+        .flat_map(|t| &t.events)
+        .filter(|e| matches!(e.kind, EventKind::Span { .. }) && e.name == "produce")
+        .count();
+    assert_eq!(produce_spans, 6, "one produce span per batch");
+    let doc = Json::parse(&log.to_chrome_json().to_string()).expect("export is valid JSON");
+    let observed = optorch::trace::observed_span_histogram(&doc, "produce");
+    assert_eq!(observed.count(), 6);
+}
