@@ -1,0 +1,203 @@
+//! Metrics overhead: the cost of live-metrics sampling on the train
+//! loop's hot path, metered vs unmetered.
+//!
+//! Two measurements:
+//!
+//! 1. **baseline** — drain the E-D pool loader with no metrics at all
+//!    (the pre-observability hot path);
+//! 2. **metered** — the same drain with the trainer's per-step sampling:
+//!    one `StepSample` built from live gauges (loader queue depth, step
+//!    wall time) and pushed through `MetricsHub::record_step` per batch.
+//!
+//! Wall time per run is the minimum over several trials (the minimum
+//! tracks the true cost, the rest is scheduler noise). A per-sample
+//! microbench (spin on `record_step` against a full ring, so it also
+//! exercises the drop path) and a `/metrics` render microbench ride
+//! along for the absolute numbers.
+//!
+//! Emits `BENCH_obs.json`. `OPTORCH_BENCH_CHECK=1` runs a fast smoke
+//! pass that *fails the process* (exit 1) when enabled-metrics overhead
+//! reaches 5%.
+
+use optorch::data::augment::AugPolicy;
+use optorch::data::dataset::Dataset;
+use optorch::data::encode::{EncodeSpec, Encoding, WordType};
+use optorch::data::loader::{EdLoader, LoaderMode};
+use optorch::data::pool::BufferPool;
+use optorch::data::sampler::SbsSampler;
+use optorch::data::synth::{Split, SynthCifar};
+use optorch::obs::{MetricsHub, StepSample};
+use optorch::util::bench::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn loader(batches: usize, workers: usize) -> EdLoader {
+    let d: Arc<dyn Dataset> = Arc::new(SynthCifar::cifar10(Split::Train, 240, 9));
+    let sampler = SbsSampler::uniform(
+        d.as_ref(),
+        16,
+        AugPolicy::parse("hflip,crop4").unwrap(),
+        11,
+    )
+    .unwrap();
+    let spec = Some(EncodeSpec::new(Encoding::Base256, WordType::F64));
+    let mode = LoaderMode::Parallel { prefetch_depth: 2, num_workers: workers };
+    let pool = Arc::new(BufferPool::default());
+    EdLoader::with_faults(d, sampler, spec, batches, mode, pool, None, None)
+}
+
+/// Drain one loader; wall seconds (consumer side, batch count asserted).
+/// With a hub, every batch pays the trainer's full sampling cost: read
+/// the live gauges, build the `StepSample`, `record_step`.
+fn drain_secs(mut l: EdLoader, batches: usize, hub: Option<&MetricsHub>) -> f64 {
+    let stats = l.stats();
+    let start = Instant::now();
+    let mut n = 0usize;
+    let mut step_start = Instant::now();
+    loop {
+        match l.try_next() {
+            Ok(Some(p)) => {
+                n += 1;
+                l.recycle(p);
+                if let Some(hub) = hub {
+                    let step_secs = step_start.elapsed().as_secs_f64();
+                    hub.record_step(StepSample {
+                        step: n as u64 - 1,
+                        slab_high_water_bytes: 48 << 20,
+                        host_resident_bytes: 4 << 20,
+                        scratch_used_bytes: 4096,
+                        scratch_high_water_bytes: 8192,
+                        link_retry_backlog: 0,
+                        loader_queue_depth: stats.queue_depth(),
+                        degrade_rung: 0,
+                        step_secs,
+                    });
+                    step_start = Instant::now();
+                }
+            }
+            Ok(None) => break,
+            Err(e) => panic!("loader errored mid-bench: {e}"),
+        }
+    }
+    assert_eq!(n, batches, "short stream");
+    start.elapsed().as_secs_f64()
+}
+
+/// Minimum wall seconds across `trials` fresh loaders.
+fn best_of(
+    trials: usize,
+    batches: usize,
+    workers: usize,
+    make: impl Fn() -> Option<MetricsHub>,
+) -> f64 {
+    (0..trials)
+        .map(|_| {
+            let hub = make();
+            drain_secs(loader(batches, workers), batches, hub.as_ref())
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let mut failures = 0u32;
+    let (batches, trials) = if check { (16, 3) } else { (32, 3) };
+    let workers = 2;
+
+    println!("=== metrics overhead: E-D pool loader ({batches} batches, {workers} workers, best of {trials}) ===\n");
+
+    let baseline = best_of(trials, batches, workers, || None);
+    let metered = best_of(trials, batches, workers, || Some(MetricsHub::new()));
+    let metered_pct = (metered / baseline - 1.0) * 100.0;
+
+    let mut t = Table::new(&["variant", "wall", "overhead"]);
+    t.row(&["baseline (no metrics)".into(), format!("{:.1} ms", baseline * 1e3), "—".into()]);
+    t.row(&[
+        "metrics enabled".into(),
+        format!("{:.1} ms", metered * 1e3),
+        format!("{metered_pct:+.2}%"),
+    ]);
+    t.print();
+
+    // ---- per-sample microbench ----
+    // A small ring keeps the spin in the steady state a long run reaches
+    // (ring full, every push takes the drop-and-count path too).
+    let spins: u64 = if check { 100_000 } else { 400_000 };
+    let hub = MetricsHub::with_capacity(256);
+    let start = Instant::now();
+    for i in 0..spins {
+        hub.record_step(StepSample {
+            step: i,
+            slab_high_water_bytes: 48 << 20,
+            host_resident_bytes: 4 << 20,
+            scratch_used_bytes: 4096,
+            scratch_high_water_bytes: 8192,
+            link_retry_backlog: 1,
+            loader_queue_depth: 2,
+            degrade_rung: 0,
+            step_secs: 0.004,
+        });
+    }
+    let ns_per_sample = start.elapsed().as_nanos() as f64 / spins as f64;
+    let recorded = hub.steps();
+    let dropped = hub.dropped();
+
+    // ---- scrape-render microbench ----
+    let renders: u64 = if check { 2_000 } else { 10_000 };
+    let start = Instant::now();
+    let mut exposition_len = 0usize;
+    for _ in 0..renders {
+        exposition_len = hub.prometheus_text().len();
+    }
+    let us_per_scrape = start.elapsed().as_micros() as f64 / renders as f64;
+
+    println!(
+        "\nper sample (record_step, ring full): {ns_per_sample:.0} ns; \
+         per scrape (prometheus_text, {exposition_len} B): {us_per_scrape:.1} µs"
+    );
+
+    // ---- invariants ----
+    if !(metered_pct < 5.0) {
+        eprintln!("FAIL: enabled-metrics overhead {metered_pct:.2}% (gate < 5%)");
+        failures += 1;
+    }
+    if recorded != spins {
+        eprintln!("FAIL: hub counted {recorded} of {spins} samples");
+        failures += 1;
+    }
+    if dropped != spins - 256 {
+        eprintln!("FAIL: full ring dropped {dropped}, expected {}", spins - 256);
+        failures += 1;
+    }
+    if !(ns_per_sample < 10_000.0) {
+        eprintln!("FAIL: {ns_per_sample:.0} ns per sample (sanity gate < 10 µs)");
+        failures += 1;
+    }
+    if exposition_len == 0 {
+        eprintln!("FAIL: empty /metrics exposition");
+        failures += 1;
+    }
+
+    let json = format!(
+        "{{\n  \"batches\": {batches},\n  \"workers\": {workers},\n  \"trials\": {trials},\n  \
+         \"baseline_ms\": {:.3},\n  \"metered_ms\": {:.3},\n  \
+         \"overhead_pct\": {metered_pct:.3},\n  \
+         \"ns_per_sample\": {ns_per_sample:.1},\n  \
+         \"us_per_scrape\": {us_per_scrape:.2},\n  \
+         \"exposition_bytes\": {exposition_len}\n}}\n",
+        baseline * 1e3,
+        metered * 1e3,
+    );
+    match std::fs::write("BENCH_obs.json", json) {
+        Ok(()) => println!("\nwrote BENCH_obs.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_obs.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: metrics overhead within gates");
+    }
+}

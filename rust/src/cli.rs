@@ -113,12 +113,21 @@ COMMANDS:
             the run summary then includes per-phase p50/p95/p99 timings,
             the unified counter table and a predicted-vs-observed drift
             line when a spill plan made a step-time prediction.
+            [--metrics_addr HOST:PORT] serves live metrics while the run
+            is up: Prometheus text exposition on /metrics, liveness on
+            /healthz, readiness on /readyz (503 once the degradation
+            ladder has been walked or the loader watchdog fired).
+            [--memlog FILE] writes the per-step memory timeline as CSV
+            (slab high-water, host residency, scratch occupancy, queue
+            depth, degrade rung, step seconds) — replayable offline with
+            `plan --memdrift FILE`.
   memsim    Simulate training memory. --model NAME [--pipeline P] [--batch N]
             [--height N] [--width N] [--timeline]
   plan      Plan checkpoint placement. --model NAME [--batch N] [--height N]
             [--kind dp|sqrt|uniformK|bottleneckK|joint] [--frontier] [--arena]
             [--budget BYTES] [--spill BYTES [--host_bw B/s] [--lookahead N]]
-            [--compare [--grad_spill BOOL]] [--degrade] [--drift FILE] [--json]
+            [--compare [--grad_spill BOOL]] [--degrade] [--drift FILE]
+            [--memdrift FILE] [--json]
             (--frontier prints the DP time/memory Pareto frontier; --budget
             picks the cheapest-time plan whose packed total fits; --arena
             packs the plan into a memory slab and prints its size,
@@ -133,7 +142,10 @@ COMMANDS:
             side as markdown, or one JSON document under --json; --drift
             replays a `train --trace` export: the observed `train-step`
             span quantiles against the step time the same flags predict,
-            as one drift line (or JSON under --json); --json renders
+            as one drift line (or JSON under --json); --memdrift replays
+            a `train --memlog` CSV the same way for memory: observed
+            slab/host high-water marks against the watermarks the same
+            flags predict, as one mem-watermark line; --json renders
             the one staged PlanRequest→PlanOutcome run as a stable JSON
             document — arena always included, --spill preferred over
             --budget)

@@ -151,6 +151,18 @@ pub struct TrainConfig {
     /// tracing entirely — the hot paths then pay one branch per would-be
     /// event.
     pub trace: Option<PathBuf>,
+    /// Serve live metrics and health probes over HTTP while the run is
+    /// up: Prometheus text exposition on `/metrics`, liveness on
+    /// `/healthz`, readiness on `/readyz` (503 while the degradation
+    /// ladder is active or the loader watchdog has fired). The value is
+    /// a `HOST:PORT` socket address (port 0 picks a free port); `None`
+    /// (the default) starts no listener.
+    pub metrics_addr: Option<String>,
+    /// Write the per-step memory timeline here as CSV (one row per
+    /// train step: slab high-water, host residency, scratch occupancy,
+    /// queue depth, degrade rung, step seconds). Replayable offline via
+    /// `plan --memdrift FILE`. `None` (the default) keeps no timeline.
+    pub memlog: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -180,6 +192,8 @@ impl TrainConfig {
             faults: None,
             loader_watchdog_secs: None,
             trace: None,
+            metrics_addr: None,
+            memlog: None,
         }
     }
 
@@ -279,6 +293,12 @@ impl TrainConfig {
         if let Some(v) = kv.get_str("trace") {
             cfg.trace = if v.is_empty() { None } else { Some(PathBuf::from(v)) };
         }
+        if let Some(v) = kv.get_str("metrics_addr") {
+            cfg.metrics_addr = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = kv.get_str("memlog") {
+            cfg.memlog = if v.is_empty() { None } else { Some(PathBuf::from(v)) };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -310,6 +330,11 @@ impl TrainConfig {
         crate::memory::planner::PlannerKind::parse(&self.planner)
             .map_err(|e| format!("planner: {e}"))?;
         crate::data::augment::AugPolicy::parse(&self.augment)?;
+        if let Some(a) = &self.metrics_addr {
+            a.parse::<std::net::SocketAddr>().map_err(|_| {
+                format!("metrics_addr: expected HOST:PORT (e.g. 127.0.0.1:9184), got '{a}'")
+            })?;
+        }
         Ok(())
     }
 
@@ -581,6 +606,31 @@ mod tests {
         let mut ov = BTreeMap::new();
         ov.insert("trace".to_string(), String::new());
         assert!(TrainConfig::from_sources(None, &ov).unwrap().trace.is_none());
+    }
+
+    #[test]
+    fn metrics_addr_and_memlog_parse() {
+        let mut ov = BTreeMap::new();
+        ov.insert("metrics_addr".to_string(), "127.0.0.1:9184".to_string());
+        ov.insert("memlog".to_string(), "out/mem.csv".to_string());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9184"));
+        assert_eq!(cfg.memlog, Some(PathBuf::from("out/mem.csv")));
+        // defaults off; empty strings normalize to off
+        let d = TrainConfig::default_for("m", Pipeline::BASELINE);
+        assert!(d.metrics_addr.is_none());
+        assert!(d.memlog.is_none());
+        let mut ov = BTreeMap::new();
+        ov.insert("metrics_addr".to_string(), String::new());
+        ov.insert("memlog".to_string(), String::new());
+        let cfg = TrainConfig::from_sources(None, &ov).unwrap();
+        assert!(cfg.metrics_addr.is_none());
+        assert!(cfg.memlog.is_none());
+        // a junk address is rejected with the key named
+        let mut ov = BTreeMap::new();
+        ov.insert("metrics_addr".to_string(), "localhost".to_string());
+        let err = TrainConfig::from_sources(None, &ov).unwrap_err();
+        assert!(err.contains("metrics_addr"), "{err}");
     }
 
     #[test]

@@ -93,6 +93,10 @@ pub fn markdown_summary(report: &TrainReport) -> String {
         s.push_str(&d.to_markdown_line());
         s.push('\n');
     }
+    if let Some(m) = &report.mem {
+        s.push_str(&m.to_markdown_line());
+        s.push('\n');
+    }
     if !report.counters.is_empty() {
         s.push_str(&counter_summary(&report.counters));
     }
@@ -191,6 +195,8 @@ mod tests {
             images: 320,
             step_p50_secs: None,
             step_p99_secs: None,
+            slab_high_water_bytes: 0,
+            host_resident_bytes: 0,
         });
         TrainReport {
             model: "tiny_cnn".into(),
@@ -247,6 +253,7 @@ mod tests {
             phase_stats: Vec::new(),
             counters: CounterRegistry::new(),
             drift: None,
+            mem: None,
         }
     }
 
@@ -421,6 +428,24 @@ mod tests {
         assert!(md.contains("| train-step | 100 | 12.00 ms | 15.00 ms | 20.00 ms |"), "{md}");
         assert!(md.contains("drift: predicted 0.016000 s/step"), "{md}");
         assert!(md.contains("counters: pool_allocs 9 · trace_dropped 0"), "{md}");
+    }
+
+    #[test]
+    fn markdown_includes_mem_watermark_line() {
+        let mut rep = fake_report();
+        assert!(!markdown_summary(&rep).contains("mem-watermark:"));
+        rep.mem = Some(crate::obs::MemWatermarkReport {
+            predicted_peak_bytes: 3 * 1024 * 1024,
+            predicted_packed_bytes: 3 * 1024 * 1024 + 64 * 1024,
+            predicted_host_peak_bytes: None,
+            observed_peak_bytes: 3 * 1024 * 1024,
+            observed_slab_high_water_bytes: 2 * 1024 * 1024,
+            observed_host_peak_bytes: 0,
+            steps: 40,
+        });
+        let md = markdown_summary(&rep);
+        assert!(md.contains("mem-watermark: predicted peak 3.0 MiB"), "{md}");
+        assert!(md.contains("no spill over 40 steps"), "{md}");
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::data::augment::AugPolicy;
 use crate::data::dataset::Dataset;
 use crate::data::encode::encode_batch_grouped;
 use crate::data::image::ImageBatch;
-use crate::data::loader::{BatchPayload, EdLoader, LoaderStats, WorkerSummary};
+use crate::data::loader::{BatchPayload, EdLoader, LoaderError, LoaderStats, WorkerSummary};
 use crate::data::pool::BufferPool;
 use crate::data::sampler::SbsSampler;
 use crate::data::synth::{Split, SynthCifar};
@@ -16,6 +16,7 @@ use crate::memory::outcome::PlanOutcome;
 use crate::memory::pipeline::{PlanError, PlanRequest};
 use crate::memory::planner::CheckpointPlan;
 use crate::metrics::{EpochRecord, Histogram, History, Mean, Timer};
+use crate::obs::{MemTimeline, MemWatermarkReport, MetricsHub, ObsServer, StepSample};
 use crate::runtime::{LoadedModel, Runtime, TrainState};
 use crate::trace::{CounterRegistry, DriftReport, PhaseStat, Tracer};
 use crate::{debug, info, warn_};
@@ -72,6 +73,11 @@ pub struct TrainReport {
     /// `predicted_step_secs` (host-spill compositions) and at least one
     /// train step was timed.
     pub drift: Option<DriftReport>,
+    /// Predicted-vs-observed memory watermarks — the DP peak, packed slab
+    /// total and spilled host floor against the per-step high-water marks
+    /// the run touched. `None` when the run staged no lifetimes or took
+    /// no train steps.
+    pub mem: Option<MemWatermarkReport>,
 }
 
 /// Orchestrates one training run.
@@ -118,6 +124,20 @@ pub struct Trainer {
     /// Loader counters accumulated across the epoch-scoped loaders.
     respawns: u64,
     corruptions: u64,
+    /// Live metrics hub behind `/metrics` and the `--memlog` timeline.
+    /// Always recording — one ring push plus a few relaxed atomics per
+    /// step, never a hot-path allocation.
+    hub: Arc<MetricsHub>,
+    /// HTTP listener serving the hub's exposition and health probes
+    /// (`None` unless `metrics_addr` is configured). Held for its thread:
+    /// dropping the trainer shuts the listener down.
+    obs_server: Option<ObsServer>,
+    /// Per-schedule-step live-bytes replay of the resident plan, kept in
+    /// lockstep with `plan` across degradation replans.
+    mem_timeline: Option<MemTimeline>,
+    /// Every recorded step sample, kept only when `memlog` names a path
+    /// (the hub's ring is a bounded scrape window, not an archive).
+    memlog_rows: Vec<StepSample>,
 }
 
 /// Link-fault parameters for the offload engine, distilled from the
@@ -268,8 +288,9 @@ impl Trainer {
             Some(_) => Tracer::enabled(),
             None => Tracer::disabled(),
         };
-        let (plan, arena, offload) = match select_plan(&plan_cfg, (h, w, c), num_classes)? {
+        let (plan, arena, offload, mem_timeline) = match select_plan(&plan_cfg, (h, w, c), num_classes)? {
             Some(outcome) => {
+                let mem_timeline = MemTimeline::from_outcome(&outcome);
                 let offload = match outcome.offload_report() {
                     Some(report) => {
                         // The runtime half replays the spill schedule
@@ -283,9 +304,21 @@ impl Trainer {
                     }
                     None => None,
                 };
-                (Some(outcome.plan), outcome.arena, offload)
+                (Some(outcome.plan), outcome.arena, offload, mem_timeline)
             }
-            None => (None, None, None),
+            None => (None, None, None, None),
+        };
+        let hub = Arc::new(MetricsHub::new());
+        let obs_server = match cfg.metrics_addr.as_deref() {
+            Some(addr) => {
+                let server = ObsServer::bind(addr, hub.clone())?;
+                info!(
+                    "metrics endpoint on http://{0}/metrics (health: /healthz, /readyz)",
+                    server.local_addr()
+                );
+                Some(server)
+            }
+            None => None,
         };
         let state = model.init_state(cfg.seed)?;
         info!(
@@ -317,7 +350,24 @@ impl Trainer {
             step_hist: Histogram::new(),
             respawns: 0,
             corruptions: 0,
+            hub,
+            obs_server,
+            mem_timeline,
+            memlog_rows: Vec::new(),
         })
+    }
+
+    /// The live metrics hub this run records into (what `/metrics`
+    /// serves). Exposed so callers embedding the trainer can scrape or
+    /// assert on the same series the HTTP endpoint would.
+    pub fn metrics(&self) -> &Arc<MetricsHub> {
+        &self.hub
+    }
+
+    /// Address the metrics endpoint actually bound (`None` unless
+    /// `metrics_addr` was configured) — useful with port 0.
+    pub fn metrics_local_addr(&self) -> Option<std::net::SocketAddr> {
+        self.obs_server.as_ref().map(|s| s.local_addr())
     }
 
     /// The checkpoint plan this run trains under (S-C pipelines only).
@@ -416,9 +466,14 @@ impl Trainer {
             }
             None => self.model.clear_offload(),
         }
+        self.mem_timeline = MemTimeline::from_outcome(&outcome);
         self.plan = Some(outcome.plan.clone());
         self.arena = outcome.arena.clone();
         self.offload = outcome.offload_report();
+        // The hub mirrors the episode so `/metrics` and `/readyz` agree
+        // with the report: every rung counts, and readiness goes (and
+        // stays) 503 once the ladder has been walked.
+        self.hub.note_degrade_event(report.actions.len() as u64);
         self.degradation = Some(report);
         Ok(())
     }
@@ -471,6 +526,7 @@ impl Trainer {
     pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochRecord> {
         let timer = Timer::start();
         let mut loader = self.train_loader(epoch)?;
+        let loader_stats: Arc<LoaderStats> = loader.stats();
         let lr = self.cfg.lr_schedule.at(epoch) as f32;
         let mut loss = Mean::default();
         let mut acc = Mean::default();
@@ -481,6 +537,8 @@ impl Trainer {
         // tracer drops at the end of the epoch (abort paths included).
         let mut step_trace = self.tracer.thread("train/step");
         let mut epoch_hist = Histogram::new();
+        let mut epoch_slab_hw = 0u64;
+        let mut epoch_host_hw = 0u64;
         loop {
             let next0 = step_trace.begin();
             let payload = match loader.try_next() {
@@ -489,7 +547,12 @@ impl Trainer {
                 // Typed loader failures (respawn budget exhausted, watchdog
                 // stall, encode error) abort the epoch cleanly instead of
                 // panicking the train thread.
-                Err(e) => bail!("epoch {epoch} aborted: {e}"),
+                Err(e) => {
+                    if matches!(e, LoaderError::Stalled { .. }) {
+                        self.hub.set_watchdog_fired();
+                    }
+                    bail!("epoch {epoch} aborted: {e}");
+                }
             };
             step_trace.end_span_arg(
                 "next-batch",
@@ -513,7 +576,8 @@ impl Trainer {
             let t0 = step_trace.begin();
             let started = std::time::Instant::now();
             let out = self.model.train_step_lr(&mut self.state, &payload, lr)?;
-            epoch_hist.record(started.elapsed().as_nanos() as u64);
+            let step_elapsed = started.elapsed();
+            epoch_hist.record(step_elapsed.as_nanos() as u64);
             step_trace.end_span_arg(
                 "train-step",
                 "train",
@@ -528,6 +592,38 @@ impl Trainer {
             images += out.batch_size as u64;
             step += 1;
             self.global_step += 1;
+            // One metrics sample per step: the plan-side slab replay plus
+            // the runtime engine/loader gauges. `record_step` is a ring
+            // push and a few relaxed atomics — no allocation.
+            let (scratch_used, scratch_hw) = {
+                let arena = self.model.scratch_arena().borrow();
+                (arena.used_bytes() as u64, arena.high_water_bytes() as u64)
+            };
+            let sample = StepSample {
+                step: (self.global_step - 1) as u64,
+                slab_high_water_bytes: self
+                    .mem_timeline
+                    .as_ref()
+                    .map(MemTimeline::slab_high_water_bytes)
+                    .unwrap_or(0),
+                host_resident_bytes: self.model.offload_step_host_peak().unwrap_or(0),
+                scratch_used_bytes: scratch_used,
+                scratch_high_water_bytes: scratch_hw,
+                link_retry_backlog: self
+                    .model
+                    .offload_stats()
+                    .map(|s| s.link_retries)
+                    .unwrap_or(0),
+                loader_queue_depth: loader_stats.queue_depth(),
+                degrade_rung: self.hub.degrade_rungs(),
+                step_secs: step_elapsed.as_secs_f64(),
+            };
+            epoch_slab_hw = epoch_slab_hw.max(sample.slab_high_water_bytes);
+            epoch_host_hw = epoch_host_hw.max(sample.host_resident_bytes);
+            self.hub.record_step(sample);
+            if self.cfg.memlog.is_some() {
+                self.memlog_rows.push(sample);
+            }
             if step % 50 == 0 {
                 debug!(
                     "epoch {epoch} step {step}: loss {:.4} acc {:.3}",
@@ -537,7 +633,7 @@ impl Trainer {
             }
         }
         step_trace.finish();
-        let stats: Arc<LoaderStats> = loader.stats();
+        let stats = loader_stats;
         drop(loader); // joins producer threads → counters are final
         self.produce_secs += stats.produce_secs();
         self.blocked_secs += stats.blocked_secs();
@@ -580,6 +676,8 @@ impl Trainer {
             images,
             step_p50_secs,
             step_p99_secs,
+            slab_high_water_bytes: epoch_slab_hw,
+            host_resident_bytes: epoch_host_hw,
         };
         info!(
             "epoch {epoch}: loss {:.4} acc {:.3} eval_acc {} [{:.1}s, {:.0} img/s]",
@@ -630,6 +728,16 @@ impl Trainer {
             counters.set("link_faults", off.link_faults);
             counters.set("link_retries", off.link_retries);
         }
+        // Degradation counters come from the hub so the report's table
+        // and the `/metrics` exposition agree; per-kind rung counts use
+        // the same stable tags as the episode's JSON.
+        if let Some(deg) = self.degradation.as_ref() {
+            counters.set("degrade_events", self.hub.degrade_events());
+            counters.set("degrade_rungs", self.hub.degrade_rungs());
+            for action in &deg.actions {
+                counters.add(&format!("degrade_rung_{}", action.kind()), 1);
+            }
+        }
         let mut phase_stats = Vec::new();
         if self.tracer.is_enabled() {
             // The offload engine owns a trace buffer that only flushes on
@@ -658,6 +766,23 @@ impl Trainer {
             .offload
             .as_ref()
             .and_then(|o| DriftReport::from_observed(o.predicted_step_secs, &self.step_hist));
+        // Its memory twin: predicted watermarks vs the maxima the hub saw.
+        let mem = self.mem_timeline.as_ref().and_then(|tl| {
+            MemWatermarkReport::from_observed(tl, self.hub.max_host_resident_bytes(), self.hub.steps())
+        });
+        if let Some(path) = self.cfg.memlog.as_ref() {
+            if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+                std::fs::create_dir_all(parent).ok();
+            }
+            match std::fs::write(path, crate::obs::memlog_csv(&self.memlog_rows)) {
+                Ok(()) => info!(
+                    "wrote per-step memory timeline to {} ({} rows)",
+                    path.display(),
+                    self.memlog_rows.len()
+                ),
+                Err(e) => warn_!("could not write memlog to {}: {e}", path.display()),
+            }
+        }
         Ok(TrainReport {
             model: self.cfg.model.clone(),
             pipeline: self.cfg.pipeline.name(),
@@ -676,6 +801,7 @@ impl Trainer {
             phase_stats,
             counters,
             drift,
+            mem,
             history: std::mem::take(&mut self.history),
         })
     }

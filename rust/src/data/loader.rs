@@ -212,6 +212,10 @@ pub struct LoaderStats {
     pub respawns: AtomicU64,
     /// Corrupted payloads detected by checksum and re-encoded.
     pub corruptions_detected: AtomicU64,
+    /// Decoded batches currently queued between the loader and the
+    /// consumer (incremented before each downstream send, decremented as
+    /// the consumer receives — a live gauge, not a cumulative counter).
+    pub out_queue_depth: AtomicU64,
 }
 
 impl LoaderStats {
@@ -228,6 +232,11 @@ impl LoaderStats {
 
     pub fn blocked_secs(&self) -> f64 {
         self.blocked_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Current loader → consumer queue depth (0 in synchronous mode).
+    pub fn queue_depth(&self) -> u64 {
+        self.out_queue_depth.load(Ordering::Relaxed)
     }
 
     /// Per-worker snapshots (empty when the loader ran synchronously).
@@ -788,6 +797,7 @@ impl EdLoader {
                                 "fault",
                                 Some(("step", step as f64)),
                             );
+                            ctx.stats.out_queue_depth.fetch_add(1, Ordering::Relaxed);
                             let _ = tx.send(Err(LoaderError::WorkerPanicked {
                                 step,
                                 respawns: 0,
@@ -799,6 +809,9 @@ impl EdLoader {
                     let failed = result.is_err();
                     let t1 = Instant::now();
                     let send0 = trace.begin();
+                    // Counted before the send so the consumer-side
+                    // decrement can never observe the gauge at zero.
+                    ctx.stats.out_queue_depth.fetch_add(1, Ordering::Relaxed);
                     if tx.send(result).is_err() {
                         return; // consumer dropped; stop quietly
                     }
@@ -1019,6 +1032,7 @@ impl EdLoader {
                                 .fetch_max(parked.len() as u64, Ordering::Relaxed);
                             trace.counter("reorder-depth", "loader", parked.len() as f64);
                             while let Some(ready) = parked.remove(&next) {
+                                stats.out_queue_depth.fetch_add(1, Ordering::Relaxed);
                                 if out_tx.send(ready).is_err() {
                                     return; // consumer dropped
                                 }
@@ -1078,6 +1092,9 @@ impl EdLoader {
                 };
                 match msg {
                     Some(res) => {
+                        // Paired with the producer-side increment (which
+                        // happens-before this recv, so no underflow).
+                        stats.out_queue_depth.fetch_sub(1, Ordering::Relaxed);
                         if let Some(g) = gate.as_ref() {
                             // One message (payload or error) left the
                             // pipeline; its permit comes back here.

@@ -49,7 +49,10 @@ pub enum DegradationAction {
 }
 
 impl DegradationAction {
-    fn kind(&self) -> &'static str {
+    /// Stable kebab-case tag for this rung — shared by the JSON renderer,
+    /// the trainer's counter registry (`degrade_rung_<kind>`) and the
+    /// `/metrics` exposition, so every surface names rungs identically.
+    pub fn kind(&self) -> &'static str {
         match self {
             DegradationAction::SteppedDownFrontier { .. } => "stepped-down-frontier",
             DegradationAction::ShrunkLookahead { .. } => "shrunk-lookahead",

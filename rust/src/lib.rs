@@ -98,6 +98,7 @@ pub mod fault;
 pub mod memory;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod trace;
 pub mod util;
@@ -129,6 +130,7 @@ pub mod prelude {
     };
     pub use crate::memory::simulator::{simulate, MemoryReport};
     pub use crate::models::{arch_by_name, ArchProfile};
+    pub use crate::obs::{MemTimeline, MemWatermarkReport, MetricsHub, ObsServer, StepSample};
     pub use crate::runtime::Runtime;
     pub use crate::trace::{CounterRegistry, DriftReport, ThreadTracer, TraceLog, Tracer};
 }

@@ -185,6 +185,38 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         return Ok(());
     }
 
+    if let Some(path) = cli.get("memdrift") {
+        // Memory twin of --drift: read a `train --memlog` CSV back in and
+        // compare its observed high-water marks against the watermarks
+        // the same planning flags predict today.
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("--memdrift: could not read {path}: {e}"))?;
+        let observed = optorch::obs::MemlogObserved::parse_csv(&text)
+            .map_err(|e| anyhow!("--memdrift: {e}"))?;
+        let mut req = base
+            .clone()
+            .planner_named(kind_specs.last().expect("kind set is never empty"))
+            .arena(true);
+        if let Some(v) = cli.get("spill") {
+            req = req.memory_budget_field("--spill", v);
+        } else if let Some(v) = cli.get("budget") {
+            req = req.memory_budget_field("--budget", v);
+        }
+        let outcome = req.run().map_err(plan_err)?;
+        let timeline = optorch::obs::MemTimeline::from_outcome(&outcome).ok_or_else(|| {
+            anyhow!("--memdrift: the plan staged no lifetimes to compare against")
+        })?;
+        let rep = observed
+            .against(&timeline)
+            .ok_or_else(|| anyhow!("--memdrift: no data rows in {path}"))?;
+        if cli.has_flag("json") {
+            println!("{}", rep.to_json().to_string());
+        } else {
+            println!("{}", rep.to_markdown_line());
+        }
+        return Ok(());
+    }
+
     if cli.has_flag("degrade") {
         // Walk the graceful-degradation ladder instead of erroring on an
         // infeasible budget: cheaper frontier point → shrunk lookahead →

@@ -149,6 +149,12 @@ impl ArenaAllocator {
         self.generation
     }
 
+    /// Current bump-pointer position — live slab occupancy within the
+    /// step (resets to 0 at every `begin_step`).
+    pub fn used_bytes(&self) -> usize {
+        self.top
+    }
+
     /// Largest bump-pointer position ever reached — how much of the slab
     /// a workload actually uses.
     pub fn high_water_bytes(&self) -> usize {

@@ -177,6 +177,9 @@ pub struct OffloadStats {
     pub link_retries: u64,
     /// Stall seconds charged to retries, backoff and slowed transfers.
     pub retry_stall_secs: f64,
+    /// Peak concurrent host-resident bytes observed within any step —
+    /// the runtime's answer to the plan's `host_peak_bytes` prediction.
+    pub host_resident_peak_bytes: u64,
 }
 
 impl OffloadStats {
@@ -222,6 +225,12 @@ pub struct OffloadEngine {
     link_faults: u64,
     link_retries: u64,
     retry_stall_secs: f64,
+    /// In-step host-resident high-water of the most recent step (the
+    /// held buffers all drain by step end, so this must be tracked
+    /// inside the replay, not sampled at step boundaries).
+    last_step_host_peak: u64,
+    /// Run-global max of `last_step_host_peak`.
+    host_resident_peak: u64,
 }
 
 impl OffloadEngine {
@@ -254,6 +263,8 @@ impl OffloadEngine {
             link_faults: 0,
             link_retries: 0,
             retry_stall_secs: 0.0,
+            last_step_host_peak: 0,
+            host_resident_peak: 0,
         }
     }
 
@@ -302,6 +313,8 @@ impl OffloadEngine {
         let mut link_faults = 0u64;
         let mut link_retries = 0u64;
         let mut retry_stall = 0.0f64;
+        let mut resident = 0u64;
+        let mut resident_peak = 0u64;
         let mut first_err: Option<TransferError> = None;
         for op in ops {
             let op_t0 = match self.trace.as_ref() {
@@ -374,12 +387,15 @@ impl OffloadEngine {
                     held[op.slot] = Some(pool.acquire(op.bytes));
                     evictions += 1;
                     bytes_evicted += op.bytes as u64;
+                    resident += op.bytes as u64;
+                    resident_peak = resident_peak.max(resident);
                 }
                 TransferKind::Prefetch => {
                     if let Some(buf) = held[op.slot].take() {
                         pool.release(buf);
                         prefetches += 1;
                         bytes_prefetched += op.bytes as u64;
+                        resident = resident.saturating_sub(op.bytes as u64);
                     }
                 }
             }
@@ -403,6 +419,8 @@ impl OffloadEngine {
         self.link_faults += link_faults;
         self.link_retries += link_retries;
         self.retry_stall_secs += retry_stall;
+        self.last_step_host_peak = resident_peak;
+        self.host_resident_peak = self.host_resident_peak.max(resident_peak);
         self.steps += 1;
         match first_err {
             None => Ok(()),
@@ -429,7 +447,14 @@ impl OffloadEngine {
             link_faults: self.link_faults,
             link_retries: self.link_retries,
             retry_stall_secs: self.retry_stall_secs,
+            host_resident_peak_bytes: self.host_resident_peak,
         }
+    }
+
+    /// In-step host-resident high-water of the most recent step (0
+    /// before the first step or when the plan does not spill).
+    pub fn last_step_host_peak_bytes(&self) -> u64 {
+        self.last_step_host_peak
     }
 }
 
@@ -500,6 +525,11 @@ mod tests {
         assert_eq!(s.bytes_prefetched, plan.spilled_bytes);
         // every host buffer returned to the pool at step end
         assert!(engine.held.iter().all(Option::is_none));
+        // in-step host residency was observed and never exceeded the
+        // plan's predicted host peak
+        assert!(engine.last_step_host_peak_bytes() > 0);
+        assert!(s.host_resident_peak_bytes <= plan.host_peak_bytes);
+        assert_eq!(s.host_resident_peak_bytes, engine.last_step_host_peak_bytes());
     }
 
     #[test]

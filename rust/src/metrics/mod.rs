@@ -193,6 +193,13 @@ pub struct EpochRecord {
     pub step_p50_secs: Option<f64>,
     /// Observed per-step wall-time p99 (seconds); `None` when tracing off.
     pub step_p99_secs: Option<f64>,
+    /// Observed activation-slab high-water over the epoch (bytes). 0 when
+    /// the run planned no arena — recorded unconditionally, no tracing or
+    /// metrics endpoint required.
+    pub slab_high_water_bytes: u64,
+    /// Observed host-spill pool resident high-water over the epoch
+    /// (bytes). 0 when nothing spilled — recorded unconditionally.
+    pub host_resident_bytes: u64,
 }
 
 impl EpochRecord {
@@ -225,15 +232,18 @@ impl History {
     }
 
     /// CSV with a fixed header; `None` cells are empty (the step quantile
-    /// columns stay empty whenever tracing is off).
+    /// columns stay empty whenever tracing is off). The memory watermark
+    /// columns are always populated — 0 means "no arena / no spill", not
+    /// "not measured".
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "epoch,train_loss,train_accuracy,eval_loss,eval_accuracy,wall_secs,\
-             images_per_sec,step_p50_secs,step_p99_secs\n",
+             images_per_sec,step_p50_secs,step_p99_secs,slab_high_water_bytes,\
+             host_resident_bytes\n",
         );
         for e in &self.epochs {
             s.push_str(&format!(
-                "{},{:.6},{:.4},{},{},{:.3},{:.1},{},{}\n",
+                "{},{:.6},{:.4},{},{},{:.3},{:.1},{},{},{},{}\n",
                 e.epoch,
                 e.train_loss,
                 e.train_accuracy,
@@ -243,6 +253,8 @@ impl History {
                 e.images_per_sec(),
                 e.step_p50_secs.map(|v| format!("{v:.6}")).unwrap_or_default(),
                 e.step_p99_secs.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                e.slab_high_water_bytes,
+                e.host_resident_bytes,
             ));
         }
         s
@@ -367,6 +379,8 @@ mod tests {
             images: 300,
             step_p50_secs: None,
             step_p99_secs: None,
+            slab_high_water_bytes: 0,
+            host_resident_bytes: 0,
         });
         h.push(EpochRecord {
             epoch: 1,
@@ -378,15 +392,20 @@ mod tests {
             images: 300,
             step_p50_secs: Some(0.004),
             step_p99_secs: Some(0.009),
+            slab_high_water_bytes: 2048,
+            host_resident_bytes: 512,
         });
         let csv = h.to_csv();
         assert_eq!(csv.lines().count(), 3);
         let header = csv.lines().next().unwrap();
         assert!(header.starts_with("epoch,train_loss,"), "{header}");
-        assert!(header.ends_with(",images_per_sec,step_p50_secs,step_p99_secs"), "{header}");
-        // tracing off → trailing step-quantile cells stay empty
-        assert!(csv.lines().nth(1).unwrap().ends_with(",,1.500,200.0,,"));
-        assert!(csv.lines().nth(2).unwrap().ends_with(",0.004000,0.009000"));
+        assert!(
+            header.ends_with(",step_p50_secs,step_p99_secs,slab_high_water_bytes,host_resident_bytes"),
+            "{header}"
+        );
+        // tracing off → step-quantile cells empty, watermark cells 0
+        assert!(csv.lines().nth(1).unwrap().ends_with(",,1.500,200.0,,,0,0"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",0.004000,0.009000,2048,512"));
         assert_eq!(h.final_eval_accuracy(), Some(0.52));
         assert!((h.total_wall_secs() - 2.9).abs() < 1e-9);
     }
@@ -403,6 +422,8 @@ mod tests {
             images: 10,
             step_p50_secs: None,
             step_p99_secs: None,
+            slab_high_water_bytes: 0,
+            host_resident_bytes: 0,
         };
         assert_eq!(e.images_per_sec(), 0.0);
     }

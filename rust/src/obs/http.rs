@@ -1,0 +1,235 @@
+//! [`ObsServer`]: a dependency-free HTTP/1.1 listener for metrics and
+//! health probes.
+//!
+//! One `std::net::TcpListener` on one background thread, serving:
+//!
+//! | path       | response                                                |
+//! |------------|---------------------------------------------------------|
+//! | `/metrics` | Prometheus text exposition 0.0.4 from the shared hub    |
+//! | `/healthz` | `200 ok` while the process is up (liveness)             |
+//! | `/readyz`  | `200 ready`, or `503 degraded` while the degradation    |
+//! |            | ladder is active or the loader watchdog has fired       |
+//!
+//! The listener is non-blocking so shutdown is prompt: `Drop` raises a
+//! flag and joins the thread (the accept loop polls it every few
+//! milliseconds). Requests are parsed down to the request line only —
+//! scrapers send no meaningful headers and we close after every
+//! response (`Connection: close`).
+
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use super::MetricsHub;
+
+/// How often the accept loop checks the shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Per-connection read/write deadline — a stuck scraper must not wedge
+/// the (single-threaded) serve loop.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Largest request head we bother reading before answering.
+const MAX_REQUEST_BYTES: usize = 4096;
+
+/// The metrics/health endpoint. Binding starts the serve thread;
+/// dropping the server stops it and joins the thread.
+pub struct ObsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port 0 picks a free one) and
+    /// serve `hub` until the returned server is dropped.
+    pub fn bind(addr: &str, hub: Arc<MetricsHub>) -> io::Result<ObsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let handle = thread::Builder::new()
+            .name("obs-http".to_string())
+            .spawn(move || serve(listener, hub, flag))?;
+        Ok(ObsServer { addr: local, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves the actual port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn serve(listener: TcpListener, hub: Arc<MetricsHub>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Serve inline: a scrape is a handful of microseconds of
+                // string formatting, and probes arrive one at a time.
+                let _ = handle_conn(stream, &hub);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            // Transient accept errors (ECONNABORTED, EMFILE, …): back off
+            // briefly and keep listening rather than killing the endpoint.
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, hub: &MetricsHub) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let path = match read_request_path(&mut stream)? {
+        Some(p) => p,
+        None => return Ok(()),
+    };
+    let (status, content_type, body) = route(&path, hub);
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())
+}
+
+/// Read up to the end of the request head and return the request-line
+/// path, or `None` on anything that is not a parseable `GET`-style line.
+fn read_request_path(stream: &mut TcpStream) -> io::Result<Option<String>> {
+    let mut buf = [0u8; 512];
+    let mut head: Vec<u8> = Vec::with_capacity(512);
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => break,
+            Err(e) => return Err(e),
+        };
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_REQUEST_BYTES {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let line = match text.lines().next() {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m, p),
+        _ => return Ok(None),
+    };
+    // HEAD is answered like GET (body included — fine for probes).
+    if method != "GET" && method != "HEAD" {
+        return Ok(Some(format!("!{method}")));
+    }
+    Ok(Some(path.to_string()))
+}
+
+fn route(path: &str, hub: &MetricsHub) -> (&'static str, &'static str, String) {
+    const TEXT: &str = "text/plain; charset=utf-8";
+    const PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+    if path.starts_with('!') {
+        return ("405 Method Not Allowed", TEXT, "method not allowed\n".to_string());
+    }
+    // Strip any query string: probes sometimes append cache-busters.
+    let path = path.split('?').next().unwrap_or(path);
+    match path {
+        "/metrics" => ("200 OK", PROM, hub.prometheus_text()),
+        "/healthz" => ("200 OK", TEXT, "ok\n".to_string()),
+        "/readyz" => {
+            if hub.is_ready() {
+                ("200 OK", TEXT, "ready\n".to_string())
+            } else {
+                ("503 Service Unavailable", TEXT, "degraded\n".to_string())
+            }
+        }
+        _ => ("404 Not Found", TEXT, "not found\n".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hub() -> Arc<MetricsHub> {
+        Arc::new(MetricsHub::new())
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+            .expect("write");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("read");
+        out
+    }
+
+    #[test]
+    fn serves_metrics_health_and_404() {
+        let h = hub();
+        h.record_step(crate::obs::StepSample { step: 1, ..Default::default() });
+        let server = ObsServer::bind("127.0.0.1:0", Arc::clone(&h)).expect("bind");
+        let addr = server.local_addr();
+
+        let metrics = get(addr, "/metrics");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"), "{metrics}");
+        assert!(metrics.contains("version=0.0.4"), "{metrics}");
+        assert!(metrics.contains("optorch_steps_total 1"), "{metrics}");
+
+        let health = get(addr, "/healthz");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404 Not Found\r\n"), "{missing}");
+    }
+
+    #[test]
+    fn readyz_flips_to_503_while_degraded() {
+        let h = hub();
+        let server = ObsServer::bind("127.0.0.1:0", Arc::clone(&h)).expect("bind");
+        let addr = server.local_addr();
+        assert!(get(addr, "/readyz").starts_with("HTTP/1.1 200 OK\r\n"));
+        h.note_degrade_event(2);
+        assert!(get(addr, "/readyz").starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        h.set_degraded(false);
+        assert!(get(addr, "/readyz").starts_with("HTTP/1.1 200 OK\r\n"));
+    }
+
+    #[test]
+    fn rejects_non_get_methods() {
+        let server = ObsServer::bind("127.0.0.1:0", hub()).expect("bind");
+        let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+        stream.write_all(b"POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").expect("write");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("read");
+        assert!(out.starts_with("HTTP/1.1 405 "), "{out}");
+    }
+
+    #[test]
+    fn drop_stops_the_listener() {
+        let h = hub();
+        let addr = {
+            let server = ObsServer::bind("127.0.0.1:0", Arc::clone(&h)).expect("bind");
+            server.local_addr()
+        };
+        // Dropped: new connections must be refused (give the OS a beat).
+        thread::sleep(Duration::from_millis(20));
+        assert!(TcpStream::connect(addr).is_err(), "listener still accepting after drop");
+    }
+}

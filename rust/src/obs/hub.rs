@@ -1,0 +1,456 @@
+//! [`MetricsHub`]: per-step gauge/counter sampling with a fixed-capacity
+//! ring buffer and a Prometheus text-exposition renderer.
+//!
+//! The hub is the single shared sink between the train loop (producer:
+//! one [`StepSample`] per step) and the [`ObsServer`](super::ObsServer)
+//! scrape thread (consumer: renders the latest gauges plus lifetime
+//! counters). Recording holds a short uncontended mutex over the
+//! pre-allocated ring — no allocation ever happens on the hot path, and
+//! a full ring drops the sample and counts it (`samples_dropped`), the
+//! same contract as `trace::event`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Smoothing factor of the step-time EWMA gauge.
+const EWMA_ALPHA: f64 = 0.1;
+
+/// Default ring capacity: enough for the recent scrape window without
+/// unbounded growth on long runs (`--memlog` keeps the full timeline).
+const DEFAULT_RING_CAPACITY: usize = 1024;
+
+/// One train step's observed memory/queue/timing gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepSample {
+    /// Global step index (monotonic across epochs and replans).
+    pub step: u64,
+    /// Observed arena slab high-water mark: max concurrent live bytes of
+    /// the resident lifetimes replayed over the step's schedule.
+    pub slab_high_water_bytes: u64,
+    /// Host-spill pool resident high-water within the step (0 when the
+    /// plan does not spill).
+    pub host_resident_bytes: u64,
+    /// Runtime staging-arena occupancy after the step.
+    pub scratch_used_bytes: u64,
+    /// Runtime staging-arena run-global high-water mark.
+    pub scratch_high_water_bytes: u64,
+    /// Link retries accumulated so far (backlog of retried transfers).
+    pub link_retry_backlog: u64,
+    /// Decoded batches queued between the loader and the trainer.
+    pub loader_queue_depth: u64,
+    /// Degradation-ladder rung currently applied (0 = healthy).
+    pub degrade_rung: u64,
+    /// Wall seconds of the step.
+    pub step_secs: f64,
+}
+
+impl StepSample {
+    /// CSV header of the `--memlog` per-step timeline (matches
+    /// [`StepSample::to_csv_row`] column for column).
+    pub fn csv_header() -> &'static str {
+        "step,slab_high_water_bytes,host_resident_bytes,scratch_used_bytes,\
+         scratch_high_water_bytes,link_retry_backlog,loader_queue_depth,\
+         degrade_rung,step_secs"
+    }
+
+    /// One `--memlog` CSV row (no trailing newline).
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{:.6}",
+            self.step,
+            self.slab_high_water_bytes,
+            self.host_resident_bytes,
+            self.scratch_used_bytes,
+            self.scratch_high_water_bytes,
+            self.link_retry_backlog,
+            self.loader_queue_depth,
+            self.degrade_rung,
+            self.step_secs,
+        )
+    }
+}
+
+/// Fixed-capacity sample ring: pre-allocated once, never grows. The
+/// latest sample is kept separately so scrape gauges stay current even
+/// while the ring is saturated and dropping.
+struct Ring {
+    samples: Vec<StepSample>,
+    capacity: usize,
+    dropped: u64,
+    latest: Option<StepSample>,
+}
+
+/// Shared metrics sink: per-step samples, lifetime counters, readiness.
+///
+/// Cheap to share (`Arc<MetricsHub>`); all mutation goes through `&self`.
+pub struct MetricsHub {
+    ring: Mutex<Ring>,
+    steps_total: AtomicU64,
+    degrade_events_total: AtomicU64,
+    degrade_rungs_total: AtomicU64,
+    /// Step-time EWMA, stored as `f64::to_bits` (NaN bits until the
+    /// first sample lands).
+    ewma_step_bits: AtomicU64,
+    /// Run-global maxima across every recorded sample (survive ring
+    /// wrap-around and drops).
+    max_slab_high_water: AtomicU64,
+    max_host_resident: AtomicU64,
+    degraded: AtomicBool,
+    watchdog_fired: AtomicBool,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// A hub whose ring holds at most `capacity` samples (further
+    /// samples are dropped-and-counted, never allocated).
+    pub fn with_capacity(capacity: usize) -> MetricsHub {
+        let capacity = capacity.max(1);
+        MetricsHub {
+            ring: Mutex::new(Ring {
+                samples: Vec::with_capacity(capacity),
+                capacity,
+                dropped: 0,
+                latest: None,
+            }),
+            steps_total: AtomicU64::new(0),
+            degrade_events_total: AtomicU64::new(0),
+            degrade_rungs_total: AtomicU64::new(0),
+            ewma_step_bits: AtomicU64::new(f64::NAN.to_bits()),
+            max_slab_high_water: AtomicU64::new(0),
+            max_host_resident: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            watchdog_fired: AtomicBool::new(false),
+        }
+    }
+
+    /// Record one train step. No allocation: a full ring drops the
+    /// sample and bumps the drop counter; `latest` and the run-global
+    /// maxima are still refreshed so gauges never go stale.
+    pub fn record_step(&self, sample: StepSample) {
+        {
+            let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+            if ring.samples.len() < ring.capacity {
+                ring.samples.push(sample);
+            } else {
+                ring.dropped += 1;
+            }
+            ring.latest = Some(sample);
+        }
+        self.steps_total.fetch_add(1, Ordering::Relaxed);
+        self.max_slab_high_water.fetch_max(sample.slab_high_water_bytes, Ordering::Relaxed);
+        self.max_host_resident.fetch_max(sample.host_resident_bytes, Ordering::Relaxed);
+        // Single-producer EWMA: the train loop is the only writer, so a
+        // load/store pair is race-free in practice and harmlessly
+        // approximate otherwise.
+        let prev = f64::from_bits(self.ewma_step_bits.load(Ordering::Relaxed));
+        let next = if prev.is_nan() {
+            sample.step_secs
+        } else {
+            (1.0 - EWMA_ALPHA) * prev + EWMA_ALPHA * sample.step_secs
+        };
+        self.ewma_step_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Mark a degradation episode: `rungs` ladder actions were applied.
+    pub fn note_degrade_event(&self, rungs: u64) {
+        self.degrade_events_total.fetch_add(1, Ordering::Relaxed);
+        self.degrade_rungs_total.fetch_add(rungs, Ordering::Relaxed);
+        self.set_degraded(true);
+    }
+
+    /// Flip the `/readyz` degraded latch (set while the `run_degraded`
+    /// ladder's plan is live).
+    pub fn set_degraded(&self, degraded: bool) {
+        self.degraded.store(degraded, Ordering::Relaxed);
+    }
+
+    /// Latch the loader-watchdog failure; `/readyz` reports 503 from
+    /// here on (a fired watchdog is not recoverable mid-run).
+    pub fn set_watchdog_fired(&self) {
+        self.watchdog_fired.store(true, Ordering::Relaxed);
+    }
+
+    /// Ready = no active degradation ladder and no fired watchdog.
+    pub fn is_ready(&self) -> bool {
+        !self.degraded.load(Ordering::Relaxed) && !self.watchdog_fired.load(Ordering::Relaxed)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps_total.load(Ordering::Relaxed)
+    }
+
+    /// Samples dropped because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).dropped
+    }
+
+    /// Samples currently held (≤ capacity, never more).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).capacity
+    }
+
+    /// The most recently recorded sample (kept fresh even when full).
+    pub fn latest(&self) -> Option<StepSample> {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).latest
+    }
+
+    /// Step-time EWMA in seconds; `None` before the first sample.
+    pub fn ewma_step_secs(&self) -> Option<f64> {
+        let v = f64::from_bits(self.ewma_step_bits.load(Ordering::Relaxed));
+        if v.is_nan() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Run-global observed slab high-water across all samples.
+    pub fn max_slab_high_water_bytes(&self) -> u64 {
+        self.max_slab_high_water.load(Ordering::Relaxed)
+    }
+
+    /// Run-global observed host-resident high-water across all samples.
+    pub fn max_host_resident_bytes(&self) -> u64 {
+        self.max_host_resident.load(Ordering::Relaxed)
+    }
+
+    pub fn degrade_events(&self) -> u64 {
+        self.degrade_events_total.load(Ordering::Relaxed)
+    }
+
+    pub fn degrade_rungs(&self) -> u64 {
+        self.degrade_rungs_total.load(Ordering::Relaxed)
+    }
+
+    /// Render every series in Prometheus text-exposition format 0.0.4
+    /// (`# HELP` / `# TYPE` preamble per metric, one sample each).
+    pub fn prometheus_text(&self) -> String {
+        let latest = self.latest().unwrap_or_default();
+        let mut out = String::with_capacity(2048);
+        let mut gauge = |name: &str, help: &str, value: f64| {
+            push_metric(&mut out, name, help, "gauge", value);
+        };
+        gauge("optorch_up", "Whether the trainer run is live.", 1.0);
+        gauge(
+            "optorch_ready",
+            "Whether the run is healthy (no degradation ladder, no fired watchdog).",
+            if self.is_ready() { 1.0 } else { 0.0 },
+        );
+        gauge(
+            "optorch_arena_slab_high_water_bytes",
+            "Observed arena slab high-water mark of the last step.",
+            latest.slab_high_water_bytes as f64,
+        );
+        gauge(
+            "optorch_arena_slab_high_water_max_bytes",
+            "Run-global observed arena slab high-water mark.",
+            self.max_slab_high_water_bytes() as f64,
+        );
+        gauge(
+            "optorch_arena_scratch_used_bytes",
+            "Runtime staging-arena occupancy after the last step.",
+            latest.scratch_used_bytes as f64,
+        );
+        gauge(
+            "optorch_arena_scratch_high_water_bytes",
+            "Runtime staging-arena run-global high-water mark.",
+            latest.scratch_high_water_bytes as f64,
+        );
+        gauge(
+            "optorch_host_resident_bytes",
+            "Host-spill pool resident high-water within the last step.",
+            latest.host_resident_bytes as f64,
+        );
+        gauge(
+            "optorch_host_resident_max_bytes",
+            "Run-global observed host-spill resident high-water mark.",
+            self.max_host_resident_bytes() as f64,
+        );
+        gauge(
+            "optorch_link_retry_backlog",
+            "Host-link transfer retries accumulated so far.",
+            latest.link_retry_backlog as f64,
+        );
+        gauge(
+            "optorch_loader_queue_depth",
+            "Decoded batches queued between the loader and the trainer.",
+            latest.loader_queue_depth as f64,
+        );
+        gauge(
+            "optorch_degrade_rung",
+            "Degradation-ladder rung currently applied (0 = healthy).",
+            latest.degrade_rung as f64,
+        );
+        gauge(
+            "optorch_step_time_ewma_seconds",
+            "Exponentially weighted moving average of step wall time.",
+            self.ewma_step_secs().unwrap_or(0.0),
+        );
+        let mut counter = |name: &str, help: &str, value: u64| {
+            push_metric(&mut out, name, help, "counter", value as f64);
+        };
+        counter("optorch_steps_total", "Train steps completed.", self.steps());
+        counter(
+            "optorch_samples_dropped_total",
+            "Step samples dropped because the metrics ring was full.",
+            self.dropped(),
+        );
+        counter(
+            "optorch_degrade_events_total",
+            "Degradation-ladder episodes triggered.",
+            self.degrade_events(),
+        );
+        counter(
+            "optorch_degrade_rungs_total",
+            "Degradation-ladder rungs applied across all episodes.",
+            self.degrade_rungs(),
+        );
+        out
+    }
+}
+
+impl Default for MetricsHub {
+    fn default() -> MetricsHub {
+        MetricsHub::new()
+    }
+}
+
+/// Append one metric in exposition format. Values are integral gauges or
+/// counters almost everywhere; format with enough precision for the EWMA
+/// without trailing-zero noise on integers.
+fn push_metric(out: &mut String, name: &str, help: &str, kind: &str, value: f64) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+    out.push_str(name);
+    out.push(' ');
+    if value.fract() == 0.0 && value.abs() < 9e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value:.9}"));
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(step: u64) -> StepSample {
+        StepSample {
+            step,
+            slab_high_water_bytes: 1000 + step,
+            host_resident_bytes: 10 * step,
+            scratch_used_bytes: 64,
+            scratch_high_water_bytes: 128,
+            link_retry_backlog: 1,
+            loader_queue_depth: 2,
+            degrade_rung: 0,
+            step_secs: 0.010,
+        }
+    }
+
+    #[test]
+    fn ring_drops_and_counts_when_full() {
+        let hub = MetricsHub::with_capacity(4);
+        for i in 0..10 {
+            hub.record_step(sample(i));
+        }
+        assert_eq!(hub.len(), 4, "ring never grows past capacity");
+        assert_eq!(hub.dropped(), 6);
+        assert_eq!(hub.steps(), 10);
+        // latest + maxima stay fresh across drops
+        assert_eq!(hub.latest().unwrap().step, 9);
+        assert_eq!(hub.max_slab_high_water_bytes(), 1009);
+        assert_eq!(hub.max_host_resident_bytes(), 90);
+    }
+
+    #[test]
+    fn ewma_smooths_step_time() {
+        let hub = MetricsHub::new();
+        assert_eq!(hub.ewma_step_secs(), None);
+        hub.record_step(StepSample { step_secs: 0.010, ..StepSample::default() });
+        assert!((hub.ewma_step_secs().unwrap() - 0.010).abs() < 1e-12);
+        hub.record_step(StepSample { step_secs: 0.020, ..StepSample::default() });
+        let e = hub.ewma_step_secs().unwrap();
+        assert!((e - 0.011).abs() < 1e-12, "0.9*0.010 + 0.1*0.020, got {e}");
+    }
+
+    #[test]
+    fn readiness_latches_watchdog_and_tracks_degradation() {
+        let hub = MetricsHub::new();
+        assert!(hub.is_ready());
+        hub.note_degrade_event(3);
+        assert!(!hub.is_ready());
+        assert_eq!(hub.degrade_events(), 1);
+        assert_eq!(hub.degrade_rungs(), 3);
+        hub.set_degraded(false);
+        assert!(hub.is_ready(), "degradation clears when a healthy plan lands");
+        hub.set_watchdog_fired();
+        hub.set_degraded(false);
+        assert!(!hub.is_ready(), "a fired watchdog never clears");
+    }
+
+    #[test]
+    fn exposition_contains_every_series_and_parses() {
+        let hub = MetricsHub::new();
+        hub.record_step(sample(1));
+        let text = hub.prometheus_text();
+        for name in [
+            "optorch_up",
+            "optorch_ready",
+            "optorch_arena_slab_high_water_bytes",
+            "optorch_arena_scratch_used_bytes",
+            "optorch_arena_scratch_high_water_bytes",
+            "optorch_host_resident_bytes",
+            "optorch_link_retry_backlog",
+            "optorch_loader_queue_depth",
+            "optorch_degrade_rung",
+            "optorch_step_time_ewma_seconds",
+            "optorch_steps_total",
+            "optorch_samples_dropped_total",
+            "optorch_degrade_events_total",
+            "optorch_degrade_rungs_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing {name}\n{text}");
+            assert!(
+                text.lines().any(|l| l.starts_with(&format!("{name} "))),
+                "no sample line for {name}\n{text}"
+            );
+        }
+        // every non-comment line is `name value` with a numeric value
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.split(' ');
+            let name = parts.next().unwrap();
+            assert!(name.starts_with("optorch_"), "{line}");
+            let v = parts.next().expect("value");
+            assert!(v.parse::<f64>().is_ok(), "unparseable value in {line}");
+            assert_eq!(parts.next(), None, "trailing tokens in {line}");
+        }
+    }
+
+    #[test]
+    fn csv_row_matches_header_arity() {
+        let header_cols = StepSample::csv_header().split(',').count();
+        let row = sample(7).to_csv_row();
+        assert_eq!(row.split(',').count(), header_cols);
+        assert!(row.starts_with("7,1007,70,64,128,1,2,0,0.010000"), "{row}");
+    }
+}

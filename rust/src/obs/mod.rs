@@ -1,0 +1,33 @@
+//! Live observability: metrics hub, health/metrics HTTP endpoint, and
+//! memory-watermark telemetry.
+//!
+//! PR 8's tracing layer closed the *time* loop — `DriftReport` compares
+//! the planner's predicted step seconds against observed train-step
+//! spans. This module closes the *memory* loop and makes a running
+//! trainer scrape-able:
+//!
+//! - [`MetricsHub`] — typed gauge/counter series sampled once per train
+//!   step into a fixed-capacity ring buffer. Same hot-path contract as
+//!   `trace::event`: no allocation while recording; a full ring drops
+//!   the sample and counts it instead of growing.
+//! - [`ObsServer`] — a dependency-free blocking HTTP listener
+//!   (`std::net::TcpListener`, one thread) serving Prometheus
+//!   text-exposition `/metrics`, `/healthz` (liveness) and `/readyz`
+//!   (503 while the `run_degraded` ladder is active or the loader
+//!   watchdog has fired). Enabled via `train --metrics_addr`.
+//! - [`MemTimeline`] / [`MemWatermarkReport`] — the memory twin of the
+//!   time `DriftReport`: the facade's predicted peaks (DP peak, packed
+//!   slab total, spilled host floor) versus the per-step high-water
+//!   marks replayed from the resident lifetimes plus the engine's
+//!   observed host residency. Surfaced in `TrainReport`, as a
+//!   `train --memlog out.csv` per-step timeline, and offline via
+//!   `plan --memdrift FILE`.
+
+mod http;
+mod hub;
+mod watermark;
+
+pub use http::ObsServer;
+pub use hub::{MetricsHub, StepSample};
+pub(crate) use watermark::memlog_csv;
+pub use watermark::{MemTimeline, MemWatermarkReport, MemlogObserved};

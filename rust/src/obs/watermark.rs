@@ -1,0 +1,406 @@
+//! Memory-watermark telemetry: predicted peaks versus observed
+//! high-water marks — the memory twin of the time
+//! [`DriftReport`](crate::trace::DriftReport).
+//!
+//! The facade predicts three watermarks: the DP simulated peak
+//! (`plan.peak_bytes`), the packed device total (`base + slab`, what the
+//! runtime actually reserves) and — under spilling — the host-resident
+//! floor. [`MemTimeline`] replays the staged resident lifetimes into a
+//! per-schedule-step live-bytes series once at plan time; every train
+//! step then *observes* the slab high-water mark from that series (the
+//! schedule is deterministic per step) alongside the offload engine's
+//! measured host residency. [`MemWatermarkReport`] folds the run into
+//! one predicted-vs-observed line for `TrainReport`, and
+//! [`MemlogObserved`] reads a `--memlog` CSV back for offline
+//! `plan --memdrift` replay.
+
+use crate::memory::arena::Lifetimes;
+use crate::memory::outcome::PlanOutcome;
+use crate::util::bench::fmt_bytes;
+use crate::util::json::{n, obj, Json};
+
+use super::StepSample;
+
+/// Predicted watermarks plus the per-schedule-step live-bytes series of
+/// one plan — extracted from a [`PlanOutcome`] before the trainer drops
+/// it, cheap to query every step.
+#[derive(Clone, Debug)]
+pub struct MemTimeline {
+    /// Live resident bytes at each schedule step (delta-sweep over the
+    /// staged lifetimes; length = schedule steps).
+    live_bytes: Vec<u64>,
+    /// Static (params + momentum + input) bytes outside the slab.
+    base_bytes: u64,
+    /// DP simulated peak of the chosen plan.
+    predicted_peak_bytes: u64,
+    /// Packed device total (`base + slab`) the runtime reserves.
+    predicted_packed_bytes: u64,
+    /// Peak host bytes the spill composition predicts; `None` when the
+    /// plan keeps everything device-resident.
+    predicted_host_peak_bytes: Option<u64>,
+}
+
+impl MemTimeline {
+    /// Extract the timeline from a planning outcome. `None` when the run
+    /// staged no lifetimes (plan-only paths without an arena).
+    pub fn from_outcome(outcome: &PlanOutcome) -> Option<MemTimeline> {
+        let lifetimes = outcome.lifetimes()?;
+        let predicted_host_peak_bytes = outcome
+            .spill
+            .as_ref()
+            .filter(|s| !s.steps.is_empty())
+            .map(|s| s.host_peak_bytes);
+        Some(MemTimeline {
+            live_bytes: live_series(lifetimes),
+            base_bytes: lifetimes.base_bytes,
+            predicted_peak_bytes: outcome.plan.peak_bytes,
+            predicted_packed_bytes: outcome.device_peak_packed(),
+            predicted_host_peak_bytes,
+        })
+    }
+
+    /// Observed slab high-water mark: max concurrent live bytes over the
+    /// schedule (what a per-step probe of the arena would report).
+    pub fn slab_high_water_bytes(&self) -> u64 {
+        self.live_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Observed device peak: static base plus the slab high-water mark.
+    /// For non-spill plans this equals the DP predicted peak exactly
+    /// (the arena's `base + max live == peak` invariant).
+    pub fn observed_peak_bytes(&self) -> u64 {
+        self.base_bytes + self.slab_high_water_bytes()
+    }
+
+    pub fn base_bytes(&self) -> u64 {
+        self.base_bytes
+    }
+
+    pub fn predicted_peak_bytes(&self) -> u64 {
+        self.predicted_peak_bytes
+    }
+
+    pub fn predicted_packed_bytes(&self) -> u64 {
+        self.predicted_packed_bytes
+    }
+
+    pub fn predicted_host_peak_bytes(&self) -> Option<u64> {
+        self.predicted_host_peak_bytes
+    }
+
+    /// Live bytes at schedule step `i` (0 past the end).
+    pub fn live_at(&self, i: usize) -> u64 {
+        self.live_bytes.get(i).copied().unwrap_or(0)
+    }
+
+    /// Number of schedule steps in the series.
+    pub fn len(&self) -> usize {
+        self.live_bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live_bytes.is_empty()
+    }
+}
+
+/// Per-schedule-step live bytes: the same delta sweep as
+/// [`Lifetimes::max_live_bytes`] with the prefix sums kept.
+fn live_series(lt: &Lifetimes) -> Vec<u64> {
+    let mut delta = vec![0i128; lt.steps + 1];
+    for t in &lt.tensors {
+        delta[t.start] += t.bytes as i128;
+        delta[t.end] -= t.bytes as i128;
+    }
+    let mut live = 0i128;
+    let mut series = Vec::with_capacity(lt.steps);
+    for d in delta.iter().take(lt.steps) {
+        live += *d;
+        series.push(live as u64);
+    }
+    series
+}
+
+/// Predicted-vs-observed memory watermarks of one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemWatermarkReport {
+    /// DP simulated peak of the chosen plan.
+    pub predicted_peak_bytes: u64,
+    /// Packed device total (`base + slab`) the runtime reserves.
+    pub predicted_packed_bytes: u64,
+    /// Predicted peak host bytes; `None` for non-spill plans.
+    pub predicted_host_peak_bytes: Option<u64>,
+    /// Observed device peak (`base + slab high-water`).
+    pub observed_peak_bytes: u64,
+    /// Observed slab high-water mark (max concurrent live bytes).
+    pub observed_slab_high_water_bytes: u64,
+    /// Observed peak host-resident bytes (0 when nothing spilled).
+    pub observed_host_peak_bytes: u64,
+    /// Train steps the observation covers.
+    pub steps: u64,
+}
+
+impl MemWatermarkReport {
+    /// Fold a run's observations against the plan's timeline. `None`
+    /// when no step completed (nothing was observed).
+    pub fn from_observed(
+        timeline: &MemTimeline,
+        observed_host_peak_bytes: u64,
+        steps: u64,
+    ) -> Option<MemWatermarkReport> {
+        if steps == 0 {
+            return None;
+        }
+        Some(MemWatermarkReport {
+            predicted_peak_bytes: timeline.predicted_peak_bytes,
+            predicted_packed_bytes: timeline.predicted_packed_bytes,
+            predicted_host_peak_bytes: timeline.predicted_host_peak_bytes,
+            observed_peak_bytes: timeline.observed_peak_bytes(),
+            observed_slab_high_water_bytes: timeline.slab_high_water_bytes(),
+            observed_host_peak_bytes,
+            steps,
+        })
+    }
+
+    /// Observed-vs-predicted relative error against the DP peak, in
+    /// percent (negative = observed under prediction).
+    pub fn rel_err_pct(&self) -> f64 {
+        if self.predicted_peak_bytes == 0 {
+            return 0.0;
+        }
+        (self.observed_peak_bytes as f64 - self.predicted_peak_bytes as f64)
+            / self.predicted_peak_bytes as f64
+            * 100.0
+    }
+
+    /// One markdown line, the memory twin of the drift line.
+    pub fn to_markdown_line(&self) -> String {
+        let mut line = format!(
+            "mem-watermark: predicted peak {} (packed {}) vs observed peak {} ({:+.1}%); \
+             slab high-water {}",
+            fmt_bytes(self.predicted_peak_bytes),
+            fmt_bytes(self.predicted_packed_bytes),
+            fmt_bytes(self.observed_peak_bytes),
+            self.rel_err_pct(),
+            fmt_bytes(self.observed_slab_high_water_bytes),
+        );
+        match self.predicted_host_peak_bytes {
+            Some(p) => line.push_str(&format!(
+                ", host resident {} of {} predicted",
+                fmt_bytes(self.observed_host_peak_bytes),
+                fmt_bytes(p),
+            )),
+            None => line.push_str(", no spill"),
+        }
+        line.push_str(&format!(" over {} steps", self.steps));
+        line
+    }
+
+    /// Stable JSON rendering (absent host prediction renders as `null`).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("predicted_peak_bytes", n(self.predicted_peak_bytes as f64)),
+            ("predicted_packed_bytes", n(self.predicted_packed_bytes as f64)),
+            (
+                "predicted_host_peak_bytes",
+                self.predicted_host_peak_bytes.map(|v| n(v as f64)).unwrap_or(Json::Null),
+            ),
+            ("observed_peak_bytes", n(self.observed_peak_bytes as f64)),
+            ("observed_slab_high_water_bytes", n(self.observed_slab_high_water_bytes as f64)),
+            ("observed_host_peak_bytes", n(self.observed_host_peak_bytes as f64)),
+            ("rel_err_pct", n(self.rel_err_pct())),
+            ("steps", n(self.steps as f64)),
+        ])
+    }
+}
+
+/// Observed watermarks read back from a `--memlog` CSV — the offline
+/// half of `plan --memdrift FILE`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemlogObserved {
+    /// Max `slab_high_water_bytes` across rows.
+    pub slab_high_water_bytes: u64,
+    /// Max `host_resident_bytes` across rows.
+    pub host_peak_bytes: u64,
+    /// Number of data rows (train steps logged).
+    pub steps: u64,
+}
+
+impl MemlogObserved {
+    /// Parse a `--memlog` export. Columns are located by header name, so
+    /// the file survives column reordering; rows that fail to parse are
+    /// an error (a truncated log should not silently under-report).
+    pub fn parse_csv(text: &str) -> Result<MemlogObserved, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or("memlog: empty file")?;
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        let col = |name: &str| {
+            cols.iter()
+                .position(|c| *c == name)
+                .ok_or_else(|| format!("memlog: missing column '{name}' in header '{header}'"))
+        };
+        let slab_idx = col("slab_high_water_bytes")?;
+        let host_idx = col("host_resident_bytes")?;
+        let mut observed =
+            MemlogObserved { slab_high_water_bytes: 0, host_peak_bytes: 0, steps: 0 };
+        for (i, line) in lines.enumerate() {
+            let cells: Vec<&str> = line.split(',').collect();
+            let cell = |idx: usize| -> Result<u64, String> {
+                cells
+                    .get(idx)
+                    .and_then(|c| c.trim().parse::<u64>().ok())
+                    .ok_or_else(|| format!("memlog: bad row {} '{line}'", i + 2))
+            };
+            observed.slab_high_water_bytes = observed.slab_high_water_bytes.max(cell(slab_idx)?);
+            observed.host_peak_bytes = observed.host_peak_bytes.max(cell(host_idx)?);
+            observed.steps += 1;
+        }
+        if observed.steps == 0 {
+            return Err("memlog: no data rows".to_string());
+        }
+        Ok(observed)
+    }
+
+    /// Build the drift report against a freshly planned timeline, as if
+    /// the logged run had just finished.
+    pub fn against(&self, timeline: &MemTimeline) -> Option<MemWatermarkReport> {
+        if self.steps == 0 {
+            return None;
+        }
+        Some(MemWatermarkReport {
+            predicted_peak_bytes: timeline.predicted_peak_bytes(),
+            predicted_packed_bytes: timeline.predicted_packed_bytes(),
+            predicted_host_peak_bytes: timeline.predicted_host_peak_bytes(),
+            observed_peak_bytes: timeline.base_bytes() + self.slab_high_water_bytes,
+            observed_slab_high_water_bytes: self.slab_high_water_bytes,
+            observed_host_peak_bytes: self.host_peak_bytes,
+            steps: self.steps,
+        })
+    }
+}
+
+/// Render a full `--memlog` CSV from recorded samples.
+pub(crate) fn memlog_csv(samples: &[StepSample]) -> String {
+    let mut out = String::with_capacity(64 * (samples.len() + 1));
+    out.push_str(StepSample::csv_header());
+    out.push('\n');
+    for s in samples {
+        out.push_str(&s.to_csv_row());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pipeline;
+    use crate::memory::pipeline::PlanRequest;
+
+    fn try_outcome(budget: Option<u64>) -> Option<PlanOutcome> {
+        let mut req = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .pipeline(Pipeline::parse("ed+sc").expect("pipeline"))
+            .batch(8);
+        if let Some(b) = budget {
+            req = req.memory_budget(b).spill(true);
+        }
+        req.run().ok()
+    }
+
+    fn outcome(budget: Option<u64>) -> PlanOutcome {
+        try_outcome(budget).expect("plan")
+    }
+
+    #[test]
+    fn non_spill_observed_peak_equals_dp_peak() {
+        let out = outcome(None);
+        let tl = MemTimeline::from_outcome(&out).expect("timeline");
+        assert_eq!(tl.observed_peak_bytes(), out.plan.peak_bytes);
+        assert!(tl.observed_peak_bytes() <= out.device_peak_packed());
+        // the series actually hits the max (equality on ≥ 1 step)
+        let hw = tl.slab_high_water_bytes();
+        assert!((0..tl.len()).any(|i| tl.live_at(i) == hw));
+    }
+
+    #[test]
+    fn spill_observed_stays_under_packed_total() {
+        let base = outcome(None);
+        // Probe downward for a budget the spill composition can still
+        // meet (the exact floor depends on the arch).
+        let packed = base.device_peak_packed();
+        let out = [95u64, 90, 80, 70]
+            .iter()
+            .find_map(|pct| try_outcome(Some(packed * pct / 100)))
+            .unwrap_or(base);
+        let tl = MemTimeline::from_outcome(&out).expect("timeline");
+        assert!(tl.observed_peak_bytes() <= out.device_peak_packed());
+        if out.is_spill() {
+            assert!(tl.predicted_host_peak_bytes().is_some());
+        }
+    }
+
+    #[test]
+    fn report_line_and_json_round_out() {
+        let out = outcome(None);
+        let tl = MemTimeline::from_outcome(&out).expect("timeline");
+        assert!(MemWatermarkReport::from_observed(&tl, 0, 0).is_none());
+        let rep = MemWatermarkReport::from_observed(&tl, 0, 24).expect("report");
+        assert_eq!(rep.steps, 24);
+        assert!((rep.rel_err_pct()).abs() < 1e-9, "non-spill is exact");
+        let line = rep.to_markdown_line();
+        assert!(line.starts_with("mem-watermark: predicted peak "), "{line}");
+        assert!(line.contains("no spill"), "{line}");
+        assert!(line.ends_with("over 24 steps"), "{line}");
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"predicted_host_peak_bytes\":null"), "{json}");
+        assert!(json.contains("\"steps\":24"), "{json}");
+    }
+
+    #[test]
+    fn memlog_roundtrip_recovers_watermarks() {
+        let samples: Vec<StepSample> = (0..5)
+            .map(|i| StepSample {
+                step: i,
+                slab_high_water_bytes: 100 + i,
+                host_resident_bytes: 7 * i,
+                step_secs: 0.001,
+                ..Default::default()
+            })
+            .collect();
+        let csv = memlog_csv(&samples);
+        assert!(csv.starts_with("step,slab_high_water_bytes,host_resident_bytes,"));
+        assert_eq!(csv.lines().count(), 6);
+        let obs = MemlogObserved::parse_csv(&csv).expect("parse");
+        assert_eq!(obs.steps, 5);
+        assert_eq!(obs.slab_high_water_bytes, 104);
+        assert_eq!(obs.host_peak_bytes, 28);
+    }
+
+    #[test]
+    fn memlog_parse_rejects_garbage() {
+        assert!(MemlogObserved::parse_csv("").is_err());
+        assert!(MemlogObserved::parse_csv("a,b,c\n1,2,3\n").is_err(), "missing columns");
+        let header = StepSample::csv_header();
+        assert!(
+            MemlogObserved::parse_csv(&format!("{header}\n")).is_err(),
+            "header but no rows"
+        );
+        assert!(
+            MemlogObserved::parse_csv(&format!("{header}\n1,x,0,0,0,0,0,0,0.1\n")).is_err(),
+            "unparseable cell"
+        );
+    }
+
+    #[test]
+    fn memlog_observed_against_fresh_plan() {
+        let out = outcome(None);
+        let tl = MemTimeline::from_outcome(&out).expect("timeline");
+        let obs = MemlogObserved {
+            slab_high_water_bytes: tl.slab_high_water_bytes(),
+            host_peak_bytes: 0,
+            steps: 12,
+        };
+        let rep = obs.against(&tl).expect("report");
+        assert_eq!(rep.observed_peak_bytes, out.plan.peak_bytes);
+        assert_eq!(rep.steps, 12);
+    }
+}

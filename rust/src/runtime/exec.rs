@@ -271,6 +271,13 @@ impl LoadedModel {
         self.offload.borrow().as_ref().map(OffloadEngine::stats)
     }
 
+    /// Host-pool resident high-water within the most recent replayed step
+    /// (`None` when no spill plan is installed) — the per-step gauge
+    /// behind `optorch_host_resident_bytes`.
+    pub fn offload_step_host_peak(&self) -> Option<u64> {
+        self.offload.borrow().as_ref().map(OffloadEngine::last_step_host_peak_bytes)
+    }
+
     /// Inject (or clear) a deterministic link-fault model on the installed
     /// offload engine. No-op until [`LoadedModel::configure_offload`] ran.
     pub fn configure_link_faults(&self, link: Option<crate::memory::offload::LinkFaults>) {

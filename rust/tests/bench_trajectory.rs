@@ -1,0 +1,135 @@
+//! Bench-trajectory tracker: diff freshly emitted `BENCH_*.json` figures
+//! against the committed snapshots in `BENCH_baseline/`, failing on a
+//! >10% regression of any tracked lower-is-better figure.
+//!
+//! The flow in CI's bench-smoke job: the `OPTORCH_BENCH_CHECK=1` bench
+//! runs write `BENCH_*.json` into the crate root, then this test runs
+//! and compares them. Under a plain `cargo test` (no bench artifacts on
+//! disk) each comparison **skips** rather than fails, so tier-1 stays
+//! hermetic.
+//!
+//! Baselines are committed JSON (`{"figures": {name: value}}`). The
+//! initial seeds sit at the benches' own hard-gate levels; once CI has
+//! measured numbers, tightening a baseline turns the 10% band into a
+//! real ratchet. Keep noise headroom when you tighten — the band is
+//! multiplicative, so a 0.1%-overhead baseline would gate at 0.11%.
+
+use optorch::util::json::Json;
+use std::path::PathBuf;
+
+/// Crate root: tests run with CWD = the crate, same place the benches
+/// drop their `BENCH_*.json`.
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Fresh bench output, if the bench has run. Benches write to the CWD
+/// they were invoked from, so probe both the invocation CWD and the
+/// crate root.
+fn fresh(name: &str) -> Option<Json> {
+    let candidates = [PathBuf::from(name), crate_root().join(name)];
+    let text = candidates.iter().find_map(|p| std::fs::read_to_string(p).ok())?;
+    Some(Json::parse(&text).unwrap_or_else(|e| panic!("{name}: fresh output is not JSON: {e:?}")))
+}
+
+fn baseline(name: &str) -> (PathBuf, Json) {
+    let path = crate_root().join("BENCH_baseline").join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing committed baseline {}: {e}", path.display()));
+    let json = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("{}: baseline is not JSON: {e:?}", path.display()));
+    (path, json)
+}
+
+fn figure(json: &Json, key: &str, what: &str) -> f64 {
+    json.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("{what}: missing numeric figure '{key}'"))
+}
+
+/// Allowed regression band: 10% over the committed snapshot.
+const BAND: f64 = 1.10;
+
+/// Compare every tracked figure of one bench; returns the failures.
+fn diff(name: &str, tracked: &[&str]) -> Vec<String> {
+    let (base_path, base) = baseline(name);
+    let base_figures = base
+        .get("figures")
+        .unwrap_or_else(|| panic!("{}: baseline lacks a 'figures' object", base_path.display()));
+    // Tracked keys must exist in the baseline even when the fresh run is
+    // absent — a typo'd table should fail loudly, not skip silently.
+    for key in tracked {
+        figure(base_figures, key, &format!("baseline {name}"));
+    }
+    let Some(fresh) = fresh(name) else {
+        eprintln!("SKIP {name}: no fresh bench output (run the bench first)");
+        return Vec::new();
+    };
+    let mut failures = Vec::new();
+    for key in tracked {
+        let was = figure(base_figures, key, &format!("baseline {name}"));
+        let now = figure(&fresh, key, &format!("fresh {name}"));
+        let allowed = was * BAND;
+        if now > allowed {
+            failures.push(format!(
+                "{name}: {key} regressed {now:.3} > {allowed:.3} (baseline {was:.3} +10%)"
+            ));
+        } else {
+            eprintln!("OK {name}: {key} {now:.3} within {allowed:.3}");
+        }
+    }
+    failures
+}
+
+#[test]
+fn tracked_bench_figures_stay_inside_the_band() {
+    // Lower-is-better figures only; ratios and per-op costs are the
+    // machine-stable subset worth ratcheting.
+    let table: &[(&str, &[&str])] = &[
+        (
+            "BENCH_trace.json",
+            &["enabled_overhead_pct", "disabled_overhead_pct", "ns_per_span_enabled"],
+        ),
+        ("BENCH_obs.json", &["overhead_pct", "ns_per_sample", "us_per_scrape"]),
+    ];
+    let mut failures = Vec::new();
+    for (name, tracked) in table {
+        failures.extend(diff(name, tracked));
+    }
+    assert!(failures.is_empty(), "bench trajectory regressions:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn every_baseline_snapshot_is_wellformed() {
+    let dir = crate_root().join("BENCH_baseline");
+    let entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("missing {}: {e}", dir.display()))
+        .filter_map(Result::ok)
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .collect();
+    assert!(!entries.is_empty(), "BENCH_baseline/ holds no snapshots");
+    for entry in entries {
+        let path = entry.path();
+        let text = std::fs::read_to_string(&path).expect("readable snapshot");
+        let json = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: not JSON: {e:?}", path.display()));
+        let figures = json
+            .get("figures")
+            .and_then(|f| f.as_obj())
+            .unwrap_or_else(|| panic!("{}: lacks a 'figures' object", path.display()));
+        assert!(!figures.is_empty(), "{}: empty figures", path.display());
+        for (key, value) in figures {
+            let v = value
+                .as_f64()
+                .unwrap_or_else(|| panic!("{}: figure '{key}' not numeric", path.display()));
+            assert!(v.is_finite() && v > 0.0, "{}: figure '{key}' = {v}", path.display());
+        }
+    }
+}
+
+/// The band math itself (pure, no filesystem).
+#[test]
+fn regression_band_is_ten_percent() {
+    assert!(5.49 <= 5.0 * BAND);
+    assert!(5.51 > 5.0 * BAND);
+}

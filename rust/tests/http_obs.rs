@@ -1,0 +1,202 @@
+//! End-to-end smoke test of the live-metrics endpoint: a real
+//! `ObsServer` on an OS-assigned port, scraped over TCP with a
+//! hand-rolled HTTP/1.1 client. The stub runtime bails before the
+//! trainer can own the server, so these tests drive the `MetricsHub`
+//! the same way the trainer does — including feeding it a *real*
+//! degradation episode from `PlanRequest::run_degraded` to flip
+//! `/readyz`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use optorch::config::Pipeline;
+use optorch::fault::DegradeTrigger;
+use optorch::memory::pipeline::PlanRequest;
+use optorch::obs::{MemTimeline, MetricsHub, ObsServer, StepSample};
+
+/// Minimal scrape client: one GET, `Connection: close`, returns
+/// (status, headers, body).
+fn get(addr: SocketAddr, path: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+        .expect("request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    (status, head.to_string(), body.to_string())
+}
+
+/// Value of a sample line `name value` in a Prometheus exposition.
+fn series_value(exposition: &str, name: &str) -> f64 {
+    exposition
+        .lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse::<f64>().ok()))
+        .unwrap_or_else(|| panic!("series '{name}' not found in exposition"))
+}
+
+/// Validate the text-exposition grammar: every line is a `# HELP`,
+/// `# TYPE ... gauge|counter` or `name value` sample with a legal
+/// metric name and a float value; every sample is preceded by a TYPE.
+fn assert_parses_as_exposition(text: &str) {
+    let mut typed: Vec<String> = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.split_whitespace();
+            let keyword = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            assert!(
+                keyword == "HELP" || keyword == "TYPE",
+                "unknown comment keyword in '{line}'"
+            );
+            assert!(!name.is_empty(), "comment without metric name: '{line}'");
+            if keyword == "TYPE" {
+                let kind = parts.next().unwrap_or("");
+                assert!(kind == "gauge" || kind == "counter", "bad TYPE in '{line}'");
+                typed.push(name.to_string());
+            }
+            continue;
+        }
+        let (name, value) = line.split_once(' ').unwrap_or_else(|| panic!("bad sample '{line}'"));
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "illegal metric name '{name}'"
+        );
+        assert!(value.trim().parse::<f64>().is_ok(), "non-float value in '{line}'");
+        assert!(typed.contains(&name.to_string()), "sample '{name}' missing its # TYPE");
+    }
+}
+
+fn serve(hub: &Arc<MetricsHub>) -> ObsServer {
+    ObsServer::bind("127.0.0.1:0", hub.clone()).expect("bind ephemeral port")
+}
+
+#[test]
+fn scrape_reflects_a_simulated_run() {
+    // Plan exactly like `train` does and replay 5 steps into the hub.
+    let outcome = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .pipeline(Pipeline::parse("ed+sc").expect("pipeline"))
+        .batch(8)
+        .run()
+        .expect("plan");
+    let timeline = MemTimeline::from_outcome(&outcome).expect("timeline");
+    let hub = Arc::new(MetricsHub::new());
+    for step in 0..5u64 {
+        hub.record_step(StepSample {
+            step,
+            slab_high_water_bytes: timeline.slab_high_water_bytes(),
+            host_resident_bytes: 0,
+            scratch_used_bytes: 64,
+            scratch_high_water_bytes: 128,
+            link_retry_backlog: 0,
+            loader_queue_depth: 2,
+            degrade_rung: 0,
+            step_secs: 0.004,
+        });
+    }
+    let server = serve(&hub);
+    let addr = server.local_addr();
+
+    let (status, head, body) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(
+        head.contains("text/plain; version=0.0.4"),
+        "missing exposition content type: {head}"
+    );
+    assert_parses_as_exposition(&body);
+    for name in [
+        "optorch_up",
+        "optorch_ready",
+        "optorch_arena_slab_high_water_bytes",
+        "optorch_arena_scratch_used_bytes",
+        "optorch_arena_scratch_high_water_bytes",
+        "optorch_host_resident_bytes",
+        "optorch_link_retry_backlog",
+        "optorch_loader_queue_depth",
+        "optorch_degrade_rung",
+        "optorch_step_time_ewma_seconds",
+        "optorch_steps_total",
+        "optorch_samples_dropped_total",
+    ] {
+        assert!(body.contains(&format!("\n{name} ")), "series '{name}' missing:\n{body}");
+    }
+    assert_eq!(series_value(&body, "optorch_steps_total") as u64, 5);
+    assert_eq!(
+        series_value(&body, "optorch_arena_slab_high_water_bytes") as u64,
+        timeline.slab_high_water_bytes(),
+        "gauge must mirror the plan-replayed slab high-water mark"
+    );
+    assert_eq!(series_value(&body, "optorch_loader_queue_depth") as u64, 2);
+    assert!(series_value(&body, "optorch_step_time_ewma_seconds") > 0.0);
+
+    // liveness + readiness agree with a healthy run
+    assert_eq!(get(addr, "/healthz").0, 200);
+    let (ready_status, _, ready_body) = get(addr, "/readyz");
+    assert_eq!(ready_status, 200);
+    assert_eq!(ready_body, "ready\n");
+    assert_eq!(series_value(&body, "optorch_ready") as u64, 1);
+}
+
+#[test]
+fn readyz_flips_503_after_a_real_budget_shrink_episode() {
+    let hub = Arc::new(MetricsHub::new());
+    let server = serve(&hub);
+    let addr = server.local_addr();
+    assert_eq!(get(addr, "/readyz").0, 200, "healthy before the fault");
+
+    // Inject the fault the way the trainer's replan path does: a budget
+    // shrink so severe the degradation ladder must walk to a fallback,
+    // then feed the episode's rung count to the hub.
+    let (_outcome, report) = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+        .pipeline(Pipeline::parse("ed+sc").expect("pipeline"))
+        .batch(8)
+        .memory_budget(1)
+        .run_degraded(DegradeTrigger::BudgetShrink { from: None, to: 1 })
+        .expect("the ladder tolerates an infeasible budget");
+    assert!(!report.actions.is_empty(), "a 1-byte budget must cost at least one rung");
+    hub.note_degrade_event(report.actions.len() as u64);
+
+    let (status, _, body) = get(addr, "/readyz");
+    assert_eq!(status, 503, "degraded run must fail readiness");
+    assert_eq!(body, "degraded\n");
+    assert_eq!(get(addr, "/healthz").0, 200, "liveness is unaffected");
+
+    let (_, _, metrics) = get(addr, "/metrics");
+    assert_eq!(series_value(&metrics, "optorch_ready") as u64, 0);
+    assert_eq!(series_value(&metrics, "optorch_degrade_events_total") as u64, 1);
+    assert_eq!(
+        series_value(&metrics, "optorch_degrade_rungs_total") as u64,
+        report.actions.len() as u64,
+        "/metrics and the DegradationReport must agree on rungs"
+    );
+}
+
+#[test]
+fn readyz_latches_on_loader_watchdog() {
+    let hub = Arc::new(MetricsHub::new());
+    let server = serve(&hub);
+    let addr = server.local_addr();
+    assert_eq!(get(addr, "/readyz").0, 200);
+    hub.set_watchdog_fired();
+    assert_eq!(get(addr, "/readyz").0, 503);
+    // the latch never clears — a stalled loader is not a transient
+    assert_eq!(get(addr, "/readyz").0, 503);
+}
+
+#[test]
+fn unknown_paths_and_queries_route_sanely() {
+    let hub = Arc::new(MetricsHub::new());
+    let server = serve(&hub);
+    let addr = server.local_addr();
+    assert_eq!(get(addr, "/nope").0, 404);
+    let (status, _, body) = get(addr, "/healthz?verbose=1");
+    assert_eq!(status, 200, "query strings are stripped");
+    assert_eq!(body, "ok\n");
+}
