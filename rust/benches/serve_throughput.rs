@@ -1,0 +1,194 @@
+//! Serving throughput: the closed-loop serving tier under nominal load
+//! and under overload, plus the plan-cache lookup microbench.
+//!
+//! Three measurements:
+//!
+//! 1. **nominal** — the `configs/serve_resnet.toml` shape (resnet18
+//!    behind a 2 GiB budget): sustained req/s with zero sheds and p99
+//!    under the deadline, all on the deterministic virtual clock (the
+//!    figures are bit-stable across runs);
+//! 2. **overload sweep** — client fleets from matched to saturating
+//!    against a tiny queue and deadline: the shed rate climbs and the
+//!    degradation ladder walks (smaller max batch, then heap fallback);
+//! 3. **cached-plan microbench** — wall-clock `PlanCache` hit cost vs
+//!    one cold forward DP, the "admission costs a probe, not a plan"
+//!    claim in numbers.
+//!
+//! Emits `BENCH_serve.json`. `OPTORCH_BENCH_CHECK=1` runs a fast smoke
+//! pass that *fails the process* (exit 1) when a gate breaks: sheds
+//! under nominal load, p99 over deadline, a forward slab not strictly
+//! below the training slab, an overload run that fails to shed or walk
+//! the ladder, or a cached lookup slower than 10 µs.
+
+use optorch::memory::outcome::PlanOutcome;
+use optorch::memory::pipeline::{PlanError, PlanMode, PlanRequest};
+use optorch::obs::MetricsHub;
+use optorch::serve::{self, PlanCache, PlanKey, ServeConfig, ServeReport};
+use optorch::util::bench::{fmt_bytes, Table};
+use std::time::Instant;
+
+fn run(cfg: &ServeConfig) -> ServeReport {
+    let hub = MetricsHub::new();
+    serve::run(cfg, &hub).expect("serve run")
+}
+
+fn main() {
+    let check = std::env::var("OPTORCH_BENCH_CHECK").is_ok();
+    let mut failures = 0u32;
+    let requests = if check { 192 } else { 512 };
+
+    // ---- nominal: the serve_resnet.toml shape ----
+    let nominal = ServeConfig {
+        budget: Some(2 << 30),
+        requests,
+        ..ServeConfig::default_for("resnet18")
+    };
+    let rep = run(&nominal);
+    println!(
+        "=== serve: {} nominal ({} requests, {} clients, deadline {} ms, budget {}) ===\n",
+        nominal.model,
+        requests,
+        nominal.clients,
+        nominal.deadline_ms,
+        fmt_bytes(nominal.budget.unwrap()),
+    );
+    println!("{}", rep.to_markdown());
+
+    if rep.shed_total() != 0 {
+        eprintln!("FAIL: {} sheds under nominal load (gate: zero)", rep.shed_total());
+        failures += 1;
+    }
+    if !(rep.p99_ms <= rep.deadline_ms) {
+        eprintln!("FAIL: nominal p99 {:.2} ms over the {:.0} ms deadline", rep.p99_ms, rep.deadline_ms);
+        failures += 1;
+    }
+    if rep.completed != rep.requests {
+        eprintln!("FAIL: completed {} of {} issued", rep.completed, rep.requests);
+        failures += 1;
+    }
+    let train_slab = rep.train_slab_bytes.unwrap_or(0);
+    if !(rep.forward_slab_bytes < train_slab) {
+        eprintln!(
+            "FAIL: forward slab {} not strictly below training slab {}",
+            rep.forward_slab_bytes, train_slab
+        );
+        failures += 1;
+    }
+    if rep.cache_hits <= rep.cache_misses {
+        eprintln!(
+            "FAIL: plan cache not warm ({} hits / {} misses)",
+            rep.cache_hits, rep.cache_misses
+        );
+        failures += 1;
+    }
+
+    // ---- overload sweep: matched → saturating ----
+    println!("=== overload sweep (tiny queue, {} ms deadline) ===\n", 0.05);
+    let mut t = Table::new(&["clients", "shed rate", "rungs", "final max batch"]);
+    let mut overload_shed_rate = 0.0f64;
+    let mut overload_rungs = 0u64;
+    for clients in [8usize, 16, 32] {
+        let cfg = ServeConfig {
+            clients,
+            requests: if check { 300 } else { 600 },
+            think_ms: 0.0,
+            queue_cap: 2,
+            deadline_ms: 0.05,
+            max_batch: 16,
+            shed_window: 16,
+            overload_shed_rate: 0.25,
+            ..ServeConfig::default_for("resnet18")
+        };
+        let r = run(&cfg);
+        let rate = r.shed_total() as f64 / r.requests as f64;
+        let rungs = r.degradation.as_ref().map(|d| d.actions.len() as u64).unwrap_or(0);
+        t.row(&[
+            format!("{clients}"),
+            format!("{:.1}%", rate * 100.0),
+            format!("{rungs}"),
+            format!("{}", r.max_batch_final),
+        ]);
+        if clients == 32 {
+            overload_shed_rate = rate;
+            overload_rungs = rungs;
+            if r.shed_total() == 0 {
+                eprintln!("FAIL: saturating load shed nothing");
+                failures += 1;
+            }
+            if rungs == 0 || r.max_batch_final >= r.max_batch_start {
+                eprintln!("FAIL: sustained overload did not walk the degradation ladder");
+                failures += 1;
+            }
+        }
+    }
+    t.print();
+
+    // ---- cached-plan microbench ----
+    let mut cache = PlanCache::new(4);
+    let key = PlanKey {
+        arch: "resnet18".to_string(),
+        batch: 16,
+        budget: Some(2 << 30),
+        host_bw: nominal.host_bw,
+    };
+    let plan_once = || -> Result<PlanOutcome, PlanError> {
+        PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+            .batch(16)
+            .host_bw(nominal.host_bw)
+            .memory_budget(2 << 30)
+            .mode(PlanMode::Infer)
+            .run()
+    };
+    let cold_start = Instant::now();
+    cache.get_or_insert_with(&key, plan_once).expect("cold plan");
+    let us_cold_plan = cold_start.elapsed().as_micros() as f64;
+    let lookups: u64 = if check { 50_000 } else { 200_000 };
+    let start = Instant::now();
+    for _ in 0..lookups {
+        cache.get_or_insert_with(&key, plan_once).expect("cached plan");
+    }
+    let us_per_cached_plan = start.elapsed().as_micros() as f64 / lookups as f64;
+    println!(
+        "\ncold forward plan {us_cold_plan:.0} µs; cached lookup {us_per_cached_plan:.3} µs \
+         ({} hits, {} misses)",
+        cache.hits(),
+        cache.misses()
+    );
+    if cache.misses() != 1 {
+        eprintln!("FAIL: cached lookups replanned ({} misses)", cache.misses());
+        failures += 1;
+    }
+    if !(us_per_cached_plan < 10.0) {
+        eprintln!("FAIL: cached plan lookup {us_per_cached_plan:.3} µs (gate < 10 µs)");
+        failures += 1;
+    }
+
+    let json = format!(
+        "{{\n  \"requests\": {requests},\n  \
+         \"req_per_sec_nominal\": {:.3},\n  \
+         \"p50_ms_nominal\": {:.4},\n  \"p99_ms_nominal\": {:.4},\n  \
+         \"shed_total_nominal\": {},\n  \
+         \"forward_slab_bytes\": {},\n  \"train_slab_bytes\": {train_slab},\n  \
+         \"overload_shed_rate\": {overload_shed_rate:.4},\n  \
+         \"overload_ladder_rungs\": {overload_rungs},\n  \
+         \"us_per_cold_plan\": {us_cold_plan:.1},\n  \
+         \"us_per_cached_plan\": {us_per_cached_plan:.4}\n}}\n",
+        rep.requests_per_sec,
+        rep.p50_ms,
+        rep.p99_ms,
+        rep.shed_total(),
+        rep.forward_slab_bytes,
+    );
+    match std::fs::write("BENCH_serve.json", json) {
+        Ok(()) => println!("\nwrote BENCH_serve.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
+    }
+
+    if failures > 0 {
+        eprintln!("\n{failures} invariant failure(s)");
+        std::process::exit(1);
+    }
+    if check {
+        println!("\ncheck mode: serving gates hold");
+    }
+}

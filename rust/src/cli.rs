@@ -149,6 +149,27 @@ COMMANDS:
             the one staged PlanRequest→PlanOutcome run as a stable JSON
             document — arena always included, --spill preferred over
             --budget)
+  serve     Serve inference under a device budget. --arch NAME
+            [--budget BYTES] [--max_batch N] [--deadline_ms MS]
+            [--batch_window_ms MS] [--clients N] [--requests N]
+            [--think_ms MS] [--queue_cap N] [--host_bw B/s] [--seed N]
+            [--config FILE] [--metrics_addr HOST:PORT] [--json]
+            Drives a closed-loop synthetic client fleet against the
+            forward-only serving tier: requests coalesce into the largest
+            micro-batch whose cached inference plan (PlanMode::Infer —
+            forward lifetimes only, packed into a slab strictly smaller
+            than training's) fits the budget within the coalescing
+            window; requests the tier cannot finish are shed with a
+            typed reason (queue-full / budget-exceeded /
+            deadline-exceeded), and sustained overload walks the
+            degradation ladder (smaller max batch, then heap-fallback
+            arena). Prints a ServeReport — req/s, p50/p99 latency, shed
+            counts by reason, batch-size histogram, plan-cache and
+            buffer-pool counters, forward-vs-training slab — as
+            markdown, plus JSON under --json. --metrics_addr exposes
+            live queue depth, admitted/shed counters and per-phase
+            latency quantiles on /metrics; /readyz turns 503 while the
+            shed rate over the sample window is nonzero.
   models    List architecture profiles and parameter counts.
   figures   Regenerate all paper figures (shortcut for the benches).
   help      Show this message.

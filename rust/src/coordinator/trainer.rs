@@ -309,17 +309,13 @@ impl Trainer {
             None => (None, None, None, None),
         };
         let hub = Arc::new(MetricsHub::new());
-        let obs_server = match cfg.metrics_addr.as_deref() {
-            Some(addr) => {
-                let server = ObsServer::bind(addr, hub.clone())?;
-                info!(
-                    "metrics endpoint on http://{0}/metrics (health: /healthz, /readyz)",
-                    server.local_addr()
-                );
-                Some(server)
-            }
-            None => None,
-        };
+        let obs_server = crate::obs::spawn_obs_server(cfg.metrics_addr.as_deref(), &hub)?;
+        if let Some(server) = &obs_server {
+            info!(
+                "metrics endpoint on http://{0}/metrics (health: /healthz, /readyz)",
+                server.local_addr()
+            );
+        }
         let state = model.init_state(cfg.seed)?;
         info!(
             "initialized {}/{}: {} state tensors, {} KiB",
@@ -760,6 +756,15 @@ impl Trainer {
                 }
             }
         }
+        // Promote the per-phase quantile tables into the hub so the last
+        // scrapes of a finishing run expose them as
+        // `optorch_phase_seconds{phase,quantile}` gauges, with the
+        // always-recorded step histogram as a `train-step` phase.
+        let mut hub_phases = phase_stats.clone();
+        if !self.step_hist.is_empty() {
+            hub_phases.push(PhaseStat::from_histogram("train-step".to_string(), &self.step_hist));
+        }
+        self.hub.update_phase_stats(&hub_phases);
         // Drift needs no tracing: the step histogram is always recorded,
         // and the prediction comes from the spill planner's cost model.
         let drift = self

@@ -19,6 +19,9 @@ pub enum DegradeTrigger {
     BudgetShrink { from: Option<u64>, to: u64 },
     /// The host link degraded past the retry budget.
     LinkFailure { retries_exhausted: u64 },
+    /// Sustained serving overload: the shed rate over the sample window
+    /// exceeded the configured threshold.
+    Overload { shed_rate: f64, window: usize },
 }
 
 impl fmt::Display for DegradeTrigger {
@@ -33,6 +36,13 @@ impl fmt::Display for DegradeTrigger {
             DegradeTrigger::LinkFailure { retries_exhausted } => {
                 write!(f, "host link failure ({retries_exhausted} retries exhausted)")
             }
+            DegradeTrigger::Overload { shed_rate, window } => {
+                write!(
+                    f,
+                    "sustained overload ({:.0}% shed over {window}-request window)",
+                    shed_rate * 100.0
+                )
+            }
         }
     }
 }
@@ -44,6 +54,9 @@ pub enum DegradationAction {
     SteppedDownFrontier { device_total: u64, recompute_overhead: f64 },
     /// Shrank the spill prefetch lookahead (fewer resident buffers).
     ShrunkLookahead { from: usize, to: usize },
+    /// Halved the serving micro-batcher's maximum batch size (smaller
+    /// cached forward plans, lower per-dispatch latency).
+    ReducedMaxBatch { from: usize, to: usize },
     /// Gave up on the budget: cheapest-memory plan, heap-backed arena.
     HeapFallbackArena,
 }
@@ -56,6 +69,7 @@ impl DegradationAction {
         match self {
             DegradationAction::SteppedDownFrontier { .. } => "stepped-down-frontier",
             DegradationAction::ShrunkLookahead { .. } => "shrunk-lookahead",
+            DegradationAction::ReducedMaxBatch { .. } => "reduced-max-batch",
             DegradationAction::HeapFallbackArena => "heap-fallback-arena",
         }
     }
@@ -73,6 +87,9 @@ impl fmt::Display for DegradationAction {
             }
             DegradationAction::ShrunkLookahead { from, to } => {
                 write!(f, "shrank spill lookahead {from} → {to}")
+            }
+            DegradationAction::ReducedMaxBatch { from, to } => {
+                write!(f, "reduced max batch {from} → {to}")
             }
             DegradationAction::HeapFallbackArena => {
                 write!(f, "heap-fallback arena (budget abandoned)")
@@ -113,6 +130,11 @@ impl DegradationReport {
                 ("kind", s("link-failure")),
                 ("retries_exhausted", n(retries_exhausted as f64)),
             ]),
+            DegradeTrigger::Overload { shed_rate, window } => obj(vec![
+                ("kind", s("overload")),
+                ("shed_rate", n(shed_rate)),
+                ("window", n(window as f64)),
+            ]),
         };
         let actions = arr(
             self.actions
@@ -128,6 +150,10 @@ impl DegradationReport {
                             fields.push(("recompute_overhead", n(*recompute_overhead)));
                         }
                         DegradationAction::ShrunkLookahead { from, to } => {
+                            fields.push(("from", n(*from as f64)));
+                            fields.push(("to", n(*to as f64)));
+                        }
+                        DegradationAction::ReducedMaxBatch { from, to } => {
                             fields.push(("from", n(*from as f64)));
                             fields.push(("to", n(*to as f64)));
                         }
@@ -218,6 +244,30 @@ mod tests {
         assert!(md.contains("stepped down the frontier"), "{md}");
         assert!(md.contains("shrank spill lookahead 2 → 1"), "{md}");
         assert!(md.contains("met budget"), "{md}");
+    }
+
+    #[test]
+    fn overload_rung_renders_and_serializes() {
+        let r = DegradationReport {
+            trigger: DegradeTrigger::Overload { shed_rate: 0.42, window: 64 },
+            actions: vec![DegradationAction::ReducedMaxBatch { from: 32, to: 16 }],
+            met_budget: true,
+            budget: 0,
+            device_total: 1 << 20,
+            predicted_step_secs: None,
+        };
+        let md = r.to_markdown();
+        assert!(md.contains("sustained overload"), "{md}");
+        assert!(md.contains("reduced max batch 32 → 16"), "{md}");
+        let j = r.to_json();
+        assert_eq!(
+            j.get("trigger").unwrap().get("kind").unwrap().as_str().unwrap(),
+            "overload"
+        );
+        let a = &j.get("actions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(a.get("kind").unwrap().as_str().unwrap(), "reduced-max-batch");
+        assert_eq!(a.get("from").unwrap().as_f64().unwrap(), 32.0);
+        crate::util::json::Json::parse(&j.to_string()).unwrap();
     }
 
     #[test]

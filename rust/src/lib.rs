@@ -89,6 +89,25 @@
 //! );
 //! println!("{}", outcome.to_json().to_string());
 //! ```
+//!
+//! ## Inference serving
+//!
+//! [`serve`] is the forward-only twin of the trainer: a closed-loop
+//! synthetic client fleet drives a dynamic micro-batcher whose every
+//! dispatch resolves through a cached `PlanMode::Infer` plan — forward
+//! lifetimes only, packed into a slab strictly smaller than the training
+//! slab for the same arch/batch — with typed admission control (shed
+//! reasons, overload → degradation ladder) and live `/metrics` gauges:
+//!
+//! ```no_run
+//! use optorch::prelude::*;
+//!
+//! let cfg = ServeConfig::default_for("resnet18");
+//! let hub = std::sync::Arc::new(MetricsHub::new());
+//! let report = optorch::serve::run(&cfg, &hub).unwrap();
+//! assert!(report.forward_slab_bytes < report.train_slab_bytes.unwrap());
+//! println!("{}", report.to_markdown());
+//! ```
 
 pub mod cli;
 pub mod config;
@@ -100,6 +119,7 @@ pub mod metrics;
 pub mod models;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod trace;
 pub mod util;
 
@@ -123,7 +143,7 @@ pub mod prelude {
     };
     pub use crate::memory::outcome::PlanOutcome;
     pub use crate::memory::peak::PeakEvaluator;
-    pub use crate::memory::pipeline::{parse_bytes_field, PlanError, PlanRequest};
+    pub use crate::memory::pipeline::{parse_bytes_field, PlanError, PlanMode, PlanRequest};
     pub use crate::memory::planner::{
         pareto_frontier, plan_checkpoints, plan_for_budget, plan_for_budget_packed,
         CheckpointPlan, PlannerKind,
@@ -132,5 +152,8 @@ pub mod prelude {
     pub use crate::models::{arch_by_name, ArchProfile};
     pub use crate::obs::{MemTimeline, MemWatermarkReport, MetricsHub, ObsServer, StepSample};
     pub use crate::runtime::Runtime;
+    pub use crate::serve::{
+        MicroBatcher, PlanCache, ServeConfig, ServeError, ServeReport, ShedReason,
+    };
     pub use crate::trace::{CounterRegistry, DriftReport, ThreadTracer, TraceLog, Tracer};
 }

@@ -14,6 +14,8 @@ use optorch::memory::outcome::PlanOutcome;
 use optorch::memory::pipeline::{parse_bytes_field, PlanError, PlanRequest};
 use optorch::memory::simulator::simulate;
 use optorch::models::{all_arch_names, arch_by_name};
+use optorch::obs::MetricsHub;
+use optorch::serve::ServeConfig;
 use optorch::util::bench::{fmt_bytes, Table};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -30,6 +32,7 @@ fn main() {
         "train" => cmd_train(&cli),
         "memsim" => cmd_memsim(&cli),
         "plan" => cmd_plan(&cli),
+        "serve" => cmd_serve(&cli),
         "models" => cmd_models(),
         "figures" => cmd_figures(),
         "help" | "--help" | "-h" => {
@@ -473,6 +476,36 @@ fn print_spill(outcome: &PlanOutcome) {
             overlap.predicted_step_secs * 1e3
         );
     }
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let file_text = match cli.get("config") {
+        Some(path) => Some(std::fs::read_to_string(path)?),
+        None => None,
+    };
+    let mut overrides: BTreeMap<String, String> = cli.opts.clone();
+    overrides.remove("config");
+    let cfg = ServeConfig::from_sources(file_text.as_deref(), &overrides)
+        .map_err(|e| anyhow!(e))?;
+    let hub = std::sync::Arc::new(MetricsHub::new());
+    let obs_server = optorch::obs::spawn_obs_server(cfg.metrics_addr.as_deref(), &hub)?;
+    if let Some(server) = &obs_server {
+        println!(
+            "metrics endpoint on http://{}/metrics (health: /healthz, /readyz)",
+            server.local_addr()
+        );
+    }
+    println!(
+        "serving {} (max batch {}, deadline {} ms, {} clients, {} requests)",
+        cfg.model, cfg.max_batch, cfg.deadline_ms, cfg.clients, cfg.requests
+    );
+    let rep = optorch::serve::run(&cfg, &hub)?;
+    println!("{}", rep.to_markdown());
+    if cli.has_flag("json") {
+        println!("{}", rep.to_json().to_string());
+    }
+    drop(obs_server);
+    Ok(())
 }
 
 fn cmd_models() -> Result<()> {

@@ -255,6 +255,46 @@ impl Lifetimes {
         Lifetimes { tensors, steps, base_bytes }
     }
 
+    /// Replay the *forward-only* (inference) schedule into live intervals:
+    /// backward, recompute, and optimizer events are dropped entirely, so
+    /// every tensor dies as soon as the forward pass stops needing it.
+    /// Layer `i`'s boundary output lives `[i, i+2)` — defined at its own
+    /// step, consumed by layer `i+1` — except the final output, which is
+    /// the response payload and lives to the end of the schedule. Layer
+    /// internals beyond the boundary are a one-step workspace.
+    ///
+    /// `base_bytes` is [`PeakEvaluator::infer_base_bytes`] (params + input,
+    /// no momentum) and the exactness invariant becomes
+    /// `base_bytes + max_live_bytes() == PeakEvaluator::forward_peak()`
+    /// (property-tested in `tests/prop_serve.rs`). Checkpoint placement is
+    /// irrelevant — nothing is retained for a backward pass — so this takes
+    /// no plan argument.
+    pub fn extract_infer(ev: &PeakEvaluator) -> Lifetimes {
+        let n = ev.depth();
+        let base_bytes = ev.infer_base_bytes();
+        if n == 0 {
+            return Lifetimes { tensors: Vec::new(), steps: 1, base_bytes };
+        }
+        let steps = n;
+        let mut tensors: Vec<TensorLife> = Vec::with_capacity(2 * n);
+        let mut push = |class: TensorClass, layer: usize, bytes: u64, start: usize, end: usize| {
+            if bytes > 0 {
+                tensors.push(TensorLife { class, layer, bytes, start, end });
+            }
+        };
+        for i in 0..n {
+            let out = ev.out_bytes(i);
+            let act = ev.act_bytes(i);
+            // Boundary output: consumed by the next layer's step; the final
+            // layer's output is the response and lives to schedule end.
+            let end = if i + 1 < n { i + 2 } else { n };
+            push(TensorClass::Activation, i, out, i, end);
+            // Internals beyond the boundary exist only while the layer runs.
+            push(TensorClass::Workspace, i, act.saturating_sub(out), i, i + 1);
+        }
+        Lifetimes { tensors, steps, base_bytes }
+    }
+
     /// Maximum concurrent live bytes over the schedule — the exact
     /// activation-peak lower bound any slab must cover.
     pub fn max_live_bytes(&self) -> u64 {
@@ -386,6 +426,41 @@ mod tests {
                 _ => {}
             }
         }
+    }
+
+    #[test]
+    fn infer_replay_matches_forward_peak() {
+        for name in ["resnet18", "efficientnet_b0", "tiny_cnn"] {
+            let arch = arch_by_name(name, (64, 64, 3), 10).unwrap();
+            for p in ["b", "sc", "mp", "ed+mp+sc"] {
+                let ev = PeakEvaluator::new(&arch, pipe(p), 8);
+                let lt = Lifetimes::extract_infer(&ev);
+                assert_eq!(
+                    lt.base_bytes + lt.max_live_bytes(),
+                    ev.forward_peak(),
+                    "{name} [{p}]"
+                );
+                assert_eq!(lt.base_bytes, ev.infer_base_bytes());
+                assert_eq!(lt.steps, arch.layers.len());
+                for t in &lt.tensors {
+                    assert!(t.start < t.end && t.end <= lt.steps, "{t:?}");
+                    assert!(
+                        matches!(t.class, TensorClass::Activation | TensorClass::Workspace),
+                        "forward-only replay must not emit backward classes: {t:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infer_replay_empty_arch() {
+        let arch = ArchProfile { name: "empty".into(), input: (8, 8, 3), layers: vec![] };
+        let ev = PeakEvaluator::new(&arch, pipe("b"), 4);
+        let lt = Lifetimes::extract_infer(&ev);
+        assert!(lt.tensors.is_empty());
+        assert_eq!(lt.steps, 1);
+        assert_eq!(lt.base_bytes + lt.max_live_bytes(), ev.forward_peak());
     }
 
     #[test]

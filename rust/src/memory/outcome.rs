@@ -7,7 +7,7 @@
 use crate::config::Pipeline;
 use crate::memory::arena::{ArenaLayout, ArenaReport, Lifetimes};
 use crate::memory::offload::{OffloadReport, OverlapReport, SpillClass, SpillPlan};
-use crate::memory::pipeline::PlanError;
+use crate::memory::pipeline::{PlanError, PlanMode};
 use crate::memory::planner::{CheckpointPlan, PlannerKind};
 use crate::memory::simulator::MemoryReport;
 use crate::models::ArchProfile;
@@ -23,6 +23,10 @@ pub struct PlanOutcome {
     pub arch: ArchProfile,
     pub pipeline: Pipeline,
     pub batch: usize,
+    /// Whether this plans a full training step or a forward-only
+    /// (inference) pass; [`PlanMode::Infer`] outcomes carry an empty
+    /// checkpoint placement, no frontier and no spill stage.
+    pub mode: PlanMode,
     /// The device budget the run was constrained by, if any.
     pub budget: Option<u64>,
     /// Overlap-model host bandwidth (bytes/s) the run assumed.
@@ -108,6 +112,7 @@ impl PlanOutcome {
             ("arch", s(&self.arch.name)),
             ("pipeline", s(&self.pipeline.name())),
             ("batch", n(self.batch as f64)),
+            ("mode", s(self.mode.name())),
             ("planner", s(&planner_kind_spec(self.plan.kind))),
             (
                 "plan",
@@ -234,10 +239,11 @@ impl PlanOutcome {
     /// stitches, under one heading.
     pub fn to_markdown(&self) -> String {
         let mut md = format!(
-            "### plan: {} / {} @ batch {}\n\n",
+            "### plan: {} / {} @ batch {} ({})\n\n",
             self.arch.name,
             self.pipeline.name(),
-            self.batch
+            self.batch,
+            self.mode.name()
         );
         md.push_str(&plan_summary(&self.plan));
         if let Some(a) = &self.arena {

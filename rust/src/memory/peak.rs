@@ -44,6 +44,11 @@ use crate::models::ArchProfile;
 pub struct PeakEvaluator {
     /// Resident state (params + momentum) + input-batch bytes.
     base: u64,
+    /// Parameter bytes alone — the forward-only resident state (no
+    /// momentum, no gradients).
+    infer_state: u64,
+    /// `infer_state` + input-batch bytes: the inference peak floor.
+    infer_base: u64,
     sc: bool,
     /// Per-layer boundary-output bytes.
     out: Vec<u64>,
@@ -68,7 +73,10 @@ impl PeakEvaluator {
         let b = batch as u64;
         let peb: u64 = if pipeline.mp { 2 } else { 4 };
         let state = arch.param_count() * peb * 2; // params + momentum
-        let base = state + input_bytes(arch, pipeline, batch);
+        let input = input_bytes(arch, pipeline, batch);
+        let base = state + input;
+        let infer_state = arch.param_count() * peb;
+        let infer_base = infer_state + input;
         let out: Vec<u64> = arch.layers.iter().map(|l| l.out_elems() * b * ab).collect();
         let act: Vec<u64> = arch.layers.iter().map(|l| l.act_elems * b * ab).collect();
         let pb: Vec<u64> = arch.layers.iter().map(|l| l.params * peb).collect();
@@ -83,6 +91,8 @@ impl PeakEvaluator {
             .collect();
         PeakEvaluator {
             base,
+            infer_state,
+            infer_base,
             sc: pipeline.sc,
             out,
             act,
@@ -101,6 +111,39 @@ impl PeakEvaluator {
     /// Resident state + input bytes (the peak floor).
     pub fn base_bytes(&self) -> u64 {
         self.base
+    }
+
+    /// Parameter bytes alone — what a forward-only (inference) pass keeps
+    /// resident. No momentum (no optimizer runs) and no gradients.
+    pub fn infer_state_bytes(&self) -> u64 {
+        self.infer_state
+    }
+
+    /// Inference peak floor: parameters + the input batch. The training
+    /// [`PeakEvaluator::base_bytes`] additionally carries momentum.
+    pub fn infer_base_bytes(&self) -> u64 {
+        self.infer_base
+    }
+
+    /// Exact peak of the forward-only (inference) schedule: each layer's
+    /// boundary output lives only until the next layer consumes it, layer
+    /// internals only while their layer runs, and nothing is retained for
+    /// a backward pass. O(depth), allocation-free.
+    ///
+    /// [`Lifetimes::extract_infer`](crate::memory::arena::Lifetimes::extract_infer)
+    /// replays the same schedule into intervals; its exactness invariant is
+    /// `infer_base_bytes + max_live_bytes() == forward_peak()`.
+    pub fn forward_peak(&self) -> u64 {
+        let mut peak = self.infer_base;
+        let mut prev_out = 0u64;
+        for i in 0..self.out.len() {
+            // While layer i runs: its input (the previous boundary) plus
+            // its full stored footprint (internals + own boundary).
+            let footprint = self.act[i].max(self.out[i]);
+            peak = peak.max(self.infer_base + prev_out + footprint);
+            prev_out = self.out[i];
+        }
+        peak
     }
 
     /// Boundary-output bytes of layer `i` — what storing checkpoint `i`

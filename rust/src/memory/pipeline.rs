@@ -38,7 +38,7 @@
 
 use crate::config::{parse_bytes, Pipeline};
 use crate::fault::{DegradationAction, DegradationReport, DegradeTrigger};
-use crate::memory::arena::{plan_arena, summarize, Lifetimes};
+use crate::memory::arena::{pack, plan_arena, summarize, Lifetimes};
 use crate::memory::joint::{joint_spill_for_checkpoints, plan_joint};
 use crate::memory::offload::{
     plan_spill, select_for_budget, simulate_overlap, InfeasibleBudget, OverlapModel,
@@ -89,6 +89,35 @@ impl std::fmt::Display for PlanError {
 }
 
 impl std::error::Error for PlanError {}
+
+/// What the plan schedules for: a full training step (forward + backward +
+/// optimizer — the default) or a forward-only inference pass.
+///
+/// [`PlanMode::Infer`] drops every backward lifetime: no checkpointing
+/// question exists (nothing is retained for a backward pass), so the DP,
+/// the frontier and the spill selection are all bypassed. The evaluator's
+/// [`forward_peak`](crate::memory::peak::PeakEvaluator::forward_peak)
+/// replay is packed directly via
+/// [`Lifetimes::extract_infer`](crate::memory::arena::Lifetimes::extract_infer),
+/// yielding a much tighter slab than any training plan over the same
+/// arch/batch — the margin inference serving's admission control spends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanMode {
+    /// Forward + backward + optimizer (the training schedule).
+    Train,
+    /// Forward only: no gradients, no momentum, no recompute.
+    Infer,
+}
+
+impl PlanMode {
+    /// Stable lowercase tag used by the JSON/markdown renderers.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::Train => "train",
+            PlanMode::Infer => "infer",
+        }
+    }
+}
 
 /// The one [`parse_bytes`] entry point every budget-shaped flag and config
 /// field routes through: `--budget`, `--spill`, `--host_bw`, the config's
@@ -174,6 +203,7 @@ pub struct PlanRequest {
     host_bw: BytesChoice,
     spill_lookahead: usize,
     device_flops_per_sec: f64,
+    mode: PlanMode,
 }
 
 impl PlanRequest {
@@ -193,6 +223,7 @@ impl PlanRequest {
             host_bw: BytesChoice::Bytes(DEFAULT_HOST_BW_BYTES_PER_SEC),
             spill_lookahead: 2,
             device_flops_per_sec: DEFAULT_DEVICE_FLOPS_PER_SEC,
+            mode: PlanMode::Train,
         }
     }
 
@@ -314,6 +345,16 @@ impl PlanRequest {
         self
     }
 
+    /// Schedule mode: [`PlanMode::Train`] (default) plans the full
+    /// forward + backward + optimizer step; [`PlanMode::Infer`] plans a
+    /// forward-only pass (no DP — the exact forward replay packed
+    /// directly, with `checkpoints`, `planner`, `spill` and `frontier`
+    /// knobs ignored).
+    pub fn mode(mut self, mode: PlanMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
     fn resolve_arch(&self) -> Result<ArchProfile, PlanError> {
         match &self.arch {
             ArchSource::Profile(a) => Ok(a.clone()),
@@ -373,6 +414,9 @@ impl PlanRequest {
             None => None,
         };
         let host_bw = self.host_bw.resolve()?;
+        if self.mode == PlanMode::Infer {
+            return self.run_infer(arch, planner, budget, host_bw);
+        }
         let lookahead = self.spill_lookahead.max(1);
         let model = OverlapModel {
             host_bw_bytes_per_sec: host_bw as f64,
@@ -541,6 +585,7 @@ impl PlanRequest {
             arch,
             pipeline: self.pipeline,
             batch: self.batch,
+            mode: PlanMode::Train,
             budget,
             host_bw,
             lookahead,
@@ -553,6 +598,90 @@ impl PlanRequest {
             arena_layout,
             spill,
             overlap,
+        })
+    }
+
+    /// The [`PlanMode::Infer`] composition: the exact forward-only replay
+    /// ([`Lifetimes::extract_infer`]) packed directly — no DP, no frontier,
+    /// no spill selection, no recompute. A budget is a plain fit check
+    /// against the packed forward slab ([`PlanError::BudgetBelowPacked`]
+    /// when it doesn't fit). The staged [`OverlapReport`] carries pure
+    /// forward compute so `predicted_step_secs` feeds latency models
+    /// (the serving micro-batcher's deadline math) the same way training
+    /// overlap feeds the trainer.
+    ///
+    /// [`OverlapReport`]: crate::memory::offload::OverlapReport
+    fn run_infer(
+        &self,
+        arch: ArchProfile,
+        planner: PlannerKind,
+        budget: Option<u64>,
+        host_bw: u64,
+    ) -> Result<PlanOutcome, PlanError> {
+        let ev = PeakEvaluator::new(&arch, self.pipeline, self.batch);
+        let fwd_peak = ev.forward_peak();
+        let infer_state = ev.infer_state_bytes();
+        let infer_base = ev.infer_base_bytes();
+        let lifetimes = Lifetimes::extract_infer(&ev);
+        let layout = pack(&lifetimes);
+        if let Some(b) = budget {
+            if layout.total_bytes() > b {
+                return Err(PlanError::BudgetBelowPacked(InfeasiblePacked {
+                    budget: b,
+                    min_packed_bytes: layout.total_bytes(),
+                    arch: arch.name.clone(),
+                    batch: self.batch,
+                }));
+            }
+        }
+        // A forward pass retains nothing, so the "plan" is trivially the
+        // zero-checkpoint placement with no recompute.
+        let plan = CheckpointPlan {
+            kind: planner,
+            recompute_overhead: 0.0,
+            peak_bytes: fwd_peak,
+            checkpoints: Vec::new(),
+        };
+        // Forward-only compute, no transfers: the overlap shape every
+        // latency consumer already reads, with an empty link timeline.
+        let compute_secs = arch.flops(self.batch) as f64 / self.device_flops_per_sec;
+        let overlap = crate::memory::offload::OverlapReport {
+            transfers: Vec::new(),
+            step_start_secs: Vec::new(),
+            compute_secs,
+            transfer_secs: 0.0,
+            stall_secs: 0.0,
+            retry_stall_secs: 0.0,
+            predicted_step_secs: compute_secs,
+        };
+        let memory = crate::memory::simulator::MemoryReport {
+            model: arch.name.clone(),
+            pipeline: self.pipeline,
+            batch: self.batch,
+            peak_bytes: fwd_peak,
+            state_bytes: infer_state,
+            input_bytes: infer_base - infer_state,
+            peak_activation_bytes: fwd_peak - infer_base,
+            timeline: Vec::new(),
+        };
+        let arena = if self.arena { Some(summarize(&lifetimes, &layout)) } else { None };
+        Ok(PlanOutcome {
+            arch,
+            pipeline: self.pipeline,
+            batch: self.batch,
+            mode: PlanMode::Infer,
+            budget,
+            host_bw,
+            lookahead: self.spill_lookahead.max(1),
+            memory,
+            plan,
+            frontier: None,
+            frontier_packed_totals: None,
+            arena,
+            arena_lifetimes: Some(lifetimes),
+            arena_layout: Some(layout),
+            spill: None,
+            overlap: Some(overlap),
         })
     }
 
@@ -845,6 +974,83 @@ mod tests {
             .run_degraded(DegradeTrigger::BudgetShrink { from: None, to: 1 })
             .unwrap_err();
         assert!(matches!(err, PlanError::UnknownArch { .. }));
+    }
+
+    #[test]
+    fn infer_mode_packs_the_forward_replay_exactly() {
+        let arch = arch_by_name("resnet18", (64, 64, 3), 10).unwrap();
+        let out = PlanRequest::for_arch(arch.clone())
+            .batch(8)
+            .mode(PlanMode::Infer)
+            .run()
+            .unwrap();
+        assert_eq!(out.mode, PlanMode::Infer);
+        let ev = PeakEvaluator::new(&arch, Pipeline::BASELINE, 8);
+        assert_eq!(out.plan.peak_bytes, ev.forward_peak());
+        assert!(out.plan.checkpoints.is_empty());
+        assert_eq!(out.plan.recompute_overhead, 0.0);
+        assert!(out.spill.is_none() && out.frontier.is_none());
+        // layout validates against its own lifetimes and the exactness
+        // invariant holds through the staged pair
+        let lt = out.lifetimes().unwrap();
+        validate(lt, out.layout().unwrap()).unwrap();
+        assert_eq!(lt.base_bytes + lt.max_live_bytes(), ev.forward_peak());
+        // forward-only compute with no transfers
+        let ov = out.overlap.as_ref().unwrap();
+        assert!(ov.transfers.is_empty());
+        assert_eq!(ov.predicted_step_secs, ov.compute_secs);
+        assert!(ov.compute_secs > 0.0);
+        // JSON carries the mode tag
+        assert_eq!(out.to_json().get("mode").unwrap().as_str().unwrap(), "infer");
+    }
+
+    #[test]
+    fn infer_slab_strictly_smaller_than_training_slab() {
+        let train = PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+            .batch(8)
+            .run()
+            .unwrap();
+        let infer = PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+            .batch(8)
+            .mode(PlanMode::Infer)
+            .run()
+            .unwrap();
+        assert_eq!(train.to_json().get("mode").unwrap().as_str().unwrap(), "train");
+        assert!(
+            infer.device_peak_packed() < train.device_peak_packed(),
+            "forward slab {} should undercut training slab {}",
+            infer.device_peak_packed(),
+            train.device_peak_packed()
+        );
+    }
+
+    #[test]
+    fn infer_mode_budget_is_a_plain_fit_check() {
+        let probe = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .batch(4)
+            .mode(PlanMode::Infer)
+            .run()
+            .unwrap();
+        let need = probe.device_peak_packed();
+        // exactly the packed total fits …
+        let fit = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .batch(4)
+            .mode(PlanMode::Infer)
+            .memory_budget(need)
+            .run()
+            .unwrap();
+        assert!(fit.fits(need));
+        // … one byte less is a typed packed-floor error (never spill)
+        let err = PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+            .batch(4)
+            .mode(PlanMode::Infer)
+            .memory_budget(need - 1)
+            .run()
+            .unwrap_err();
+        match err {
+            PlanError::BudgetBelowPacked(e) => assert_eq!(e.min_packed_bytes, need),
+            other => panic!("expected BudgetBelowPacked, got {other:?}"),
+        }
     }
 
     #[test]

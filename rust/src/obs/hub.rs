@@ -9,6 +9,8 @@
 //! a full ring drops the sample and counts it (`samples_dropped`), the
 //! same contract as `trace::event`.
 
+use crate::metrics::Histogram;
+use crate::trace::PhaseStat;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -80,6 +82,43 @@ struct Ring {
     latest: Option<StepSample>,
 }
 
+/// Sliding admit/shed window behind serve-mode readiness: a fixed-size
+/// boolean ring (true = shed) recording the most recent admission
+/// decisions. Pre-allocated once; recording overwrites in place.
+struct ShedWindow {
+    slots: Vec<bool>,
+    capacity: usize,
+    /// Next write position.
+    head: usize,
+    /// Valid slots (≤ capacity).
+    len: usize,
+}
+
+impl ShedWindow {
+    fn new(capacity: usize) -> ShedWindow {
+        let capacity = capacity.max(1);
+        ShedWindow { slots: vec![false; capacity], capacity, head: 0, len: 0 }
+    }
+
+    fn push(&mut self, shed: bool) {
+        self.slots[self.head] = shed;
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+    }
+
+    /// Shed fraction over the valid window (0.0 when empty).
+    fn rate(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        let sheds = self.slots[..self.len.min(self.capacity)]
+            .iter()
+            .filter(|&&s| s)
+            .count();
+        sheds as f64 / self.len as f64
+    }
+}
+
 /// Shared metrics sink: per-step samples, lifetime counters, readiness.
 ///
 /// Cheap to share (`Arc<MetricsHub>`); all mutation goes through `&self`.
@@ -97,6 +136,19 @@ pub struct MetricsHub {
     max_host_resident: AtomicU64,
     degraded: AtomicBool,
     watchdog_fired: AtomicBool,
+    /// Serve-mode gauges (queue depth, admit/shed counters, batch-size
+    /// histogram, shed window). Inert — and absent from the exposition —
+    /// until [`MetricsHub::enable_serve_mode`] is called.
+    serve_mode: AtomicBool,
+    serve_queue_depth: AtomicU64,
+    serve_admitted_total: AtomicU64,
+    serve_shed_total: AtomicU64,
+    serve_batches_total: AtomicU64,
+    serve_batch_hist: Mutex<Histogram>,
+    shed_window: Mutex<ShedWindow>,
+    /// Per-phase p50/p95/p99 tables promoted from the trace layer,
+    /// rendered as `optorch_phase_seconds{phase,quantile}` gauges.
+    phase_stats: Mutex<Vec<PhaseStat>>,
 }
 
 impl MetricsHub {
@@ -123,7 +175,74 @@ impl MetricsHub {
             max_host_resident: AtomicU64::new(0),
             degraded: AtomicBool::new(false),
             watchdog_fired: AtomicBool::new(false),
+            serve_mode: AtomicBool::new(false),
+            serve_queue_depth: AtomicU64::new(0),
+            serve_admitted_total: AtomicU64::new(0),
+            serve_shed_total: AtomicU64::new(0),
+            serve_batches_total: AtomicU64::new(0),
+            serve_batch_hist: Mutex::new(Histogram::new()),
+            shed_window: Mutex::new(ShedWindow::new(1)),
+            phase_stats: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Switch the hub into serve mode: the serve gauge/counter series
+    /// join the exposition, and readiness additionally requires a zero
+    /// shed rate over the most recent `shed_window` admission decisions.
+    pub fn enable_serve_mode(&self, shed_window: usize) {
+        *self.shed_window.lock().unwrap_or_else(|p| p.into_inner()) =
+            ShedWindow::new(shed_window);
+        self.serve_mode.store(true, Ordering::Relaxed);
+    }
+
+    /// Record one admitted request.
+    pub fn note_admitted(&self) {
+        self.serve_admitted_total.fetch_add(1, Ordering::Relaxed);
+        self.shed_window.lock().unwrap_or_else(|p| p.into_inner()).push(false);
+    }
+
+    /// Record one shed request.
+    pub fn note_shed(&self) {
+        self.serve_shed_total.fetch_add(1, Ordering::Relaxed);
+        self.shed_window.lock().unwrap_or_else(|p| p.into_inner()).push(true);
+    }
+
+    /// Refresh the queue-depth gauge.
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.serve_queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Record one dispatched micro-batch of `size` requests.
+    pub fn record_batch(&self, size: u64) {
+        self.serve_batches_total.fetch_add(1, Ordering::Relaxed);
+        self.serve_batch_hist.lock().unwrap_or_else(|p| p.into_inner()).record(size);
+    }
+
+    /// Shed fraction over the sliding admission window (0.0 while empty
+    /// or outside serve mode).
+    pub fn shed_rate_window(&self) -> f64 {
+        if !self.serve_mode.load(Ordering::Relaxed) {
+            return 0.0;
+        }
+        self.shed_window.lock().unwrap_or_else(|p| p.into_inner()).rate()
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.serve_admitted_total.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.serve_shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Replace the per-phase quantile tables rendered on `/metrics` as
+    /// `optorch_phase_seconds{phase,quantile}` gauges. The trainer pushes
+    /// the trace layer's tables here at run end; the serve loop pushes
+    /// its own phases live.
+    pub fn update_phase_stats(&self, stats: &[PhaseStat]) {
+        let mut held = self.phase_stats.lock().unwrap_or_else(|p| p.into_inner());
+        held.clear();
+        held.extend_from_slice(stats);
     }
 
     /// Record one train step. No allocation: a full ring drops the
@@ -173,9 +292,12 @@ impl MetricsHub {
         self.watchdog_fired.store(true, Ordering::Relaxed);
     }
 
-    /// Ready = no active degradation ladder and no fired watchdog.
+    /// Ready = no active degradation ladder, no fired watchdog, and — in
+    /// serve mode — a zero shed rate over the sliding admission window.
     pub fn is_ready(&self) -> bool {
-        !self.degraded.load(Ordering::Relaxed) && !self.watchdog_fired.load(Ordering::Relaxed)
+        !self.degraded.load(Ordering::Relaxed)
+            && !self.watchdog_fired.load(Ordering::Relaxed)
+            && self.shed_rate_window() == 0.0
     }
 
     pub fn steps(&self) -> u64 {
@@ -316,7 +438,94 @@ impl MetricsHub {
             "Degradation-ladder rungs applied across all episodes.",
             self.degrade_rungs(),
         );
+        self.push_phase_series(&mut out);
+        if self.serve_mode.load(Ordering::Relaxed) {
+            self.push_serve_series(&mut out);
+        }
         out
+    }
+
+    /// `optorch_phase_seconds{phase,quantile}` gauges — one labeled sample
+    /// per stored phase × {0.5, 0.95, 0.99}, one shared HELP/TYPE header.
+    fn push_phase_series(&self, out: &mut String) {
+        let phases = self.phase_stats.lock().unwrap_or_else(|p| p.into_inner());
+        if phases.is_empty() {
+            return;
+        }
+        push_header(
+            out,
+            "optorch_phase_seconds",
+            "Per-phase wall-time quantiles from the trace layer.",
+            "gauge",
+        );
+        for ps in phases.iter() {
+            let phase = sanitize_label(&ps.name);
+            for (q, v) in [("0.5", ps.p50_secs), ("0.95", ps.p95_secs), ("0.99", ps.p99_secs)] {
+                push_labeled_metric(
+                    out,
+                    "optorch_phase_seconds",
+                    &[("phase", &phase), ("quantile", q)],
+                    v,
+                );
+            }
+        }
+    }
+
+    /// Serve-mode series: queue depth, windowed shed rate, admit/shed/batch
+    /// counters, and labeled batch-size quantiles.
+    fn push_serve_series(&self, out: &mut String) {
+        push_metric(
+            out,
+            "optorch_serve_queue_depth",
+            "Pending requests in the serve queue.",
+            "gauge",
+            self.serve_queue_depth.load(Ordering::Relaxed) as f64,
+        );
+        push_metric(
+            out,
+            "optorch_serve_shed_rate_window",
+            "Shed fraction over the sliding admission window.",
+            "gauge",
+            self.shed_rate_window(),
+        );
+        push_metric(
+            out,
+            "optorch_serve_admitted_total",
+            "Requests admitted by the serving admission controller.",
+            "counter",
+            self.admitted() as f64,
+        );
+        push_metric(
+            out,
+            "optorch_serve_shed_total",
+            "Requests shed by the serving admission controller.",
+            "counter",
+            self.shed() as f64,
+        );
+        push_metric(
+            out,
+            "optorch_serve_batches_total",
+            "Micro-batches dispatched by the serving batcher.",
+            "counter",
+            self.serve_batches_total.load(Ordering::Relaxed) as f64,
+        );
+        let hist = self.serve_batch_hist.lock().unwrap_or_else(|p| p.into_inner());
+        if hist.count() > 0 {
+            push_header(
+                out,
+                "optorch_serve_batch_size",
+                "Dispatched micro-batch size quantiles.",
+                "gauge",
+            );
+            for (q, v) in [("0.5", hist.p50()), ("0.95", hist.p95()), ("0.99", hist.p99())] {
+                push_labeled_metric(
+                    out,
+                    "optorch_serve_batch_size",
+                    &[("quantile", q)],
+                    v as f64,
+                );
+            }
+        }
     }
 }
 
@@ -330,6 +539,15 @@ impl Default for MetricsHub {
 /// counters almost everywhere; format with enough precision for the EWMA
 /// without trailing-zero noise on integers.
 fn push_metric(out: &mut String, name: &str, help: &str, kind: &str, value: f64) {
+    push_header(out, name, help, kind);
+    out.push_str(name);
+    out.push(' ');
+    push_value(out, value);
+}
+
+/// `# HELP` / `# TYPE` preamble alone — for metrics that emit several
+/// labeled samples under one name.
+fn push_header(out: &mut String, name: &str, help: &str, kind: &str) {
     out.push_str("# HELP ");
     out.push_str(name);
     out.push(' ');
@@ -339,14 +557,47 @@ fn push_metric(out: &mut String, name: &str, help: &str, kind: &str, value: f64)
     out.push(' ');
     out.push_str(kind);
     out.push('\n');
+}
+
+/// One labeled sample line: `name{k="v",...} value`. Label values must be
+/// pre-sanitized ([`sanitize_label`]) — no spaces, quotes, or backslashes.
+fn push_labeled_metric(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
     out.push_str(name);
-    out.push(' ');
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(v);
+        out.push('"');
+    }
+    out.push_str("} ");
+    push_value(out, value);
+}
+
+fn push_value(out: &mut String, value: f64) {
     if value.fract() == 0.0 && value.abs() < 9e15 {
         out.push_str(&format!("{}", value as i64));
     } else {
         out.push_str(&format!("{value:.9}"));
     }
     out.push('\n');
+}
+
+/// Clamp a free-form phase name into a safe exposition label value:
+/// alphanumerics plus `_-.:` survive, everything else becomes `_`.
+fn sanitize_label(raw: &str) -> String {
+    raw.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.' | ':') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -443,6 +694,82 @@ mod tests {
             let v = parts.next().expect("value");
             assert!(v.parse::<f64>().is_ok(), "unparseable value in {line}");
             assert_eq!(parts.next(), None, "trailing tokens in {line}");
+        }
+    }
+
+    #[test]
+    fn serve_series_gated_on_serve_mode() {
+        let hub = MetricsHub::new();
+        assert!(
+            !hub.prometheus_text().contains("optorch_serve_"),
+            "serve series must be absent outside serve mode"
+        );
+        hub.enable_serve_mode(8);
+        hub.set_queue_depth(3);
+        hub.note_admitted();
+        hub.note_admitted();
+        hub.record_batch(2);
+        let text = hub.prometheus_text();
+        for name in [
+            "optorch_serve_queue_depth",
+            "optorch_serve_shed_rate_window",
+            "optorch_serve_admitted_total",
+            "optorch_serve_shed_total",
+            "optorch_serve_batches_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing {name}\n{text}");
+        }
+        assert!(text.contains("optorch_serve_queue_depth 3"), "{text}");
+        assert!(text.contains("optorch_serve_admitted_total 2"), "{text}");
+        assert!(
+            text.contains("optorch_serve_batch_size{quantile=\"0.5\"}"),
+            "batch-size quantiles render labeled\n{text}"
+        );
+    }
+
+    #[test]
+    fn shed_rate_window_drives_readiness() {
+        let hub = MetricsHub::new();
+        // outside serve mode sheds never affect readiness
+        assert!(hub.is_ready());
+        hub.enable_serve_mode(4);
+        assert!(hub.is_ready(), "empty window is ready");
+        hub.note_shed();
+        assert!(!hub.is_ready(), "nonzero windowed shed rate → 503");
+        assert_eq!(hub.shed(), 1);
+        // the shed ages out of the 4-slot window after 4 admits
+        for _ in 0..4 {
+            hub.note_admitted();
+        }
+        assert_eq!(hub.shed_rate_window(), 0.0);
+        assert!(hub.is_ready(), "shed aged out of the window");
+    }
+
+    #[test]
+    fn phase_gauges_render_labeled_quantiles() {
+        let hub = MetricsHub::new();
+        assert!(!hub.prometheus_text().contains("optorch_phase_seconds"));
+        hub.update_phase_stats(&[PhaseStat {
+            name: "h2d copy".to_string(),
+            count: 10,
+            p50_secs: 0.001,
+            p95_secs: 0.002,
+            p99_secs: 0.004,
+        }]);
+        let text = hub.prometheus_text();
+        assert!(text.contains("# TYPE optorch_phase_seconds gauge"), "{text}");
+        assert!(
+            text.contains("optorch_phase_seconds{phase=\"h2d_copy\",quantile=\"0.5\"} 0.001"),
+            "space in phase name sanitized; p50 rendered\n{text}"
+        );
+        assert!(
+            text.contains("optorch_phase_seconds{phase=\"h2d_copy\",quantile=\"0.99\"} 0.004"),
+            "{text}"
+        );
+        // label values carry no spaces, so the `name value` line grammar
+        // of exposition_contains_every_series_and_parses still holds
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "{line}");
         }
     }
 

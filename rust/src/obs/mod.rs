@@ -31,3 +31,21 @@ pub use http::ObsServer;
 pub use hub::{MetricsHub, StepSample};
 pub(crate) use watermark::memlog_csv;
 pub use watermark::{MemTimeline, MemWatermarkReport, MemlogObserved};
+
+use std::sync::Arc;
+
+/// Bind an [`ObsServer`] over `hub` when `metrics_addr` is set.
+///
+/// Shared by the trainer and the serve loop so both expose the same
+/// `/metrics` + `/healthz` + `/readyz` listener; returns `Ok(None)` when
+/// no address was requested and propagates bind errors so a busy port
+/// fails loudly instead of silently dropping observability.
+pub fn spawn_obs_server(
+    metrics_addr: Option<&str>,
+    hub: &Arc<MetricsHub>,
+) -> std::io::Result<Option<ObsServer>> {
+    match metrics_addr {
+        Some(addr) => ObsServer::bind(addr, Arc::clone(hub)).map(Some),
+        None => Ok(None),
+    }
+}

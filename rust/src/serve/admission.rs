@@ -1,0 +1,155 @@
+//! Admission control: typed shed reasons and the sustained-overload
+//! detector that walks the degradation ladder.
+//!
+//! Every request ends in exactly one of two outcomes — completed, or
+//! shed with a [`ShedReason`] the client can act on. Shedding is a
+//! *feature*: refusing work the tier cannot finish inside its budget
+//! and deadline keeps the latency of admitted work predictable. The
+//! [`OverloadDetector`] watches the recent admit/shed stream and fires
+//! once the shed fraction stays above a threshold, at which point the
+//! engine steps down the ladder (smaller max batch, then heap-fallback
+//! arena) instead of thrashing.
+
+use std::fmt;
+
+/// Why a request was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded request queue was at capacity.
+    QueueFull,
+    /// No micro-batch size — not even 1 — fits the device budget.
+    BudgetExceeded,
+    /// The request would have completed past its deadline; refusing at
+    /// dispatch beats burning device time on an answer nobody waits for.
+    DeadlineExceeded,
+}
+
+impl ShedReason {
+    /// Stable kebab-case tag shared by the JSON report and `/metrics`.
+    pub fn kind(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::BudgetExceeded => "budget-exceeded",
+            ShedReason::DeadlineExceeded => "deadline-exceeded",
+        }
+    }
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.kind())
+    }
+}
+
+/// Sliding-window shed-rate detector.
+///
+/// A fixed ring of the last `window` admission decisions; `check` reports
+/// the shed fraction once the window is at least half full and the
+/// fraction exceeds `threshold`. The engine calls [`OverloadDetector::reset`]
+/// after taking a ladder rung so one burst is not double-counted.
+pub struct OverloadDetector {
+    slots: Vec<bool>,
+    window: usize,
+    head: usize,
+    len: usize,
+    threshold: f64,
+}
+
+impl OverloadDetector {
+    pub fn new(window: usize, threshold: f64) -> OverloadDetector {
+        let window = window.max(1);
+        OverloadDetector {
+            slots: vec![false; window],
+            window,
+            head: 0,
+            len: 0,
+            threshold: threshold.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Record one admission decision.
+    pub fn note(&mut self, shed: bool) {
+        self.slots[self.head] = shed;
+        self.head = (self.head + 1) % self.window;
+        self.len = (self.len + 1).min(self.window);
+    }
+
+    /// Shed fraction over the valid window (0.0 while empty).
+    pub fn rate(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        let sheds = self.slots[..self.len].iter().filter(|&&s| s).count();
+        sheds as f64 / self.len as f64
+    }
+
+    /// `Some(rate)` when the window is warm (≥ half full) and the shed
+    /// rate exceeds the threshold — the signal to take a ladder rung.
+    pub fn check(&self) -> Option<f64> {
+        if self.len * 2 < self.window {
+            return None;
+        }
+        let rate = self.rate();
+        if rate > self.threshold {
+            Some(rate)
+        } else {
+            None
+        }
+    }
+
+    /// Forget the window (called after a ladder rung is applied).
+    pub fn reset(&mut self) {
+        self.slots.iter_mut().for_each(|s| *s = false);
+        self.head = 0;
+        self.len = 0;
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reasons_have_stable_tags() {
+        assert_eq!(ShedReason::QueueFull.kind(), "queue-full");
+        assert_eq!(ShedReason::BudgetExceeded.kind(), "budget-exceeded");
+        assert_eq!(ShedReason::DeadlineExceeded.kind(), "deadline-exceeded");
+        assert_eq!(ShedReason::QueueFull.to_string(), "queue-full");
+    }
+
+    #[test]
+    fn detector_fires_only_when_warm_and_over_threshold() {
+        let mut d = OverloadDetector::new(8, 0.25);
+        // 3 sheds in a 3-deep window: rate 1.0 but window cold → no fire
+        for _ in 0..3 {
+            d.note(true);
+        }
+        assert_eq!(d.check(), None, "cold window never fires");
+        d.note(false);
+        // warm now (4 of 8): 3/4 shed > 0.25
+        let rate = d.check().expect("warm + over threshold fires");
+        assert!((rate - 0.75).abs() < 1e-12, "{rate}");
+        d.reset();
+        assert_eq!(d.rate(), 0.0);
+        assert_eq!(d.check(), None);
+        // all admits: never fires regardless of fill
+        for _ in 0..16 {
+            d.note(false);
+        }
+        assert_eq!(d.check(), None);
+    }
+
+    #[test]
+    fn window_wraps_and_ages_out_old_sheds() {
+        let mut d = OverloadDetector::new(4, 0.0);
+        d.note(true);
+        for _ in 0..4 {
+            d.note(false);
+        }
+        assert_eq!(d.rate(), 0.0, "the shed aged out of the 4-slot window");
+    }
+}

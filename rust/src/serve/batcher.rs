@@ -1,0 +1,128 @@
+//! Dynamic micro-batching policy.
+//!
+//! Pure decision logic, separated from the engine's event loop so it can
+//! be unit-tested without a simulation: given the queue state and the
+//! virtual clock, [`MicroBatcher::decide`] says *dispatch now with this
+//! batch size*, *wait until this time*, or *nothing to do*. The policy
+//! is the classic deadline-bounded coalescing triangle:
+//!
+//! * a full batch (`queue ≥ max_batch`) dispatches immediately — waiting
+//!   cannot grow it further;
+//! * an undersized batch waits up to `window_secs` past the head
+//!   request's arrival, trading a bounded latency hit for a larger (more
+//!   efficient) batch;
+//! * when no further arrivals are possible (all clients blocked or the
+//!   workload is drained) waiting is pointless, so whatever is queued
+//!   dispatches at once.
+
+/// What the batcher wants the engine to do next.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchDecision {
+    /// Pop `size` requests and dispatch them now.
+    Dispatch { size: usize },
+    /// Re-evaluate at `at_secs` (the head request's coalescing window
+    /// expiry) unless an arrival lands first.
+    WaitUntil { at_secs: f64 },
+    /// Queue empty: nothing to decide.
+    Idle,
+}
+
+/// The coalescing policy knobs. `max_batch` is mutable at runtime — the
+/// degradation ladder halves it under sustained overload.
+pub struct MicroBatcher {
+    max_batch: usize,
+    window_secs: f64,
+}
+
+impl MicroBatcher {
+    pub fn new(max_batch: usize, window_secs: f64) -> MicroBatcher {
+        MicroBatcher { max_batch: max_batch.max(1), window_secs: window_secs.max(0.0) }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Shrink the batch ceiling (ladder rung); returns the new ceiling.
+    pub fn set_max_batch(&mut self, max_batch: usize) -> usize {
+        self.max_batch = max_batch.max(1);
+        self.max_batch
+    }
+
+    /// Decide for the current instant. `oldest_arrival_secs` is the head
+    /// request's arrival (None = empty queue); `arrivals_possible` is
+    /// whether any client could still enqueue before the window expires.
+    pub fn decide(
+        &self,
+        queue_len: usize,
+        oldest_arrival_secs: Option<f64>,
+        now_secs: f64,
+        arrivals_possible: bool,
+    ) -> BatchDecision {
+        let Some(oldest) = oldest_arrival_secs else {
+            return BatchDecision::Idle;
+        };
+        if queue_len == 0 {
+            return BatchDecision::Idle;
+        }
+        if queue_len >= self.max_batch {
+            return BatchDecision::Dispatch { size: self.max_batch };
+        }
+        let expiry = oldest + self.window_secs;
+        if !arrivals_possible || now_secs >= expiry {
+            return BatchDecision::Dispatch { size: queue_len };
+        }
+        BatchDecision::WaitUntil { at_secs: expiry }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_queue_dispatches_at_ceiling() {
+        let b = MicroBatcher::new(4, 0.010);
+        assert_eq!(
+            b.decide(9, Some(0.0), 0.0, true),
+            BatchDecision::Dispatch { size: 4 },
+            "never exceeds max_batch even with a deeper queue"
+        );
+    }
+
+    #[test]
+    fn undersized_batch_waits_out_the_window_then_goes() {
+        let b = MicroBatcher::new(4, 0.010);
+        assert_eq!(
+            b.decide(2, Some(1.0), 1.002, true),
+            BatchDecision::WaitUntil { at_secs: 1.010 }
+        );
+        assert_eq!(
+            b.decide(2, Some(1.0), 1.010, true),
+            BatchDecision::Dispatch { size: 2 },
+            "window expiry flushes the partial batch"
+        );
+    }
+
+    #[test]
+    fn no_possible_arrivals_short_circuits_the_wait() {
+        let b = MicroBatcher::new(8, 1.0);
+        assert_eq!(
+            b.decide(3, Some(5.0), 5.0, false),
+            BatchDecision::Dispatch { size: 3 },
+            "waiting for arrivals that cannot happen only adds latency"
+        );
+    }
+
+    #[test]
+    fn empty_queue_is_idle_and_ladder_shrinks_ceiling() {
+        let mut b = MicroBatcher::new(8, 0.010);
+        assert_eq!(b.decide(0, None, 0.0, true), BatchDecision::Idle);
+        assert_eq!(b.set_max_batch(4), 4);
+        assert_eq!(b.set_max_batch(0), 1, "ceiling clamps to 1");
+        assert_eq!(
+            b.decide(2, Some(0.0), 0.0, true),
+            BatchDecision::Dispatch { size: 1 }
+        );
+    }
+}

@@ -1,0 +1,184 @@
+//! LRU cache over staged [`PlanOutcome`]s, keyed by everything that
+//! changes a forward plan.
+//!
+//! Serving re-plans constantly — every micro-batch size the batcher
+//! coalesces needs its own forward-only plan — but the plan space is
+//! tiny: one arch, a handful of batch sizes, one budget. Resolving each
+//! dispatch through [`PlanCache::get_or_insert_with`] means the packing
+//! runs once per distinct `(arch, batch, budget, bw)` and every later
+//! dispatch is a move-to-front list probe: microseconds, not a DP.
+
+use crate::memory::outcome::PlanOutcome;
+use crate::memory::pipeline::PlanError;
+use std::sync::Arc;
+
+/// Everything that distinguishes one cached plan from another.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub arch: String,
+    pub batch: usize,
+    /// Device budget the plan was solved under (`None` = heap fallback).
+    pub budget: Option<u64>,
+    pub host_bw: u64,
+}
+
+/// A deterministic LRU over `(PlanKey, Arc<PlanOutcome>)` pairs.
+///
+/// Backed by a move-to-front `Vec` rather than a hash map: the working
+/// set is a few dozen entries at most, probes are a linear scan of
+/// inline keys, and eviction order is exactly insertion-recency — no
+/// hasher state to make two runs disagree.
+pub struct PlanCache {
+    entries: Vec<(PlanKey, Arc<PlanOutcome>)>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` plans (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            entries: Vec::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Resolve `key`, planning via `f` only on a miss. Errors from `f`
+    /// are returned uncached, so an infeasible batch size re-asks the
+    /// planner (callers avoid that by probing feasibility once per
+    /// ladder state, not per dispatch).
+    pub fn get_or_insert_with<F>(&mut self, key: &PlanKey, f: F) -> Result<Arc<PlanOutcome>, PlanError>
+    where
+        F: FnOnce() -> Result<PlanOutcome, PlanError>,
+    {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+            self.hits += 1;
+            let entry = self.entries.remove(pos);
+            let outcome = Arc::clone(&entry.1);
+            self.entries.insert(0, entry);
+            return Ok(outcome);
+        }
+        self.misses += 1;
+        let outcome = Arc::new(f()?);
+        self.entries.insert(0, (key.clone(), Arc::clone(&outcome)));
+        while self.entries.len() > self.capacity {
+            self.entries.pop();
+            self.evictions += 1;
+        }
+        Ok(outcome)
+    }
+
+    /// Whether `key` is resident (no LRU touch, no counters).
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::pipeline::{PlanMode, PlanRequest};
+
+    fn key(batch: usize) -> PlanKey {
+        PlanKey {
+            arch: "resnet18".to_string(),
+            batch,
+            budget: None,
+            host_bw: 1 << 30,
+        }
+    }
+
+    fn plan(batch: usize) -> Result<PlanOutcome, PlanError> {
+        PlanRequest::for_model("resnet18", (64, 64, 3), 10)
+            .batch(batch)
+            .mode(PlanMode::Infer)
+            .run()
+    }
+
+    #[test]
+    fn second_lookup_hits_without_replanning() {
+        let mut cache = PlanCache::new(4);
+        let mut planned = 0;
+        for _ in 0..3 {
+            let out = cache
+                .get_or_insert_with(&key(8), || {
+                    planned += 1;
+                    plan(8)
+                })
+                .unwrap();
+            assert_eq!(out.batch, 8);
+        }
+        assert_eq!(planned, 1, "the DP-free packing still runs exactly once");
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_deterministically() {
+        let mut cache = PlanCache::new(2);
+        cache.get_or_insert_with(&key(1), || plan(1)).unwrap();
+        cache.get_or_insert_with(&key(2), || plan(2)).unwrap();
+        // touch batch 1 so batch 2 is now least-recent
+        cache.get_or_insert_with(&key(1), || plan(1)).unwrap();
+        cache.get_or_insert_with(&key(4), || plan(4)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&key(1)), "recently touched survives");
+        assert!(cache.contains(&key(4)));
+        assert!(!cache.contains(&key(2)), "LRU entry evicted");
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let mut cache = PlanCache::new(2);
+        let mut calls = 0;
+        for _ in 0..2 {
+            let r = cache.get_or_insert_with(&key(3), || {
+                calls += 1;
+                Err(PlanError::UnknownArch { model: "nope".to_string() })
+            });
+            assert!(r.is_err());
+        }
+        assert_eq!(calls, 2, "a failed plan is re-asked, never resident");
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn distinct_budgets_are_distinct_entries() {
+        let mut cache = PlanCache::new(4);
+        let a = PlanKey { budget: Some(1 << 30), ..key(8) };
+        let b = PlanKey { budget: None, ..key(8) };
+        cache
+            .get_or_insert_with(&a, || plan(8))
+            .unwrap();
+        cache.get_or_insert_with(&b, || plan(8)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+    }
+}

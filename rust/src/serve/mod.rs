@@ -1,0 +1,916 @@
+//! Inference serving: dynamic micro-batching, forward-only arenas, and
+//! admission control.
+//!
+//! Training and serving want opposite things from the memory stack. A
+//! trainer plans *once* for one big batch and amortizes the DP over an
+//! epoch; a serving tier fields a stream of single-image requests whose
+//! only memory need is the forward pass — no gradients, no momentum, no
+//! recompute question. This module is the serving half, built from the
+//! same parts the trainer uses:
+//!
+//! * **Forward-only plans** — every dispatch resolves through
+//!   [`PlanRequest`] in [`PlanMode::Infer`]: the evaluator's exact
+//!   forward replay ([`Lifetimes::extract_infer`]) packed directly into
+//!   a slab, strictly smaller than any training plan over the same
+//!   arch/batch. Plans are memoized in a [`PlanCache`] keyed by
+//!   `(arch, batch, budget, bw)`, so per-request planning is a
+//!   move-to-front probe, not a DP.
+//! * **Dynamic micro-batching** — a bounded [`BoundedQueue`] feeds a
+//!   [`MicroBatcher`] that coalesces requests into the largest batch
+//!   whose cached forward plan fits the device budget, waiting at most a
+//!   fixed window past the head request's arrival. Request payloads ride
+//!   the E-D encode path with every buffer drawn from a
+//!   [`BufferPool`](crate::data::pool::BufferPool), so steady-state
+//!   dispatches allocate nothing pool-managed.
+//! * **Admission control** — requests the tier cannot finish are shed
+//!   with a typed [`ShedReason`] (queue full, budget exceeded, deadline
+//!   exceeded). Sustained overload — a shed rate above threshold across
+//!   the [`OverloadDetector`] window — walks the same degradation ladder
+//!   the trainer uses: halve the batch ceiling
+//!   ([`DegradationAction::ReducedMaxBatch`]), and when that is spent,
+//!   abandon the budget for a heap-backed arena
+//!   ([`DegradationAction::HeapFallbackArena`]), reported as a typed
+//!   [`DegradationReport`].
+//!
+//! The engine is a deterministic discrete-event simulation over a
+//! virtual clock: closed-loop synthetic clients (seeded [`Rng`] think
+//! times) issue requests, a serial device executes micro-batches at the
+//! cached plan's predicted step time plus the modeled decode transfer,
+//! and every latency is exact virtual time. Same config + seed → the
+//! same [`ServeReport`] byte for byte, which is what lets CI gate
+//! `BENCH_serve.json` against a baseline.
+//!
+//! Surfaced as `optorch serve --arch resnet18 --budget 2GiB --max_batch
+//! 16 --deadline_ms 50 [--metrics_addr HOST:PORT]`; the live
+//! `/metrics` endpoint exposes queue depth, admitted/shed counters and
+//! the batch-size histogram, and `/readyz` reports 503 while the shed
+//! rate over the sample window is nonzero.
+//!
+//! [`PlanRequest`]: crate::memory::pipeline::PlanRequest
+//! [`PlanMode::Infer`]: crate::memory::pipeline::PlanMode::Infer
+//! [`Lifetimes::extract_infer`]: crate::memory::arena::Lifetimes::extract_infer
+
+mod admission;
+mod batcher;
+mod cache;
+mod queue;
+mod report;
+
+pub use admission::{OverloadDetector, ShedReason};
+pub use batcher::{BatchDecision, MicroBatcher};
+pub use cache::{PlanCache, PlanKey};
+pub use queue::{BoundedQueue, Request};
+pub use report::ServeReport;
+
+use crate::config::kv::{parse_kv, KvGet};
+use crate::data::encode::{
+    decode_batch, encode_batch_grouped_into, EncodeError, EncodeSpec, Encoding, WordType,
+};
+use crate::data::image::ImageBatch;
+use crate::data::loader::BatchPayload;
+use crate::data::pool::BufferPool;
+use crate::fault::{DegradationAction, DegradationReport, DegradeTrigger};
+use crate::memory::outcome::PlanOutcome;
+use crate::memory::offload::DEFAULT_HOST_BW_BYTES_PER_SEC;
+use crate::memory::pipeline::{parse_bytes_field, PlanError, PlanMode, PlanRequest};
+use crate::metrics::Histogram;
+use crate::obs::MetricsHub;
+use crate::trace::PhaseStat;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Typed failures of the serving tier.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Bad config file or override.
+    Config(String),
+    /// The planning facade refused (unknown arch, bad bytes, …).
+    Plan(PlanError),
+    /// The request encoder refused (capacity, empty batch).
+    Encode(EncodeError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Config(m) => write!(f, "{m}"),
+            ServeError::Plan(e) => write!(f, "{e}"),
+            ServeError::Encode(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<PlanError> for ServeError {
+    fn from(e: PlanError) -> ServeError {
+        ServeError::Plan(e)
+    }
+}
+
+/// Knobs of one serving run. Mirrors [`TrainConfig`]'s sourcing: a
+/// TOML-subset config file plus `--key value` overrides, validated once.
+///
+/// [`TrainConfig`]: crate::config::TrainConfig
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Registry architecture to serve (see `optorch models`).
+    pub model: String,
+    /// Input image shape `(h, w, c)`.
+    pub input: (usize, usize, usize),
+    pub classes: usize,
+    /// Device budget the cached forward plans must fit, if any.
+    pub budget: Option<u64>,
+    /// Micro-batch ceiling before the ladder shrinks it.
+    pub max_batch: usize,
+    /// Per-request latency deadline; predicted-late requests are shed.
+    pub deadline_ms: f64,
+    /// How long an undersized batch may wait for co-riders.
+    pub batch_window_ms: f64,
+    /// Closed-loop synthetic clients.
+    pub clients: usize,
+    /// Total requests the clients issue.
+    pub requests: usize,
+    /// Mean client think time between response and next request.
+    pub think_ms: f64,
+    /// Bounded request-queue capacity.
+    pub queue_cap: usize,
+    /// Modeled host→device bandwidth for request payload transfer.
+    pub host_bw: u64,
+    pub seed: u64,
+    /// Optional `/metrics` + `/healthz` + `/readyz` listener address.
+    pub metrics_addr: Option<String>,
+    /// Admission decisions in the overload / readiness window.
+    pub shed_window: usize,
+    /// Windowed shed rate above which the ladder is walked.
+    pub overload_shed_rate: f64,
+    /// Plan-cache capacity (distinct `(arch, batch, budget, bw)` keys).
+    pub plan_cache_cap: usize,
+}
+
+impl ServeConfig {
+    /// Sensible defaults for a registry model.
+    pub fn default_for(model: &str) -> ServeConfig {
+        ServeConfig {
+            model: model.to_string(),
+            input: (64, 64, 3),
+            classes: 10,
+            budget: None,
+            max_batch: 16,
+            deadline_ms: 50.0,
+            batch_window_ms: 2.0,
+            clients: 8,
+            requests: 512,
+            think_ms: 1.0,
+            queue_cap: 64,
+            host_bw: DEFAULT_HOST_BW_BYTES_PER_SEC,
+            seed: 42,
+            metrics_addr: None,
+            shed_window: 64,
+            overload_shed_rate: 0.5,
+            plan_cache_cap: 32,
+        }
+    }
+
+    /// Parse a config file + `--key value` CLI overrides (the same
+    /// sourcing contract as `TrainConfig::from_sources`).
+    pub fn from_sources(
+        file_text: Option<&str>,
+        overrides: &BTreeMap<String, String>,
+    ) -> Result<ServeConfig, String> {
+        let mut kv = match file_text {
+            Some(t) => parse_kv(t).map_err(|e| e.to_string())?,
+            None => BTreeMap::new(),
+        };
+        for (k, v) in overrides {
+            kv.insert(k.clone(), v.clone());
+        }
+        let mut cfg = ServeConfig::default_for("resnet18");
+        // `arch` is the documented knob; `model` is accepted as the alias
+        // every other subcommand uses.
+        if let Some(m) = kv.get_str("arch").or_else(|| kv.get_str("model")) {
+            cfg.model = m.to_string();
+        }
+        let h = kv.get_usize("height")?.unwrap_or(cfg.input.0);
+        let w = kv.get_usize("width")?.unwrap_or(cfg.input.1);
+        cfg.input = (h, w, cfg.input.2);
+        if let Some(v) = kv.get_usize("classes")? {
+            cfg.classes = v;
+        }
+        if let Some(v) = kv.get_str("budget") {
+            cfg.budget =
+                Some(parse_bytes_field("budget", v).map_err(|e| e.to_string())?);
+        }
+        if let Some(v) = kv.get_usize("max_batch")? {
+            cfg.max_batch = v;
+        }
+        if let Some(v) = kv.get_f64("deadline_ms")? {
+            cfg.deadline_ms = v;
+        }
+        if let Some(v) = kv.get_f64("batch_window_ms")? {
+            cfg.batch_window_ms = v;
+        }
+        if let Some(v) = kv.get_usize("clients")? {
+            cfg.clients = v;
+        }
+        if let Some(v) = kv.get_usize("requests")? {
+            cfg.requests = v;
+        }
+        if let Some(v) = kv.get_f64("think_ms")? {
+            cfg.think_ms = v;
+        }
+        if let Some(v) = kv.get_usize("queue_cap")? {
+            cfg.queue_cap = v;
+        }
+        if let Some(v) = kv.get_str("host_bw") {
+            cfg.host_bw = parse_bytes_field("host_bw", v).map_err(|e| e.to_string())?;
+        }
+        if let Some(v) = kv.get_usize("seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = kv.get_str("metrics_addr") {
+            cfg.metrics_addr = Some(v.to_string());
+        }
+        if let Some(v) = kv.get_usize("shed_window")? {
+            cfg.shed_window = v;
+        }
+        if let Some(v) = kv.get_f64("overload_shed_rate")? {
+            cfg.overload_shed_rate = v;
+        }
+        if let Some(v) = kv.get_usize("plan_cache_cap")? {
+            cfg.plan_cache_cap = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.model.is_empty() {
+            return Err("arch: must name a registry architecture".into());
+        }
+        if self.input.0 == 0 || self.input.1 == 0 || self.input.2 == 0 {
+            return Err("height/width: must be ≥ 1".into());
+        }
+        if self.classes == 0 {
+            return Err("classes: must be ≥ 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch: must be ≥ 1".into());
+        }
+        if !(self.deadline_ms > 0.0) {
+            return Err("deadline_ms: must be > 0".into());
+        }
+        if self.batch_window_ms < 0.0 {
+            return Err("batch_window_ms: must be ≥ 0".into());
+        }
+        if self.clients == 0 {
+            return Err("clients: must be ≥ 1".into());
+        }
+        if self.requests == 0 {
+            return Err("requests: must be ≥ 1".into());
+        }
+        if self.think_ms < 0.0 {
+            return Err("think_ms: must be ≥ 0".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue_cap: must be ≥ 1".into());
+        }
+        if self.host_bw == 0 {
+            return Err("host_bw: must be ≥ 1".into());
+        }
+        if self.shed_window == 0 {
+            return Err("shed_window: must be ≥ 1".into());
+        }
+        if !(0.0..1.0).contains(&self.overload_shed_rate) {
+            return Err("overload_shed_rate: must be in [0, 1)".into());
+        }
+        if self.plan_cache_cap == 0 {
+            return Err("plan_cache_cap: must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Run one closed-loop serving simulation, streaming gauges into `hub`.
+pub fn run(cfg: &ServeConfig, hub: &MetricsHub) -> Result<ServeReport, ServeError> {
+    Engine::new(cfg, hub)?.run()
+}
+
+/// One synthetic closed-loop client: thinks, issues, blocks on the
+/// response (or an immediate shed), thinks again.
+struct Client {
+    rng: Rng,
+    /// Next issue instant; meaningful only while not waiting.
+    next_issue_secs: f64,
+    /// True while a request of this client is queued or in flight.
+    waiting: bool,
+}
+
+/// Which timed event fires next in the simulation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Event {
+    /// The in-flight micro-batch completes.
+    Completion,
+    /// Client `i` issues its next request.
+    Arrival(usize),
+    /// The batcher's coalescing window for the head request expires.
+    DispatchCheck,
+}
+
+struct Engine<'a> {
+    cfg: &'a ServeConfig,
+    hub: &'a MetricsHub,
+    cache: PlanCache,
+    batcher: MicroBatcher,
+    queue: BoundedQueue,
+    detector: OverloadDetector,
+    pool: BufferPool,
+    spec: EncodeSpec,
+    clients: Vec<Client>,
+    payload_rng: Rng,
+    /// Virtual clock, seconds.
+    now: f64,
+    issued: u64,
+    completed: u64,
+    shed_queue_full: u64,
+    shed_budget: u64,
+    shed_deadline: u64,
+    /// Current device budget (`None` after the heap-fallback rung).
+    budget: Option<u64>,
+    /// Ladder-controlled batch ceiling (starts at `cfg.max_batch`).
+    policy_max: usize,
+    /// Largest batch ≤ `policy_max` whose forward plan fits `budget`
+    /// (0 = not even batch 1 fits: every request sheds).
+    eff_max: usize,
+    /// The dispatched batch and its completion instant (serial device).
+    inflight: Option<(Vec<Request>, f64)>,
+    /// Exact per-request latencies, virtual seconds (for exact quantiles).
+    latencies: Vec<f64>,
+    queue_wait_ns: Histogram,
+    service_ns: Histogram,
+    e2e_ns: Histogram,
+    batch_hist: BTreeMap<usize, u64>,
+    trigger: Option<DegradeTrigger>,
+    actions: Vec<DegradationAction>,
+    first_arrival: Option<f64>,
+    last_response: f64,
+    /// Payload bytes of one capacity-sized encoded group (decode model).
+    group_payload_bytes: u64,
+}
+
+/// One think interval: uniform in `[0.5, 1.5) ×` the configured mean.
+fn think_secs(rng: &mut Rng, think_ms: f64) -> f64 {
+    think_ms / 1e3 * (0.5 + rng.f64())
+}
+
+/// Exact quantile of an ascending-sorted slice (nearest-rank).
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl<'a> Engine<'a> {
+    fn new(cfg: &'a ServeConfig, hub: &'a MetricsHub) -> Result<Engine<'a>, ServeError> {
+        cfg.validate().map_err(ServeError::Config)?;
+        hub.enable_serve_mode(cfg.shed_window);
+        let root = Rng::new(cfg.seed);
+        let clients = (0..cfg.clients)
+            .map(|i| {
+                let mut rng = root.split(1_000 + i as u64);
+                let first = think_secs(&mut rng, cfg.think_ms);
+                Client { rng, next_issue_secs: first, waiting: false }
+            })
+            .collect();
+        let spec = EncodeSpec::new(Encoding::Base256, WordType::U64);
+        // One pixel position = one packed word, so a capacity-sized group
+        // ships h·w·c words regardless of how many images ride in it.
+        let (h, w, c) = cfg.input;
+        let group_payload_bytes = (h * w * c * 8) as u64;
+        let mut engine = Engine {
+            cfg,
+            hub,
+            cache: PlanCache::new(cfg.plan_cache_cap),
+            batcher: MicroBatcher::new(cfg.max_batch, cfg.batch_window_ms / 1e3),
+            queue: BoundedQueue::new(cfg.queue_cap),
+            detector: OverloadDetector::new(cfg.shed_window, cfg.overload_shed_rate),
+            pool: BufferPool::default(),
+            spec,
+            clients,
+            payload_rng: root.split(7),
+            now: 0.0,
+            issued: 0,
+            completed: 0,
+            shed_queue_full: 0,
+            shed_budget: 0,
+            shed_deadline: 0,
+            budget: cfg.budget,
+            policy_max: cfg.max_batch,
+            eff_max: 0,
+            inflight: None,
+            latencies: Vec::with_capacity(cfg.requests),
+            queue_wait_ns: Histogram::new(),
+            service_ns: Histogram::new(),
+            e2e_ns: Histogram::new(),
+            batch_hist: BTreeMap::new(),
+            trigger: None,
+            actions: Vec::new(),
+            first_arrival: None,
+            last_response: 0.0,
+            group_payload_bytes,
+        };
+        engine.refresh_eff_max()?;
+        Ok(engine)
+    }
+
+    /// Resolve the forward plan for `batch` through the LRU cache.
+    fn plan_for(&mut self, batch: usize) -> Result<Arc<PlanOutcome>, PlanError> {
+        let key = PlanKey {
+            arch: self.cfg.model.clone(),
+            batch,
+            budget: self.budget,
+            host_bw: self.cfg.host_bw,
+        };
+        let model = self.cfg.model.clone();
+        let input = self.cfg.input;
+        let classes = self.cfg.classes;
+        let host_bw = self.cfg.host_bw;
+        let budget = self.budget;
+        self.cache.get_or_insert_with(&key, move || {
+            let mut req = PlanRequest::for_model(&model, input, classes)
+                .batch(batch)
+                .host_bw(host_bw)
+                .mode(PlanMode::Infer);
+            if let Some(b) = budget {
+                req = req.memory_budget(b);
+            }
+            req.run()
+        })
+    }
+
+    /// Recompute the largest feasible batch under the current budget and
+    /// ceiling; called at startup and after every ladder rung.
+    fn refresh_eff_max(&mut self) -> Result<(), ServeError> {
+        self.eff_max = 0;
+        let mut b = self.policy_max;
+        while b >= 1 {
+            match self.plan_for(b) {
+                Ok(_) => {
+                    self.eff_max = b;
+                    break;
+                }
+                Err(PlanError::BudgetBelowPacked(_)) | Err(PlanError::BudgetBelowSpilled(_)) => {
+                    b -= 1;
+                }
+                Err(e) => return Err(ServeError::Plan(e)),
+            }
+        }
+        self.batcher.set_max_batch(self.eff_max.max(1));
+        Ok(())
+    }
+
+    fn shed_total(&self) -> u64 {
+        self.shed_queue_full + self.shed_budget + self.shed_deadline
+    }
+
+    /// Refuse one request: typed count, hub + detector note, immediate
+    /// rejection response to the client, possible ladder walk.
+    fn shed(&mut self, client: usize, reason: ShedReason) -> Result<(), ServeError> {
+        match reason {
+            ShedReason::QueueFull => self.shed_queue_full += 1,
+            ShedReason::BudgetExceeded => self.shed_budget += 1,
+            ShedReason::DeadlineExceeded => self.shed_deadline += 1,
+        }
+        self.hub.note_shed();
+        self.detector.note(true);
+        let c = &mut self.clients[client];
+        c.waiting = false;
+        let t = think_secs(&mut c.rng, self.cfg.think_ms);
+        c.next_issue_secs = self.now + t;
+        self.last_response = self.now;
+        self.maybe_walk_ladder()
+    }
+
+    /// Take a degradation rung when the windowed shed rate says so.
+    fn maybe_walk_ladder(&mut self) -> Result<(), ServeError> {
+        let Some(rate) = self.detector.check() else {
+            return Ok(());
+        };
+        if self.trigger.is_none() {
+            self.trigger = Some(DegradeTrigger::Overload {
+                shed_rate: rate,
+                window: self.detector.window(),
+            });
+        }
+        if self.policy_max > 1 {
+            let from = self.policy_max;
+            self.policy_max = (self.policy_max / 2).max(1);
+            self.actions
+                .push(DegradationAction::ReducedMaxBatch { from, to: self.policy_max });
+        } else if self.budget.is_some() {
+            self.actions.push(DegradationAction::HeapFallbackArena);
+            self.budget = None;
+        } else {
+            // Ladder exhausted: nothing cheaper to fall back to.
+            return Ok(());
+        }
+        self.detector.reset();
+        self.hub.note_degrade_event(1);
+        self.refresh_eff_max()
+    }
+
+    /// One client issues a request: admission decides queue vs shed.
+    fn arrive(&mut self, client: usize) -> Result<(), ServeError> {
+        let id = self.issued;
+        self.issued += 1;
+        if self.first_arrival.is_none() {
+            self.first_arrival = Some(self.now);
+        }
+        if self.eff_max == 0 {
+            return self.shed(client, ShedReason::BudgetExceeded);
+        }
+        if self.queue.is_full() {
+            return self.shed(client, ShedReason::QueueFull);
+        }
+        let req = Request { id, client, arrival_secs: self.now };
+        self.clients[client].waiting = true;
+        self.queue
+            .push(req)
+            .expect("capacity checked above");
+        self.hub.note_admitted();
+        self.detector.note(false);
+        self.hub.set_queue_depth(self.queue.len() as u64);
+        Ok(())
+    }
+
+    /// Predicted wall seconds to answer a `batch`-sized dispatch:
+    /// modeled payload transfer + the cached forward plan's step time.
+    fn service_secs(&mut self, batch: usize) -> Result<f64, ServeError> {
+        let plan = self.plan_for(batch)?;
+        let step = plan.predicted_step_secs().unwrap_or(0.0);
+        let cap = self.spec.capacity();
+        let groups = (batch + cap - 1) / cap;
+        let decode = (groups as u64 * self.group_payload_bytes) as f64 / self.cfg.host_bw as f64;
+        Ok(decode + step)
+    }
+
+    /// Materialize + encode the dispatch payload through the pool — the
+    /// E-D producer path doing duty as the request decoder. Steady state
+    /// draws every buffer from the pool.
+    fn encode_dispatch(&mut self, batch: usize) -> Result<(), ServeError> {
+        let (h, w, c) = self.cfg.input;
+        let pixels = h * w * c;
+        let classes = self.cfg.classes;
+        let mut data = self.pool.take_u8(batch * pixels);
+        data.resize(batch * pixels, 0);
+        let mut labels = self.pool.take_f32(batch * classes);
+        labels.resize(batch * classes, 0.0);
+        let mut img = ImageBatch { n: batch, h, w, c, data, labels, num_classes: classes };
+        // A deterministic non-trivial payload: one random byte per image.
+        for i in 0..batch {
+            img.data[i * pixels] = (self.payload_rng.next_u64() & 0xff) as u8;
+        }
+        let mut groups = self.pool.take_shells();
+        encode_batch_grouped_into(&img, self.spec, &self.pool, &mut groups)
+            .map_err(ServeError::Encode)?;
+        let decoded = decode_batch(&groups[0]);
+        debug_assert_eq!(decoded.data[0], img.data[0], "decode inverts the request encoding");
+        self.pool.recycle_payload(BatchPayload::Encoded(groups));
+        self.pool.put_u8(img.data);
+        self.pool.put_f32(img.labels);
+        Ok(())
+    }
+
+    /// Pop up to `size` requests, shed the ones that cannot finish in
+    /// deadline, and launch the rest as one micro-batch.
+    fn dispatch(&mut self, size: usize) -> Result<(), ServeError> {
+        let mut batch: Vec<Request> = Vec::with_capacity(size);
+        while batch.len() < size {
+            match self.queue.pop() {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        let deadline = self.cfg.deadline_ms / 1e3;
+        // Shedding latecomers shrinks the batch, which only shortens the
+        // service time — so this settles in ≤ batch.len() rounds.
+        loop {
+            if batch.is_empty() {
+                self.hub.set_queue_depth(self.queue.len() as u64);
+                return Ok(());
+            }
+            let service = self.service_secs(batch.len())?;
+            let done = self.now + service;
+            let mut kept = Vec::with_capacity(batch.len());
+            let mut overdue = Vec::new();
+            for r in batch.drain(..) {
+                if done - r.arrival_secs > deadline {
+                    overdue.push(r);
+                } else {
+                    kept.push(r);
+                }
+            }
+            for r in &overdue {
+                self.shed(r.client, ShedReason::DeadlineExceeded)?;
+            }
+            if overdue.is_empty() {
+                let b = kept.len();
+                self.encode_dispatch(b)?;
+                for r in &kept {
+                    self.queue_wait_ns
+                        .record(((self.now - r.arrival_secs) * 1e9) as u64);
+                }
+                self.service_ns.record((service * 1e9) as u64);
+                *self.batch_hist.entry(b).or_insert(0) += 1;
+                self.hub.record_batch(b as u64);
+                self.hub.set_queue_depth(self.queue.len() as u64);
+                self.inflight = Some((kept, done));
+                return Ok(());
+            }
+            batch = kept;
+        }
+    }
+
+    /// The in-flight batch finishes: exact latencies, clients unblock.
+    fn complete(&mut self) {
+        let (batch, _done) = self.inflight.take().expect("completion without inflight");
+        for r in &batch {
+            let lat = self.now - r.arrival_secs;
+            self.latencies.push(lat);
+            self.e2e_ns.record((lat * 1e9) as u64);
+            self.completed += 1;
+            let c = &mut self.clients[r.client];
+            c.waiting = false;
+            let t = think_secs(&mut c.rng, self.cfg.think_ms);
+            c.next_issue_secs = self.now + t;
+        }
+        self.last_response = self.now;
+        self.push_phase_stats();
+    }
+
+    /// Stream the serve-loop quantile tables into the hub so `/metrics`
+    /// exposes them as `optorch_phase_seconds{phase,quantile}` gauges.
+    fn push_phase_stats(&self) {
+        self.hub.update_phase_stats(&[
+            PhaseStat::from_histogram("serve-queue-wait".to_string(), &self.queue_wait_ns),
+            PhaseStat::from_histogram("serve-service".to_string(), &self.service_ns),
+            PhaseStat::from_histogram("serve-e2e".to_string(), &self.e2e_ns),
+        ]);
+    }
+
+    /// Earliest pending arrival `(time, client)`, if any client can
+    /// still issue.
+    fn next_arrival(&self) -> Option<(f64, usize)> {
+        if self.issued >= self.cfg.requests as u64 {
+            return None;
+        }
+        self.clients
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| !c.waiting)
+            .map(|(i, c)| (c.next_issue_secs, i))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+    }
+
+    fn run(mut self) -> Result<ServeReport, ServeError> {
+        let total = self.cfg.requests as u64;
+        while self.completed + self.shed_total() < total {
+            let arrival = self.next_arrival();
+            let completion = self.inflight.as_ref().map(|(_, t)| *t);
+            let decision = if self.inflight.is_none() {
+                self.batcher.decide(
+                    self.queue.len(),
+                    self.queue.oldest_arrival_secs(),
+                    self.now,
+                    arrival.is_some(),
+                )
+            } else {
+                BatchDecision::Idle
+            };
+            if let BatchDecision::Dispatch { size } = decision {
+                self.dispatch(size)?;
+                continue;
+            }
+            // Pick the earliest timed event; ties resolve completion →
+            // arrival → window expiry, so responses free clients before
+            // the freed capacity is re-contested.
+            let mut next: Option<(f64, Event)> = None;
+            let mut consider = |t: Option<f64>, e: Event| {
+                if let Some(t) = t {
+                    if next.map(|(best, _)| t < best).unwrap_or(true) {
+                        next = Some((t, e));
+                    }
+                }
+            };
+            consider(completion, Event::Completion);
+            consider(arrival.map(|(t, _)| t), Event::Arrival(arrival.map(|(_, i)| i).unwrap_or(0)));
+            if let BatchDecision::WaitUntil { at_secs } = decision {
+                consider(Some(at_secs), Event::DispatchCheck);
+            }
+            let Some((t, event)) = next else {
+                // No pending events yet unanswered requests would mean a
+                // stuck simulation; by construction every issued request
+                // is queued (⇒ dispatchable), in flight (⇒ completion
+                // pending) or answered, so this cannot happen.
+                unreachable!("serve simulation stalled at t={}", self.now);
+            };
+            self.now = self.now.max(t);
+            match event {
+                Event::Completion => self.complete(),
+                Event::Arrival(client) => self.arrive(client)?,
+                Event::DispatchCheck => { /* re-decide next iteration */ }
+            }
+        }
+        self.push_phase_stats();
+        self.finish()
+    }
+
+    fn finish(mut self) -> Result<ServeReport, ServeError> {
+        let elapsed = (self.last_response - self.first_arrival.unwrap_or(0.0)).max(1e-9);
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let serve_batch = self.eff_max.max(1);
+        let forward_slab = self
+            .plan_for(serve_batch)
+            .map(|o| o.device_peak_packed())
+            .unwrap_or(0);
+        // The training twin of the serving plan, for the slab margin the
+        // admission controller spends. Planned outside the cache (it is
+        // a Train-mode outcome, not a dispatchable plan).
+        let train_slab = PlanRequest::for_model(&self.cfg.model, self.cfg.input, self.cfg.classes)
+            .batch(serve_batch)
+            .run()
+            .ok()
+            .map(|o| o.device_peak_packed());
+        let degradation = match (self.trigger.take(), self.actions.is_empty()) {
+            (Some(trigger), false) => {
+                let heap_fallback = self
+                    .actions
+                    .iter()
+                    .any(|a| matches!(a, DegradationAction::HeapFallbackArena));
+                Some(DegradationReport {
+                    trigger,
+                    actions: self.actions.clone(),
+                    met_budget: !heap_fallback,
+                    budget: self.cfg.budget.unwrap_or(0),
+                    device_total: forward_slab,
+                    predicted_step_secs: None,
+                })
+            }
+            _ => None,
+        };
+        Ok(ServeReport {
+            model: self.cfg.model.clone(),
+            requests: self.issued,
+            completed: self.completed,
+            shed_queue_full: self.shed_queue_full,
+            shed_budget: self.shed_budget,
+            shed_deadline: self.shed_deadline,
+            elapsed_secs: elapsed,
+            requests_per_sec: self.completed as f64 / elapsed,
+            p50_ms: exact_quantile(&sorted, 0.50) * 1e3,
+            p99_ms: exact_quantile(&sorted, 0.99) * 1e3,
+            deadline_ms: self.cfg.deadline_ms,
+            max_batch_start: self.cfg.max_batch,
+            max_batch_final: self.policy_max,
+            batch_hist: self.batch_hist.iter().map(|(&s, &n)| (s, n)).collect(),
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            cache_evictions: self.cache.evictions(),
+            pool_allocs: self.pool.allocs(),
+            pool_reuses: self.pool.reuses(),
+            forward_slab_bytes: forward_slab,
+            train_slab_bytes: train_slab,
+            degradation,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nominal() -> ServeConfig {
+        ServeConfig {
+            requests: 200,
+            clients: 4,
+            think_ms: 20.0,
+            deadline_ms: 200.0,
+            max_batch: 8,
+            ..ServeConfig::default_for("resnet18")
+        }
+    }
+
+    #[test]
+    fn nominal_load_completes_everything_without_sheds() {
+        let hub = MetricsHub::new();
+        let rep = run(&nominal(), &hub).unwrap();
+        assert_eq!(rep.requests, 200);
+        assert_eq!(rep.completed, 200);
+        assert_eq!(rep.shed_total(), 0, "below threshold nothing sheds");
+        assert!(rep.p99_ms <= rep.deadline_ms + 1e-9, "deadline honored: {}", rep.p99_ms);
+        assert!(rep.requests_per_sec > 0.0);
+        assert!(hub.is_ready(), "zero shed rate keeps /readyz green");
+        assert_eq!(hub.admitted(), 200);
+        assert_eq!(hub.shed(), 0);
+        assert!(
+            rep.cache_hits > rep.cache_misses,
+            "steady state resolves plans from the cache ({} hits / {} misses)",
+            rep.cache_hits,
+            rep.cache_misses
+        );
+        assert!(
+            rep.pool_reuses > rep.pool_allocs,
+            "steady state draws request buffers from the pool ({} reuses / {} allocs)",
+            rep.pool_reuses,
+            rep.pool_allocs
+        );
+        assert!(rep.degradation.is_none());
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_different_seed_is_not() {
+        let a = run(&nominal(), &MetricsHub::new()).unwrap();
+        let b = run(&nominal(), &MetricsHub::new()).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        let c = run(
+            &ServeConfig { seed: 43, ..nominal() },
+            &MetricsHub::new(),
+        )
+        .unwrap();
+        assert_ne!(
+            a.to_json().to_string(),
+            c.to_json().to_string(),
+            "think-time stream actually depends on the seed"
+        );
+    }
+
+    #[test]
+    fn forward_slab_strictly_smaller_than_training_slab() {
+        let rep = run(&nominal(), &MetricsHub::new()).unwrap();
+        let train = rep.train_slab_bytes.expect("training plan exists");
+        assert!(
+            rep.forward_slab_bytes < train,
+            "forward {} !< train {}",
+            rep.forward_slab_bytes,
+            train
+        );
+    }
+
+    #[test]
+    fn infeasible_budget_sheds_everything_with_budget_reason() {
+        let cfg = ServeConfig {
+            budget: Some(1024), // nothing fits 1 KiB
+            requests: 20,
+            ..nominal()
+        };
+        let hub = MetricsHub::new();
+        let rep = run(&cfg, &hub).unwrap();
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.shed_budget, 20);
+        assert!(!hub.is_ready(), "sustained sheds flip /readyz to 503");
+    }
+
+    #[test]
+    fn overload_walks_the_ladder() {
+        // Saturate: many chatty clients, a tiny queue and a deadline the
+        // coalesced batches cannot meet, so sheds accumulate fast.
+        let cfg = ServeConfig {
+            clients: 32,
+            requests: 600,
+            think_ms: 0.0,
+            queue_cap: 2,
+            deadline_ms: 0.05,
+            max_batch: 16,
+            shed_window: 16,
+            overload_shed_rate: 0.25,
+            ..ServeConfig::default_for("resnet18")
+        };
+        let rep = run(&cfg, &MetricsHub::new()).unwrap();
+        assert!(rep.shed_total() > 0, "overload must shed");
+        let deg = rep.degradation.expect("sustained overload walks the ladder");
+        assert!(matches!(deg.trigger, DegradeTrigger::Overload { .. }));
+        assert!(matches!(
+            deg.actions[0],
+            DegradationAction::ReducedMaxBatch { from: 16, to: 8 }
+        ));
+        assert!(rep.max_batch_final < rep.max_batch_start);
+    }
+
+    #[test]
+    fn config_sources_parse_file_and_overrides() {
+        let file = "arch = resnet34\nmax_batch = 4\ndeadline_ms = 12.5\nbudget = 2GiB\n";
+        let mut overrides = BTreeMap::new();
+        overrides.insert("max_batch".to_string(), "8".to_string());
+        let cfg = ServeConfig::from_sources(Some(file), &overrides).unwrap();
+        assert_eq!(cfg.model, "resnet34");
+        assert_eq!(cfg.max_batch, 8, "override wins over file");
+        assert_eq!(cfg.deadline_ms, 12.5);
+        assert_eq!(cfg.budget, Some(2 << 30));
+        assert!(ServeConfig::from_sources(Some("deadline_ms = 0\n"), &BTreeMap::new()).is_err());
+        assert!(ServeConfig::from_sources(Some("budget = nonsense\n"), &BTreeMap::new()).is_err());
+    }
+}

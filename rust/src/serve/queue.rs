@@ -1,0 +1,101 @@
+//! Bounded request queue between admission and the micro-batcher.
+//!
+//! One [`Request`] is one image awaiting classification. The queue is a
+//! plain FIFO with a hard capacity: admission consults
+//! [`BoundedQueue::is_full`] *before* enqueueing and sheds with
+//! [`ShedReason::QueueFull`](crate::serve::ShedReason::QueueFull) rather
+//! than letting the queue grow — bounded memory is the whole point of a
+//! serving tier sized to a device budget.
+
+use std::collections::VecDeque;
+
+/// One in-flight inference request (times are virtual-clock seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Global issue order (0-based).
+    pub id: u64,
+    /// Closed-loop client that issued it (indexes the engine's clients).
+    pub client: usize,
+    /// Virtual time the request arrived at admission.
+    pub arrival_secs: f64,
+}
+
+/// FIFO of admitted-but-undispatched requests, capacity fixed at
+/// construction.
+pub struct BoundedQueue {
+    items: VecDeque<Request>,
+    capacity: usize,
+}
+
+impl BoundedQueue {
+    pub fn new(capacity: usize) -> BoundedQueue {
+        let capacity = capacity.max(1);
+        BoundedQueue { items: VecDeque::with_capacity(capacity), capacity }
+    }
+
+    /// Enqueue, or hand the request back when at capacity.
+    pub fn push(&mut self, req: Request) -> Result<(), Request> {
+        if self.items.len() >= self.capacity {
+            return Err(req);
+        }
+        self.items.push_back(req);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.items.pop_front()
+    }
+
+    /// Arrival time of the head request (the longest waiter).
+    pub fn oldest_arrival_secs(&self) -> Option<f64> {
+        self.items.front().map(|r| r.arrival_secs)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at: f64) -> Request {
+        Request { id, client: 0, arrival_secs: at }
+    }
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut q = BoundedQueue::new(2);
+        assert!(q.push(req(0, 0.0)).is_ok());
+        assert!(q.push(req(1, 0.1)).is_ok());
+        assert!(q.is_full());
+        let rejected = q.push(req(2, 0.2)).unwrap_err();
+        assert_eq!(rejected.id, 2, "overflow hands the request back");
+        assert_eq!(q.oldest_arrival_secs(), Some(0.0));
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        assert!(q.push(req(0, 0.0)).is_ok());
+        assert!(q.push(req(1, 0.0)).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! [`ServeReport`]: everything one serving run measured, with the stable
+//! JSON and markdown renderers every consumer (CLI, bench, CI gate)
+//! shares — the serving twin of `TrainReport`.
+
+use crate::fault::DegradationReport;
+use crate::util::bench::fmt_bytes;
+use crate::util::json::{arr, n, obj, s, Json};
+
+/// The measured outcome of one closed-loop serving run. All times are
+/// virtual-clock (deterministic) except where noted.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub model: String,
+    /// Requests issued by the synthetic clients.
+    pub requests: u64,
+    /// Requests answered inside deadline and budget.
+    pub completed: u64,
+    pub shed_queue_full: u64,
+    pub shed_budget: u64,
+    pub shed_deadline: u64,
+    /// Virtual seconds from first arrival to last response.
+    pub elapsed_secs: f64,
+    /// Completed requests per virtual second.
+    pub requests_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub deadline_ms: f64,
+    /// Batch ceiling at start and after any ladder rungs.
+    pub max_batch_start: usize,
+    pub max_batch_final: usize,
+    /// `(batch size, dispatch count)` pairs, ascending by size.
+    pub batch_hist: Vec<(usize, u64)>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// Request-buffer pool counters (steady state: reuses ≫ allocs).
+    pub pool_allocs: u64,
+    pub pool_reuses: u64,
+    /// Packed forward-only slab of the largest admitted batch.
+    pub forward_slab_bytes: u64,
+    /// Packed training slab of the same arch/batch, for the margin the
+    /// admission controller spends (`None` when training is infeasible
+    /// to plan, e.g. zero-layer archs).
+    pub train_slab_bytes: Option<u64>,
+    /// The overload episode, when the ladder was walked.
+    pub degradation: Option<DegradationReport>,
+}
+
+impl ServeReport {
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full + self.shed_budget + self.shed_deadline
+    }
+
+    /// Stable JSON rendering (same builder conventions as
+    /// `PlanOutcome::to_json`): same report, same bytes.
+    pub fn to_json(&self) -> Json {
+        let shed = obj(vec![
+            ("queue-full", n(self.shed_queue_full as f64)),
+            ("budget-exceeded", n(self.shed_budget as f64)),
+            ("deadline-exceeded", n(self.shed_deadline as f64)),
+            ("total", n(self.shed_total() as f64)),
+        ]);
+        let batches = arr(
+            self.batch_hist
+                .iter()
+                .map(|&(size, count)| {
+                    obj(vec![("size", n(size as f64)), ("count", n(count as f64))])
+                })
+                .collect(),
+        );
+        let cache = obj(vec![
+            ("hits", n(self.cache_hits as f64)),
+            ("misses", n(self.cache_misses as f64)),
+            ("evictions", n(self.cache_evictions as f64)),
+        ]);
+        let pool = obj(vec![
+            ("allocs", n(self.pool_allocs as f64)),
+            ("reuses", n(self.pool_reuses as f64)),
+        ]);
+        let mut fields = vec![
+            ("model", s(&self.model)),
+            ("requests", n(self.requests as f64)),
+            ("completed", n(self.completed as f64)),
+            ("shed", shed),
+            ("elapsed_secs", n(self.elapsed_secs)),
+            ("requests_per_sec", n(self.requests_per_sec)),
+            ("p50_ms", n(self.p50_ms)),
+            ("p99_ms", n(self.p99_ms)),
+            ("deadline_ms", n(self.deadline_ms)),
+            ("max_batch_start", n(self.max_batch_start as f64)),
+            ("max_batch_final", n(self.max_batch_final as f64)),
+            ("batches", batches),
+            ("plan_cache", cache),
+            ("buffer_pool", pool),
+            ("forward_slab_bytes", n(self.forward_slab_bytes as f64)),
+        ];
+        if let Some(t) = self.train_slab_bytes {
+            fields.push(("train_slab_bytes", n(t as f64)));
+        }
+        if let Some(d) = &self.degradation {
+            fields.push(("degradation", d.to_json()));
+        }
+        obj(fields)
+    }
+
+    /// Markdown summary (the `optorch serve` stdout block).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### serve: {}\n\n", self.model));
+        out.push_str(&format!(
+            "- throughput: {:.1} req/s over {:.3}s ({} completed of {} issued)\n",
+            self.requests_per_sec, self.elapsed_secs, self.completed, self.requests
+        ));
+        out.push_str(&format!(
+            "- latency: p50 {:.2} ms, p99 {:.2} ms (deadline {:.0} ms)\n",
+            self.p50_ms, self.p99_ms, self.deadline_ms
+        ));
+        out.push_str(&format!(
+            "- shed: {} total (queue-full {}, budget-exceeded {}, deadline-exceeded {})\n",
+            self.shed_total(),
+            self.shed_queue_full,
+            self.shed_budget,
+            self.shed_deadline
+        ));
+        let batches: Vec<String> = self
+            .batch_hist
+            .iter()
+            .map(|&(size, count)| format!("{size}×{count}"))
+            .collect();
+        out.push_str(&format!(
+            "- batches (size×count): {} — max batch {} → {}\n",
+            if batches.is_empty() { "none".to_string() } else { batches.join(", ") },
+            self.max_batch_start,
+            self.max_batch_final
+        ));
+        out.push_str(&format!(
+            "- plan cache: {} hits / {} misses / {} evictions; buffer pool: {} allocs / {} reuses\n",
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            self.pool_allocs,
+            self.pool_reuses
+        ));
+        match self.train_slab_bytes {
+            Some(t) if t > 0 => out.push_str(&format!(
+                "- forward-only slab {} vs training slab {} ({:.1}% of training)\n",
+                fmt_bytes(self.forward_slab_bytes),
+                fmt_bytes(t),
+                self.forward_slab_bytes as f64 / t as f64 * 100.0
+            )),
+            _ => out.push_str(&format!(
+                "- forward-only slab {}\n",
+                fmt_bytes(self.forward_slab_bytes)
+            )),
+        }
+        if let Some(d) = &self.degradation {
+            out.push_str(&format!("- {}\n", d.to_markdown()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServeReport {
+        ServeReport {
+            model: "resnet18".to_string(),
+            requests: 100,
+            completed: 92,
+            shed_queue_full: 5,
+            shed_budget: 0,
+            shed_deadline: 3,
+            elapsed_secs: 2.5,
+            requests_per_sec: 36.8,
+            p50_ms: 4.2,
+            p99_ms: 11.9,
+            deadline_ms: 25.0,
+            max_batch_start: 16,
+            max_batch_final: 8,
+            batch_hist: vec![(4, 3), (8, 10)],
+            cache_hits: 11,
+            cache_misses: 2,
+            cache_evictions: 0,
+            pool_allocs: 4,
+            pool_reuses: 9,
+            forward_slab_bytes: 3 << 20,
+            train_slab_bytes: Some(12 << 20),
+            degradation: None,
+        }
+    }
+
+    #[test]
+    fn json_is_stable_and_reparses() {
+        let j = sample().to_json();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "resnet18");
+        assert_eq!(j.get("completed").unwrap().as_f64().unwrap(), 92.0);
+        let shed = j.get("shed").unwrap();
+        assert_eq!(shed.get("total").unwrap().as_f64().unwrap(), 8.0);
+        assert_eq!(shed.get("queue-full").unwrap().as_f64().unwrap(), 5.0);
+        let batches = j.get("batches").unwrap().as_arr().unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].get("size").unwrap().as_f64().unwrap(), 8.0);
+        let text = j.to_string();
+        assert_eq!(text, sample().to_json().to_string(), "deterministic bytes");
+        crate::util::json::Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn markdown_names_the_load_bearing_numbers() {
+        let md = sample().to_markdown();
+        assert!(md.contains("36.8 req/s"), "{md}");
+        assert!(md.contains("p99 11.90 ms"), "{md}");
+        assert!(md.contains("queue-full 5"), "{md}");
+        assert!(md.contains("4×3, 8×10"), "{md}");
+        assert!(md.contains("max batch 16 → 8"), "{md}");
+        assert!(md.contains("25.0% of training"), "{md}");
+    }
+}

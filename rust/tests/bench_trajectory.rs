@@ -91,6 +91,7 @@ fn tracked_bench_figures_stay_inside_the_band() {
             &["enabled_overhead_pct", "disabled_overhead_pct", "ns_per_span_enabled"],
         ),
         ("BENCH_obs.json", &["overhead_pct", "ns_per_sample", "us_per_scrape"]),
+        ("BENCH_serve.json", &["p99_ms_nominal", "us_per_cached_plan"]),
     ];
     let mut failures = Vec::new();
     for (name, tracked) in table {

@@ -15,6 +15,7 @@ use optorch::config::Pipeline;
 use optorch::fault::DegradeTrigger;
 use optorch::memory::pipeline::PlanRequest;
 use optorch::obs::{MemTimeline, MetricsHub, ObsServer, StepSample};
+use optorch::serve::ServeConfig;
 
 /// Minimal scrape client: one GET, `Connection: close`, returns
 /// (status, headers, body).
@@ -43,8 +44,9 @@ fn series_value(exposition: &str, name: &str) -> f64 {
 }
 
 /// Validate the text-exposition grammar: every line is a `# HELP`,
-/// `# TYPE ... gauge|counter` or `name value` sample with a legal
-/// metric name and a float value; every sample is preceded by a TYPE.
+/// `# TYPE ... gauge|counter` or a `name[{k="v",...}] value` sample with
+/// a legal metric name, well-formed labels and a float value; every
+/// sample is preceded by a TYPE for its base name.
 fn assert_parses_as_exposition(text: &str) {
     let mut typed: Vec<String> = Vec::new();
     for line in text.lines().filter(|l| !l.trim().is_empty()) {
@@ -64,7 +66,32 @@ fn assert_parses_as_exposition(text: &str) {
             }
             continue;
         }
-        let (name, value) = line.split_once(' ').unwrap_or_else(|| panic!("bad sample '{line}'"));
+        // Label values never contain spaces (the hub sanitizes them), so
+        // the first space always separates the series from its value.
+        let (series, value) =
+            line.split_once(' ').unwrap_or_else(|| panic!("bad sample '{line}'"));
+        let name = match series.split_once('{') {
+            Some((base, labels)) => {
+                let labels = labels
+                    .strip_suffix('}')
+                    .unwrap_or_else(|| panic!("unclosed label set in '{line}'"));
+                for pair in labels.split(',') {
+                    let (k, v) =
+                        pair.split_once('=').unwrap_or_else(|| panic!("bad label '{pair}'"));
+                    assert!(
+                        !k.is_empty()
+                            && k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                        "illegal label name '{k}' in '{line}'"
+                    );
+                    assert!(
+                        v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                        "unquoted label value '{v}' in '{line}'"
+                    );
+                }
+                base
+            }
+            None => series,
+        };
         assert!(
             name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
             "illegal metric name '{name}'"
@@ -188,6 +215,70 @@ fn readyz_latches_on_loader_watchdog() {
     assert_eq!(get(addr, "/readyz").0, 503);
     // the latch never clears — a stalled loader is not a transient
     assert_eq!(get(addr, "/readyz").0, 503);
+}
+
+#[test]
+fn serve_series_and_phase_quantiles_scrape_live() {
+    let hub = Arc::new(MetricsHub::new());
+    let server = serve(&hub);
+    let addr = server.local_addr();
+    let cfg = ServeConfig {
+        requests: 64,
+        clients: 4,
+        think_ms: 10.0,
+        deadline_ms: 200.0,
+        max_batch: 8,
+        ..ServeConfig::default_for("tiny_cnn")
+    };
+    let rep = optorch::serve::run(&cfg, &hub).expect("serve run");
+    assert_eq!(rep.completed, 64, "nominal load completes everything");
+
+    let (status, _, body) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_parses_as_exposition(&body);
+    assert!(body.contains("\noptorch_serve_queue_depth "), "queue gauge missing:\n{body}");
+    assert_eq!(series_value(&body, "optorch_serve_admitted_total") as u64, 64);
+    assert_eq!(series_value(&body, "optorch_serve_shed_total") as u64, 0);
+    assert!(series_value(&body, "optorch_serve_batches_total") > 0.0);
+    assert!(
+        body.contains("optorch_serve_batch_size{quantile=\"0.5\"}"),
+        "labeled batch-size quantiles missing:\n{body}"
+    );
+    for phase in ["serve-queue-wait", "serve-service", "serve-e2e"] {
+        assert!(
+            body.contains(&format!("optorch_phase_seconds{{phase=\"{phase}\",quantile=\"0.99\"}}")),
+            "phase gauge for '{phase}' missing:\n{body}"
+        );
+    }
+    assert_eq!(get(addr, "/readyz").0, 200, "zero sheds keep readiness green");
+}
+
+#[test]
+fn readyz_flips_503_while_serve_shed_rate_nonzero() {
+    let hub = Arc::new(MetricsHub::new());
+    let server = serve(&hub);
+    let addr = server.local_addr();
+    assert_eq!(get(addr, "/readyz").0, 200, "ready before any traffic");
+
+    // A budget nothing fits: every request sheds budget-exceeded, so the
+    // windowed shed rate is pinned above zero.
+    let cfg = ServeConfig {
+        budget: Some(1024),
+        requests: 16,
+        clients: 2,
+        shed_window: 32,
+        ..ServeConfig::default_for("tiny_cnn")
+    };
+    let rep = optorch::serve::run(&cfg, &hub).expect("serve run");
+    assert_eq!(rep.shed_budget, 16, "nothing fits a 1 KiB device");
+
+    let (status, _, body) = get(addr, "/readyz");
+    assert_eq!(status, 503, "nonzero shed rate over the window fails readiness");
+    assert_eq!(body, "degraded\n");
+    assert_eq!(get(addr, "/healthz").0, 200, "liveness is unaffected");
+    let (_, _, metrics) = get(addr, "/metrics");
+    assert_eq!(series_value(&metrics, "optorch_serve_shed_total") as u64, 16);
+    assert!(series_value(&metrics, "optorch_serve_shed_rate_window") > 0.0);
 }
 
 #[test]

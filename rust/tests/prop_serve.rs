@@ -1,0 +1,170 @@
+//! Property tests for the serving subsystem: the forward-only lifetime
+//! replay (subset of training, exactness against the evaluator's forward
+//! peak), forward-vs-training slab dominance across the whole model
+//! registry, and plan-cache determinism.
+
+use optorch::config::Pipeline;
+use optorch::memory::arena::{pack, validate, Lifetimes};
+use optorch::memory::peak::PeakEvaluator;
+use optorch::memory::pipeline::{PlanMode, PlanRequest};
+use optorch::models::{all_arch_names, arch_by_name};
+use optorch::serve::{PlanCache, PlanKey};
+
+/// The per-model input convention of `optorch models`: inception needs
+/// its native resolution, the CIFAR-class models take 32², everything
+/// else a mid-size input.
+fn input_for(name: &str) -> ((usize, usize, usize), usize) {
+    if name.contains("inception_v3") {
+        ((299, 299, 3), 1000)
+    } else if name.contains("mini") || name.contains("lite") || name == "tiny_cnn" {
+        ((32, 32, 3), 10)
+    } else {
+        ((64, 64, 3), 10)
+    }
+}
+
+/// Every inference tensor is covered by a training tensor of the same
+/// layer: the forward-only replay never invents liveness the training
+/// schedule did not already have — it only drops the backward tail.
+#[test]
+fn inference_lifetimes_are_a_subset_of_training_lifetimes() {
+    let pipeline = Pipeline::parse("b").expect("pipeline");
+    for name in ["tiny_cnn", "resnet18", "effnet_lite"] {
+        let (input, classes) = input_for(name);
+        let arch = arch_by_name(name, input, classes).expect("registry model");
+        for batch in [1usize, 8] {
+            let ev = PeakEvaluator::new(&arch, pipeline, batch);
+            let train = Lifetimes::extract(&ev, &[]);
+            let infer = Lifetimes::extract_infer(&ev);
+            assert!(
+                infer.base_bytes <= train.base_bytes,
+                "{name} batch {batch}: infer base {} over train base {}",
+                infer.base_bytes,
+                train.base_bytes
+            );
+            for t in &infer.tensors {
+                let covered = train.tensors.iter().any(|tr| {
+                    tr.layer == t.layer
+                        && tr.bytes >= t.bytes
+                        && tr.start <= t.start
+                        && tr.end >= t.end
+                });
+                assert!(
+                    covered,
+                    "{name} batch {batch}: infer tensor {:?} not covered by any \
+                     training tensor at the same layer",
+                    t
+                );
+            }
+        }
+    }
+}
+
+/// `base + max_live == forward peak`, exactly, for every registry arch:
+/// the forward-only replay is an accounting identity, not an estimate.
+#[test]
+fn infer_replay_is_exact_against_the_forward_peak() {
+    let pipeline = Pipeline::parse("b").expect("pipeline");
+    for name in all_arch_names() {
+        let (input, classes) = input_for(&name);
+        let arch = arch_by_name(&name, input, classes).expect("registry model");
+        for batch in [1usize, 8] {
+            let ev = PeakEvaluator::new(&arch, pipeline, batch);
+            let lt = Lifetimes::extract_infer(&ev);
+            assert_eq!(
+                lt.base_bytes + lt.max_live_bytes(),
+                ev.forward_peak(),
+                "{name} batch {batch}: infer replay disagrees with forward peak"
+            );
+        }
+    }
+}
+
+/// The packed forward-only slab never exceeds the packed training slab,
+/// for every registry arch × batch — the headline claim of serving from
+/// forward-only plans.
+#[test]
+fn forward_slab_never_exceeds_training_slab_across_the_registry() {
+    let pipeline = Pipeline::parse("b").expect("pipeline");
+    for name in all_arch_names() {
+        let (input, classes) = input_for(&name);
+        let arch = arch_by_name(&name, input, classes).expect("registry model");
+        for batch in [1usize, 8] {
+            let ev = PeakEvaluator::new(&arch, pipeline, batch);
+            let infer = Lifetimes::extract_infer(&ev);
+            let train = Lifetimes::extract(&ev, &[]);
+            let infer_layout = pack(&infer);
+            let train_layout = pack(&train);
+            validate(&infer, &infer_layout).expect("valid forward packing");
+            assert!(
+                infer_layout.total_bytes() <= train_layout.total_bytes(),
+                "{name} batch {batch}: forward slab {} over training slab {}",
+                infer_layout.total_bytes(),
+                train_layout.total_bytes()
+            );
+        }
+    }
+}
+
+/// Through the full planning facade (DP, packing, the works): the
+/// `PlanMode::Infer` outcome's device peak is strictly below the
+/// training outcome's for real models, and its predicted step time is
+/// pure forward compute.
+#[test]
+fn infer_plans_strictly_undercut_training_plans() {
+    for (name, batch) in [("tiny_cnn", 16usize), ("resnet18", 8)] {
+        let (input, classes) = input_for(name);
+        let infer = PlanRequest::for_model(name, input, classes)
+            .batch(batch)
+            .mode(PlanMode::Infer)
+            .run()
+            .expect("infer plan");
+        let train = PlanRequest::for_model(name, input, classes)
+            .batch(batch)
+            .run()
+            .expect("train plan");
+        assert!(
+            infer.device_peak_packed() < train.device_peak_packed(),
+            "{name} batch {batch}: infer slab {} !< train slab {}",
+            infer.device_peak_packed(),
+            train.device_peak_packed()
+        );
+        assert!(infer.predicted_step_secs().expect("forward step time") > 0.0);
+    }
+}
+
+/// The LRU plan cache is deterministic: the same lookup sequence yields
+/// the same hit/miss/eviction counts and the same cached outcomes, and
+/// eviction order follows recency exactly.
+#[test]
+fn plan_cache_hits_and_evictions_are_deterministic() {
+    let run_sequence = || {
+        let mut cache = PlanCache::new(2);
+        let mut peaks = Vec::new();
+        // batches 4, 8, 4 (hit), 16 (evicts 8), 8 (replans)
+        for batch in [4usize, 8, 4, 16, 8] {
+            let key = PlanKey {
+                arch: "tiny_cnn".to_string(),
+                batch,
+                budget: None,
+                host_bw: 1 << 30,
+            };
+            let out = cache
+                .get_or_insert_with(&key, || {
+                    PlanRequest::for_model("tiny_cnn", (32, 32, 3), 10)
+                        .batch(batch)
+                        .host_bw(1 << 30)
+                        .mode(PlanMode::Infer)
+                        .run()
+                })
+                .expect("plan");
+            peaks.push(out.device_peak_packed());
+        }
+        (cache.hits(), cache.misses(), cache.evictions(), peaks)
+    };
+    let (hits, misses, evictions, peaks) = run_sequence();
+    assert_eq!((hits, misses, evictions), (1, 4, 2), "4,8,4(hit),16(evict 8),8(evict 4)");
+    assert_eq!(peaks[0], peaks[2], "the cache hit returned the same outcome");
+    assert_eq!(peaks[1], peaks[4], "a replanned key reproduces its outcome");
+    assert_eq!(run_sequence(), (hits, misses, evictions, peaks), "bit-identical rerun");
+}
